@@ -1,0 +1,200 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!   1. tile-size sweep (the paper §III.C: "striking the right tile size
+//!      is essential")
+//!   2. double-buffering on/off (the paper's overlap claim)
+//!   3. scheduling policy comparison under congestion
+//!   4. weight bit-width sweep (4/8/16)
+//!   5. batch-size crossover: where the GPU overtakes the FPGA
+//!
+//!     cargo bench --bench ablations
+
+use aifa::accel::{gemm_cycles, gemm_shape, AccelConfig, GemmShape};
+use aifa::agent::{
+    EnvConfig, GreedyStep, IntensityHeuristic, Policy, QAgent, QConfig, SchedulingEnv,
+    StaticAllFpga,
+};
+use aifa::dma::{double_buffered, single_buffered, Link};
+use aifa::graph::Network;
+use aifa::platform::{CpuModel, FpgaPlatform, GpuModel, Placement};
+use aifa::report::{header, write_report};
+use aifa::util::table::Table;
+
+fn tile_sweep() -> Table {
+    // block5-style GEMM at batch 8
+    let g = GemmShape { m: 8 * 64, k: 576, n: 64 };
+    let cfg = AccelConfig::default();
+    let mut t = Table::new(&["tile_m", "cycles", "vs best"]);
+    let best = [32usize, 64, 128, 256, 512]
+        .iter()
+        .map(|&tm| gemm_cycles(g, &cfg, Some(tm)).total())
+        .min()
+        .unwrap() as f64;
+    for tm in [32usize, 64, 128, 256, 512] {
+        let c = gemm_cycles(g, &cfg, Some(tm)).total();
+        t.row(&[
+            tm.to_string(),
+            c.to_string(),
+            format!("{:+.1}%", (c as f64 / best - 1.0) * 100.0),
+        ]);
+    }
+    t
+}
+
+fn double_buffer_ablation() -> Table {
+    let link = Link::pcie_gen3x8();
+    let mut t = Table::new(&["tiles", "in/tile", "compute/tile", "serial (ms)", "overlapped (ms)", "speedup"]);
+    for (tiles, bytes, comp_us) in [(16u64, 256_000u64, 60.0f64), (64, 64_000, 15.0), (8, 1_000_000, 180.0)] {
+        let in_s = link.transfer_s(bytes);
+        let comp = comp_us * 1e-6;
+        let sb = single_buffered(tiles, in_s, comp, in_s);
+        let db = double_buffered(tiles, in_s, comp, in_s);
+        t.row(&[
+            tiles.to_string(),
+            format!("{} KiB", bytes / 1024),
+            format!("{comp_us} µs"),
+            format!("{:.3}", sb.total_s * 1e3),
+            format!("{:.3}", db.total_s * 1e3),
+            format!("{:.2}x", sb.total_s / db.total_s),
+        ]);
+    }
+    t
+}
+
+fn policy_ablation() -> Table {
+    let mk = |congestion_p: f64| {
+        SchedulingEnv::new(
+            Network::paper_scale(),
+            FpgaPlatform::table1_card(),
+            CpuModel::default(),
+            EnvConfig { congestion_p, ..EnvConfig::default() },
+        )
+    };
+    let mut t = Table::new(&["policy", "latency free (ms)", "latency congested (ms)"]);
+    let env = mk(0.0);
+    let env_busy = mk(1.0);
+    let eval = |p: &dyn Policy| {
+        (
+            env.placement_latency_s(&p.placement(&env, false)),
+            // congested latency: same policy decisions but the fabric is busy
+            {
+                let placement = p.placement(&env_busy, true);
+                let mut s = env_busy.initial_state(true);
+                let mut total = 0.0;
+                for &pl in &placement {
+                    total += env_busy.step_cost_s(&s, pl);
+                    s = aifa::agent::State { unit: s.unit + 1, prev: pl, congestion: 1 };
+                }
+                total
+            },
+        )
+    };
+    let (o, _) = env.oracle_placement();
+    let oracle_pol = aifa::agent::FixedPlacement { placement: o };
+    for p in [
+        &oracle_pol as &dyn Policy,
+        &StaticAllFpga,
+        &IntensityHeuristic::default(),
+        &GreedyStep,
+    ] {
+        let (free, busy) = eval(p);
+        t.row(&[
+            p.name().into(),
+            format!("{:.3}", free * 1e3),
+            format!("{:.3}", busy * 1e3),
+        ]);
+    }
+    // the learned agent, trained WITH congestion in the mix, adapts:
+    let env_mixed = mk(0.5);
+    let mut agent = QAgent::new(QConfig::default(), 42);
+    agent.train(&env_mixed, 800);
+    let free_pol = agent.policy(&env_mixed, false);
+    let busy_pol = agent.policy(&env_mixed, true);
+    let free = env.placement_latency_s(&free_pol);
+    let busy = {
+        let mut s = env_busy.initial_state(true);
+        let mut total = 0.0;
+        for &pl in &busy_pol {
+            total += env_busy.step_cost_s(&s, pl);
+            s = aifa::agent::State { unit: s.unit + 1, prev: pl, congestion: 1 };
+        }
+        total
+    };
+    t.row(&[
+        "q-agent (congestion-aware)".into(),
+        format!("{:.3}", free * 1e3),
+        format!("{:.3}", busy * 1e3),
+    ]);
+    t
+}
+
+fn bitwidth_sweep() -> Table {
+    let net = Network::paper_scale();
+    let cpu = CpuModel::default();
+    let mut t = Table::new(&["weight bits", "latency b1 (ms)", "throughput b8 (img/s)"]);
+    for bits in [4u32, 8, 16] {
+        let mut fp = FpgaPlatform::table1_card();
+        fp.accel.weight_bits = bits;
+        let all = vec![Placement::Fpga; net.len()];
+        let lat = fp.network_timeline(&net, &all, 1, &cpu).total_s;
+        let tp = fp.pipelined_throughput_img_s(&net, &all, 8, &cpu);
+        t.row(&[
+            bits.to_string(),
+            format!("{:.2}", lat * 1e3),
+            format!("{:.1}", tp),
+        ]);
+    }
+    t
+}
+
+fn batch_crossover() -> Table {
+    let net = Network::paper_scale();
+    let cpu = CpuModel::default();
+    let gpu = GpuModel::default();
+    let fpga = FpgaPlatform::table1_card();
+    let all = vec![Placement::Fpga; net.len()];
+    let mut t = Table::new(&["batch", "GPU img/s (device)", "FPGA img/s", "winner"]);
+    for b in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
+        let g = b as f64 / gpu.latency_s(&net, b);
+        let f = fpga.pipelined_throughput_img_s(&net, &all, b.min(32), &cpu);
+        t.row(&[
+            b.to_string(),
+            format!("{g:.1}"),
+            format!("{f:.1}"),
+            if g > f { "GPU" } else { "FPGA" }.into(),
+        ]);
+    }
+    t
+}
+
+fn main() -> anyhow::Result<()> {
+    let tiles = tile_sweep();
+    println!("== 1. tile-size sweep ==\n{}", tiles.to_markdown());
+    let db = double_buffer_ablation();
+    println!("== 2. double buffering ==\n{}", db.to_markdown());
+    let pol = policy_ablation();
+    println!("== 3. scheduling policies (incl. multi-tenant congestion) ==\n{}", pol.to_markdown());
+    let bits = bitwidth_sweep();
+    println!("== 4. weight bit-width ==\n{}", bits.to_markdown());
+    let cross = batch_crossover();
+    println!("== 5. batch-size crossover (paper §IV: GPUs excel at large batch) ==\n{}", cross.to_markdown());
+
+    let md = format!(
+        "{}## 1. Tile-size sweep\n\n{}\n## 2. Double buffering\n\n{}\n## 3. Policies\n\n{}\n## 4. Bit-width\n\n{}\n## 5. Batch crossover\n\n{}",
+        header("Ablations", "design-choice sweeps over the timing models"),
+        tiles.to_markdown(),
+        db.to_markdown(),
+        pol.to_markdown(),
+        bits.to_markdown(),
+        cross.to_markdown()
+    );
+    let path = write_report("ablations.md", &md)?;
+    println!("report written to {path:?}");
+    Ok(())
+}
+
+// keep gemm_shape linked for doc purposes (used in module docs)
+#[allow(dead_code)]
+fn _unused(u: &aifa::graph::Unit) {
+    let _ = gemm_shape(u, 1);
+}

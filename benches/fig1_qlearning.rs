@@ -1,0 +1,103 @@
+//! Regenerates **Fig 1**'s behaviour: the Q-learning scheduling agent's
+//! learning curve (reward and achieved latency per episode bucket),
+//! ε decay, and the converged policy against the DP oracle and the
+//! static/heuristic baselines.
+//!
+//!     cargo bench --bench fig1_qlearning
+
+use aifa::agent::{
+    AllCpu, EnvConfig, GreedyStep, IntensityHeuristic, Policy, QAgent, QConfig, SchedulingEnv,
+    StaticAllFpga,
+};
+use aifa::graph::Network;
+use aifa::platform::{CpuModel, FpgaPlatform};
+use aifa::report::{header, write_report};
+use aifa::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let episodes = 600usize;
+    let env = SchedulingEnv::new(
+        Network::paper_scale(),
+        FpgaPlatform::table1_card(),
+        CpuModel::default(),
+        EnvConfig::default(),
+    );
+
+    // learning curve, averaged over 5 seeds
+    let seeds = [11u64, 22, 33, 44, 55];
+    let bucket = 30usize;
+    let nb = episodes / bucket;
+    let mut reward = vec![0.0f64; nb];
+    let mut latency = vec![0.0f64; nb];
+    let mut eps = vec![0.0f64; nb];
+    let mut final_lat = 0.0;
+    for &seed in &seeds {
+        let mut agent = QAgent::new(QConfig::default(), seed);
+        let curve = agent.train(&env, episodes);
+        for (i, s) in curve.iter().enumerate() {
+            let b = i / bucket;
+            reward[b] += s.total_reward / (bucket * seeds.len()) as f64;
+            latency[b] += s.latency_s / (bucket * seeds.len()) as f64;
+            eps[b] += s.epsilon / (bucket * seeds.len()) as f64;
+        }
+        final_lat += env.placement_latency_s(&agent.policy(&env, false)) / seeds.len() as f64;
+    }
+
+    let mut curve_t = Table::new(&["episodes", "mean reward", "mean latency (ms)", "ε"]);
+    for b in 0..nb {
+        curve_t.row(&[
+            format!("{}-{}", b * bucket, (b + 1) * bucket - 1),
+            format!("{:.2}", reward[b]),
+            format!("{:.3}", latency[b] * 1e3),
+            format!("{:.3}", eps[b]),
+        ]);
+    }
+    println!("== learning curve (mean of {} seeds) ==", seeds.len());
+    println!("{}", curve_t.to_markdown());
+
+    // converged policy vs baselines + oracle
+    let (oracle_placement, oracle_cost) = env.oracle_placement();
+    let mut pol_t = Table::new(&["policy", "latency (ms)", "vs oracle"]);
+    let mut add = |name: &str, lat: f64| {
+        pol_t.row(&[
+            name.into(),
+            format!("{:.3}", lat * 1e3),
+            format!("{:+.1}%", (lat / oracle_cost - 1.0) * 100.0),
+        ]);
+    };
+    add("dp-oracle", oracle_cost);
+    add("q-agent (learned, 5-seed mean)", final_lat);
+    add(
+        "static-all-fpga",
+        env.placement_latency_s(&StaticAllFpga.placement(&env, false)),
+    );
+    add(
+        "intensity-heuristic",
+        env.placement_latency_s(&IntensityHeuristic::default().placement(&env, false)),
+    );
+    add(
+        "greedy-step",
+        env.placement_latency_s(&GreedyStep.placement(&env, false)),
+    );
+    add("all-cpu", env.placement_latency_s(&AllCpu.placement(&env, false)));
+    println!("== converged policies ==");
+    println!("{}", pol_t.to_markdown());
+    println!("oracle placement: {oracle_placement:?}");
+
+    let md = format!(
+        "{}## Learning curve\n\n{}\n## Converged policies\n\n{}\noracle placement: {:?}\n",
+        header("Fig 1 — Q-learning scheduling agent", "double-Q with target sync, ε-greedy"),
+        curve_t.to_markdown(),
+        pol_t.to_markdown(),
+        oracle_placement
+    );
+    let path = write_report("fig1_qlearning.md", &md)?;
+    println!("report written to {path:?}");
+
+    // shape assertions: learning must reach within 10% of oracle
+    assert!(
+        final_lat <= oracle_cost * 1.10,
+        "learned {final_lat} too far from oracle {oracle_cost}"
+    );
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Regenerates the paper's §IV resource-utilization claim ("LUTs, DSP
+//! slices and BRAM blocks hovered around 70%"): the synthesis model maps
+//! the default accelerator onto the KV260 and the Table I card onto an
+//! Alveo-class device, and reports per-unit MAC utilization.
+//!
+//!     cargo bench --bench resources
+
+use aifa::accel::{unit_mac_utilization, AccelConfig};
+use aifa::fpga::synth::{fits, synthesize, CostModel};
+use aifa::fpga::Resources;
+use aifa::graph::Network;
+use aifa::report::{header, write_report};
+use aifa::util::table::Table;
+
+fn synth_table(name: &str, cfg: &AccelConfig, total: &Resources) -> (Table, f64) {
+    let rep = synthesize(cfg, total, &CostModel::default());
+    assert!(fits(&rep), "{name}: config does not fit");
+    let mut t = Table::new(&["resource", "used", "available", "utilization"]);
+    let rows: [(&str, u64, u64); 4] = [
+        ("LUT", rep.usage.luts, total.luts),
+        ("DSP", rep.usage.dsps, total.dsps),
+        ("BRAM36", rep.usage.bram36, total.bram36),
+        ("URAM", rep.usage.uram, total.uram),
+    ];
+    for (nm, used, avail) in rows {
+        t.row(&[
+            nm.into(),
+            used.to_string(),
+            avail.to_string(),
+            format!("{:.1}%", 100.0 * used as f64 / avail as f64),
+        ]);
+    }
+    t.row(&[
+        "post-route fmax".into(),
+        format!("{:.0} MHz", rep.fmax_hz / 1e6),
+        format!("(target {:.0} MHz)", cfg.clock_hz / 1e6),
+        String::new(),
+    ]);
+    (t, rep.mean_utilization)
+}
+
+fn main() -> anyhow::Result<()> {
+    let (kv_t, kv_mean) = synth_table("kv260", &AccelConfig::default(), &Resources::kv260());
+    println!("== default 32x32 int8 core on KV260 ==");
+    println!("{}", kv_t.to_markdown());
+    println!("mean utilization: {:.1}%  (paper: ~70%)\n", kv_mean * 100.0);
+
+    let card_cfg = AccelConfig {
+        mac_rows: 48,
+        mac_cols: 64,
+        buffer_bytes: 2 << 20,
+        ..AccelConfig::default()
+    };
+    let (card_t, card_mean) =
+        synth_table("table1-card", &card_cfg, &Resources::alveo_u50_like());
+    println!("== Table I card (48x64) on Alveo-class device ==");
+    println!("{}", card_t.to_markdown());
+    println!("mean utilization: {:.1}%\n", card_mean * 100.0);
+
+    // per-unit MAC utilization on the paper-scale workload
+    let net = Network::paper_scale();
+    let mut mac_t = Table::new(&["unit", "MACs (b1)", "MAC util (b1)", "MAC util (b8)"]);
+    for u in &net.units {
+        if !u.kind.uses_mac_array() {
+            continue;
+        }
+        mac_t.row(&[
+            u.name.clone(),
+            format!("{:.1}M", u.macs_b1 as f64 / 1e6),
+            format!("{:.0}%", unit_mac_utilization(u, 1, &card_cfg) * 100.0),
+            format!("{:.0}%", unit_mac_utilization(u, 8, &card_cfg) * 100.0),
+        ]);
+    }
+    println!("== per-unit MAC-array utilization (paper-scale net, Table I card) ==");
+    println!("{}", mac_t.to_markdown());
+
+    let md = format!(
+        "{}## KV260 (default core)\n\n{}\nmean utilization: {:.1}% (paper: ~70%)\n\n## Table I card\n\n{}\nmean utilization: {:.1}%\n\n## MAC utilization\n\n{}",
+        header("Resource utilization", "synthesis cost model (fpga::synth)"),
+        kv_t.to_markdown(),
+        kv_mean * 100.0,
+        card_t.to_markdown(),
+        card_mean * 100.0,
+        mac_t.to_markdown()
+    );
+    let path = write_report("resources.md", &md)?;
+    println!("report written to {path:?}");
+
+    assert!((0.55..=0.85).contains(&kv_mean), "KV260 mean utilization {kv_mean}");
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Fig 3 pipeline demo: greedy generation through the real int4 decoder
+//! artifacts, then the analytical KV260 simulation at tiny scale
+//! (validated against the artifacts' true byte counts) and at paper
+//! scale (LLaMA2-7B AWQ-4bit) producing the Fig 3 headline numbers.
+//!
+//!     cargo run --release --example llm_pipeline
+
+use aifa::llm::{simulate_decode, LlmSession, LlmWorkload};
+use aifa::memory::DdrConfig;
+use aifa::runtime::ArtifactStore;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let store = ArtifactStore::open("artifacts")?;
+
+    // -- functional half: real tokens through the compiled decoder ------
+    let mut sess = LlmSession::new(&store)?;
+    let prompt: Vec<i32> = (0..sess.prefill_len as i32).map(|i| i % 97).collect();
+    let t0 = std::time::Instant::now();
+    let toks = sess.generate(&prompt, 24)?;
+    println!("== functional decode (scaled LLaMA-style, int4 weights) ==");
+    println!("prompt ({} tokens): {prompt:?}", prompt.len());
+    println!("greedy continuation: {toks:?}");
+    println!("behavioural wall time: {:.1} ms/token\n", t0.elapsed().as_secs_f64() * 1e3 / 24.0);
+
+    // golden check against the python build
+    if let Ok(g) = store.manifest.req("golden").and_then(|g| g.req("llm_greedy_tokens")) {
+        let expect: Vec<i32> = g.as_arr().unwrap().iter().map(|x| x.as_i64().unwrap() as i32).collect();
+        let got = &toks[..expect.len().min(toks.len())];
+        assert_eq!(got, &expect[..got.len()], "decoder diverged from python golden");
+        println!("matches python golden: {expect:?}\n");
+    }
+
+    // -- analytical half: tiny scale (honest bytes from the manifest) ---
+    let tiny = LlmWorkload::from_manifest(&store)?;
+    let tiny_rep = simulate_decode(&tiny, DdrConfig::kv260_ddr4(), 16, 64)?;
+    println!("== tiny-scale bandwidth model (true artifact byte counts) ==");
+    println!(
+        "weights streamed/token: {} KiB, kv/token: {} B",
+        tiny.weight_stream_bytes / 1024,
+        tiny.kv_bytes_per_token
+    );
+    println!(
+        "tokens/s {:.0}  (DDR is barely loaded at this scale: bw util {:.4}%)\n",
+        tiny_rep.tokens_per_s,
+        tiny_rep.bandwidth_utilization * 100.0
+    );
+
+    // -- paper scale: the Fig 3 numbers ---------------------------------
+    let paper = LlmWorkload::llama2_7b_kv260();
+    let rep = simulate_decode(&paper, DdrConfig::kv260_ddr4(), 128, 64)?;
+    println!("== paper scale: LLaMA2-7B AWQ-4bit on KV260 (Fig 3) ==");
+    println!("DRAM occupancy:        {:.1}%  (paper: >93%)", rep.dram_occupancy * 100.0);
+    println!("bandwidth utilization: {:.1}%  (paper: 85%)", rep.bandwidth_utilization * 100.0);
+    println!("decode throughput:     {:.2} tokens/s", rep.tokens_per_s);
+    println!("KV cache:              {} MiB after {} tokens", rep.kv_bytes >> 20, 128 + rep.tokens);
+    Ok(())
+}

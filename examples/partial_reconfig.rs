@@ -1,0 +1,72 @@
+//! Partial-reconfiguration scenario (paper §II / future work): a fabric
+//! hosting the CNN core swaps one PR region to an LLM DOT core when the
+//! workload mix shifts, without a full-device reprogram — with the
+//! simulated reconfiguration times and a multi-tenant spatial split.
+//!
+//!     cargo run --release --example partial_reconfig
+
+use aifa::accel::AccelConfig;
+use aifa::fpga::synth::{fits, synthesize, CostModel};
+use aifa::fpga::{Bitstream, Fabric, Resources};
+use anyhow::Result;
+
+fn bitstream(name: &str, cfg: &AccelConfig, total: &Resources) -> Result<Bitstream> {
+    let rep = synthesize(cfg, total, &CostModel::default());
+    anyhow::ensure!(fits(&rep), "{name} does not fit the device");
+    Ok(Bitstream { name: name.into(), usage: rep.usage, fmax_hz: rep.fmax_hz })
+}
+
+fn main() -> Result<()> {
+    let mut fabric = Fabric::kv260();
+    println!("== KV260 fabric ==");
+    println!("total: {:?}", fabric.total);
+    println!("static shell: {:?}\n", fabric.static_usage);
+
+    // Two PR regions: a big compute region and a small streaming region.
+    let big = Resources { luts: 70_000, dsps: 1_100, bram36: 100, uram: 48 };
+    let small = Resources { luts: 20_000, dsps: 96, bram36: 24, uram: 8 };
+    let r_big = fabric.add_region("compute", big)?;
+    let r_small = fabric.add_region("stream", small)?;
+    println!("free after carving PR regions: {:?}\n", fabric.free());
+
+    // Synthesize three cores.
+    let cnn_core = AccelConfig::default(); // 32x32 int8
+    let dot_core = AccelConfig { mac_rows: 32, mac_cols: 32, weight_bits: 4, ..cnn_core };
+    let pool_core = AccelConfig {
+        mac_rows: 8,
+        mac_cols: 8,
+        buffer_bytes: 128 << 10,
+        ..cnn_core
+    };
+
+    let total = fabric.total;
+    let bs_cnn = bitstream("cnn_int8_core", &cnn_core, &total)?;
+    let bs_dot = bitstream("llm_int4_dot_core", &dot_core, &total)?;
+    let bs_pool = bitstream("pool_stream_core", &pool_core, &total)?;
+
+    // Scenario: CNN serving by day...
+    let t1 = fabric.load(r_big, bs_cnn)?;
+    let t2 = fabric.load(r_small, bs_pool.clone())?;
+    println!("loaded CNN core in {:.1} ms, pool core in {:.1} ms", t1 * 1e3, t2 * 1e3);
+    println!("fabric used: {:?}", fabric.used());
+
+    // ...swap the compute region to the LLM DOT core when chat traffic
+    // arrives — the paper's dynamic adaptability story.
+    let t3 = fabric.load(r_big, bs_dot)?;
+    println!(
+        "\nswapped compute region to int4 DOT core in {:.1} ms (full reconfig would be {:.0} ms)",
+        t3 * 1e3,
+        fabric.full_config_s * 1e3
+    );
+    anyhow::ensure!(t3 < fabric.full_config_s, "PR must beat full reconfiguration");
+    println!("reconfigurations performed: {}", fabric.reconfigurations());
+
+    // Multi-tenant: both regions active simultaneously (spatial sharing).
+    println!("\nmulti-tenant: compute region runs LLM DOT while stream region pools CNN maps");
+    let used = fabric.used();
+    let util = used.utilization(&fabric.total);
+    for (k, v) in util {
+        println!("  {k:7} {:5.1}%", v * 100.0);
+    }
+    Ok(())
+}

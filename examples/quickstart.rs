@@ -1,0 +1,67 @@
+//! Quickstart: load the compiled artifacts, run the Fig 2 verification
+//! flow, train the scheduling agent, and classify a few images through
+//! the agent-chosen CPU/FPGA placement.
+//!
+//!     cargo run --release --example quickstart
+
+use aifa::accel::AccelConfig;
+use aifa::agent::{EnvConfig, FixedPlacement, QAgent, QConfig, SchedulingEnv};
+use aifa::coordinator::Coordinator;
+use aifa::data::TestSet;
+use aifa::platform::{CpuModel, FpgaPlatform};
+use aifa::runtime::{argmax_rows, ArtifactStore};
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    println!("== AI-FPGA Agent quickstart ==\n");
+
+    // 1. Load the AOT artifacts (python ran once at build time; this
+    //    binary is self-contained from here on).
+    let store = ArtifactStore::open(&dir)?;
+    let ts = TestSet::load(store.root.join("testset.bin"))?;
+    println!("loaded {} artifacts, {} test images\n", store.names().len(), ts.n);
+
+    // 2. Fig 2 flow: behavioural (int8) vs reference (fp32) vs timing
+    //    model co-simulation before "deployment".
+    let imgs = ts.decode_batch(0, 8)?;
+    let rep = aifa::verify::verify_flow(&store, &imgs, 8, &AccelConfig::default())?;
+    println!("-- Fig 2 verification flow --");
+    print!("{}", aifa::verify::report_markdown(&rep));
+    anyhow::ensure!(rep.pass, "verification failed — do not deploy");
+
+    // 3. Train the Q-scheduler on the platform models (Fig 1).
+    let env = SchedulingEnv::new(
+        store.network.clone(),
+        FpgaPlatform::table1_card(),
+        CpuModel::default(),
+        EnvConfig { batch: 8, ..EnvConfig::default() },
+    );
+    let mut agent = QAgent::new(QConfig::default(), 42);
+    agent.train(&env, 300);
+    let placement = agent.policy(&env, false);
+    println!("\n-- learned placement --");
+    for (u, p) in env.net.units.iter().zip(&placement) {
+        println!("  {:8} -> {:?}", u.name, p);
+    }
+
+    // 4. Serve a few classifications through the learned placement.
+    let coord = Coordinator::new(&store, env)?;
+    let policy = FixedPlacement { placement };
+    let res = coord.infer(&imgs, 8, &policy, false)?;
+    let preds = argmax_rows(&res.logits, res.classes);
+    println!("\n-- classifications (first 8 test images) --");
+    for (i, (p, l)) in preds.iter().zip(ts.label_slice(0, 8)).enumerate() {
+        println!(
+            "  image {i}: predicted {p}  label {l}  {}",
+            if *p == *l as usize { "ok" } else { "MISS" }
+        );
+    }
+    println!(
+        "\nsimulated batch latency {:.3} ms  energy {:.3} J  (behavioural wall {:.0} ms)",
+        res.sim_latency_s * 1e3,
+        res.sim_energy_j,
+        res.wall_s * 1e3
+    );
+    Ok(())
+}

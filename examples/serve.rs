@@ -1,0 +1,97 @@
+//! End-to-end validation driver (DESIGN.md §E2E): start the batching
+//! server with an agent-trained placement, replay the synthetic test set
+//! as timed requests (Poisson arrivals), and report latency percentiles,
+//! throughput, accuracy, and simulated power/energy — the serving-paper
+//! deliverable.  The run is recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example serve -- [n_images] [rate_per_s]
+
+use aifa::agent::{EnvConfig, FixedPlacement, QAgent, QConfig, SchedulingEnv};
+use aifa::data::TestSet;
+use aifa::platform::{CpuModel, FpgaPlatform};
+use aifa::power::PowerModel;
+use aifa::server::{BatchConfig, Server};
+use aifa::util::rng::Rng;
+use aifa::util::stats::Samples;
+use aifa::util::Stopwatch;
+use anyhow::Result;
+use std::time::Duration;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(400.0);
+    let dir = std::path::PathBuf::from("artifacts");
+
+    println!("== aifa serving driver: {n} requests @ {rate}/s ==");
+
+    // Train the scheduler up front (placement is frozen into the server).
+    let probe = aifa::runtime::ArtifactStore::open(&dir)?;
+    let ts = TestSet::load(probe.root.join("testset.bin"))?;
+    let env = SchedulingEnv::new(
+        probe.network.clone(),
+        FpgaPlatform::table1_card(),
+        CpuModel::default(),
+        EnvConfig { batch: 8, ..EnvConfig::default() },
+    );
+    let mut agent = QAgent::new(QConfig::default(), 42);
+    agent.train(&env, 300);
+    let placement = agent.policy(&env, false);
+    println!("learned placement: {placement:?}");
+    drop(probe); // the server builds its own store (PJRT is thread-local)
+
+    let server = Server::start(
+        dir,
+        {
+            move |store| {
+                SchedulingEnv::new(
+                    store.network.clone(),
+                    FpgaPlatform::table1_card(),
+                    CpuModel::default(),
+                    EnvConfig { batch: 8, ..EnvConfig::default() },
+                )
+            }
+        },
+        Box::new(FixedPlacement { placement }),
+        BatchConfig { max_wait: Duration::from_millis(4), max_batch: 8 },
+    )?;
+
+    // Replay the test set as Poisson arrivals.
+    let mut rng = Rng::new(7);
+    let sw = Stopwatch::start();
+    let mut pending = Vec::with_capacity(n);
+    for i in 0..n {
+        let img = ts.decode_batch(i % ts.n, 1)?;
+        pending.push((i % ts.n, server.handle.submit(img)?));
+        let gap = rng.exp(rate);
+        std::thread::sleep(Duration::from_secs_f64(gap.min(0.050)));
+    }
+
+    // Collect responses + accuracy.
+    let mut hits = 0usize;
+    let mut sim_batch = Samples::new();
+    for (idx, rx) in pending {
+        let resp = rx.recv()?;
+        hits += (resp.class == ts.labels[idx] as usize) as usize;
+        sim_batch.push(resp.sim_batch_s);
+    }
+    let wall = sw.secs();
+    let m = &server.metrics;
+    println!("\n-- results --");
+    println!("{}", m.summary());
+    println!("accuracy (mixed int8/fp32 placement): {:.4}", hits as f64 / n as f64);
+    println!("offered rate {rate}/s, achieved {:.1}/s over {wall:.1}s wall", n as f64 / wall);
+
+    // Simulated platform economics (the Table I quantities for this run).
+    let fpga_power = PowerModel::fpga_card();
+    let sim_per_img = sim_batch.mean() / 8.0;
+    println!(
+        "simulated device time/img {:.3} ms -> simulated throughput {:.1} img/s, {:.2} img/s/W @ {:.0} W",
+        sim_per_img * 1e3,
+        1.0 / sim_per_img,
+        1.0 / sim_per_img / fpga_power.load_w,
+        fpga_power.load_w
+    );
+    server.shutdown();
+    Ok(())
+}

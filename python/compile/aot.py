@@ -1,0 +1,251 @@
+"""AOT compiler: lower every model variant to HLO text + emit the manifest.
+
+This is the single build-time Python entrypoint (``make artifacts``).  It
+
+  1. generates the synthetic dataset and writes the u8-coded test set,
+  2. trains (or loads cached) CNN weights,
+  3. calibrates + quantizes to int8,
+  4. lowers *per-unit* and full-model executables, fp32 and int8, at the
+     supported batch sizes — weights baked in as HLO constants,
+  5. lowers the LLM prefill/decode executables (int4 weights baked in),
+  6. measures fp32/int8 accuracy on a 2000-image slice (python-side sanity
+     figure; the 10k Table I numbers are produced by the Rust benches),
+  7. writes ``artifacts/manifest.json`` describing everything for Rust.
+
+Interchange is HLO **text**: the image's xla_extension 0.5.1 rejects
+jax>=0.5 serialized protos (64-bit instruction ids); the text parser
+reassigns ids (see /opt/xla-example/README.md).  All outputs are lowered
+with ``return_tuple=True`` and unwrapped tuple-wise on the Rust side.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import dataset, llm, model, train
+
+CNN_UNIT_BATCHES = [1, 8]
+CNN_FULL_BATCHES = [1, 8]
+FP32_EXTRA_BATCHES = [64, 200]     # fp32 has no pallas grids — cheap to compile
+ACC_EVAL_N = 2000
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True: the default printer elides big literals as
+    # `constant({...})`, which the Rust-side text parser cannot reconstruct —
+    # baked weights MUST round-trip.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _shape_desc(x) -> dict:
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+class Emitter:
+    """Lowers jitted closures and accumulates the artifact registry."""
+
+    def __init__(self, out_dir: str, log=print):
+        self.out_dir = out_dir
+        self.log = log
+        self.registry: list[dict] = []
+
+    def emit(self, name: str, fn, example_args: tuple, role: str, **meta):
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *example_args)
+        outs = jax.tree_util.tree_leaves(out_shapes)
+        entry = {
+            "name": name,
+            "path": f"artifacts/{name}.hlo.txt",
+            "role": role,
+            "inputs": [_shape_desc(a) for a in example_args],
+            "outputs": [_shape_desc(o) for o in outs],
+            **meta,
+        }
+        self.registry.append(entry)
+        self.log(f"  [{len(self.registry):3d}] {name:28s} "
+                 f"{len(text)//1024:6d} KiB  ({time.time()-t0:.1f}s)")
+        return entry
+
+
+def build_cnn(em: Emitter, params: dict, qparams: dict) -> dict:
+    """Lower per-unit + full-model CNN executables; return unit metadata."""
+    units_meta = []
+    for i, u in enumerate(model.UNITS):
+        inb, outb = u.io_bytes(1)
+        units_meta.append({
+            "index": i, "name": u.name, "kind": u.kind,
+            "cin": u.cin, "cout": u.cout, "stride": u.stride,
+            "in_hw": u.in_hw, "out_hw": u.out_hw,
+            "macs_b1": u.macs(1), "params": u.param_count(),
+            "in_bytes_b1": inb, "out_bytes_b1": outb,
+            "weight_bytes_int8": u.param_count(),   # 1 byte/param (+f32 bias, small)
+        })
+        for b in CNN_UNIT_BATCHES:
+            x_spec = jax.ShapeDtypeStruct(u.in_shape(b), jnp.float32)
+            p = params.get(u.name)
+            qp = qparams.get(u.name)
+            em.emit(f"cnn_fp32_{u.name}_b{b}",
+                    lambda x, u=u, p=p: (model.unit_fp32(u, p, x),),
+                    (x_spec,), "cnn_unit", precision="fp32", batch=b, unit=u.name)
+            em.emit(f"cnn_int8_{u.name}_b{b}",
+                    lambda x, u=u, qp=qp: (model.unit_int8(u, qp, x),),
+                    (x_spec,), "cnn_unit", precision="int8", batch=b, unit=u.name)
+
+    img_shape = model.UNITS[0].in_shape
+    for b in CNN_FULL_BATCHES + FP32_EXTRA_BATCHES:
+        x_spec = jax.ShapeDtypeStruct(img_shape(b), jnp.float32)
+        em.emit(f"cnn_fp32_full_b{b}",
+                lambda x: (model.forward_fp32(params, x),),
+                (x_spec,), "cnn_full", precision="fp32", batch=b)
+    for b in CNN_FULL_BATCHES:
+        x_spec = jax.ShapeDtypeStruct(img_shape(b), jnp.float32)
+        em.emit(f"cnn_int8_full_b{b}",
+                lambda x: (model.forward_int8(qparams, x),),
+                (x_spec,), "cnn_full", precision="int8", batch=b)
+    return units_meta
+
+
+def build_llm(em: Emitter, cfg: llm.LlmConfig, qp: dict) -> dict:
+    tok_spec = jax.ShapeDtypeStruct((cfg.prefill_len,), jnp.int32)
+    em.emit("llm_prefill",
+            lambda toks: llm.prefill(cfg, qp, toks),
+            (tok_spec,), "llm_prefill")
+    kv_spec = jax.ShapeDtypeStruct(
+        (cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim), jnp.float32)
+    em.emit("llm_decode",
+            lambda t, p, kc, vc: llm.decode_step(cfg, qp, t, p, kc, vc),
+            (jax.ShapeDtypeStruct((), jnp.int32),
+             jax.ShapeDtypeStruct((), jnp.int32), kv_spec, kv_spec),
+            "llm_decode")
+    return {
+        "vocab": cfg.vocab, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads, "d_ff": cfg.d_ff, "group": cfg.group,
+        "max_seq": cfg.max_seq, "prefill_len": cfg.prefill_len,
+        "weight_stream_bytes_per_token": cfg.weight_stream_bytes_per_token(),
+        "kv_bytes_per_token": cfg.kv_bytes_per_token(),
+    }
+
+
+def measure_accuracy(params, qparams) -> dict:
+    xt, yt = dataset.test_set(ACC_EVAL_N)
+    xt, yt = jnp.asarray(xt), jnp.asarray(yt.astype(np.int32))
+    acc_f = train.accuracy(params, xt, yt)
+    fwd8 = jax.jit(model.forward_int8)
+    hits = 0
+    for i in range(0, ACC_EVAL_N, 100):
+        hits += int(jnp.sum(jnp.argmax(fwd8(qparams, xt[i:i + 100]), -1)
+                            == yt[i:i + 100]))
+    acc_q = hits / ACC_EVAL_N
+    return {"fp32": acc_f, "int8": acc_q, "delta": acc_f - acc_q,
+            "measured_on": ACC_EVAL_N}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--skip-accuracy", action="store_true",
+                    help="skip the python-side accuracy sanity measurement")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    t_start = time.time()
+
+    print("== dataset ==")
+    xs_test, ys_test = dataset.test_set(10_000)
+    dataset.write_testset(os.path.join(out, "testset.bin"), xs_test, ys_test)
+    print(f"  testset.bin: 10000 images "
+          f"({os.path.getsize(os.path.join(out, 'testset.bin'))//1024} KiB)")
+
+    print("== train / load CNN ==")
+    params, info = train.load_or_train(os.path.join(out, "weights.npz"))
+
+    print("== calibrate + quantize ==")
+    x_cal = jnp.asarray(dataset.train_set(256)[0])
+    act_scales = model.calibrate_act_scales(params, x_cal)
+    qparams = model.quantize_params(params, act_scales)
+
+    print("== lower CNN ==")
+    em = Emitter(out)
+    units_meta = build_cnn(em, params, qparams)
+
+    print("== lower LLM ==")
+    cfg = llm.CFG
+    llm_params = llm.init_llm_params(cfg)
+    llm_qp = llm.quantize_llm_params(cfg, llm_params)
+    llm_meta = build_llm(em, cfg, llm_qp)
+
+    print("== goldens (rust integration-test vectors) ==")
+    # Rust consumes the u8-decoded test set, so goldens must be computed
+    # from the decoded tensors for bit-exact agreement.
+    dec = dataset.decode_u8(dataset.encode_u8(xs_test[:8]))
+    x8 = jnp.asarray(dec)
+    gold_fp32 = np.asarray(model.forward_fp32(params, x8))
+    gold_int8 = np.asarray(jax.jit(model.forward_int8)(qparams, x8))
+    toks = jnp.arange(cfg.prefill_len, dtype=jnp.int32) % 97
+    g_logits, g_kc, g_vc = jax.jit(lambda t: llm.prefill(cfg, llm_qp, t))(toks)
+    greedy = [int(jnp.argmax(g_logits))]
+    dec_fn = jax.jit(lambda t, p, kc, vc: llm.decode_step(cfg, llm_qp, t, p, kc, vc))
+    kc, vc = g_kc, g_vc
+    for i in range(7):
+        lg, kc, vc = dec_fn(jnp.asarray(greedy[-1], jnp.int32),
+                            jnp.asarray(cfg.prefill_len + i, jnp.int32), kc, vc)
+        greedy.append(int(jnp.argmax(lg)))
+    golden = {
+        "n_images": 8,
+        "logits_fp32": gold_fp32.tolist(),
+        "logits_int8": gold_int8.tolist(),
+        "labels": ys_test[:8].tolist(),
+        "llm_prompt": [int(t) for t in toks],
+        "llm_greedy_tokens": greedy,
+    }
+
+    acc = {"fp32": None, "int8": None, "delta": None, "measured_on": 0}
+    if not args.skip_accuracy:
+        print("== accuracy sanity (python) ==")
+        acc = measure_accuracy(params, qparams)
+        print(f"  fp32 {acc['fp32']:.4f}  int8 {acc['int8']:.4f}  "
+              f"delta {acc['delta']:+.4f}")
+
+    manifest = {
+        "version": 1,
+        "generated_unix": int(time.time()),
+        "dataset": {
+            "n_test": 10_000, "img": dataset.IMG, "channels": dataset.CHANNELS,
+            "classes": dataset.NUM_CLASSES, "path": "artifacts/testset.bin",
+            "codec_lo": dataset.U8_LO, "codec_hi": dataset.U8_HI,
+        },
+        "accuracy": acc,
+        "golden": golden,
+        "train_info": {"final_loss": info.get("final_loss")},
+        "act_scales": {k: float(v) for k, v in act_scales.items()},
+        "units": units_meta,
+        "artifacts": em.registry,
+        "llm": llm_meta,
+        "batches": {"cnn_unit": CNN_UNIT_BATCHES,
+                    "cnn_full": CNN_FULL_BATCHES + FP32_EXTRA_BATCHES,
+                    "cnn_full_int8": CNN_FULL_BATCHES},
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"== done: {len(em.registry)} artifacts in {time.time()-t_start:.0f}s ==")
+
+
+if __name__ == "__main__":
+    main()

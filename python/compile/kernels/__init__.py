@@ -1,0 +1,27 @@
+"""L1 — Pallas kernels for the AI-FPGA Agent accelerator core.
+
+Behavioural models of the paper's FPGA compute units, written as Pallas
+kernels (interpret=True for CPU-PJRT executability) and validated against
+the pure-jnp oracles in ``ref.py``:
+
+  qmatmul      int8 MAC-array GEMM + fused requantization
+  qconv        quantized conv/dense built on the GEMM (im2col streaming)
+  pool         max / global-average pooling sub-blocks
+  llm_ops      Fig 3 compute units: RoPE, RMSNorm, Softmax, SiLU
+  int4_matmul  Fig 3 DOT unit: AWQ group-wise int4 dequant matmul
+  roofline     L1 perf analysis (VMEM footprint, MXU-utilization estimate)
+"""
+
+from .qmatmul import qmatmul_i8, qmatmul_requant, vmem_footprint_bytes
+from .qconv import qconv2d, qdense
+from .pool import maxpool2x2, global_avgpool
+from .llm_ops import rmsnorm, silu, softmax, rope
+from .int4_matmul import int4_matmul, weight_stream_bytes
+from . import ref
+
+__all__ = [
+    "qmatmul_i8", "qmatmul_requant", "vmem_footprint_bytes",
+    "qconv2d", "qdense", "maxpool2x2", "global_avgpool",
+    "rmsnorm", "silu", "softmax", "rope",
+    "int4_matmul", "weight_stream_bytes", "ref",
+]

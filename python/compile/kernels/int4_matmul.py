@@ -1,0 +1,72 @@
+"""Pallas group-wise int4 dequant matmul — the Fig 3 DOT unit.
+
+On the KV260 the LLaMA weights are AWQ-quantized to 4 bits and streamed
+from DDR4 over the 64-bit AXI bus; a dequantization unit expands each
+group with its f32 scale right before the MAC array.  Here one grid step
+stages an activation block plus one K-group of packed weights (+ its scale
+row) in VMEM, dequantizes, and accumulates — the group axis doubles as the
+reduction axis so the scale row for the live group is exactly one block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _int4_kernel(x_ref, w_ref, s_ref, o_ref):
+    g = pl.program_id(2)
+
+    @pl.when(g == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                                   # f32 [bm, G]
+    w = w_ref[...].astype(jnp.float32)               # int4-in-i8 [G, bn]
+    s = s_ref[...]                                   # f32 [1, bn]
+    o_ref[...] += jnp.dot(x, w * s, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "bm", "bn"))
+def int4_matmul(x: jnp.ndarray, w_q: jnp.ndarray, scales: jnp.ndarray,
+                group: int = 32, bm: int = 32, bn: int = 64) -> jnp.ndarray:
+    """f32[M,K] @ dequant(int4[K,N], scales[K/G,N]) -> f32[M,N].
+
+    K must be divisible by ``group`` (enforced at pack time).  M and N are
+    zero-padded to the block grid; padding contributes zero to the sums.
+    """
+    m, k = x.shape
+    k2, n = w_q.shape
+    assert k == k2 and k % group == 0
+    ngroups = k // group
+
+    pm = (-m) % bm
+    pn = (-n) % bn
+    xp = jnp.pad(x, ((0, pm), (0, 0))) if pm else x
+    wp = jnp.pad(w_q, ((0, 0), (0, pn))) if pn else w_q
+    sp = jnp.pad(scales, ((0, 0), (0, pn))) if pn else scales
+    mp, np_ = xp.shape[0], wp.shape[1]
+
+    out = pl.pallas_call(
+        _int4_kernel,
+        grid=(mp // bm, np_ // bn, ngroups),
+        in_specs=[
+            pl.BlockSpec((bm, group), lambda mi, ni, gi: (mi, gi)),
+            pl.BlockSpec((group, bn), lambda mi, ni, gi: (gi, ni)),
+            pl.BlockSpec((1, bn), lambda mi, ni, gi: (gi, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, gi: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, sp)
+    return out[:m, :n]
+
+
+def weight_stream_bytes(k: int, n: int, group: int = 32) -> int:
+    """DDR bytes streamed per use of a [K,N] int4 weight matrix: packed
+    nibbles + one f32 scale per group-column.  The Rust ``llm`` bandwidth
+    model uses the same formula — keep in sync (tests/test_manifest.py)."""
+    return (k * n) // 2 + (k // group) * n * 4

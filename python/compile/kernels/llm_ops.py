@@ -1,0 +1,147 @@
+"""Pallas kernels for the Fig 3 KV260 LLM compute units.
+
+The paper's programmable-logic region hosts dedicated units for DOT
+(int4 matmul — see int4_matmul.py), RoPE, RMSNorm, Softmax and SiLU.
+Each unit here is a row-parallel Pallas kernel: one grid step stages a
+block of rows in VMEM, applies the op, streams the block back — the same
+feature-map streaming discipline as the paper's AXI pipeline.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rows_2d(x: jnp.ndarray):
+    """Collapse leading axes: [..., D] -> ([R, D], unflatten)."""
+    d = x.shape[-1]
+    lead = x.shape[:-1]
+    r = 1
+    for s in lead:
+        r *= s
+    return x.reshape(r, d), lambda y: y.reshape(*lead, d)
+
+
+def _row_call(kernel, x2: jnp.ndarray, extra=(), block_rows: int = 64):
+    """Launch a row-wise kernel over [R, D] with zero row padding."""
+    r, d = x2.shape
+    br = min(block_rows, r) if r > 0 else 1
+    pad = (-r) % br
+    xp = jnp.pad(x2, ((0, pad), (0, 0))) if pad else x2
+    rp = xp.shape[0]
+    in_specs = [pl.BlockSpec((br, d), lambda i: (i, 0))]
+    args = [xp]
+    for e in extra:
+        in_specs.append(pl.BlockSpec(e.shape, lambda i: tuple(0 for _ in e.shape)))
+        args.append(e)
+    out = pl.pallas_call(
+        kernel,
+        grid=(rp // br,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, d), x2.dtype),
+        interpret=True,
+    )(*args)
+    return out[:r]
+
+
+# -- RMSNorm ----------------------------------------------------------------
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + 1e-5) * g_ref[...]).astype(o_ref.dtype)
+
+
+@jax.jit
+def rmsnorm(x: jnp.ndarray, gamma: jnp.ndarray) -> jnp.ndarray:
+    """RMSNorm over the last axis; gamma: [D]."""
+    x2, unflat = _rows_2d(x)
+    return unflat(_row_call(_rmsnorm_kernel, x2, extra=(gamma,)))
+
+
+# -- SiLU --------------------------------------------------------------------
+
+def _silu_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = (x * (1.0 / (1.0 + jnp.exp(-x)))).astype(o_ref.dtype)
+
+
+@jax.jit
+def silu(x: jnp.ndarray) -> jnp.ndarray:
+    """SiLU activation, any shape."""
+    x2, unflat = _rows_2d(x)
+    return unflat(_row_call(_silu_kernel, x2))
+
+
+# -- Softmax -----------------------------------------------------------------
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+@jax.jit
+def softmax(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable softmax over the last axis, any shape."""
+    x2, unflat = _rows_2d(x)
+    return unflat(_row_call(_softmax_kernel, x2))
+
+
+# -- RoPE --------------------------------------------------------------------
+
+def _rope_kernel(x_ref, cs_ref, o_ref):
+    """Rotate interleaved pairs by precomputed (cos | sin) table rows."""
+    x = x_ref[...].astype(jnp.float32)          # [br, D]
+    cs = cs_ref[...].astype(jnp.float32)        # [br, D] = [cos | sin]
+    d = x.shape[-1]
+    half = d // 2
+    cos, sin = cs[:, :half], cs[:, half:]
+    x1, x2 = x[:, 0::2], x[:, 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    y = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("theta",))
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary embedding over [..., S, D] with positions [S].
+
+    The angle table is computed in-graph (XLA constant-folds it when
+    positions are literal) and streamed alongside the activations, matching
+    the paper's RoPE unit which consumes a small on-chip cos/sin ROM.
+    """
+    *lead, s, d = x.shape
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) * 2.0 / d))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]     # [S, D/2]
+    cs = jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)       # [S, D]
+
+    x2 = x.reshape(-1, s, d)
+    b = x2.shape[0]
+    cs_full = jnp.broadcast_to(cs[None], (b, s, d)).reshape(b * s, d)
+    x_rows = x2.reshape(b * s, d)
+
+    r, _ = x_rows.shape
+    br = min(64, r)
+    pad = (-r) % br
+    xp = jnp.pad(x_rows, ((0, pad), (0, 0))) if pad else x_rows
+    cp = jnp.pad(cs_full, ((0, pad), (0, 0))) if pad else cs_full
+    rp = xp.shape[0]
+    out = pl.pallas_call(
+        _rope_kernel,
+        grid=(rp // br,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0)),
+                  pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, d), x.dtype),
+        interpret=True,
+    )(xp, cp)
+    return out[:r].reshape(*lead, s, d)

@@ -1,0 +1,54 @@
+"""Pallas pooling kernels (the accelerator's pooling sub-block).
+
+Pooling on the FPGA is a small dedicated pipeline stage after the MAC
+array; here each grid step stages one image's feature map in VMEM and
+reduces it — bandwidth-bound, so the block is the whole map.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxpool_kernel(x_ref, o_ref):
+    x = x_ref[...]                              # [1, H, W, C]
+    _, h, w, c = x.shape
+    o_ref[...] = jnp.max(x.reshape(1, h // 2, 2, w // 2, 2, c), axis=(2, 4))
+
+
+@jax.jit
+def maxpool2x2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2 stride-2 max pool, NHWC, one image per grid step."""
+    b, h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0, f"odd spatial dims: {h}x{w}"
+    return pl.pallas_call(
+        _maxpool_kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, h // 2, w // 2, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h // 2, w // 2, c), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _gap_kernel(x_ref, o_ref):
+    x = x_ref[...]                              # [1, H, W, C]
+    o_ref[...] = jnp.mean(x, axis=(1, 2))
+
+
+@jax.jit
+def global_avgpool(x: jnp.ndarray) -> jnp.ndarray:
+    """Global average pool NHWC -> [B, C]."""
+    b, h, w, c = x.shape
+    return pl.pallas_call(
+        _gap_kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,52 @@
+"""Quantized convolution: im2col streaming + the Pallas MAC-array kernel.
+
+FPGA CNN engines (Zhang et al. FPGA'15, Qiu et al. FPGA'16 — the paper's
+§II lineage) feed their MAC arrays with a line-buffer window unroller that
+is exactly im2col performed in streaming hardware.  We reproduce that
+split: the window unroller is cheap data movement (L2 jnp, fused by XLA
+into gathers/reshapes), the arithmetic hot spot is the Pallas int8 GEMM.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import qmatmul as qk
+from .ref import im2col_ref, quantize_i8
+
+
+def qconv2d(x: jnp.ndarray, w_q: jnp.ndarray, bias: jnp.ndarray,
+            x_scale, w_scale: jnp.ndarray,
+            stride: int = 1, pad: int = 1,
+            bm: int = qk.BM, bn: int = qk.BN, bk: int | None = qk.BK) -> jnp.ndarray:
+    """Quantized NHWC conv.
+
+    x:       f32 [B,H,W,C]   activation (quantized on entry — the paper's
+                             quantization unit sits at the accelerator input)
+    w_q:     int8 [kh,kw,C,Cout] pre-quantized weights (resident in DDR,
+                             streamed tile-by-tile)
+    bias:    f32 [Cout]
+    x_scale: f32 scalar      calibrated per-tensor activation scale
+    w_scale: f32 [Cout]      per-output-channel weight scales
+    returns  f32 [B,Ho,Wo,Cout]
+    """
+    kh, kw, c, cout = w_q.shape
+    b, h, w_, _ = x.shape
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w_ + 2 * pad - kw) // stride + 1
+
+    x_q = quantize_i8(x, x_scale)
+    patches = im2col_ref(x_q, kh, kw, stride, pad)           # i8 [M, K]
+    scale = x_scale * w_scale                                 # [Cout]
+    y = qk.qmatmul_requant(patches, w_q.reshape(kh * kw * c, cout),
+                           scale, bias, bm=bm, bn=bn, bk=bk)
+    return y.reshape(b, ho, wo, cout)
+
+
+def qdense(x: jnp.ndarray, w_q: jnp.ndarray, bias: jnp.ndarray,
+           x_scale, w_scale: jnp.ndarray,
+           bm: int = qk.BM, bn: int = qk.BN, bk: int | None = qk.BK) -> jnp.ndarray:
+    """Quantized dense layer: f32 [B,K] x int8 [K,N] -> f32 [B,N]."""
+    x_q = quantize_i8(x, x_scale)
+    return qk.qmatmul_requant(x_q, w_q, x_scale * w_scale, bias,
+                              bm=bm, bn=bn, bk=bk)

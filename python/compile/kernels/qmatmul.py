@@ -1,0 +1,125 @@
+"""Pallas int8 MAC-array kernel: the paper's FPGA accelerator hot spot.
+
+The paper's accelerator core is a 32x32 int8 multiply-accumulate array fed
+by BRAM tile buffers with double-buffered DMA from DDR.  The TPU-style
+mapping (DESIGN.md §Hardware-Adaptation):
+
+  * BRAM tile buffers  -> VMEM blocks via ``BlockSpec`` index maps
+  * int8 MAC array     -> ``jnp.dot(..., preferred_element_type=int32)``
+                          (MXU systolic accumulate at full precision)
+  * double-buffered DMA-> the Pallas grid pipeline: while grid step (m,n,k)
+                          computes, the (m,n,k+1) blocks are staged —
+                          exactly the paper's compute/transfer overlap.
+
+Kernels run ``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so interpret mode lowers to plain HLO which both pytest and
+the Rust runtime execute.  Structure (block shapes, single requantization
+at tile egress) is what we optimize; see EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile geometry.  PERF NOTE (EXPERIMENTS.md §Perf L1): the initial
+# 32x32x64 geometry — a literal transcription of the paper's 32x32 MAC
+# array — produced huge interpret-mode grids (one step per tile triple) and
+# XLA compile times that grew ~linearly in grid size (326 s for a batch-200
+# conv).  The tuned geometry processes one (512-row x full-K x 64-col)
+# macro-tile per grid step: the VvMEM footprint stays under the 4 MiB budget
+# (roofline.py) while grid counts drop ~60x.  ``bk=None`` means "full K in
+# one step" (no reduction loop).  The Rust timing model still models the
+# inner 32x32 MAC array — block geometry here is the *schedule*, the MAC
+# array is the *datapath*, matching how an HLS tool would unroll it.
+BM, BN, BK = 512, 64, None
+
+
+def _cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def _pad_to(x: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
+    """Zero-pad a 2-d array so each dim is a multiple of the block size.
+
+    Zero padding is exact for matmul (contributes nothing to the i32
+    accumulator) — the same trick the FPGA tiler uses for ragged edges.
+    """
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 == 0 and p1 == 0:
+        return x
+    return jnp.pad(x, ((0, p0), (0, p1)))
+
+
+def _qmatmul_kernel(x_ref, w_ref, o_ref):
+    """One grid step: o[m,n] (+)= x[m,k] @ w[k,n] in i32.
+
+    The K grid axis is the reduction: step k==0 initialises the partial-sum
+    buffer (the accelerator's BRAM psum bank), later steps accumulate.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def qmatmul_i8(x_q: jnp.ndarray, w_q: jnp.ndarray,
+               bm: int = BM, bn: int = BN, bk: int | None = BK) -> jnp.ndarray:
+    """int8[M,K] @ int8[K,N] -> int32[M,N] via the Pallas MAC-array kernel."""
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    if bk is None:
+        bk = k                      # full reduction in one grid step
+    bm = min(bm, m)
+    bn = min(bn, n)
+    xp = _pad_to(x_q, bm, bk)
+    wp = _pad_to(w_q, bk, bn)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _qmatmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def qmatmul_requant(x_q: jnp.ndarray, w_q: jnp.ndarray, scale: jnp.ndarray,
+                    bias: jnp.ndarray,
+                    bm: int = BM, bn: int = BN, bk: int | None = BK) -> jnp.ndarray:
+    """Fused MAC + requantize + bias: the accelerator's full PE-egress path.
+
+    ``scale`` is the per-output-channel product scale (s_x * s_w[n]); the
+    single f32 multiply at tile egress is the paper's requantization unit.
+    """
+    acc = qmatmul_i8(x_q, w_q, bm=bm, bn=bn, bk=bk)
+    return acc.astype(jnp.float32) * scale[None, :] + bias[None, :]
+
+
+def vmem_footprint_bytes(bm: int = BM, bn: int = BN, bk: int = 576) -> int:
+    """VMEM bytes held live by one grid step (double-buffered inputs +
+    i32 partial sums).  Used by roofline.py and mirrored by the Rust
+    ``accel::BufferPlan`` — keep in sync."""
+    x_tile = bm * bk * 1          # int8
+    w_tile = bk * bn * 1          # int8
+    psum = bm * bn * 4            # int32 accumulator
+    return 2 * (x_tile + w_tile) + psum  # 2x: pipeline double buffer

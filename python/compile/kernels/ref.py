@@ -1,0 +1,193 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the *behavioural golden models*: each Pallas kernel in
+``python/compile/kernels`` must agree with its oracle bit-exactly (integer
+kernels) or to float tolerance (normalisation / activation kernels).  The
+pytest suite in ``python/tests`` sweeps shapes and dtypes (via hypothesis)
+and asserts agreement; this is the paper's SystemC-behavioural-model role
+(Fig 2) played at the kernel level.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Quantization helpers (shared by oracle and model code)
+# ---------------------------------------------------------------------------
+
+def quantize_i8(x: jnp.ndarray, scale) -> jnp.ndarray:
+    """Affine-symmetric int8 quantization: round(x / scale), clipped to ±127.
+
+    ``scale`` may be a scalar (per-tensor) or broadcastable (per-channel).
+    """
+    q = jnp.round(x / scale)
+    return jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
+
+
+def dequantize_i32(acc: jnp.ndarray, scale) -> jnp.ndarray:
+    """Dequantize an i32 MAC accumulator back to f32 with the product scale."""
+    return acc.astype(jnp.float32) * scale
+
+
+def weight_scales_per_channel(w: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Symmetric per-output-channel scale: max|w| / 127 along all axes but `axis`."""
+    reduce_axes = tuple(i for i in range(w.ndim) if i != axis)
+    amax = jnp.max(jnp.abs(w), axis=reduce_axes)
+    return jnp.maximum(amax, 1e-8) / 127.0
+
+
+# ---------------------------------------------------------------------------
+# Kernel oracles
+# ---------------------------------------------------------------------------
+
+def qmatmul_i8_ref(x_q: jnp.ndarray, w_q: jnp.ndarray) -> jnp.ndarray:
+    """int8 x int8 -> int32 matmul, full-precision accumulation.
+
+    This is the MAC-array behavioural model: every product is i8*i8 -> i16
+    and the accumulator is i32 (never saturates for K < 2^15).
+    """
+    return jnp.dot(
+        x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def im2col_ref(x: jnp.ndarray, kh: int, kw: int, stride: int, pad: int) -> jnp.ndarray:
+    """NHWC im2col: returns [B*Ho*Wo, kh*kw*C] patches (dtype-preserving).
+
+    Matches the streaming window unroller an FPGA conv engine uses to feed
+    its MAC array; implemented with strided slices so it works on int8.
+    """
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            sl = xp[:, dy : dy + (ho - 1) * stride + 1 : stride,
+                    dx : dx + (wo - 1) * stride + 1 : stride, :]
+            cols.append(sl)
+    # [B, Ho, Wo, kh*kw, C] -> [B*Ho*Wo, kh*kw*C]
+    patches = jnp.stack(cols, axis=3)
+    return patches.reshape(b * ho * wo, kh * kw * c)
+
+
+def qconv2d_ref(x: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray,
+                x_scale: float, w_scale: jnp.ndarray,
+                stride: int = 1, pad: int = 1) -> jnp.ndarray:
+    """Quantized conv oracle: quantize f32 activations, int8 im2col GEMM,
+    per-channel requantize, add f32 bias.
+
+    x: f32 [B,H,W,C]; w: f32 [kh,kw,C,Cout]; returns f32 [B,Ho,Wo,Cout].
+    """
+    kh, kw, c, cout = w.shape
+    b, h, _, _ = x.shape
+    ho = (h + 2 * pad - kh) // stride + 1
+    x_q = quantize_i8(x, x_scale)
+    w_q = quantize_i8(w, w_scale[None, None, None, :])
+    patches = im2col_ref(x_q, kh, kw, stride, pad)          # [M, K] i8
+    acc = qmatmul_i8_ref(patches, w_q.reshape(kh * kw * c, cout))
+    y = dequantize_i32(acc, x_scale * w_scale[None, :]) + bias[None, :]
+    wo = ho
+    return y.reshape(b, ho, wo, cout)
+
+
+def qdense_ref(x: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray,
+               x_scale: float, w_scale: jnp.ndarray) -> jnp.ndarray:
+    """Quantized dense oracle. x: f32 [B,K]; w: f32 [K,N]."""
+    x_q = quantize_i8(x, x_scale)
+    w_q = quantize_i8(w, w_scale[None, :])
+    acc = qmatmul_i8_ref(x_q, w_q)
+    return dequantize_i32(acc, x_scale * w_scale[None, :]) + bias[None, :]
+
+
+def maxpool2x2_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2/2 max pool, NHWC."""
+    b, h, w, c = x.shape
+    return jnp.max(x.reshape(b, h // 2, 2, w // 2, 2, c), axis=(2, 4))
+
+
+def global_avgpool_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Global average pool NHWC -> [B, C]."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+def rmsnorm_ref(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm over the last axis (Fig 3 RMSNorm compute unit)."""
+    ms = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return (x * (1.0 / jnp.sqrt(ms + eps)) * gamma).astype(x.dtype)
+
+
+def silu_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """SiLU / swish activation (Fig 3 SiLU compute unit)."""
+    return x * (1.0 / (1.0 + jnp.exp(-x.astype(jnp.float32)))).astype(x.dtype)
+
+
+def softmax_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Numerically-stable softmax over the last axis (Fig 3 Softmax unit)."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp((x - m).astype(jnp.float32))
+    return (e / jnp.sum(e, axis=-1, keepdims=True)).astype(x.dtype)
+
+
+def rope_ref(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary positional embedding (Fig 3 RoPE compute unit).
+
+    x: [..., S, D] with D even; positions: [S] (int or float).
+    Rotates pairs (x[2i], x[2i+1]) by angle pos / theta^(2i/D).
+    """
+    d = x.shape[-1]
+    assert d % 2 == 0
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) * 2.0 / d))
+    angles = positions.astype(jnp.float32)[..., :, None] * freqs[None, :]  # [S, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def pack_int4_ref(w: jnp.ndarray, group: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """AWQ-style group-wise symmetric int4 quantization.
+
+    w: f32 [K, N]; returns (w_q int8 in [-7, 7] stored widened, scales f32
+    [K//group, N]).  Storage stays int8 for PJRT friendliness; the *values*
+    are 4-bit.  K must be divisible by ``group``.
+    """
+    k, n = w.shape
+    assert k % group == 0, f"K={k} not divisible by group={group}"
+    wg = w.reshape(k // group, group, n)
+    amax = jnp.max(jnp.abs(wg), axis=1)                       # [K/G, N]
+    scales = jnp.maximum(amax, 1e-8) / 7.0
+    q = jnp.round(wg / scales[:, None, :])
+    q = jnp.clip(q, -7, 7).astype(jnp.int8)
+    return q.reshape(k, n), scales
+
+
+def int4_matmul_ref(x: jnp.ndarray, w_q: jnp.ndarray, scales: jnp.ndarray,
+                    group: int) -> jnp.ndarray:
+    """Group-wise int4 dequant matmul oracle: x f32 [M,K] @ dequant(w) [K,N].
+
+    Mirrors the KV260 engine: weights stream from DRAM as packed 4-bit,
+    dequantized group-by-group right before the MAC array.
+    """
+    k, n = w_q.shape
+    wg = w_q.reshape(k // group, group, n).astype(jnp.float32)
+    w_deq = (wg * scales[:, None, :]).reshape(k, n)
+    return jnp.dot(x, w_deq)
+
+
+# ---------------------------------------------------------------------------
+# numpy-side helpers for tests
+# ---------------------------------------------------------------------------
+
+def np_topk_agree(a: np.ndarray, b: np.ndarray) -> float:
+    """Fraction of rows where argmax agrees — used for fp32-vs-int8 fidelity."""
+    return float(np.mean(np.argmax(a, -1) == np.argmax(b, -1)))

@@ -1,0 +1,97 @@
+"""L1 perf analysis: VMEM footprint + MXU-utilization estimate per kernel.
+
+interpret=True gives CPU-numpy timings which are NOT a TPU proxy, so the
+L1 performance deliverable is structural: for each kernel configuration we
+report (a) the live VMEM footprint of one grid step (must fit the ~16 MiB
+VMEM of a TPU core with double buffering; we budget 4 MiB to leave room
+for the surrounding graph), and (b) the estimated MXU utilization = useful
+MACs / (128x128 systolic slots x cycles), given the block geometry.
+
+Run:  python -m compile.kernels.roofline
+The table is copied into EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+MXU_DIM = 128            # TPU systolic array edge
+VMEM_BUDGET = 4 << 20    # bytes we allow one kernel to hold live
+
+
+@dataclass
+class KernelProfile:
+    name: str
+    shape: str
+    vmem_bytes: int
+    mxu_util: float       # 0..1 estimate
+    note: str = ""
+
+    def row(self) -> str:
+        return (f"| {self.name} | {self.shape} | {self.vmem_bytes/1024:.1f} KiB "
+                f"| {100*self.mxu_util:.1f}% | {self.note} |")
+
+
+def qmatmul_profile(m: int, k: int, n: int, bm: int, bn: int, bk: int) -> KernelProfile:
+    """int8 GEMM: footprint from qmatmul.vmem_footprint_bytes; MXU util is
+    the fraction of the 128x128 array the (bm x bn) tile keeps busy, times
+    the K-stream efficiency (bk vs pipeline fill)."""
+    from .qmatmul import vmem_footprint_bytes
+    vmem = vmem_footprint_bytes(bm, bn, bk)
+    spatial = min(bm, MXU_DIM) * min(bn, MXU_DIM) / (MXU_DIM * MXU_DIM)
+    stream = bk / (bk + MXU_DIM)          # fill/drain amortization along K
+    return KernelProfile("qmatmul_i8", f"{m}x{k}x{n} blk {bm}/{bn}/{bk}",
+                         vmem, spatial * stream)
+
+
+def int4_profile(m: int, k: int, n: int, group: int, bm: int, bn: int) -> KernelProfile:
+    vmem = 2 * (bm * group * 4 + group * bn + bn * 4) + bm * bn * 4
+    spatial = min(bm, MXU_DIM) * min(bn, MXU_DIM) / (MXU_DIM * MXU_DIM)
+    stream = group / (group + MXU_DIM)
+    return KernelProfile("int4_matmul", f"{m}x{k}x{n} G{group} blk {bm}/{bn}",
+                         vmem, spatial * stream,
+                         note="dequant adds 1 vmul/elem pre-MXU")
+
+
+def rowop_profile(name: str, rows: int, d: int, br: int) -> KernelProfile:
+    vmem = 2 * (br * d * 4) * 2
+    return KernelProfile(name, f"{rows}x{d} blk {br}", vmem, 0.0,
+                         note="VPU-bound (no MXU)")
+
+
+def main() -> None:
+    profiles = [
+        # CNN conv layers as im2col GEMMs (batch 8):
+        # v0 geometry (32x32x64, literal MAC-array transcription) — grid
+        # explodes and MXU sits mostly idle:
+        qmatmul_profile(8 * 1024, 27, 16, 32, 32, 64),
+        qmatmul_profile(8 * 1024, 144, 16, 32, 32, 64),
+        qmatmul_profile(8 * 256, 144, 32, 32, 32, 64),
+        # v1 tuned geometry (shipped defaults: 512-row macro-tile, full K,
+        # 64 cols — see EXPERIMENTS.md §Perf L1):
+        qmatmul_profile(8 * 1024, 27, 16, 512, 64, 27),
+        qmatmul_profile(8 * 1024, 144, 16, 512, 64, 144),
+        qmatmul_profile(8 * 64, 576, 64, 512, 64, 576),
+        # hypothetical fully MXU-aligned tile for reference:
+        qmatmul_profile(8 * 1024, 144, 16, 128, 128, 128),
+        # LLM projections (d_model 128)
+        int4_profile(16, 128, 128, 32, 32, 64),
+        int4_profile(16, 128, 256, 32, 32, 64),
+        rowop_profile("rmsnorm", 16, 128, 64),
+        rowop_profile("softmax", 16 * 4, 128, 64),
+        rowop_profile("rope", 16 * 4, 32, 64),
+    ]
+    print("| kernel | shape | VMEM/step | MXU util | note |")
+    print("|---|---|---|---|---|")
+    over = False
+    for p in profiles:
+        print(p.row())
+        if p.vmem_bytes > VMEM_BUDGET:
+            over = True
+    print()
+    print(f"VMEM budget {VMEM_BUDGET >> 20} MiB — "
+          + ("EXCEEDED by at least one config" if over else "all configs fit"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""L2 — Fig 3 case study: LLaMA-style decoder with AWQ-style int4 weights.
+
+The paper's KV260 pipeline runs LLaMA2-7B (AWQ 4-bit) with PL compute
+units for DOT / RoPE / RMSNorm / Softmax / SiLU, weights + KV cache in
+DDR4.  7B does not fit this testbed, so we build a scaled decoder with the
+*same structure* (pre-RMSNorm blocks, RoPE attention, SwiGLU MLP, 4-bit
+group-quantized weight streaming) and validate the code path end-to-end;
+the Rust ``llm`` simulator is calibrated against this model's real byte
+counts and then configured at paper scale for the Fig 3 numbers
+(DESIGN.md substitution table).
+
+Every weight matmul goes through the Pallas int4 DOT unit; RoPE, RMSNorm,
+Softmax and SiLU are the Pallas kernels from ``kernels.llm_ops`` — one
+compute unit per paper Fig 3 block.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import int4_matmul, rmsnorm, rope, silu, softmax
+from .kernels.ref import pack_int4_ref
+from .kernels.int4_matmul import weight_stream_bytes
+
+
+@dataclass(frozen=True)
+class LlmConfig:
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 256
+    group: int = 32          # AWQ quantization group size
+    max_seq: int = 128
+    prefill_len: int = 16
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def matmul_shapes(self) -> list[tuple[str, int, int]]:
+        """Every weight matmul of one forward pass (per layer, then head)."""
+        d, f = self.d_model, self.d_ff
+        per_layer = [("wq", d, d), ("wk", d, d), ("wv", d, d), ("wo", d, d),
+                     ("w1", d, f), ("w3", d, f), ("w2", f, d)]
+        shapes = []
+        for layer in range(self.n_layers):
+            shapes += [(f"l{layer}.{n}", k, n_) for n, k, n_ in per_layer]
+        shapes.append(("head", d, self.vocab))
+        return shapes
+
+    def weight_stream_bytes_per_token(self) -> int:
+        """DDR bytes streamed per decode step (packed int4 + group scales) —
+        the quantity that drives the Fig 3 bandwidth-utilization number."""
+        return sum(weight_stream_bytes(k, n, self.group)
+                   for _, k, n in self.matmul_shapes())
+
+    def kv_bytes_per_token(self) -> int:
+        """KV-cache bytes appended per token (f32 K and V rows, all layers)."""
+        return 2 * self.n_layers * self.d_model * 4
+
+
+CFG = LlmConfig()
+
+
+def init_llm_params(cfg: LlmConfig, seed: int = 11) -> dict:
+    """Random (seeded) fp32 weights.  Fig 3 reports throughput/bandwidth,
+    not task quality, so trained weights are unnecessary; numerics still
+    flow through the full quantized path."""
+    key = jax.random.PRNGKey(seed)
+    p: dict = {}
+    key, ke = jax.random.split(key)
+    p["embed"] = jax.random.normal(ke, (cfg.vocab, cfg.d_model)) * 0.02
+    for layer in range(cfg.n_layers):
+        lp = {}
+        for name, k, n in [("wq", cfg.d_model, cfg.d_model),
+                           ("wk", cfg.d_model, cfg.d_model),
+                           ("wv", cfg.d_model, cfg.d_model),
+                           ("wo", cfg.d_model, cfg.d_model),
+                           ("w1", cfg.d_model, cfg.d_ff),
+                           ("w3", cfg.d_model, cfg.d_ff),
+                           ("w2", cfg.d_ff, cfg.d_model)]:
+            key, kk = jax.random.split(key)
+            lp[name] = jax.random.normal(kk, (k, n)) * (k ** -0.5)
+        lp["norm_attn"] = jnp.ones((cfg.d_model,))
+        lp["norm_mlp"] = jnp.ones((cfg.d_model,))
+        p[f"l{layer}"] = lp
+    key, kh = jax.random.split(key)
+    p["norm_f"] = jnp.ones((cfg.d_model,))
+    p["head"] = jax.random.normal(kh, (cfg.d_model, cfg.vocab)) * 0.02
+    return p
+
+
+def quantize_llm_params(cfg: LlmConfig, params: dict) -> dict:
+    """Pack every weight matrix to int4 groups (embed stays f32 — it is a
+    lookup, not a matmul, and the paper streams it once per token row)."""
+    qp: dict = {"embed": params["embed"], "norm_f": params["norm_f"]}
+    for layer in range(cfg.n_layers):
+        lp, qlp = params[f"l{layer}"], {}
+        for name in ("wq", "wk", "wv", "wo", "w1", "w3", "w2"):
+            w_q, scales = pack_int4_ref(lp[name], cfg.group)
+            qlp[name] = {"q": w_q, "s": scales}
+        qlp["norm_attn"] = lp["norm_attn"]
+        qlp["norm_mlp"] = lp["norm_mlp"]
+        qp[f"l{layer}"] = qlp
+    w_q, scales = pack_int4_ref(params["head"], cfg.group)
+    qp["head"] = {"q": w_q, "s": scales}
+    return qp
+
+
+def _mm(qp_entry: dict, x: jnp.ndarray, cfg: LlmConfig) -> jnp.ndarray:
+    """The Fig 3 DOT unit: activation f32 x int4-group weights."""
+    return int4_matmul(x, qp_entry["q"], qp_entry["s"], group=cfg.group)
+
+
+def _attn(cfg: LlmConfig, qlp: dict, x: jnp.ndarray, positions: jnp.ndarray,
+          k_cache: jnp.ndarray, v_cache: jnp.ndarray, pos0: jnp.ndarray):
+    """Attention over [S, D] rows given caches [H, S_max, hd].
+
+    Writes the new K/V rows at pos0..pos0+S, attends causally up to the
+    written horizon.  Returns (out [S, D], k_cache, v_cache).
+    """
+    s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = _mm(qlp["wq"], x, cfg).reshape(s, h, hd).transpose(1, 0, 2)   # [H,S,hd]
+    k = _mm(qlp["wk"], x, cfg).reshape(s, h, hd).transpose(1, 0, 2)
+    v = _mm(qlp["wv"], x, cfg).reshape(s, h, hd).transpose(1, 0, 2)
+
+    q = rope(q, positions)          # Fig 3 RoPE unit
+    k = rope(k, positions)
+
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, pos0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, pos0, 0))
+
+    scores = jnp.einsum("hsd,htd->hst", q, k_cache) / np.sqrt(hd)
+    t_idx = jnp.arange(cfg.max_seq)[None, None, :]                    # [1,1,T]
+    horizon = (pos0 + positions)[None, :, None]                       # [1,S,1]
+    scores = jnp.where(t_idx <= horizon, scores, -1e9)                # causal
+    probs = softmax(scores)         # Fig 3 Softmax unit
+    ctx = jnp.einsum("hst,htd->hsd", probs, v_cache)
+    out = _mm(qlp["wo"], ctx.transpose(1, 0, 2).reshape(s, d), cfg)
+    return out, k_cache, v_cache
+
+
+def _block(cfg: LlmConfig, qlp: dict, x, positions, k_cache, v_cache, pos0):
+    h = rmsnorm(x, qlp["norm_attn"])                 # Fig 3 RMSNorm unit
+    attn, k_cache, v_cache = _attn(cfg, qlp, h, positions, k_cache, v_cache, pos0)
+    x = x + attn
+    h = rmsnorm(x, qlp["norm_mlp"])
+    gate = silu(_mm(qlp["w1"], h, cfg))              # Fig 3 SiLU unit
+    up = _mm(qlp["w3"], h, cfg)
+    x = x + _mm(qlp["w2"], gate * up, cfg)
+    return x, k_cache, v_cache
+
+
+def prefill(cfg: LlmConfig, qp: dict, tokens: jnp.ndarray):
+    """Process the prompt. tokens: i32 [prefill_len].
+
+    Returns (logits [vocab] for the last position, k_caches, v_caches
+    [L, H, S_max, hd]).
+    """
+    s = cfg.prefill_len
+    x = jnp.take(qp["embed"], tokens, axis=0)                   # [S, D]
+    positions = jnp.arange(s)
+    kc = jnp.zeros((cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim))
+    vc = jnp.zeros_like(kc)
+    pos0 = jnp.asarray(0, dtype=jnp.int32)
+    for layer in range(cfg.n_layers):
+        x, k_l, v_l = _block(cfg, qp[f"l{layer}"], x, positions,
+                             kc[layer], vc[layer], pos0)
+        kc = kc.at[layer].set(k_l)
+        vc = vc.at[layer].set(v_l)
+    x = rmsnorm(x, qp["norm_f"])
+    logits = _mm(qp["head"], x[-1:, :], cfg)[0]
+    return logits, kc, vc
+
+
+def decode_step(cfg: LlmConfig, qp: dict, token: jnp.ndarray, pos: jnp.ndarray,
+                k_caches: jnp.ndarray, v_caches: jnp.ndarray):
+    """One autoregressive step. token: i32 scalar, pos: i32 scalar.
+
+    Returns (logits [vocab], k_caches, v_caches).
+    """
+    x = jnp.take(qp["embed"], token[None], axis=0)              # [1, D]
+    positions = pos[None]
+    for layer in range(cfg.n_layers):
+        x, k_l, v_l = _block(cfg, qp[f"l{layer}"], x, positions,
+                             k_caches[layer], v_caches[layer], pos)
+        k_caches = k_caches.at[layer].set(k_l)
+        v_caches = v_caches.at[layer].set(v_l)
+    x = rmsnorm(x, qp["norm_f"])
+    logits = _mm(qp["head"], x, cfg)[0]
+    return logits, k_caches, v_caches

@@ -1,0 +1,275 @@
+"""L2 — the paper's "small ResNet-like CNN", as schedulable units.
+
+The network is defined as a list of *units* (the paper's agent partitions
+the model layer-by-layer; a residual block is one schedulable unit, as its
+internal tensors never leave the accelerator).  Each unit has:
+
+  * an fp32 forward (plain jnp / lax) — the CPU-baseline numerics and the
+    training graph;
+  * an int8 forward (Pallas kernels from ``kernels/``) — the FPGA
+    accelerator's behavioural model;
+  * shape / FLOPs / byte metadata consumed by the Rust scheduler (via the
+    artifact manifest) to compute arithmetic intensity and timing.
+
+``aot.py`` lowers each unit separately (fp32 and int8, several batch
+sizes) so the Rust coordinator can execute any CPU/FPGA placement mix
+with real numerics.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import qconv2d, qdense, maxpool2x2, global_avgpool
+from .kernels.ref import weight_scales_per_channel, quantize_i8
+
+NUM_CLASSES = 10
+
+
+@dataclass(frozen=True)
+class UnitSpec:
+    """One schedulable unit of the network."""
+    name: str
+    kind: str          # conv | block | maxpool | gap | dense
+    cin: int
+    cout: int
+    stride: int
+    in_hw: int         # input spatial size (square)
+
+    @property
+    def out_hw(self) -> int:
+        if self.kind in ("conv", "block"):
+            return self.in_hw // self.stride
+        if self.kind == "maxpool":
+            return self.in_hw // 2
+        if self.kind == "gap":
+            return 1
+        return 1
+
+    def in_shape(self, batch: int) -> tuple:
+        if self.kind == "dense":
+            return (batch, self.cin)
+        return (batch, self.in_hw, self.in_hw, self.cin)
+
+    def out_shape(self, batch: int) -> tuple:
+        if self.kind in ("gap", "dense"):
+            return (batch, self.cout)
+        return (batch, self.out_hw, self.out_hw, self.cout)
+
+    def macs(self, batch: int = 1) -> int:
+        """Multiply-accumulates per forward (the FPGA cycle-model input)."""
+        if self.kind == "conv":
+            return batch * self.out_hw ** 2 * 9 * self.cin * self.cout
+        if self.kind == "block":
+            return 2 * batch * self.out_hw ** 2 * 9 * self.cin * self.cout
+        if self.kind == "dense":
+            return batch * self.cin * self.cout
+        return 0
+
+    def flops(self, batch: int = 1) -> int:
+        return 2 * self.macs(batch)
+
+    def param_count(self) -> int:
+        if self.kind == "conv":
+            return 9 * self.cin * self.cout + self.cout
+        if self.kind == "block":
+            return 2 * (9 * self.cin * self.cout) + 2 * self.cout
+        if self.kind == "dense":
+            return self.cin * self.cout + self.cout
+        return 0
+
+    def io_bytes(self, batch: int = 1, elem: int = 4) -> tuple[int, int]:
+        """(input bytes, output bytes) at f32 — host<->FPGA transfer sizes."""
+        inb = int(np.prod(self.in_shape(batch))) * elem
+        outb = int(np.prod(self.out_shape(batch))) * elem
+        return inb, outb
+
+
+# The paper's CNN: conv stem, three stages with residual blocks, pool, head.
+UNITS: list[UnitSpec] = [
+    UnitSpec("conv0", "conv", 3, 16, 1, 32),
+    UnitSpec("block1", "block", 16, 16, 1, 32),
+    UnitSpec("down2", "conv", 16, 32, 2, 32),
+    UnitSpec("block3", "block", 32, 32, 1, 16),
+    UnitSpec("down4", "conv", 32, 64, 2, 16),
+    UnitSpec("block5", "block", 64, 64, 1, 8),
+    UnitSpec("pool6", "maxpool", 64, 64, 2, 8),
+    UnitSpec("gap7", "gap", 64, 64, 1, 4),
+    UnitSpec("dense8", "dense", 64, NUM_CLASSES, 1, 1),
+]
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array) -> dict:
+    """He-init fp32 parameters, one sub-dict per unit."""
+    params: dict = {}
+    for u in UNITS:
+        if u.kind == "conv":
+            key, k1 = jax.random.split(key)
+            fan = 9 * u.cin
+            params[u.name] = {
+                "w": jax.random.normal(k1, (3, 3, u.cin, u.cout)) * np.sqrt(2.0 / fan),
+                "b": jnp.zeros((u.cout,)),
+            }
+        elif u.kind == "block":
+            key, k1, k2 = jax.random.split(key, 3)
+            fan = 9 * u.cin
+            params[u.name] = {
+                "w1": jax.random.normal(k1, (3, 3, u.cin, u.cout)) * np.sqrt(2.0 / fan),
+                "b1": jnp.zeros((u.cout,)),
+                "w2": jax.random.normal(k2, (3, 3, u.cout, u.cout)) * np.sqrt(2.0 / fan),
+                "b2": jnp.zeros((u.cout,)),
+            }
+        elif u.kind == "dense":
+            key, k1 = jax.random.split(key)
+            params[u.name] = {
+                "w": jax.random.normal(k1, (u.cin, u.cout)) * np.sqrt(2.0 / u.cin),
+                "b": jnp.zeros((u.cout,)),
+            }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# fp32 forward (CPU baseline numerics + training graph)
+# ---------------------------------------------------------------------------
+
+def _conv_fp32(x, w, b, stride):
+    # Explicit symmetric (1,1) padding, NOT "SAME": for stride-2 lax SAME
+    # pads asymmetrically ((0,1)), which would compute a conv shifted by
+    # one pixel relative to the accelerator's symmetric im2col windowing —
+    # the Fig 2 verification flow caught exactly this divergence.
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=[(1, 1), (1, 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b[None, None, None, :]
+
+
+def unit_fp32(spec: UnitSpec, p: dict | None, x: jnp.ndarray) -> jnp.ndarray:
+    """fp32 forward of one unit."""
+    if spec.kind == "conv":
+        return jax.nn.relu(_conv_fp32(x, p["w"], p["b"], spec.stride))
+    if spec.kind == "block":
+        h = jax.nn.relu(_conv_fp32(x, p["w1"], p["b1"], 1))
+        h = _conv_fp32(h, p["w2"], p["b2"], 1)
+        return jax.nn.relu(h + x)
+    if spec.kind == "maxpool":
+        b, hh, ww, c = x.shape
+        return jnp.max(x.reshape(b, hh // 2, 2, ww // 2, 2, c), axis=(2, 4))
+    if spec.kind == "gap":
+        return jnp.mean(x, axis=(1, 2))
+    if spec.kind == "dense":
+        return x @ p["w"] + p["b"]
+    raise ValueError(spec.kind)
+
+
+def forward_fp32(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Full-network fp32 logits."""
+    for u in UNITS:
+        x = unit_fp32(u, params.get(u.name), x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# int8 forward (FPGA accelerator behavioural model, Pallas kernels)
+# ---------------------------------------------------------------------------
+
+def quantize_params(params: dict, act_scales: dict) -> dict:
+    """Post-training quantization: per-channel int8 weights + the calibrated
+    per-tensor activation scales.  ``act_scales[name]`` is the unit's input
+    scale; blocks additionally carry ``name+'.mid'`` for the inner tensor."""
+    qp: dict = {}
+    for u in UNITS:
+        if u.kind == "conv":
+            p = params[u.name]
+            ws = weight_scales_per_channel(p["w"], 3)
+            qp[u.name] = {
+                "w_q": quantize_i8(p["w"], ws[None, None, None, :]),
+                "b": p["b"], "w_scale": ws,
+                "x_scale": act_scales[u.name],
+            }
+        elif u.kind == "block":
+            p = params[u.name]
+            ws1 = weight_scales_per_channel(p["w1"], 3)
+            ws2 = weight_scales_per_channel(p["w2"], 3)
+            qp[u.name] = {
+                "w1_q": quantize_i8(p["w1"], ws1[None, None, None, :]),
+                "b1": p["b1"], "w1_scale": ws1,
+                "w2_q": quantize_i8(p["w2"], ws2[None, None, None, :]),
+                "b2": p["b2"], "w2_scale": ws2,
+                "x_scale": act_scales[u.name],
+                "mid_scale": act_scales[u.name + ".mid"],
+            }
+        elif u.kind == "dense":
+            p = params[u.name]
+            ws = weight_scales_per_channel(p["w"], 1)
+            qp[u.name] = {
+                "w_q": quantize_i8(p["w"], ws[None, :]),
+                "b": p["b"], "w_scale": ws,
+                "x_scale": act_scales[u.name],
+            }
+    return qp
+
+
+def unit_int8(spec: UnitSpec, qp: dict | None, x: jnp.ndarray) -> jnp.ndarray:
+    """int8 forward of one unit via the Pallas kernels (f32 in / f32 out,
+    int8 MACs inside — the accelerator's external contract)."""
+    if spec.kind == "conv":
+        y = qconv2d(x, qp["w_q"], qp["b"], qp["x_scale"], qp["w_scale"],
+                    stride=spec.stride, pad=1)
+        return jax.nn.relu(y)
+    if spec.kind == "block":
+        h = qconv2d(x, qp["w1_q"], qp["b1"], qp["x_scale"], qp["w1_scale"],
+                    stride=1, pad=1)
+        h = jax.nn.relu(h)
+        h = qconv2d(h, qp["w2_q"], qp["b2"], qp["mid_scale"], qp["w2_scale"],
+                    stride=1, pad=1)
+        return jax.nn.relu(h + x)
+    if spec.kind == "maxpool":
+        return maxpool2x2(x)
+    if spec.kind == "gap":
+        return global_avgpool(x)
+    if spec.kind == "dense":
+        return qdense(x, qp["w_q"], qp["b"], qp["x_scale"], qp["w_scale"])
+    raise ValueError(spec.kind)
+
+
+def forward_int8(qparams: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Full-network int8 logits (behavioural model of an all-FPGA schedule)."""
+    for u in UNITS:
+        x = unit_int8(u, qparams.get(u.name), x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Activation calibration
+# ---------------------------------------------------------------------------
+
+def calibrate_act_scales(params: dict, x_cal: jnp.ndarray,
+                         pct: float = 99.9) -> dict[str, float]:
+    """Run fp32 forward over a calibration batch, record the given
+    percentile of |activation| at each quantized-unit input (percentile,
+    not max — a single outlier otherwise wastes int8 range)."""
+    scales: dict[str, float] = {}
+
+    def scale_of(t: jnp.ndarray) -> float:
+        a = np.percentile(np.abs(np.asarray(t)), pct)
+        return float(max(a, 1e-6)) / 127.0
+
+    x = x_cal
+    for u in UNITS:
+        if u.kind in ("conv", "dense"):
+            scales[u.name] = scale_of(x)
+        elif u.kind == "block":
+            scales[u.name] = scale_of(x)
+            p = params[u.name]
+            h = jax.nn.relu(_conv_fp32(x, p["w1"], p["b1"], 1))
+            scales[u.name + ".mid"] = scale_of(h)
+        x = unit_fp32(u, params.get(u.name), x)
+    return scales

@@ -1,0 +1,109 @@
+"""Build-time trainer for the paper's CNN (no optax in the image — Adam is
+hand-rolled).  Runs once inside ``make artifacts``; weights are cached in
+``artifacts/weights.npz`` keyed by a config hash so re-running aot.py is a
+no-op unless the model or dataset changes.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dataset, model
+
+LR = 2e-3
+STEPS = 700
+BATCH = 128
+SEED = 7
+
+
+def _loss_fn(params, x, y):
+    logits = model.forward_fp32(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def _adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+@jax.jit
+def _train_step(params, opt, x, y):
+    loss, grads = jax.value_and_grad(_loss_fn)(params, x, y)
+    t = opt["t"] + 1
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t)
+    vhat_scale = 1.0 / (1 - b2 ** t)
+    params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - LR * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v)
+    return params, {"m": m, "v": v, "t": t}, loss
+
+
+def accuracy(params, x, y, batch: int = 500, fwd=model.forward_fp32) -> float:
+    hits = 0
+    for i in range(0, x.shape[0], batch):
+        logits = fwd(params, x[i:i + batch])
+        hits += int(jnp.sum(jnp.argmax(logits, -1) == y[i:i + batch]))
+    return hits / x.shape[0]
+
+
+def config_hash() -> str:
+    """Hash of everything that invalidates cached weights."""
+    cfg = {
+        "units": [(u.name, u.kind, u.cin, u.cout, u.stride, u.in_hw) for u in model.UNITS],
+        "dataset": [dataset.FREQ, dataset.NOISE_SIGMA, dataset.N_BLOBS,
+                    dataset.SEED_TRAIN, dataset.IMG, dataset.ANGLE_JITTER_DEG],
+        "train": [LR, STEPS, BATCH, SEED],
+        "conv_pad": "symmetric",  # accelerator-matching padding convention
+    }
+    return hashlib.sha256(json.dumps(cfg).encode()).hexdigest()[:16]
+
+
+def train(log=print) -> tuple[dict, dict]:
+    """Train from scratch; returns (params, info)."""
+    xs, ys = dataset.train_set(10_000)
+    xs, ys = jnp.asarray(xs), jnp.asarray(ys.astype(np.int32))
+    params = model.init_params(jax.random.PRNGKey(SEED))
+    opt = _adam_init(params)
+    rng = np.random.default_rng(SEED)
+    losses = []
+    for step in range(STEPS):
+        idx = rng.integers(0, xs.shape[0], BATCH)
+        params, opt, loss = _train_step(params, opt, xs[idx], ys[idx])
+        losses.append(float(loss))
+        if step % 100 == 0 or step == STEPS - 1:
+            log(f"  step {step:4d}  loss {float(loss):.4f}")
+    return params, {"final_loss": losses[-1], "loss_curve": losses[::10]}
+
+
+def load_or_train(cache_path: str, log=print) -> tuple[dict, dict]:
+    """Load cached weights if the config hash matches, else train + cache."""
+    h = config_hash()
+    if os.path.exists(cache_path):
+        data = np.load(cache_path, allow_pickle=True)
+        if str(data.get("config_hash")) == h:
+            log(f"  weights cache hit ({h})")
+            params = {}
+            for key in data.files:
+                if "/" in key:
+                    unit, leaf = key.split("/", 1)
+                    params.setdefault(unit, {})[leaf] = jnp.asarray(data[key])
+            info = json.loads(str(data["info"]))
+            return params, info
+    log(f"  training CNN ({h}) ...")
+    params, info = train(log)
+    flat = {"config_hash": h, "info": json.dumps(info)}
+    for unit, leaves in params.items():
+        for leaf, arr in leaves.items():
+            flat[f"{unit}/{leaf}"] = np.asarray(arr)
+    np.savez(cache_path, **flat)
+    return params, info

@@ -1,0 +1,201 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+with hypothesis sweeping shapes and value ranges.  Integer kernels must
+match bit-exactly; float kernels to tight tolerance."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    global_avgpool, int4_matmul, maxpool2x2, qconv2d, qdense, qmatmul_i8,
+    qmatmul_requant, rmsnorm, rope, silu, softmax,
+)
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+FAST = dict(max_examples=20, deadline=None)
+
+
+def i8(shape, rng=None):
+    r = rng or RNG
+    return jnp.array(r.integers(-127, 128, shape, dtype=np.int8))
+
+
+def f32(shape, scale=1.0, rng=None):
+    r = rng or RNG
+    return jnp.array((r.normal(size=shape) * scale).astype(np.float32))
+
+
+# -- qmatmul ------------------------------------------------------------------
+
+@settings(**FAST)
+@given(m=st.integers(1, 96), k=st.integers(1, 160), n=st.integers(1, 80),
+       seed=st.integers(0, 2**31))
+def test_qmatmul_matches_oracle_bitexact(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = i8((m, k), rng), i8((k, n), rng)
+    got = np.asarray(qmatmul_i8(x, w))
+    want = np.asarray(ref.qmatmul_i8_ref(x, w))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(**FAST)
+@given(bm=st.sampled_from([8, 32, 512]), bn=st.sampled_from([8, 64]),
+       bk=st.sampled_from([16, 64, None]))
+def test_qmatmul_block_shape_invariance(bm, bn, bk):
+    # any tile geometry must give identical results (zero padding is exact)
+    x, w = i8((45, 70)), i8((70, 33))
+    got = np.asarray(qmatmul_i8(x, w, bm=bm, bn=bn, bk=bk))
+    want = np.asarray(ref.qmatmul_i8_ref(x, w))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_qmatmul_requant_fuses_scale_and_bias():
+    x, w = i8((17, 40)), i8((40, 12))
+    scale = f32((12,), 0.01)
+    bias = f32((12,))
+    got = np.asarray(qmatmul_requant(x, w, jnp.abs(scale), bias))
+    want = np.asarray(ref.qmatmul_i8_ref(x, w)).astype(np.float32) * np.abs(
+        np.asarray(scale))[None, :] + np.asarray(bias)[None, :]
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_qmatmul_accumulates_in_i32():
+    # K large enough that i16 accumulation would overflow
+    k = 2048
+    x = jnp.full((1, k), 127, dtype=jnp.int8)
+    w = jnp.full((k, 1), 127, dtype=jnp.int8)
+    got = int(np.asarray(qmatmul_i8(x, w))[0, 0])
+    assert got == 127 * 127 * k
+
+
+# -- conv / dense -------------------------------------------------------------
+
+@settings(**FAST)
+@given(b=st.integers(1, 4), hw=st.sampled_from([4, 8, 10]),
+       cin=st.integers(1, 8), cout=st.integers(1, 12),
+       stride=st.sampled_from([1, 2]), seed=st.integers(0, 2**31))
+def test_qconv_matches_oracle(b, hw, cin, cout, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = f32((b, hw, hw, cin), rng=rng)
+    w = f32((3, 3, cin, cout), rng=rng)
+    bias = f32((cout,), rng=rng)
+    ws = ref.weight_scales_per_channel(w, 3)
+    w_q = ref.quantize_i8(w, ws[None, None, None, :])
+    got = np.asarray(qconv2d(x, w_q, bias, 0.04, ws, stride=stride, pad=1))
+    want = np.asarray(ref.qconv2d_ref(x, w, bias, 0.04, ws, stride=stride, pad=1))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_qdense_matches_oracle():
+    x = f32((9, 33))
+    w = f32((33, 10))
+    bias = f32((10,))
+    ws = ref.weight_scales_per_channel(w, 1)
+    w_q = ref.quantize_i8(w, ws[None, :])
+    got = np.asarray(qdense(x, w_q, bias, 0.05, ws))
+    want = np.asarray(ref.qdense_ref(x, w, bias, 0.05, ws))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_quantization_error_bounded_by_scale():
+    # |dequant(quant(x)) - x| <= scale/2 inside the clip range
+    x = f32((64,), scale=0.5)
+    s = 0.01
+    q = ref.quantize_i8(x, s)
+    err = np.abs(np.asarray(q).astype(np.float32) * s - np.asarray(x))
+    inside = np.abs(np.asarray(x)) < 127 * s
+    assert err[inside].max() <= s / 2 + 1e-7
+
+
+# -- pooling ------------------------------------------------------------------
+
+@settings(**FAST)
+@given(b=st.integers(1, 4), hw=st.sampled_from([2, 4, 8, 16]),
+       c=st.integers(1, 16), seed=st.integers(0, 2**31))
+def test_pools_match_oracle(b, hw, c, seed):
+    rng = np.random.default_rng(seed)
+    x = f32((b, hw, hw, c), rng=rng)
+    np.testing.assert_array_equal(np.asarray(maxpool2x2(x)),
+                                  np.asarray(ref.maxpool2x2_ref(x)))
+    np.testing.assert_allclose(np.asarray(global_avgpool(x)),
+                               np.asarray(ref.global_avgpool_ref(x)), rtol=1e-6)
+
+
+# -- llm ops ------------------------------------------------------------------
+
+@settings(**FAST)
+@given(rows=st.integers(1, 70), d=st.sampled_from([8, 32, 128]),
+       seed=st.integers(0, 2**31))
+def test_rowwise_ops_match_oracle(rows, d, seed):
+    rng = np.random.default_rng(seed)
+    x = f32((rows, d), rng=rng)
+    g = f32((d,), rng=rng)
+    np.testing.assert_allclose(np.asarray(rmsnorm(x, g)),
+                               np.asarray(ref.rmsnorm_ref(x, g)), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(silu(x)),
+                               np.asarray(ref.silu_ref(x)), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(softmax(x)),
+                               np.asarray(ref.softmax_ref(x)), rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_rows_sum_to_one():
+    x = f32((13, 40), scale=4.0)
+    s = np.asarray(softmax(x))
+    np.testing.assert_allclose(s.sum(-1), np.ones(13), rtol=1e-5)
+    assert (s >= 0).all()
+
+
+@settings(**FAST)
+@given(lead=st.integers(1, 4), s_len=st.integers(1, 12),
+       d=st.sampled_from([4, 8, 32]), seed=st.integers(0, 2**31))
+def test_rope_matches_oracle(lead, s_len, d, seed):
+    rng = np.random.default_rng(seed)
+    x = f32((lead, s_len, d), rng=rng)
+    pos = jnp.arange(s_len)
+    np.testing.assert_allclose(np.asarray(rope(x, pos)),
+                               np.asarray(ref.rope_ref(x, pos)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rope_preserves_pair_norms():
+    # rotation must preserve the norm of each (even, odd) pair
+    x = f32((2, 6, 16))
+    y = np.asarray(rope(x, jnp.arange(6)))
+    xn = np.asarray(x)
+    n0 = xn[..., 0::2] ** 2 + xn[..., 1::2] ** 2
+    n1 = y[..., 0::2] ** 2 + y[..., 1::2] ** 2
+    np.testing.assert_allclose(n0, n1, rtol=1e-4, atol=1e-5)
+
+
+# -- int4 ---------------------------------------------------------------------
+
+@settings(**FAST)
+@given(m=st.integers(1, 24), kg=st.integers(1, 6), n=st.integers(1, 40),
+       group=st.sampled_from([8, 32]), seed=st.integers(0, 2**31))
+def test_int4_matmul_matches_oracle(m, kg, n, group, seed):
+    rng = np.random.default_rng(seed)
+    k = kg * group
+    x = f32((m, k), rng=rng)
+    w = f32((k, n), rng=rng)
+    w_q, scales = ref.pack_int4_ref(w, group)
+    got = np.asarray(int4_matmul(x, w_q, scales, group=group))
+    want = np.asarray(ref.int4_matmul_ref(x, w_q, scales, group))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_int4_pack_range_and_fidelity():
+    w = f32((64, 16))
+    w_q, scales = ref.pack_int4_ref(w, 32)
+    q = np.asarray(w_q)
+    assert q.min() >= -7 and q.max() <= 7
+    # dequantized weights approximate the originals to ~scale/2 per group
+    deq = (q.reshape(2, 32, 16) * np.asarray(scales)[:, None, :]).reshape(64, 16)
+    err = np.abs(deq - np.asarray(w))
+    assert err.max() <= np.asarray(scales).max() * 0.51 + 1e-6
+
+
+def test_int4_rejects_bad_group():
+    with pytest.raises(AssertionError):
+        ref.pack_int4_ref(f32((30, 8)), 32)

@@ -1,0 +1,153 @@
+"""L2 model tests: unit shapes, fp32-vs-int8 fidelity, calibration,
+dataset determinism + codec, and LLM decoder consistency."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import dataset, llm, model
+
+FAST = dict(max_examples=10, deadline=None)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def qparams(params):
+    x_cal = jnp.asarray(dataset.generate(64, 123)[0])
+    scales = model.calibrate_act_scales(params, x_cal)
+    return model.quantize_params(params, scales)
+
+
+def test_unit_shapes_chain(params):
+    x = jnp.zeros((2, 32, 32, 3))
+    for u in model.UNITS:
+        assert x.shape == u.in_shape(2), f"{u.name} input"
+        x = model.unit_fp32(u, params.get(u.name), x)
+        assert x.shape == u.out_shape(2), f"{u.name} output"
+    assert x.shape == (2, model.NUM_CLASSES)
+
+
+def test_unit_metadata_matches_reality(params):
+    # param_count must equal the actual parameter tree sizes
+    for u in model.UNITS:
+        p = params.get(u.name)
+        actual = sum(int(np.prod(a.shape)) for a in p.values()) if p else 0
+        assert actual == u.param_count(), u.name
+
+
+def test_int8_forward_close_to_fp32(params, qparams):
+    x = jnp.asarray(dataset.generate(32, 9)[0])
+    lf = np.asarray(model.forward_fp32(params, x))
+    lq = np.asarray(jax.jit(model.forward_int8)(qparams, x))
+    # class agreement is the meaningful metric for random-init weights
+    agree = (lf.argmax(-1) == lq.argmax(-1)).mean()
+    assert agree >= 0.9, f"agreement {agree}"
+
+
+def test_block_residual_is_active(params):
+    # zeroing the block's convs must reduce to identity + relu
+    u = model.UNITS[1]
+    p = {k: jnp.zeros_like(v) for k, v in params[u.name].items()}
+    x = jnp.asarray(dataset.generate(4, 5)[0])
+    x = model.unit_fp32(model.UNITS[0], params["conv0"], x)
+    y = model.unit_fp32(u, p, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jax.nn.relu(x)), atol=1e-6)
+
+
+def test_calibration_scales_positive(params):
+    scales = model.calibrate_act_scales(params, jnp.asarray(dataset.generate(32, 3)[0]))
+    for name, s in scales.items():
+        assert s > 0, name
+    # every quantized unit has a scale
+    for u in model.UNITS:
+        if u.kind in ("conv", "dense", "block"):
+            assert u.name in scales
+
+
+# -- dataset ------------------------------------------------------------------
+
+def test_dataset_deterministic():
+    a = dataset.generate(16, 42)
+    b = dataset.generate(16, 42)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_dataset_classes_distinguishable():
+    xs, ys = dataset.generate(400, 7)
+    # class means of orthogonal gratings (0 vs 5) must be well separated
+    m0 = xs[ys == 0].mean(0)
+    m5 = xs[ys == 5].mean(0)
+    assert np.linalg.norm((m0 - m5).ravel()) > 1.0
+
+
+@settings(**FAST)
+@given(seed=st.integers(0, 2**31))
+def test_u8_codec_roundtrip_error_bounded(seed):
+    xs, _ = dataset.generate(4, seed)
+    dec = dataset.decode_u8(dataset.encode_u8(xs))
+    inside = np.abs(xs) < 5.0
+    err = np.abs(dec - xs)[inside]
+    assert err.max() <= 10.0 / 255.0 / 2 + 1e-6
+
+
+def test_testset_binary_layout(tmp_path):
+    xs, ys = dataset.generate(8, 11)
+    p = tmp_path / "ts.bin"
+    dataset.write_testset(str(p), xs, ys)
+    raw = np.fromfile(p, dtype=np.uint8)
+    header = raw[:20].view(np.uint32)
+    assert header[0] == 0xA1FADA7A
+    assert header[1] == 8 and header[2] == 32 and header[4] == 3
+    assert raw.size == 20 + 8 * 32 * 32 * 3 + 8
+
+
+# -- llm ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def llm_qp():
+    cfg = llm.CFG
+    return cfg, llm.quantize_llm_params(cfg, llm.init_llm_params(cfg))
+
+
+def test_llm_prefill_decode_consistency(llm_qp):
+    """Decoding token-by-token must equal prefilling the longer prompt —
+    the KV-cache path is exercised both ways."""
+    cfg, qp = llm_qp
+    toks = jnp.arange(cfg.prefill_len, dtype=jnp.int32) % 50
+    logits, kc, vc = llm.prefill(cfg, qp, toks)
+    nxt = int(jnp.argmax(logits))
+    # decode one step
+    lg2, _, _ = llm.decode_step(cfg, qp, jnp.asarray(nxt, jnp.int32),
+                                jnp.asarray(cfg.prefill_len, jnp.int32), kc, vc)
+    assert lg2.shape == (cfg.vocab,)
+    assert np.isfinite(np.asarray(lg2)).all()
+
+
+def test_llm_causality(llm_qp):
+    """Changing a future-position token must not affect earlier logits:
+    run prefill on two prompts differing only in the last token and check
+    the caches agree at all positions before it."""
+    cfg, qp = llm_qp
+    t1 = jnp.arange(cfg.prefill_len, dtype=jnp.int32)
+    t2 = t1.at[-1].set(99)
+    _, k1, _ = llm.prefill(cfg, qp, t1)
+    _, k2, _ = llm.prefill(cfg, qp, t2)
+    s = cfg.prefill_len
+    np.testing.assert_allclose(np.asarray(k1[:, :, : s - 1]),
+                               np.asarray(k2[:, :, : s - 1]), rtol=1e-5, atol=1e-6)
+
+
+def test_llm_weight_stream_formula(llm_qp):
+    cfg, _ = llm_qp
+    # formula must equal the sum over declared matmul shapes
+    total = sum(((k * n) // 2 + (k // cfg.group) * n * 4)
+                for _, k, n in cfg.matmul_shapes())
+    assert cfg.weight_stream_bytes_per_token() == total
+    assert cfg.kv_bytes_per_token() == 2 * cfg.n_layers * cfg.d_model * 4

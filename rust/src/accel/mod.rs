@@ -1,0 +1,256 @@
+//! Parameterizable accelerator core — the cycle-level *timing model* of
+//! the paper's §III.B hardware (the *behavioural* model is the int8 HLO
+//! executed via PJRT; see DESIGN.md Fig 2 mapping).
+//!
+//! The core is a systolic int8 MAC array fed from on-chip tile buffers:
+//! every MAC-array unit (conv via im2col, dense) is tiled M×K×N; pooling
+//! units run on a small dedicated pipeline.  Cycle counts follow the
+//! standard output-stationary systolic model: per (M,N) tile the array
+//! streams K values with a fill+drain bubble of `rows+cols` cycles.
+
+use crate::graph::{Unit, UnitKind};
+
+/// Accelerator build-time parameters (what HLS would synthesize).
+#[derive(Debug, Clone, Copy)]
+pub struct AccelConfig {
+    /// MAC array geometry (paper: 32x32 int8).
+    pub mac_rows: usize,
+    pub mac_cols: usize,
+    /// Fabric clock (Hz) after synthesis (paper-era designs: 200 MHz).
+    pub clock_hz: f64,
+    /// On-chip buffer bytes available for activation/weight tiles.
+    pub buffer_bytes: u64,
+    /// Weight precision in bits (8 default; 4/16 for the ablation).
+    pub weight_bits: u32,
+    /// Fixed per-layer control overhead (cycles): descriptor decode,
+    /// pipeline setup, requant constant load.
+    pub layer_setup_cycles: u64,
+    /// Fixed per-tile overhead (cycles): address generation + buffer swap.
+    pub tile_setup_cycles: u64,
+}
+
+impl Default for AccelConfig {
+    fn default() -> Self {
+        AccelConfig {
+            mac_rows: 32,
+            mac_cols: 32,
+            clock_hz: 200e6,
+            buffer_bytes: 1 << 20, // 1 MiB of BRAM tile buffers
+            weight_bits: 8,
+            layer_setup_cycles: 2_000,
+            tile_setup_cycles: 64,
+        }
+    }
+}
+
+impl AccelConfig {
+    /// Peak MAC throughput (MACs/s).
+    pub fn peak_macs_per_s(&self) -> f64 {
+        (self.mac_rows * self.mac_cols) as f64 * self.clock_hz
+    }
+}
+
+/// GEMM view of a MAC-array unit: (M, K, N) of the im2col matmul.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmShape {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+/// How a unit maps onto the MAC array (None for pooling-pipeline units).
+pub fn gemm_shape(u: &Unit, batch: usize) -> Option<Vec<GemmShape>> {
+    let k2 = u.ksize * u.ksize;
+    match u.kind {
+        UnitKind::Conv => Some(vec![GemmShape {
+            m: batch * u.out_hw * u.out_hw,
+            k: k2 * u.cin,
+            n: u.cout,
+        }]),
+        // a residual block is two back-to-back convs at the same resolution
+        UnitKind::Block => Some(vec![
+            GemmShape { m: batch * u.out_hw * u.out_hw, k: k2 * u.cin, n: u.cout },
+            GemmShape { m: batch * u.out_hw * u.out_hw, k: k2 * u.cout, n: u.cout },
+        ]),
+        UnitKind::Dense => Some(vec![GemmShape { m: batch, k: u.cin, n: u.cout }]),
+        UnitKind::MaxPool | UnitKind::Gap => None,
+    }
+}
+
+/// The tiling the on-chip buffers force for one GEMM.
+#[derive(Debug, Clone, Copy)]
+pub struct TilePlan {
+    pub tile_m: usize,
+    pub tile_k: usize,
+    pub tile_n: usize,
+    pub tiles: u64,
+}
+
+/// Cycle-count breakdown for one unit (at a batch size).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CycleBreakdown {
+    pub stream: u64,
+    pub fill_drain: u64,
+    pub tile_setup: u64,
+    pub layer_setup: u64,
+}
+
+impl CycleBreakdown {
+    pub fn total(&self) -> u64 {
+        self.stream + self.fill_drain + self.tile_setup + self.layer_setup
+    }
+}
+
+/// Plan tiles for a GEMM under the buffer budget.
+///
+/// Strategy mirrors the L1 kernel (and the paper's §III.C tiling
+/// discussion): K is kept whole when it fits (single-pass accumulation,
+/// no psum spill); M is chunked to `tile_m` rows; N is chunked to the
+/// array width.  Tiles too small waste the array; too large overflow the
+/// buffer — the ablation bench sweeps `tile_m` to show the paper's
+/// "striking the right tile size is essential" claim.
+pub fn plan_tiles(g: GemmShape, cfg: &AccelConfig, tile_m_override: Option<usize>) -> TilePlan {
+    let bytes_per_w = (cfg.weight_bits as usize).div_ceil(8);
+    let tile_n = cfg.mac_cols.min(g.n.max(1));
+    let tile_k = g.k.max(1);
+    // choose tile_m to fit: tile_m*K (act, 1B) + K*tile_n (wt) + tile_m*tile_n*4 (psum)
+    let budget = cfg.buffer_bytes as usize / 2; // /2: double buffering
+    let fixed = tile_k * tile_n * bytes_per_w;
+    let per_row = tile_k + tile_n * 4;
+    let max_m = budget.saturating_sub(fixed) / per_row.max(1);
+    let tile_m = tile_m_override
+        .unwrap_or(usize::MAX)
+        .min(max_m.max(cfg.mac_rows))
+        .min(g.m.max(1));
+    let tiles_m = g.m.div_ceil(tile_m) as u64;
+    let tiles_n = g.n.div_ceil(tile_n) as u64;
+    TilePlan { tile_m, tile_k, tile_n, tiles: tiles_m * tiles_n }
+}
+
+/// Cycles for one GEMM through the systolic array.
+pub fn gemm_cycles(g: GemmShape, cfg: &AccelConfig, tile_m_override: Option<usize>) -> CycleBreakdown {
+    let plan = plan_tiles(g, cfg, tile_m_override);
+    // Output-stationary: each (tile_m x tile_n) output tile is produced by
+    // streaming K MACs per PE row-column; the array computes
+    // (mac_rows x mac_cols) outputs in parallel, so a tile needs
+    // ceil(tile_m/rows)*ceil(tile_n/cols) passes of K cycles each.
+    let passes_per_tile =
+        (plan.tile_m.div_ceil(cfg.mac_rows) * plan.tile_n.div_ceil(cfg.mac_cols)) as u64;
+    let stream = plan.tiles * passes_per_tile * plan.tile_k as u64;
+    let fill = (cfg.mac_rows + cfg.mac_cols) as u64;
+    CycleBreakdown {
+        stream,
+        fill_drain: plan.tiles * passes_per_tile * fill,
+        tile_setup: plan.tiles * cfg.tile_setup_cycles,
+        layer_setup: 0,
+    }
+}
+
+/// Cycles for a full unit (all GEMMs, or the pooling pipeline).
+pub fn unit_cycles(u: &Unit, batch: usize, cfg: &AccelConfig) -> CycleBreakdown {
+    let mut total = CycleBreakdown { layer_setup: cfg.layer_setup_cycles, ..Default::default() };
+    match gemm_shape(u, batch) {
+        Some(gemms) => {
+            for g in gemms {
+                let c = gemm_cycles(g, cfg, None);
+                total.stream += c.stream;
+                total.fill_drain += c.fill_drain;
+                total.tile_setup += c.tile_setup;
+            }
+        }
+        None => {
+            // pooling pipeline: one element per cycle per 16-lane SIMD row
+            let elems = u.in_elems(batch) as u64;
+            total.stream = elems / 16;
+        }
+    }
+    total
+}
+
+/// Seconds of pure accelerator compute for one unit.
+pub fn unit_compute_s(u: &Unit, batch: usize, cfg: &AccelConfig) -> f64 {
+    unit_cycles(u, batch, cfg).total() as f64 / cfg.clock_hz
+}
+
+/// Achieved MAC-array utilization for one unit: useful MACs over
+/// (cycles x array size).  Reported by `bench resources` and used to
+/// sanity-check the timing model against the paper's efficiency story.
+pub fn unit_mac_utilization(u: &Unit, batch: usize, cfg: &AccelConfig) -> f64 {
+    let cycles = unit_cycles(u, batch, cfg).total();
+    if cycles == 0 || !u.kind.uses_mac_array() {
+        return 0.0;
+    }
+    u.macs(batch) as f64 / (cycles as f64 * (cfg.mac_rows * cfg.mac_cols) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Network;
+
+    fn cfg() -> AccelConfig {
+        AccelConfig::default()
+    }
+
+    #[test]
+    fn peak_rate() {
+        assert_eq!(cfg().peak_macs_per_s(), 1024.0 * 200e6);
+    }
+
+    #[test]
+    fn gemm_cycles_scale_with_work() {
+        let small = gemm_cycles(GemmShape { m: 64, k: 64, n: 32 }, &cfg(), None);
+        let big = gemm_cycles(GemmShape { m: 640, k: 64, n: 32 }, &cfg(), None);
+        assert!(big.total() > 5 * small.total());
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let net = Network::builtin_cnn();
+        for u in &net.units {
+            for batch in [1, 8] {
+                let util = unit_mac_utilization(u, batch, &cfg());
+                assert!((0.0..=1.0).contains(&util), "{} util {util}", u.name);
+            }
+        }
+    }
+
+    #[test]
+    fn deep_conv_utilizes_array_well() {
+        // block5 (64ch, K=576) should keep the 32x32 array busy
+        let net = Network::builtin_cnn();
+        let util = unit_mac_utilization(&net.units[5], 8, &cfg());
+        assert!(util > 0.5, "block5 util {util}");
+    }
+
+    #[test]
+    fn tiny_tiles_hurt() {
+        // The paper: "tiles that are too small introduce repeated setup
+        // overhead".  Forcing 32-row tiles must cost more cycles than the
+        // planner's choice.
+        let g = GemmShape { m: 8192, k: 144, n: 16 };
+        let free = gemm_cycles(g, &cfg(), None).total();
+        let forced = gemm_cycles(g, &cfg(), Some(32)).total();
+        assert!(forced > free, "forced {forced} <= free {free}");
+    }
+
+    #[test]
+    fn pooling_has_no_mac_cycles() {
+        let net = Network::builtin_cnn();
+        let c = unit_cycles(&net.units[6], 1, &cfg());
+        assert_eq!(c.fill_drain, 0);
+        assert!(c.stream > 0);
+    }
+
+    #[test]
+    fn buffer_budget_respected() {
+        let g = GemmShape { m: 100_000, k: 576, n: 64 };
+        let c = cfg();
+        let plan = plan_tiles(g, &c, None);
+        let bytes = plan.tile_m * plan.tile_k
+            + plan.tile_k * plan.tile_n
+            + plan.tile_m * plan.tile_n * 4;
+        assert!(bytes as u64 <= c.buffer_bytes / 2 + c.buffer_bytes / 10,
+                "tile spill: {bytes}");
+    }
+}

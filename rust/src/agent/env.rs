@@ -1,0 +1,258 @@
+//! The scheduling environment the Q-learning agent interacts with (Fig 1
+//! "Environment"): a walk over the network's units where each step picks
+//! CPU or FPGA for one unit and the reward is the negative cost (latency
+//! + λ·energy) that decision incurs under the platform timing models.
+//!
+//! The state the paper's agent observes is "the runtime performance
+//! characteristics of both the AI model and hardware platform"; we encode
+//! it as (unit index, previous placement, FPGA congestion bucket) — the
+//! previous placement is what lets the agent discover that *contiguous*
+//! offload segments avoid host-link round-trips.
+
+use crate::graph::Network;
+use crate::platform::{CpuModel, FpgaPlatform, Placement};
+
+/// Discrete environment state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct State {
+    /// Which unit is being scheduled next (0..n; n = terminal).
+    pub unit: usize,
+    /// Where the activations currently live.
+    pub prev: Placement,
+    /// FPGA contention bucket (0 = free, 1 = busy) — exercised by the
+    /// multi-tenant scenario where another workload holds the fabric.
+    pub congestion: u8,
+}
+
+/// Agent actions, one per unit (Fig 1: "action a = offload decision").
+pub const ACTIONS: [Placement; 2] = [Placement::Cpu, Placement::Fpga];
+
+/// Environment configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct EnvConfig {
+    pub batch: usize,
+    /// Energy weight λ in the reward (J -> s conversion).
+    pub energy_lambda: f64,
+    /// Probability the fabric is busy when an episode starts (multi-tenant).
+    pub congestion_p: f64,
+    /// Latency multiplier while congested (time-sharing the fabric).
+    pub congestion_slowdown: f64,
+    /// Reward scale: rewards are -cost_s * scale (keeps Q magnitudes O(1)).
+    pub reward_scale: f64,
+}
+
+impl Default for EnvConfig {
+    fn default() -> Self {
+        EnvConfig {
+            batch: 1,
+            energy_lambda: 0.005,
+            congestion_p: 0.0,
+            congestion_slowdown: 2.0,
+            reward_scale: 100.0,
+        }
+    }
+}
+
+/// The scheduling MDP over one network + platform pair.
+pub struct SchedulingEnv {
+    pub net: Network,
+    pub fpga: FpgaPlatform,
+    pub cpu: CpuModel,
+    pub cfg: EnvConfig,
+}
+
+impl SchedulingEnv {
+    pub fn new(net: Network, fpga: FpgaPlatform, cpu: CpuModel, cfg: EnvConfig) -> Self {
+        SchedulingEnv { net, fpga, cpu, cfg }
+    }
+
+    pub fn initial_state(&self, congested: bool) -> State {
+        State { unit: 0, prev: Placement::Cpu, congestion: congested as u8 }
+    }
+
+    pub fn n_units(&self) -> usize {
+        self.net.len()
+    }
+
+    pub fn is_terminal(&self, s: &State) -> bool {
+        s.unit >= self.net.len()
+    }
+
+    /// Cost (s) of running unit `s.unit` at `p`, given data residency.
+    /// Matches `FpgaPlatform::network_timeline` decomposition exactly, so
+    /// the sum of step costs equals the timeline total (tested below).
+    pub fn step_cost_s(&self, s: &State, p: Placement) -> f64 {
+        let u = &self.net.units[s.unit];
+        let b = self.cfg.batch;
+        let mut t = 0.0;
+        match p {
+            Placement::Cpu => {
+                if s.prev == Placement::Fpga {
+                    t += self.fpga.link.transfer_s(u.in_bytes(b));
+                }
+                t += self.cpu.unit_latency_s(u, b);
+            }
+            Placement::Fpga => {
+                if s.prev != Placement::Fpga {
+                    t += self.fpga.invoke_s + self.fpga.link.transfer_s(u.in_bytes(b));
+                }
+                let mut eff = self.fpga.unit_effective_s(u, b);
+                if s.congestion == 1 {
+                    eff *= self.cfg.congestion_slowdown;
+                }
+                t += eff;
+            }
+        }
+        // terminal drain: last unit's results return to the host
+        if s.unit == self.net.len() - 1 && p == Placement::Fpga {
+            t += self.fpga.link.transfer_s(u.out_bytes(b));
+        }
+        t
+    }
+
+    /// Energy (J) attributable to the step (load power on the busy device).
+    pub fn step_energy_j(&self, s: &State, p: Placement) -> f64 {
+        let t = self.step_cost_s(s, p);
+        match p {
+            Placement::Cpu => t * self.cpu.power.load_w,
+            Placement::Fpga => t * self.fpga.power.load_w,
+        }
+    }
+
+    /// Take an action: returns (next state, reward).
+    pub fn step(&self, s: &State, p: Placement) -> (State, f64) {
+        let cost = self.step_cost_s(s, p) + self.cfg.energy_lambda * self.step_energy_j(s, p);
+        let next = State { unit: s.unit + 1, prev: p, congestion: s.congestion };
+        (next, -cost * self.cfg.reward_scale)
+    }
+
+    /// Total latency of a full placement vector (for reporting / oracle).
+    pub fn placement_latency_s(&self, placement: &[Placement]) -> f64 {
+        self.fpga
+            .network_timeline(&self.net, placement, self.cfg.batch, &self.cpu)
+            .total_s
+    }
+
+    /// Exact optimal placement by dynamic programming over the chain
+    /// (state = residency), minimizing pure latency.  This is the oracle
+    /// the Fig 1 bench compares the learned policy against.
+    pub fn oracle_placement(&self) -> (Vec<Placement>, f64) {
+        let n = self.net.len();
+        // dp[i][r] = (cost from unit i to end given residency r)
+        let mut dp = vec![[f64::INFINITY; 2]; n + 1];
+        let mut choice = vec![[Placement::Cpu; 2]; n];
+        dp[n] = [0.0, 0.0];
+        for i in (0..n).rev() {
+            for r in 0..2 {
+                let prev = if r == 0 { Placement::Cpu } else { Placement::Fpga };
+                for &a in &ACTIONS {
+                    let s = State { unit: i, prev, congestion: 0 };
+                    let c = self.step_cost_s(&s, a);
+                    let nr = matches!(a, Placement::Fpga) as usize;
+                    let total = c + dp[i + 1][nr];
+                    if total < dp[i][r] {
+                        dp[i][r] = total;
+                        choice[i][r] = a;
+                    }
+                }
+            }
+        }
+        let mut placement = Vec::with_capacity(n);
+        let mut r = 0usize; // inputs start host-side
+        for i in 0..n {
+            let a = choice[i][r];
+            placement.push(a);
+            r = matches!(a, Placement::Fpga) as usize;
+        }
+        (placement, dp[0][0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> SchedulingEnv {
+        SchedulingEnv::new(
+            Network::paper_scale(),
+            FpgaPlatform::table1_card(),
+            CpuModel::default(),
+            EnvConfig::default(),
+        )
+    }
+
+    #[test]
+    fn step_costs_sum_to_timeline() {
+        let e = env();
+        for placement in [
+            vec![Placement::Fpga; e.n_units()],
+            vec![Placement::Cpu; e.n_units()],
+            (0..e.n_units())
+                .map(|i| if i < 3 { Placement::Cpu } else { Placement::Fpga })
+                .collect::<Vec<_>>(),
+        ] {
+            let mut s = e.initial_state(false);
+            let mut sum = 0.0;
+            for &p in &placement {
+                sum += e.step_cost_s(&s, p);
+                s = State { unit: s.unit + 1, prev: p, congestion: 0 };
+            }
+            let tl = e.placement_latency_s(&placement);
+            assert!(
+                (sum - tl).abs() < 1e-12,
+                "decomposition broken: steps {sum} vs timeline {tl} for {placement:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn oracle_beats_naive_policies() {
+        let e = env();
+        let (oracle, oracle_cost) = e.oracle_placement();
+        let all_fpga = e.placement_latency_s(&vec![Placement::Fpga; e.n_units()]);
+        let all_cpu = e.placement_latency_s(&vec![Placement::Cpu; e.n_units()]);
+        let got = e.placement_latency_s(&oracle);
+        assert!((got - oracle_cost).abs() < 1e-12);
+        assert!(oracle_cost <= all_fpga + 1e-12);
+        assert!(oracle_cost <= all_cpu + 1e-12);
+    }
+
+    #[test]
+    fn oracle_offloads_heavy_units() {
+        // on the paper-scale net the MAC-heavy stages must be offloaded
+        let e = env();
+        let (oracle, _) = e.oracle_placement();
+        for (u, p) in e.net.units.iter().zip(&oracle) {
+            if u.kind.uses_mac_array() && u.macs_b1 > 50_000_000 {
+                assert_eq!(*p, Placement::Fpga, "unit {} should offload", u.name);
+            }
+        }
+    }
+
+    #[test]
+    fn congestion_increases_fpga_cost() {
+        let e = SchedulingEnv::new(
+            Network::paper_scale(),
+            FpgaPlatform::table1_card(),
+            CpuModel::default(),
+            EnvConfig { congestion_p: 1.0, ..EnvConfig::default() },
+        );
+        let s_free = e.initial_state(false);
+        let s_busy = e.initial_state(true);
+        let free = e.step_cost_s(&s_free, Placement::Fpga);
+        let busy = e.step_cost_s(&s_busy, Placement::Fpga);
+        assert!(busy > free);
+        // CPU cost unaffected
+        assert_eq!(e.step_cost_s(&s_free, Placement::Cpu), e.step_cost_s(&s_busy, Placement::Cpu));
+    }
+
+    #[test]
+    fn rewards_are_negative_costs() {
+        let e = env();
+        let s = e.initial_state(false);
+        let (next, r) = e.step(&s, Placement::Fpga);
+        assert!(r < 0.0);
+        assert_eq!(next.unit, 1);
+        assert_eq!(next.prev, Placement::Fpga);
+    }
+}

@@ -1,0 +1,16 @@
+//! The paper's scheduling agent (Fig 1): a Q-learning policy over
+//! CPU/FPGA offload decisions, plus the baseline policies it is
+//! evaluated against.
+//!
+//! * [`env`] — the scheduling MDP (states, rewards from the timing models)
+//! * [`qlearn`] — double-Q tabular agent with target-table sync
+//! * [`policy`] — static / heuristic / greedy baselines and the DP oracle
+//!   (on [`env::SchedulingEnv::oracle_placement`])
+
+pub mod env;
+pub mod policy;
+pub mod qlearn;
+
+pub use env::{EnvConfig, SchedulingEnv, State};
+pub use policy::{AllCpu, FixedPlacement, GreedyStep, IntensityHeuristic, Policy, StaticAllFpga};
+pub use qlearn::{EpisodeStats, QAgent, QConfig};

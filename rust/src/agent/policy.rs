@@ -1,0 +1,172 @@
+//! Baseline scheduling policies the paper's related work represents:
+//! static all-FPGA mapping (DNNWeaver/Suda-style design-time lock-in) and
+//! a greedy arithmetic-intensity heuristic (the paper's §III.A rule of
+//! thumb, without learning).  The ablation bench compares these against
+//! the Q-agent and the DP oracle.
+
+use super::env::{SchedulingEnv, State};
+use crate::platform::Placement;
+
+/// A scheduling policy: maps each decision point to a placement.
+pub trait Policy {
+    fn name(&self) -> &'static str;
+    fn decide(&self, env: &SchedulingEnv, s: &State) -> Placement;
+
+    /// Schedule the full network.
+    fn placement(&self, env: &SchedulingEnv, congested: bool) -> Vec<Placement> {
+        let mut s = env.initial_state(congested);
+        let mut out = Vec::with_capacity(env.n_units());
+        while !env.is_terminal(&s) {
+            let p = self.decide(env, &s);
+            out.push(p);
+            s = State { unit: s.unit + 1, prev: p, congestion: s.congestion };
+        }
+        out
+    }
+}
+
+/// Everything on the FPGA — the static design-time mapping of prior work.
+pub struct StaticAllFpga;
+
+impl Policy for StaticAllFpga {
+    fn name(&self) -> &'static str {
+        "static-all-fpga"
+    }
+
+    fn decide(&self, _env: &SchedulingEnv, _s: &State) -> Placement {
+        Placement::Fpga
+    }
+}
+
+/// Everything on the CPU — the no-accelerator reference.
+pub struct AllCpu;
+
+impl Policy for AllCpu {
+    fn name(&self) -> &'static str {
+        "all-cpu"
+    }
+
+    fn decide(&self, _env: &SchedulingEnv, _s: &State) -> Placement {
+        Placement::Cpu
+    }
+}
+
+/// Greedy per-unit heuristic: offload when arithmetic intensity exceeds a
+/// threshold (MACs/byte).  Myopic — it cannot account for the transfer
+/// costs its own residency changes cause, which is exactly the gap the
+/// learned agent closes (ablation bench).
+pub struct IntensityHeuristic {
+    pub threshold: f64,
+}
+
+impl Default for IntensityHeuristic {
+    fn default() -> Self {
+        // ~MAC-array break-even on the modelled card
+        IntensityHeuristic { threshold: 8.0 }
+    }
+}
+
+impl Policy for IntensityHeuristic {
+    fn name(&self) -> &'static str {
+        "intensity-heuristic"
+    }
+
+    fn decide(&self, env: &SchedulingEnv, s: &State) -> Placement {
+        let u = &env.net.units[s.unit];
+        if u.arithmetic_intensity(env.cfg.batch) >= self.threshold {
+            Placement::Fpga
+        } else {
+            Placement::Cpu
+        }
+    }
+}
+
+/// A frozen placement vector — how a trained Q-agent's policy is handed
+/// to the (Send-constrained) server worker without moving the agent.
+pub struct FixedPlacement {
+    pub placement: Vec<Placement>,
+}
+
+impl Policy for FixedPlacement {
+    fn name(&self) -> &'static str {
+        "fixed-placement"
+    }
+
+    fn decide(&self, _env: &SchedulingEnv, s: &State) -> Placement {
+        self.placement.get(s.unit).copied().unwrap_or(Placement::Cpu)
+    }
+}
+
+/// Greedy *myopic cost* policy: pick whichever device is cheaper for this
+/// single step (ignores downstream residency effects).
+pub struct GreedyStep;
+
+impl Policy for GreedyStep {
+    fn name(&self) -> &'static str {
+        "greedy-step"
+    }
+
+    fn decide(&self, env: &SchedulingEnv, s: &State) -> Placement {
+        if env.step_cost_s(s, Placement::Fpga) <= env.step_cost_s(s, Placement::Cpu) {
+            Placement::Fpga
+        } else {
+            Placement::Cpu
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::env::EnvConfig;
+    use crate::graph::Network;
+    use crate::platform::{CpuModel, FpgaPlatform};
+
+    fn env() -> SchedulingEnv {
+        SchedulingEnv::new(
+            Network::paper_scale(),
+            FpgaPlatform::table1_card(),
+            CpuModel::default(),
+            EnvConfig::default(),
+        )
+    }
+
+    #[test]
+    fn policies_produce_full_placements() {
+        let e = env();
+        for p in [&StaticAllFpga as &dyn Policy, &AllCpu, &IntensityHeuristic::default(), &GreedyStep] {
+            let placement = p.placement(&e, false);
+            assert_eq!(placement.len(), e.n_units(), "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn heuristic_offloads_convs_keeps_pools() {
+        let e = env();
+        let placement = IntensityHeuristic::default().placement(&e, false);
+        // the 512-channel stage is extremely intense -> FPGA
+        assert_eq!(placement[8], Placement::Fpga);
+        // GAP has ~zero intensity -> CPU under the myopic rule
+        assert_eq!(placement[9], Placement::Cpu);
+    }
+
+    #[test]
+    fn oracle_no_worse_than_any_baseline() {
+        let e = env();
+        let (_, oracle) = e.oracle_placement();
+        for p in [&StaticAllFpga as &dyn Policy, &AllCpu, &IntensityHeuristic::default(), &GreedyStep] {
+            let cost = e.placement_latency_s(&p.placement(&e, false));
+            assert!(oracle <= cost + 1e-12, "oracle {oracle} vs {} {cost}", p.name());
+        }
+    }
+
+    #[test]
+    fn myopic_heuristic_pays_for_round_trips() {
+        // On the paper-scale net the heuristic strands GAP/head on CPU,
+        // paying a link round-trip the oracle avoids or exploits better.
+        let e = env();
+        let h = e.placement_latency_s(&IntensityHeuristic::default().placement(&e, false));
+        let (_, oracle) = e.oracle_placement();
+        assert!(h > oracle, "heuristic {h} should trail oracle {oracle}");
+    }
+}

@@ -1,0 +1,250 @@
+//! The paper's Fig 1 agent: tabular double-Q learning with a target table.
+//!
+//! * `Q_A` is updated every step by temporal difference;
+//! * `Q_B` (the target table) provides the bootstrap value and is
+//!   synchronized to `Q_A` every `sync_every` steps — the stabilization
+//!   trick Fig 1 highlights;
+//! * actions are ε-greedy on `Q_A` with multiplicative ε decay.
+
+use super::env::{SchedulingEnv, State, ACTIONS};
+use crate::platform::Placement;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Copy)]
+pub struct QConfig {
+    pub alpha: f64,
+    pub gamma: f64,
+    pub eps_start: f64,
+    pub eps_min: f64,
+    /// ε multiplier per episode.
+    pub eps_decay: f64,
+    /// Steps between Q_B <- Q_A synchronizations (Fig 1's N).
+    pub sync_every: u64,
+}
+
+impl Default for QConfig {
+    fn default() -> Self {
+        QConfig {
+            alpha: 0.20,
+            gamma: 0.98,
+            eps_start: 1.0,
+            eps_min: 0.02,
+            eps_decay: 0.985,
+            sync_every: 64,
+        }
+    }
+}
+
+/// Per-episode trace for the Fig 1 learning-curve bench.
+#[derive(Debug, Clone, Copy)]
+pub struct EpisodeStats {
+    pub episode: usize,
+    pub total_reward: f64,
+    pub latency_s: f64,
+    pub epsilon: f64,
+}
+
+pub struct QAgent {
+    pub cfg: QConfig,
+    /// Q_A(s, a) — the online table.
+    q_a: HashMap<(State, usize), f64>,
+    /// Q_B(s, a) — the target table.
+    q_b: HashMap<(State, usize), f64>,
+    pub epsilon: f64,
+    steps: u64,
+    rng: Rng,
+}
+
+impl QAgent {
+    pub fn new(cfg: QConfig, seed: u64) -> Self {
+        QAgent {
+            cfg,
+            q_a: HashMap::new(),
+            q_b: HashMap::new(),
+            epsilon: cfg.eps_start,
+            steps: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    fn q(table: &HashMap<(State, usize), f64>, s: &State, a: usize) -> f64 {
+        table.get(&(*s, a)).copied().unwrap_or(0.0)
+    }
+
+    /// Greedy action on Q_A (ties -> CPU, the conservative fallback the
+    /// paper describes for resource-constrained conditions).
+    pub fn greedy(&self, s: &State) -> usize {
+        let qc = Self::q(&self.q_a, s, 0);
+        let qf = Self::q(&self.q_a, s, 1);
+        if qf > qc {
+            1
+        } else {
+            0
+        }
+    }
+
+    /// ε-greedy action selection (Fig 1 "Action selection" block).
+    pub fn act(&mut self, s: &State) -> usize {
+        if self.rng.chance(self.epsilon) {
+            self.rng.below(ACTIONS.len())
+        } else {
+            self.greedy(s)
+        }
+    }
+
+    /// TD update (Fig 1 "Q-value update" block): bootstrap from the
+    /// target table Q_B, then sync Q_B every `sync_every` steps.
+    pub fn update(&mut self, s: &State, a: usize, r: f64, s_next: &State, terminal: bool) {
+        let target = if terminal {
+            r
+        } else {
+            // double-Q: argmax from Q_A, value from Q_B
+            let a_star = {
+                let qc = Self::q(&self.q_a, s_next, 0);
+                let qf = Self::q(&self.q_a, s_next, 1);
+                if qf > qc {
+                    1
+                } else {
+                    0
+                }
+            };
+            r + self.cfg.gamma * Self::q(&self.q_b, s_next, a_star)
+        };
+        let q = self.q_a.entry((*s, a)).or_insert(0.0);
+        *q += self.cfg.alpha * (target - *q);
+        self.steps += 1;
+        if self.steps % self.cfg.sync_every == 0 {
+            self.q_b = self.q_a.clone();
+        }
+    }
+
+    pub fn decay_epsilon(&mut self) {
+        self.epsilon = (self.epsilon * self.cfg.eps_decay).max(self.cfg.eps_min);
+    }
+
+    /// Run one episode (schedule the whole network once), learning online.
+    pub fn run_episode(&mut self, env: &SchedulingEnv, congested: bool) -> (Vec<Placement>, f64) {
+        let mut s = env.initial_state(congested);
+        let mut placement = Vec::with_capacity(env.n_units());
+        let mut total_r = 0.0;
+        while !env.is_terminal(&s) {
+            let a = self.act(&s);
+            let (s_next, r) = env.step(&s, ACTIONS[a]);
+            let terminal = env.is_terminal(&s_next);
+            self.update(&s, a, r, &s_next, terminal);
+            placement.push(ACTIONS[a]);
+            total_r += r;
+            s = s_next;
+        }
+        self.decay_epsilon();
+        (placement, total_r)
+    }
+
+    /// Train for `episodes`, returning the learning curve (Fig 1 bench).
+    pub fn train(&mut self, env: &SchedulingEnv, episodes: usize) -> Vec<EpisodeStats> {
+        let mut curve = Vec::with_capacity(episodes);
+        let mut rng = self.rng.fork();
+        for ep in 0..episodes {
+            let congested = rng.chance(env.cfg.congestion_p);
+            let eps_before = self.epsilon;
+            let (placement, total_r) = self.run_episode(env, congested);
+            curve.push(EpisodeStats {
+                episode: ep,
+                total_reward: total_r,
+                latency_s: env.placement_latency_s(&placement),
+                epsilon: eps_before,
+            });
+        }
+        curve
+    }
+
+    /// The converged (greedy) placement.
+    pub fn policy(&self, env: &SchedulingEnv, congested: bool) -> Vec<Placement> {
+        let mut s = env.initial_state(congested);
+        let mut placement = Vec::with_capacity(env.n_units());
+        while !env.is_terminal(&s) {
+            let a = self.greedy(&s);
+            placement.push(ACTIONS[a]);
+            s = State { unit: s.unit + 1, prev: ACTIONS[a], congestion: s.congestion };
+        }
+        placement
+    }
+
+    pub fn q_table_size(&self) -> usize {
+        self.q_a.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::env::EnvConfig;
+    use crate::graph::Network;
+    use crate::platform::{CpuModel, FpgaPlatform};
+
+    fn env() -> SchedulingEnv {
+        SchedulingEnv::new(
+            Network::paper_scale(),
+            FpgaPlatform::table1_card(),
+            CpuModel::default(),
+            EnvConfig::default(),
+        )
+    }
+
+    #[test]
+    fn learns_near_oracle_policy() {
+        let e = env();
+        let mut agent = QAgent::new(QConfig::default(), 42);
+        agent.train(&e, 400);
+        let learned = agent.policy(&e, false);
+        let (_, oracle_cost) = e.oracle_placement();
+        let learned_cost = e.placement_latency_s(&learned);
+        // within 10% of the DP optimum after 400 episodes
+        assert!(
+            learned_cost <= oracle_cost * 1.10,
+            "learned {learned_cost} vs oracle {oracle_cost}"
+        );
+    }
+
+    #[test]
+    fn reward_improves_over_training() {
+        let e = env();
+        let mut agent = QAgent::new(QConfig::default(), 7);
+        let curve = agent.train(&e, 300);
+        let early: f64 =
+            curve[..30].iter().map(|s| s.total_reward).sum::<f64>() / 30.0;
+        let late: f64 =
+            curve[270..].iter().map(|s| s.total_reward).sum::<f64>() / 30.0;
+        assert!(late > early, "late {late} <= early {early}");
+    }
+
+    #[test]
+    fn epsilon_decays_to_floor() {
+        let e = env();
+        let mut agent = QAgent::new(QConfig::default(), 1);
+        agent.train(&e, 500);
+        assert!((agent.epsilon - agent.cfg.eps_min).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let e = env();
+        let mut a1 = QAgent::new(QConfig::default(), 9);
+        let mut a2 = QAgent::new(QConfig::default(), 9);
+        let c1 = a1.train(&e, 50);
+        let c2 = a2.train(&e, 50);
+        for (x, y) in c1.iter().zip(&c2) {
+            assert_eq!(x.total_reward, y.total_reward);
+        }
+    }
+
+    #[test]
+    fn q_table_stays_small() {
+        // state space = units x residency x congestion; table must not blow up
+        let e = env();
+        let mut agent = QAgent::new(QConfig::default(), 3);
+        agent.train(&e, 200);
+        assert!(agent.q_table_size() <= e.n_units() * 2 * 2 * 2);
+    }
+}

@@ -1,0 +1,157 @@
+//! The AI-FPGA Agent coordinator — the paper's system contribution.
+//!
+//! For each inference request the coordinator walks the network's units,
+//! asks the scheduling policy (Q-agent by default) where each unit runs,
+//! executes the unit's *behavioural* model through PJRT (fp32 artifact on
+//! the CPU path, int8 artifact on the FPGA path — Fig 2's SystemC role),
+//! and advances the *timing* model (platform simulators) for the same
+//! decision.  Results carry both real logits and the simulated timeline.
+
+use crate::agent::{Policy, SchedulingEnv, State};
+use crate::platform::Placement;
+use crate::runtime::ArtifactStore;
+use anyhow::{anyhow, Result};
+
+/// Outcome of one coordinated inference.
+#[derive(Debug)]
+pub struct InferenceResult {
+    /// Real logits [batch * classes] from the mixed-precision execution.
+    pub logits: Vec<f32>,
+    pub classes: usize,
+    /// Placement chosen per unit.
+    pub placement: Vec<Placement>,
+    /// Simulated end-to-end latency (s) under the platform models.
+    pub sim_latency_s: f64,
+    /// Simulated energy (J).
+    pub sim_energy_j: f64,
+    /// Host wall-clock spent in PJRT execution (behavioural model cost —
+    /// NOT the reported latency; see DESIGN.md).
+    pub wall_s: f64,
+    /// Per-unit simulated times.
+    pub unit_times_s: Vec<f64>,
+}
+
+/// The coordinator: owns the artifact store and the scheduling env.
+pub struct Coordinator<'a> {
+    pub store: &'a ArtifactStore,
+    pub env: SchedulingEnv,
+    /// Batch sizes for which per-unit artifacts exist.
+    pub unit_batches: Vec<usize>,
+}
+
+impl<'a> Coordinator<'a> {
+    pub fn new(store: &'a ArtifactStore, env: SchedulingEnv) -> Result<Self> {
+        let unit_batches = store
+            .manifest
+            .req("batches")?
+            .req("cnn_unit")?
+            .usize_vec()?;
+        Ok(Coordinator { store, env, unit_batches })
+    }
+
+    /// Largest supported per-unit batch <= requested (requests are split).
+    pub fn plan_batch(&self, requested: usize) -> usize {
+        self.unit_batches
+            .iter()
+            .copied()
+            .filter(|b| *b <= requested)
+            .max()
+            .unwrap_or_else(|| self.unit_batches.iter().copied().min().unwrap_or(1))
+    }
+
+    /// Run one batch through the network under `policy`.
+    ///
+    /// `images` is flat NHWC f32 of exactly `batch` images.  The batch
+    /// must be one of `unit_batches` (the server handles splitting).
+    pub fn infer(&self, images: &[f32], batch: usize, policy: &dyn Policy,
+                 congested: bool) -> Result<InferenceResult> {
+        if !self.unit_batches.contains(&batch) {
+            return Err(anyhow!("unsupported unit batch {batch} (have {:?})", self.unit_batches));
+        }
+        let net = &self.env.net;
+        let first = net
+            .units
+            .first()
+            .ok_or_else(|| anyhow!("empty network"))?;
+        if images.len() != first.in_elems(batch) {
+            return Err(anyhow!(
+                "input len {} != expected {}",
+                images.len(),
+                first.in_elems(batch)
+            ));
+        }
+
+        let t0 = std::time::Instant::now();
+        let mut s = self.env.initial_state(congested);
+        let mut placement = Vec::with_capacity(net.len());
+        let mut unit_times = Vec::with_capacity(net.len());
+        let mut sim_latency = 0.0;
+        let mut sim_energy = 0.0;
+        let mut act: Vec<f32> = images.to_vec();
+
+        for u in &net.units {
+            let p = policy.decide(&self.env, &s);
+            // timing model
+            let dt = self.env.step_cost_s(&s, p);
+            sim_latency += dt;
+            sim_energy += self.env.step_energy_j(&s, p);
+            // behavioural model: fp32 artifact on CPU, int8 on FPGA
+            let precision = match p {
+                Placement::Cpu => "fp32",
+                Placement::Fpga => "int8",
+            };
+            let name = self.store.unit_artifact(&u.name, precision, batch);
+            let out = self.store.run_f32(&name, &[&act])?;
+            act = out
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow!("unit '{name}' returned no outputs"))?;
+            placement.push(p);
+            unit_times.push(dt);
+            s = State { unit: s.unit + 1, prev: p, congestion: s.congestion };
+        }
+
+        let classes = net.units.last().unwrap().cout;
+        Ok(InferenceResult {
+            logits: act,
+            classes,
+            placement,
+            sim_latency_s: sim_latency,
+            sim_energy_j: sim_energy,
+            wall_s: t0.elapsed().as_secs_f64(),
+            unit_times_s: unit_times,
+        })
+    }
+
+    /// Run the fused full-model artifact (fp32 or int8) — the fast path
+    /// used for accuracy sweeps and the CPU/GPU baselines.
+    pub fn infer_full(&self, images: &[f32], batch: usize, precision: &str) -> Result<Vec<f32>> {
+        let name = format!("cnn_{precision}_full_b{batch}");
+        let mut out = self.store.run_f32(&name, &[images])?;
+        out.pop().ok_or_else(|| anyhow!("no output from {name}"))
+    }
+
+    /// Top-1 accuracy of a full-model artifact over `n` test images.
+    pub fn accuracy(&self, ts: &crate::data::TestSet, precision: &str, batch: usize,
+                    n: usize) -> Result<f64> {
+        let mut hits = 0usize;
+        let mut seen = 0usize;
+        let classes = self.env.net.units.last().unwrap().cout;
+        let mut buf = Vec::new();
+        let mut start = 0usize;
+        while start + batch <= n.min(ts.n) {
+            ts.decode_batch_into(start, batch, &mut buf)?;
+            let logits = self.infer_full(&buf, batch, precision)?;
+            let preds = crate::runtime::argmax_rows(&logits, classes);
+            for (p, &l) in preds.iter().zip(ts.label_slice(start, batch)) {
+                hits += (*p == l as usize) as usize;
+            }
+            seen += batch;
+            start += batch;
+        }
+        if seen == 0 {
+            return Err(anyhow!("no complete batches of {batch} within {n}"));
+        }
+        Ok(hits as f64 / seen as f64)
+    }
+}

@@ -1,0 +1,134 @@
+//! Test-set loader: reads `artifacts/testset.bin` (the synthetic 10k-image
+//! set written by `python/compile/dataset.py`) and mirrors its u8 codec
+//! bit-exactly, so Rust and Python compute from identical tensors.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+pub const MAGIC: u32 = 0xA1FA_DA7A;
+/// u8 codec range — MUST match python dataset.U8_LO / U8_HI.
+pub const U8_LO: f32 = -5.0;
+pub const U8_HI: f32 = 5.0;
+
+/// The decoded test set.
+pub struct TestSet {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// Raw u8-coded pixels, length n*h*w*c.
+    raw: Vec<u8>,
+    pub labels: Vec<u8>,
+}
+
+/// Decode one u8 pixel to f32 — bit-exact mirror of dataset.decode_u8.
+#[inline]
+pub fn decode_px(b: u8) -> f32 {
+    b as f32 * ((U8_HI - U8_LO) / 255.0) + U8_LO
+}
+
+impl TestSet {
+    pub fn load(path: impl AsRef<Path>) -> Result<TestSet> {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading {:?} — run `make artifacts`", path.as_ref()))?;
+        if bytes.len() < 20 {
+            return Err(anyhow!("testset file truncated"));
+        }
+        let word = |i: usize| {
+            u32::from_le_bytes([bytes[4 * i], bytes[4 * i + 1], bytes[4 * i + 2], bytes[4 * i + 3]])
+        };
+        if word(0) != MAGIC {
+            return Err(anyhow!("bad magic {:#x}", word(0)));
+        }
+        let (n, h, w, c) = (word(1) as usize, word(2) as usize, word(3) as usize, word(4) as usize);
+        let px = n * h * w * c;
+        let need = 20 + px + n;
+        if bytes.len() != need {
+            return Err(anyhow!("testset size {} != expected {need}", bytes.len()));
+        }
+        Ok(TestSet {
+            n,
+            h,
+            w,
+            c,
+            raw: bytes[20..20 + px].to_vec(),
+            labels: bytes[20 + px..].to_vec(),
+        })
+    }
+
+    pub fn image_elems(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// Decode images [start, start+count) into a flat f32 NHWC buffer.
+    pub fn decode_batch(&self, start: usize, count: usize) -> Result<Vec<f32>> {
+        if start + count > self.n {
+            return Err(anyhow!("batch [{start}, {}) out of range {}", start + count, self.n));
+        }
+        let ie = self.image_elems();
+        Ok(self.raw[start * ie..(start + count) * ie]
+            .iter()
+            .map(|&b| decode_px(b))
+            .collect())
+    }
+
+    /// Decode into a caller-provided buffer (hot-path variant that avoids
+    /// per-request allocation — see EXPERIMENTS.md §Perf L3).
+    pub fn decode_batch_into(&self, start: usize, count: usize, out: &mut Vec<f32>) -> Result<()> {
+        if start + count > self.n {
+            return Err(anyhow!("batch [{start}, {}) out of range {}", start + count, self.n));
+        }
+        let ie = self.image_elems();
+        out.clear();
+        out.extend(self.raw[start * ie..(start + count) * ie].iter().map(|&b| decode_px(b)));
+        Ok(())
+    }
+
+    pub fn label_slice(&self, start: usize, count: usize) -> &[u8] {
+        &self.labels[start..start + count]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_mirrors_python() {
+        // python: decode_u8(raw) = raw * (10/255) - 5
+        assert_eq!(decode_px(0), -5.0);
+        assert_eq!(decode_px(255), 5.0);
+        let mid = decode_px(128);
+        assert!((mid - (128.0 * 10.0 / 255.0 - 5.0)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let dir = std::env::temp_dir().join("aifa_testset_garbage.bin");
+        std::fs::write(&dir, [0u8; 40]).unwrap();
+        assert!(TestSet::load(&dir).is_err());
+        let _ = std::fs::remove_file(&dir);
+    }
+
+    #[test]
+    fn loads_synthetic_roundtrip() {
+        // build a tiny valid file by hand
+        let (n, h, w, c) = (2u32, 2u32, 2u32, 1u32);
+        let mut bytes = vec![];
+        for v in [MAGIC, n, h, w, c] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes.extend_from_slice(&[0, 64, 128, 255, 1, 2, 3, 4]); // pixels
+        bytes.extend_from_slice(&[3, 7]); // labels
+        let path = std::env::temp_dir().join("aifa_testset_ok.bin");
+        std::fs::write(&path, &bytes).unwrap();
+        let ts = TestSet::load(&path).unwrap();
+        assert_eq!((ts.n, ts.h, ts.w, ts.c), (2, 2, 2, 1));
+        assert_eq!(ts.labels, vec![3, 7]);
+        let img = ts.decode_batch(0, 1).unwrap();
+        assert_eq!(img.len(), 4);
+        assert_eq!(img[0], -5.0);
+        assert_eq!(ts.label_slice(1, 1), &[7]);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,233 @@
+//! FPGA fabric model: resource pools, clocking, bitstreams and partial
+//! reconfiguration — the substrate the paper's accelerator synthesizes to.
+//!
+//! Resource pool sizes default to a Zynq UltraScale+ XCK26 (Kria KV260,
+//! the paper's Fig 3 board).  The synthesis model in [`synth`] maps an
+//! accelerator configuration onto these pools the way Vitis HLS reports
+//! would, so `cargo bench --bench resources` can regenerate the paper's
+//! "~70% utilization" claim from first principles.
+
+pub mod synth;
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// Quantity of each fabric resource class.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Resources {
+    pub luts: u64,
+    pub dsps: u64,
+    /// BRAM36 blocks (36 Kib each).
+    pub bram36: u64,
+    /// UltraRAM blocks (288 Kib each).
+    pub uram: u64,
+}
+
+impl Resources {
+    /// KV260 / XCK26 fabric totals (Xilinx DS987).
+    pub fn kv260() -> Resources {
+        Resources { luts: 117_120, dsps: 1_248, bram36: 144, uram: 64 }
+    }
+
+    /// A mid-range Alveo-class card — the paper's §IV "Xilinx FPGA
+    /// accelerator card" is unnamed; this is used for the Table I runs.
+    pub fn alveo_u50_like() -> Resources {
+        Resources { luts: 872_000, dsps: 5_952, bram36: 1_344, uram: 640 }
+    }
+
+    pub fn checked_sub(&self, other: &Resources) -> Option<Resources> {
+        Some(Resources {
+            luts: self.luts.checked_sub(other.luts)?,
+            dsps: self.dsps.checked_sub(other.dsps)?,
+            bram36: self.bram36.checked_sub(other.bram36)?,
+            uram: self.uram.checked_sub(other.uram)?,
+        })
+    }
+
+    pub fn add(&self, other: &Resources) -> Resources {
+        Resources {
+            luts: self.luts + other.luts,
+            dsps: self.dsps + other.dsps,
+            bram36: self.bram36 + other.bram36,
+            uram: self.uram + other.uram,
+        }
+    }
+
+    /// Fraction of `total` used, per class (for the utilization table).
+    pub fn utilization(&self, total: &Resources) -> BTreeMap<&'static str, f64> {
+        let mut m = BTreeMap::new();
+        m.insert("LUT", self.luts as f64 / total.luts.max(1) as f64);
+        m.insert("DSP", self.dsps as f64 / total.dsps.max(1) as f64);
+        m.insert("BRAM36", self.bram36 as f64 / total.bram36.max(1) as f64);
+        m.insert("URAM", self.uram as f64 / total.uram.max(1) as f64);
+        m
+    }
+
+    /// On-chip buffer capacity in bytes (BRAM + URAM).
+    pub fn onchip_bytes(&self) -> u64 {
+        self.bram36 * (36 * 1024 / 8) + self.uram * (288 * 1024 / 8)
+    }
+}
+
+/// A loaded bitstream occupying part of the fabric.
+#[derive(Debug, Clone)]
+pub struct Bitstream {
+    pub name: String,
+    pub usage: Resources,
+    /// Achievable clock after place-and-route pressure (Hz).
+    pub fmax_hz: f64,
+}
+
+/// A partial-reconfiguration region: a carve-out of the fabric that can be
+/// swapped independently (paper §II "partial reconfiguration" future work,
+/// exercised by examples/partial_reconfig.rs).
+#[derive(Debug)]
+pub struct PrRegion {
+    pub name: String,
+    pub budget: Resources,
+    pub loaded: Option<Bitstream>,
+}
+
+/// The fabric: total resources, static region, PR regions, and the
+/// reconfiguration cost model.
+#[derive(Debug)]
+pub struct Fabric {
+    pub total: Resources,
+    pub static_usage: Resources,
+    pub regions: Vec<PrRegion>,
+    /// Full-device configuration time (s) — Kria-class ~80 ms.
+    pub full_config_s: f64,
+    /// Partial reconfiguration throughput (bytes/s of bitstream data).
+    pub pr_bytes_per_s: f64,
+    reconfig_count: u64,
+}
+
+impl Fabric {
+    pub fn new(total: Resources) -> Fabric {
+        // Static shell (DMA engines, AXI interconnect, control regs):
+        // ~8% LUTs, a few BRAMs — typical for a Vitis shell.
+        let static_usage = Resources {
+            luts: total.luts / 12,
+            dsps: 0,
+            bram36: total.bram36 / 18,
+            uram: 0,
+        };
+        Fabric {
+            total,
+            static_usage,
+            regions: vec![],
+            full_config_s: 0.080,
+            pr_bytes_per_s: 400e6,
+            reconfig_count: 0,
+        }
+    }
+
+    pub fn kv260() -> Fabric {
+        Fabric::new(Resources::kv260())
+    }
+
+    /// Resources not yet assigned to a PR region or the static shell.
+    pub fn free(&self) -> Resources {
+        let mut used = self.static_usage;
+        for r in &self.regions {
+            used = used.add(&r.budget);
+        }
+        self.total.checked_sub(&used).unwrap_or_default()
+    }
+
+    /// Carve a PR region out of the free fabric.
+    pub fn add_region(&mut self, name: &str, budget: Resources) -> Result<usize> {
+        self.free()
+            .checked_sub(&budget)
+            .ok_or_else(|| anyhow!("region '{name}' exceeds free fabric"))?;
+        self.regions.push(PrRegion { name: name.into(), budget, loaded: None });
+        Ok(self.regions.len() - 1)
+    }
+
+    /// Load a bitstream into a region; returns simulated reconfig time (s).
+    ///
+    /// Cost scales with the region's share of the fabric (bitstream size is
+    /// roughly proportional to covered frames).
+    pub fn load(&mut self, region: usize, bs: Bitstream) -> Result<f64> {
+        let r = self
+            .regions
+            .get_mut(region)
+            .ok_or_else(|| anyhow!("no region {region}"))?;
+        r.budget
+            .checked_sub(&bs.usage)
+            .ok_or_else(|| anyhow!("bitstream '{}' exceeds region '{}'", bs.name, r.name))?;
+        // region bitstream bytes ~ proportional LUT share of ~32 MB full device
+        let share = r.budget.luts as f64 / self.total.luts as f64;
+        let bytes = share * 32e6;
+        r.loaded = Some(bs);
+        self.reconfig_count += 1;
+        Ok(bytes / self.pr_bytes_per_s)
+    }
+
+    pub fn reconfigurations(&self) -> u64 {
+        self.reconfig_count
+    }
+
+    /// Total currently-loaded dynamic usage + static shell.
+    pub fn used(&self) -> Resources {
+        let mut used = self.static_usage;
+        for r in &self.regions {
+            if let Some(bs) = &r.loaded {
+                used = used.add(&bs.usage);
+            }
+        }
+        used
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv260_pools() {
+        let r = Resources::kv260();
+        assert_eq!(r.dsps, 1248);
+        assert!(r.onchip_bytes() > 2 << 20); // >2 MiB on-chip
+    }
+
+    #[test]
+    fn region_budgeting() {
+        let mut f = Fabric::kv260();
+        let half = Resources { luts: 50_000, dsps: 600, bram36: 60, uram: 40 };
+        let r0 = f.add_region("pr0", half).unwrap();
+        // a second half-fabric region no longer fits (static shell took some)
+        assert!(f.add_region("pr1", half).is_err());
+        let bs = Bitstream {
+            name: "conv_core".into(),
+            usage: Resources { luts: 40_000, dsps: 512, bram36: 48, uram: 16 },
+            fmax_hz: 200e6,
+        };
+        let t = f.load(r0, bs).unwrap();
+        assert!(t > 0.0 && t < f.full_config_s, "PR must beat full config: {t}");
+        assert_eq!(f.reconfigurations(), 1);
+    }
+
+    #[test]
+    fn oversized_bitstream_rejected() {
+        let mut f = Fabric::kv260();
+        let r0 = f
+            .add_region("pr0", Resources { luts: 10_000, dsps: 64, bram36: 8, uram: 0 })
+            .unwrap();
+        let bs = Bitstream {
+            name: "too_big".into(),
+            usage: Resources { luts: 20_000, dsps: 64, bram36: 8, uram: 0 },
+            fmax_hz: 200e6,
+        };
+        assert!(f.load(r0, bs).is_err());
+    }
+
+    #[test]
+    fn utilization_fractions() {
+        let total = Resources::kv260();
+        let used = Resources { luts: 58_560, dsps: 624, bram36: 72, uram: 32 };
+        let u = used.utilization(&total);
+        assert!((u["LUT"] - 0.5).abs() < 0.01);
+        assert!((u["DSP"] - 0.5).abs() < 0.01);
+    }
+}

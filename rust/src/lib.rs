@@ -1,0 +1,29 @@
+//! # AI-FPGA Agent (aifa)
+//!
+//! Reproduction of *"A Reconfigurable Framework for AI-FPGA Agent
+//! Integration and Acceleration"* (CS.AR 2026): an agent-driven framework
+//! that dynamically partitions DNN inference between a host CPU and a
+//! (simulated) parameterizable FPGA accelerator.
+//!
+//! Architecture (DESIGN.md): Rust owns the request path — routing,
+//! Q-learning scheduling, DMA/memory/power simulation, and PJRT execution
+//! of AOT-compiled JAX/Pallas artifacts.  Python runs only at build time.
+
+pub mod accel;
+pub mod dma;
+pub mod fpga;
+pub mod graph;
+pub mod memory;
+pub mod platform;
+pub mod power;
+pub mod agent;
+pub mod coordinator;
+pub mod data;
+pub mod runtime;
+pub mod eda;
+pub mod llm;
+pub mod report;
+pub mod server;
+pub mod testing;
+pub mod util;
+pub mod verify;

@@ -1,0 +1,251 @@
+//! Fig 3 pipeline: LLM inference on the KV260-class platform.
+//!
+//! Two coupled halves (DESIGN.md substitution table):
+//!
+//! * **Functional**: the scaled LLaMA-style decoder artifacts
+//!   (`llm_prefill` / `llm_decode`, int4 weights baked in) run through
+//!   PJRT — real tokens out, KV caches round-tripped as literals.
+//! * **Analytical**: a DDR4 + AXI bandwidth/capacity simulation at
+//!   either tiny scale (validated against the artifacts' true byte
+//!   counts) or paper scale (LLaMA2-7B AWQ-4bit on 4 GB DDR4) producing
+//!   the Fig 3 headline numbers: >93% DRAM occupancy, ~85% bandwidth
+//!   utilization, real-time tokens/s.
+
+use crate::memory::{Ddr, DdrConfig, KvCache};
+use crate::runtime::{literal_f32, literal_i32, ArtifactStore};
+use anyhow::{anyhow, Result};
+
+/// Scale-free description of a decoder workload for the analytical model.
+#[derive(Debug, Clone, Copy)]
+pub struct LlmWorkload {
+    /// Bytes of weights streamed from DRAM per decoded token.
+    pub weight_stream_bytes: u64,
+    /// KV bytes appended per token.
+    pub kv_bytes_per_token: u64,
+    /// Total resident model bytes.
+    pub model_bytes: u64,
+    /// Context window (tokens).
+    pub max_seq: u64,
+    /// Compute time per token on the PL (s) — MAC-array bound.
+    pub compute_s_per_token: f64,
+}
+
+impl LlmWorkload {
+    /// Paper scale: LLaMA2-7B, AWQ 4-bit, KV260.
+    /// Resident bytes: 6.7B matmul params at 4 bits (3.35 GB) + group
+    /// scales (fp16 per 32-group, ~0.42 GB) + fp16 embeddings/head
+    /// (~0.06 GB) ≈ 3.83 GB — matching real q4 checkpoint sizes and the
+    /// paper's ">93% of 4 GB" figure.  Every decode step streams the full
+    /// weight set (memory-bound decode); KV: 32 layers x 4096 dim x 2
+    /// (K,V) x 2 bytes (fp16) = 512 KiB/token.
+    pub fn llama2_7b_kv260() -> LlmWorkload {
+        let model_bytes = 3_830_000_000;
+        LlmWorkload {
+            weight_stream_bytes: model_bytes,
+            kv_bytes_per_token: 512 * 1024,
+            model_bytes,
+            max_seq: 2048,
+            // 7B MACs/token on a 32x32 array @200MHz would be 34 s —
+            // the PL clearly runs many parallel dot lanes; decode on
+            // this class of design is DDR-bound, so compute hides
+            // behind the stream (set just under the transfer time).
+            compute_s_per_token: 0.150,
+        }
+    }
+
+    /// Build the tiny-scale workload from the artifact manifest (true
+    /// byte counts of the compiled decoder — keeps the simulator honest).
+    pub fn from_manifest(store: &ArtifactStore) -> Result<LlmWorkload> {
+        let llm = store.manifest.req("llm")?;
+        let wsb = llm.req("weight_stream_bytes_per_token")?.as_usize().unwrap_or(0) as u64;
+        let kvb = llm.req("kv_bytes_per_token")?.as_usize().unwrap_or(0) as u64;
+        let max_seq = llm.req("max_seq")?.as_usize().unwrap_or(128) as u64;
+        Ok(LlmWorkload {
+            weight_stream_bytes: wsb,
+            kv_bytes_per_token: kvb,
+            model_bytes: wsb, // weights are streamed once per token
+            max_seq,
+            compute_s_per_token: 0.0, // negligible at tiny scale
+        })
+    }
+}
+
+/// Analytical decode-loop simulation results (the Fig 3 numbers).
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineReport {
+    pub tokens: u64,
+    pub tokens_per_s: f64,
+    pub dram_occupancy: f64,
+    pub bandwidth_utilization: f64,
+    pub kv_bytes: u64,
+}
+
+/// Simulate `tokens` decode steps of `w` on `ddr_cfg`.
+///
+/// Each step streams the weights + reads the KV cache + appends one KV
+/// entry; compute overlaps the stream (double-buffered groups), so the
+/// step time is max(transfer, compute).
+pub fn simulate_decode(w: &LlmWorkload, ddr_cfg: DdrConfig, prompt_len: u64,
+                       tokens: u64) -> Result<PipelineReport> {
+    let mut ddr = Ddr::new(ddr_cfg);
+    ddr.alloc("weights", w.model_bytes)?;
+    ddr.alloc("runtime", 64 << 20)?; // host program + activations
+    let mut kv = KvCache::new(w.kv_bytes_per_token, w.max_seq);
+    for _ in 0..prompt_len {
+        kv.append(&mut ddr)?;
+    }
+    let mut t = 0.0f64;
+    for _ in 0..tokens {
+        let bytes = w.weight_stream_bytes + kv.read_bytes() + w.kv_bytes_per_token;
+        let xfer = ddr.transfer_s(bytes);
+        let step = xfer.max(w.compute_s_per_token);
+        ddr.record_traffic(t, bytes);
+        t += step;
+        kv.append(&mut ddr)?;
+    }
+    Ok(PipelineReport {
+        tokens,
+        tokens_per_s: tokens as f64 / t,
+        dram_occupancy: ddr.occupancy(),
+        bandwidth_utilization: ddr.bandwidth_utilization(0.0, t),
+        kv_bytes: kv.bytes(),
+    })
+}
+
+/// Functional decode through the real artifacts: greedy generation.
+pub struct LlmSession<'a> {
+    store: &'a ArtifactStore,
+    pub vocab: usize,
+    pub prefill_len: usize,
+    pub max_seq: usize,
+    kv_dims: Vec<i64>,
+    k_cache: Vec<f32>,
+    v_cache: Vec<f32>,
+    pub pos: usize,
+}
+
+impl<'a> LlmSession<'a> {
+    pub fn new(store: &'a ArtifactStore) -> Result<LlmSession<'a>> {
+        let llm = store.manifest.req("llm")?;
+        let vocab = llm.req("vocab")?.as_usize().unwrap_or(0);
+        let prefill_len = llm.req("prefill_len")?.as_usize().unwrap_or(16);
+        let max_seq = llm.req("max_seq")?.as_usize().unwrap_or(128);
+        let n_layers = llm.req("n_layers")?.as_usize().unwrap_or(2) as i64;
+        let n_heads = llm.req("n_heads")?.as_usize().unwrap_or(4) as i64;
+        let d_model = llm.req("d_model")?.as_usize().unwrap_or(128) as i64;
+        let kv_dims = vec![n_layers, n_heads, max_seq as i64, d_model / n_heads];
+        Ok(LlmSession {
+            store,
+            vocab,
+            prefill_len,
+            max_seq,
+            kv_dims,
+            k_cache: vec![],
+            v_cache: vec![],
+            pos: 0,
+        })
+    }
+
+    /// Run the prompt through `llm_prefill`; returns the first generated
+    /// token (greedy).
+    pub fn prefill(&mut self, prompt: &[i32]) -> Result<i32> {
+        if prompt.len() != self.prefill_len {
+            return Err(anyhow!("prompt must be exactly {} tokens", self.prefill_len));
+        }
+        let toks = literal_i32(prompt, &[self.prefill_len as i64])?;
+        let outs = self.store.run_literals("llm_prefill", vec![toks])?;
+        let (logits, kc, vc) = match &outs[..] {
+            [l, k, v] => (l, k, v),
+            _ => return Err(anyhow!("llm_prefill returned {} outputs", outs.len())),
+        };
+        self.k_cache = kc.to_vec::<f32>()?;
+        self.v_cache = vc.to_vec::<f32>()?;
+        self.pos = self.prefill_len;
+        let lg = logits.to_vec::<f32>()?;
+        Ok(argmax_i32(&lg))
+    }
+
+    /// One greedy decode step through `llm_decode`.
+    pub fn decode_step(&mut self, token: i32) -> Result<i32> {
+        if self.pos >= self.max_seq {
+            return Err(anyhow!("context window full at {}", self.pos));
+        }
+        let t = literal_i32(&[token], &[])?;
+        let p = literal_i32(&[self.pos as i32], &[])?;
+        let kc = literal_f32(&self.k_cache, &self.kv_dims)?;
+        let vc = literal_f32(&self.v_cache, &self.kv_dims)?;
+        let outs = self.store.run_literals("llm_decode", vec![t, p, kc, vc])?;
+        let (logits, kc, vc) = match &outs[..] {
+            [l, k, v] => (l, k, v),
+            _ => return Err(anyhow!("llm_decode returned {} outputs", outs.len())),
+        };
+        self.k_cache = kc.to_vec::<f32>()?;
+        self.v_cache = vc.to_vec::<f32>()?;
+        self.pos += 1;
+        let lg = logits.to_vec::<f32>()?;
+        Ok(argmax_i32(&lg))
+    }
+
+    /// Greedy generation: prefill + n decode steps.  Returns all tokens.
+    pub fn generate(&mut self, prompt: &[i32], n: usize) -> Result<Vec<i32>> {
+        let mut out = vec![self.prefill(prompt)?];
+        for _ in 0..n.saturating_sub(1) {
+            let next = self.decode_step(*out.last().unwrap())?;
+            out.push(next);
+        }
+        Ok(out)
+    }
+}
+
+fn argmax_i32(xs: &[f32]) -> i32 {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as i32)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scale_matches_fig3_claims() {
+        let w = LlmWorkload::llama2_7b_kv260();
+        let rep = simulate_decode(&w, DdrConfig::kv260_ddr4(), 128, 64).unwrap();
+        // Fig 3: model + KV occupy >93% of the 4 GB DRAM
+        assert!(rep.dram_occupancy > 0.90, "occupancy {}", rep.dram_occupancy);
+        // Fig 3: 85% bandwidth utilization during inference
+        assert!(
+            (0.75..=0.95).contains(&rep.bandwidth_utilization),
+            "bw util {}",
+            rep.bandwidth_utilization
+        );
+        // streaming 3.5 GB/token over ~16 GB/s -> a few tokens/s
+        assert!((2.0..=8.0).contains(&rep.tokens_per_s), "tok/s {}", rep.tokens_per_s);
+    }
+
+    #[test]
+    fn kv_overflow_is_caught() {
+        let w = LlmWorkload { max_seq: 4, ..LlmWorkload::llama2_7b_kv260() };
+        let err = simulate_decode(&w, DdrConfig::kv260_ddr4(), 2, 10);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn longer_context_raises_kv_traffic() {
+        let w = LlmWorkload::llama2_7b_kv260();
+        let short = simulate_decode(&w, DdrConfig::kv260_ddr4(), 16, 32).unwrap();
+        let long = simulate_decode(&w, DdrConfig::kv260_ddr4(), 384, 32).unwrap();
+        assert!(long.tokens_per_s < short.tokens_per_s);
+    }
+
+    #[test]
+    fn context_1024_overflows_4gb_dram() {
+        // 3.83 GB weights + 1 GB-scale KV cannot fit the KV260's 4 GiB —
+        // the capacity ledger must catch it (a real deployment constraint
+        // the paper's Fig 3 design is living right at the edge of).
+        let w = LlmWorkload::llama2_7b_kv260();
+        assert!(simulate_decode(&w, DdrConfig::kv260_ddr4(), 1024, 32).is_err());
+    }
+}

@@ -1,0 +1,167 @@
+//! `aifa` — CLI for the AI-FPGA Agent framework.
+//!
+//! Subcommands:
+//!   info          artifact + manifest summary
+//!   verify        run the Fig 2 behavioural/timing verification flow
+//!   train-agent   train the Q-scheduler, print learned policy vs oracle
+//!   accuracy      fp32/int8 top-1 over the test set
+//!   llm           greedy generation through the Fig 3 decoder
+//!   eda           run the Fig 4 agentic design-flow simulation
+
+use aifa::accel::AccelConfig;
+use aifa::agent::{EnvConfig, QAgent, QConfig, SchedulingEnv};
+use aifa::data::TestSet;
+use aifa::eda;
+use aifa::graph::Network;
+use aifa::llm::LlmSession;
+use aifa::platform::{CpuModel, FpgaPlatform};
+use aifa::runtime::ArtifactStore;
+use aifa::util::cli::Cli;
+use anyhow::Result;
+
+fn artifact_dir(args: &aifa::util::cli::Args) -> String {
+    args.get("artifacts").unwrap_or("artifacts").to_string()
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("{}", usage());
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let rest = argv[1..].to_vec();
+    let cli = Cli::new("aifa", "AI-FPGA Agent framework")
+        .opt("artifacts", Some("artifacts"), "artifact directory")
+        .opt("n", Some("1000"), "images / tokens / specs to process")
+        .opt("batch", Some("8"), "batch size")
+        .opt("episodes", Some("400"), "Q-learning episodes")
+        .opt("seed", Some("42"), "rng seed");
+    let args = match cli.parse(&rest) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "aifa <info|verify|train-agent|accuracy|llm|eda> [--help]".to_string()
+}
+
+fn run(cmd: &str, args: &aifa::util::cli::Args) -> Result<()> {
+    match cmd {
+        "info" => {
+            let store = ArtifactStore::open(artifact_dir(args))?;
+            let acc = store.manifest.req("accuracy")?;
+            println!("artifacts: {}", store.names().len());
+            println!("network units: {}", store.network.len());
+            println!(
+                "python-side accuracy: fp32 {:?} int8 {:?}",
+                acc.get("fp32").and_then(|x| x.as_f64()),
+                acc.get("int8").and_then(|x| x.as_f64())
+            );
+            let mut names: Vec<&str> = store.names();
+            names.sort();
+            for n in names {
+                println!("  {n}");
+            }
+            Ok(())
+        }
+        "verify" => {
+            let store = ArtifactStore::open(artifact_dir(args))?;
+            let ts = TestSet::load(store.root.join("testset.bin"))?;
+            let batch = args.get_usize("batch").unwrap_or(8);
+            let imgs = ts.decode_batch(0, batch)?;
+            let rep = aifa::verify::verify_flow(&store, &imgs, batch, &AccelConfig::default())?;
+            print!("{}", aifa::verify::report_markdown(&rep));
+            if !rep.pass {
+                anyhow::bail!("verification flow FAILED");
+            }
+            Ok(())
+        }
+        "train-agent" => {
+            let episodes = args.get_usize("episodes").unwrap_or(400);
+            let seed = args.get_u64("seed").unwrap_or(42);
+            let env = SchedulingEnv::new(
+                Network::paper_scale(),
+                FpgaPlatform::table1_card(),
+                CpuModel::default(),
+                EnvConfig::default(),
+            );
+            let mut agent = QAgent::new(QConfig::default(), seed);
+            let curve = agent.train(&env, episodes);
+            let learned = agent.policy(&env, false);
+            let (oracle, oracle_cost) = env.oracle_placement();
+            println!("episodes: {episodes}  final ε: {:.3}", agent.epsilon);
+            println!(
+                "learned latency: {:.3} ms  oracle: {:.3} ms",
+                env.placement_latency_s(&learned) * 1e3,
+                oracle_cost * 1e3
+            );
+            for (u, (l, o)) in env.net.units.iter().zip(learned.iter().zip(&oracle)) {
+                println!("  {:8} learned={l:?} oracle={o:?}", u.name);
+            }
+            let last = curve.last().unwrap();
+            println!("final episode reward: {:.2}", last.total_reward);
+            Ok(())
+        }
+        "accuracy" => {
+            let store = ArtifactStore::open(artifact_dir(args))?;
+            let ts = TestSet::load(store.root.join("testset.bin"))?;
+            let n = args.get_usize("n").unwrap_or(1000);
+            let env = SchedulingEnv::new(
+                store.network.clone(),
+                FpgaPlatform::table1_card(),
+                CpuModel::default(),
+                EnvConfig::default(),
+            );
+            let coord = aifa::coordinator::Coordinator::new(&store, env)?;
+            let f = coord.accuracy(&ts, "fp32", 200, n)?;
+            let q = coord.accuracy(&ts, "int8", 8, n)?;
+            println!("top-1 over {n}: fp32 {f:.4}  int8 {q:.4}  delta {:+.4}", f - q);
+            Ok(())
+        }
+        "llm" => {
+            let store = ArtifactStore::open(artifact_dir(args))?;
+            let n = args.get_usize("n").unwrap_or(16);
+            let mut sess = LlmSession::new(&store)?;
+            let prompt: Vec<i32> = (0..sess.prefill_len as i32).map(|i| i % 97).collect();
+            let toks = sess.generate(&prompt, n)?;
+            println!("prompt: {prompt:?}");
+            println!("generated: {toks:?}");
+            Ok(())
+        }
+        "eda" => {
+            let n = args.get_usize("n").unwrap_or(100);
+            let seed = args.get_u64("seed").unwrap_or(42);
+            let mut specs = Vec::new();
+            while specs.len() < n {
+                specs.extend(eda::default_specs());
+            }
+            specs.truncate(n);
+            let stats = eda::run_batch(&specs, seed, 8);
+            println!(
+                "designs: {}  signoff: {} ({:.0}%)  reflection iterations: {}",
+                stats.runs,
+                stats.signoffs,
+                100.0 * stats.signoffs as f64 / stats.runs as f64,
+                stats.total_iterations
+            );
+            for (stage, n) in &stats.per_stage {
+                println!("  {stage:12} {n}");
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}'\n{}", usage()),
+    }
+}

@@ -1,0 +1,195 @@
+//! External DRAM model (Fig 3: 4 GB DDR4 on the KV260) — capacity ledger
+//! + bandwidth accounting, including the KV-cache allocator whose growth
+//! the paper's Fig 3 highlights (model + KV occupy >93% of DRAM).
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// A DDR channel: capacity + achievable bandwidth.
+#[derive(Debug, Clone, Copy)]
+pub struct DdrConfig {
+    pub capacity_bytes: u64,
+    /// Peak theoretical bandwidth (bytes/s).
+    pub peak_bytes_per_s: f64,
+    /// Achievable fraction after refresh/row-miss overhead.
+    pub efficiency: f64,
+}
+
+impl DdrConfig {
+    /// KV260: 4 GB DDR4-2400, single 64-bit channel = 19.2 GB/s peak.
+    pub fn kv260_ddr4() -> DdrConfig {
+        DdrConfig {
+            capacity_bytes: 4 << 30,
+            peak_bytes_per_s: 19.2e9,
+            efficiency: 0.85,
+        }
+    }
+
+    pub fn effective_bytes_per_s(&self) -> f64 {
+        self.peak_bytes_per_s * self.efficiency
+    }
+}
+
+/// Named allocation ledger over a DDR device.
+#[derive(Debug)]
+pub struct Ddr {
+    pub config: DdrConfig,
+    allocs: BTreeMap<String, u64>,
+    /// (time_s, bytes) read/write events for bandwidth-window accounting.
+    traffic: Vec<(f64, u64)>,
+}
+
+impl Ddr {
+    pub fn new(config: DdrConfig) -> Ddr {
+        Ddr { config, allocs: BTreeMap::new(), traffic: vec![] }
+    }
+
+    pub fn alloc(&mut self, name: &str, bytes: u64) -> Result<()> {
+        let used = self.used_bytes() + bytes;
+        if used > self.config.capacity_bytes {
+            return Err(anyhow!(
+                "DDR OOM: '{name}' needs {bytes} B, {} / {} used",
+                self.used_bytes(),
+                self.config.capacity_bytes
+            ));
+        }
+        *self.allocs.entry(name.to_string()).or_insert(0) += bytes;
+        Ok(())
+    }
+
+    /// Grow an allocation (KV-cache append path).
+    pub fn grow(&mut self, name: &str, bytes: u64) -> Result<()> {
+        self.alloc(name, bytes)
+    }
+
+    pub fn free(&mut self, name: &str) {
+        self.allocs.remove(name);
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.allocs.values().sum()
+    }
+
+    pub fn occupancy(&self) -> f64 {
+        self.used_bytes() as f64 / self.config.capacity_bytes as f64
+    }
+
+    pub fn allocation(&self, name: &str) -> u64 {
+        self.allocs.get(name).copied().unwrap_or(0)
+    }
+
+    /// Record `bytes` of traffic at simulated time `t` (s).
+    pub fn record_traffic(&mut self, t: f64, bytes: u64) {
+        self.traffic.push((t, bytes));
+    }
+
+    /// Time needed to move `bytes` at effective bandwidth.
+    pub fn transfer_s(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.config.effective_bytes_per_s()
+    }
+
+    /// Bandwidth utilization over [t0, t1]: moved bytes / (window * peak).
+    /// This is the Fig 3 "85% bandwidth utilization" quantity.
+    pub fn bandwidth_utilization(&self, t0: f64, t1: f64) -> f64 {
+        if t1 <= t0 {
+            return 0.0;
+        }
+        let moved: u64 = self
+            .traffic
+            .iter()
+            .filter(|(t, _)| *t >= t0 && *t < t1)
+            .map(|(_, b)| *b)
+            .sum();
+        moved as f64 / ((t1 - t0) * self.config.peak_bytes_per_s)
+    }
+}
+
+/// KV-cache allocator: fixed-capacity ring of token slots per sequence.
+#[derive(Debug)]
+pub struct KvCache {
+    pub bytes_per_token: u64,
+    pub max_tokens: u64,
+    pub tokens: u64,
+}
+
+impl KvCache {
+    pub fn new(bytes_per_token: u64, max_tokens: u64) -> KvCache {
+        KvCache { bytes_per_token, max_tokens, tokens: 0 }
+    }
+
+    /// Append one token's K/V rows; errors when the context window is full
+    /// (the paper's pipeline stops at max_seq).
+    pub fn append(&mut self, ddr: &mut Ddr) -> Result<()> {
+        if self.tokens >= self.max_tokens {
+            return Err(anyhow!("KV cache full at {} tokens", self.tokens));
+        }
+        ddr.grow("kv_cache", self.bytes_per_token)?;
+        self.tokens += 1;
+        Ok(())
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.tokens * self.bytes_per_token
+    }
+
+    /// Bytes read to attend over the cache at the current length.
+    pub fn read_bytes(&self) -> u64 {
+        self.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_enforced() {
+        let mut ddr = Ddr::new(DdrConfig {
+            capacity_bytes: 1000,
+            peak_bytes_per_s: 1e9,
+            efficiency: 1.0,
+        });
+        ddr.alloc("a", 600).unwrap();
+        assert!(ddr.alloc("b", 500).is_err());
+        ddr.alloc("b", 400).unwrap();
+        assert_eq!(ddr.occupancy(), 1.0);
+        ddr.free("a");
+        assert_eq!(ddr.used_bytes(), 400);
+    }
+
+    #[test]
+    fn bandwidth_window() {
+        let mut ddr = Ddr::new(DdrConfig {
+            capacity_bytes: 1 << 30,
+            peak_bytes_per_s: 1e9,
+            efficiency: 0.85,
+        });
+        ddr.record_traffic(0.1, 500_000_000);
+        ddr.record_traffic(0.6, 350_000_000);
+        // window [0,1): 850 MB over 1 s at 1 GB/s peak = 0.85
+        assert!((ddr.bandwidth_utilization(0.0, 1.0) - 0.85).abs() < 1e-9);
+        assert_eq!(ddr.bandwidth_utilization(2.0, 3.0), 0.0);
+    }
+
+    #[test]
+    fn kv_growth_and_limit() {
+        let mut ddr = Ddr::new(DdrConfig {
+            capacity_bytes: 10_000,
+            peak_bytes_per_s: 1e9,
+            efficiency: 1.0,
+        });
+        let mut kv = KvCache::new(100, 4);
+        for _ in 0..4 {
+            kv.append(&mut ddr).unwrap();
+        }
+        assert!(kv.append(&mut ddr).is_err());
+        assert_eq!(ddr.allocation("kv_cache"), 400);
+    }
+
+    #[test]
+    fn kv260_numbers() {
+        let c = DdrConfig::kv260_ddr4();
+        assert_eq!(c.capacity_bytes, 4 << 30);
+        assert!((c.effective_bytes_per_s() - 16.32e9).abs() < 1e7);
+    }
+}

@@ -1,0 +1,84 @@
+//! CPU baseline timing model.
+//!
+//! The paper's reference is "single-threaded execution of the model using
+//! an optimized BLAS backend".  Model: each unit's GEMM runs at a
+//! single-core BLAS rate (fp32 SGEMM on a Xeon core: ~55-65 GFLOP/s),
+//! with a per-layer framework dispatch overhead (op setup, im2col
+//! materialization, memory traffic for the non-GEMM units).
+
+use crate::graph::{Network, Unit, UnitKind};
+use crate::power::PowerModel;
+
+#[derive(Debug, Clone, Copy)]
+pub struct CpuModel {
+    /// Effective single-core SGEMM rate (FLOP/s).
+    pub gemm_flops: f64,
+    /// Memory-bound ops (pool/GAP) stream at this rate (bytes/s).
+    pub mem_bytes_per_s: f64,
+    /// Per-unit dispatch overhead (s): framework op setup + im2col.
+    pub dispatch_s: f64,
+    pub power: PowerModel,
+}
+
+impl Default for CpuModel {
+    fn default() -> Self {
+        CpuModel {
+            gemm_flops: 60e9,
+            mem_bytes_per_s: 12e9,
+            dispatch_s: 150e-6,
+            power: PowerModel::cpu_xeon(),
+        }
+    }
+}
+
+impl CpuModel {
+    /// Seconds to execute one unit at a batch size.
+    pub fn unit_latency_s(&self, u: &Unit, batch: usize) -> f64 {
+        let compute = match u.kind {
+            UnitKind::MaxPool | UnitKind::Gap => {
+                (u.in_bytes(batch) + u.out_bytes(batch)) as f64 / self.mem_bytes_per_s
+            }
+            _ => u.flops(batch) as f64 / self.gemm_flops,
+        };
+        self.dispatch_s + compute
+    }
+
+    /// Full-network latency (units run back-to-back on one core).
+    pub fn network_latency_s(&self, net: &Network, batch: usize) -> f64 {
+        net.units.iter().map(|u| self.unit_latency_s(u, batch)).sum()
+    }
+
+    /// Steady-state throughput: images/s processing batches back-to-back.
+    pub fn throughput_img_s(&self, net: &Network, batch: usize) -> f64 {
+        batch as f64 / self.network_latency_s(net, batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scale_latency_near_paper() {
+        // 2.4 GFLOP at 60 GFLOP/s + dispatch ~= 42 ms (paper: 40.2)
+        let m = CpuModel::default();
+        let ms = m.network_latency_s(&Network::paper_scale(), 1) * 1e3;
+        assert!((30.0..=55.0).contains(&ms), "{ms} ms");
+    }
+
+    #[test]
+    fn builtin_cnn_is_sub_ms_scale() {
+        let m = CpuModel::default();
+        let ms = m.network_latency_s(&Network::builtin_cnn(), 1) * 1e3;
+        assert!(ms < 5.0, "{ms} ms"); // tiny model: dominated by dispatch
+    }
+
+    #[test]
+    fn batch_amortizes_dispatch() {
+        let m = CpuModel::default();
+        let net = Network::paper_scale();
+        let per1 = m.network_latency_s(&net, 1);
+        let per8 = m.network_latency_s(&net, 8) / 8.0;
+        assert!(per8 < per1);
+    }
+}

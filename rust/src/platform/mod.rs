@@ -1,0 +1,89 @@
+//! Calibrated platform timing + power models: the three columns of
+//! Table I.  Parameters are first-principles (documented per model) and
+//! produce the paper's *shape* — who wins, by what factor, where the
+//! batch crossover falls — rather than hard-coding its numbers.
+
+pub mod cpu;
+pub mod fpga;
+pub mod gpu;
+
+pub use cpu::CpuModel;
+pub use fpga::{FpgaPlatform, Placement, Timeline};
+pub use gpu::GpuModel;
+
+use crate::graph::Network;
+use crate::power::PowerModel;
+
+/// A platform's summary metrics for one Table I column.
+#[derive(Debug, Clone, Copy)]
+pub struct PlatformReport {
+    pub latency_b1_s: f64,
+    pub throughput_img_s: f64,
+    pub power_w: f64,
+    pub efficiency_img_s_w: f64,
+}
+
+impl PlatformReport {
+    pub fn from_latency(latency_b1_s: f64, throughput_img_s: f64, pm: &PowerModel) -> Self {
+        PlatformReport {
+            latency_b1_s,
+            throughput_img_s,
+            power_w: pm.load_w,
+            efficiency_img_s_w: throughput_img_s / pm.load_w,
+        }
+    }
+}
+
+/// Convenience: all three Table I columns for a network.
+pub fn table1_columns(net: &Network) -> (PlatformReport, PlatformReport, PlatformReport) {
+    let cpu = CpuModel::default();
+    let gpu = GpuModel::default();
+    let fpga = FpgaPlatform::default();
+
+    let cpu_lat = cpu.network_latency_s(net, 1);
+    let cpu_rep = PlatformReport::from_latency(cpu_lat, 1.0 / cpu_lat, &cpu.power);
+
+    let gpu_lat = gpu.latency_s(net, 1);
+    let gpu_rep = PlatformReport::from_latency(gpu_lat, gpu.throughput_img_s(net), &gpu.power);
+
+    let all_fpga = vec![Placement::Fpga; net.len()];
+    let fpga_lat = fpga.network_timeline(net, &all_fpga, 1, &cpu).total_s;
+    let fpga_tp = fpga.pipelined_throughput_img_s(net, &all_fpga, 8, &cpu);
+    let fpga_rep = PlatformReport::from_latency(fpga_lat, fpga_tp, &fpga.power);
+
+    (cpu_rep, gpu_rep, fpga_rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The headline shape of Table I, from first-principles parameters:
+    /// >=8x CPU->FPGA latency, FPGA beats GPU at batch 1, FPGA efficiency
+    /// >=2x GPU and >=10x CPU.
+    #[test]
+    fn table1_shape_holds() {
+        let net = Network::paper_scale();
+        let (cpu, gpu, fpga) = table1_columns(&net);
+        assert!(
+            cpu.latency_b1_s / fpga.latency_b1_s >= 8.0,
+            "CPU/FPGA latency ratio {:.1} (cpu {:.1} ms fpga {:.2} ms)",
+            cpu.latency_b1_s / fpga.latency_b1_s,
+            cpu.latency_b1_s * 1e3,
+            fpga.latency_b1_s * 1e3,
+        );
+        assert!(gpu.latency_b1_s > fpga.latency_b1_s, "FPGA must win b1 latency");
+        assert!(fpga.efficiency_img_s_w / gpu.efficiency_img_s_w >= 2.0);
+        assert!(fpga.efficiency_img_s_w / cpu.efficiency_img_s_w >= 10.0);
+        assert!(fpga.throughput_img_s > gpu.throughput_img_s);
+    }
+
+    /// Absolute CPU latency should land in the paper's regime (40.2 ms).
+    #[test]
+    fn cpu_latency_in_paper_band() {
+        let net = Network::paper_scale();
+        let (cpu, _, _) = table1_columns(&net);
+        let ms = cpu.latency_b1_s * 1e3;
+        assert!((25.0..=60.0).contains(&ms), "cpu {ms:.1} ms");
+    }
+}

@@ -1,0 +1,98 @@
+//! Power-state and energy-integration model (Table I: power and
+//! images/s/W rows).  Simple two-state (idle/load) model per platform —
+//! the same granularity the paper's external power meters report.
+
+/// Power profile of one platform.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerModel {
+    pub idle_w: f64,
+    pub load_w: f64,
+}
+
+impl PowerModel {
+    /// Paper Table I load figures (idle chosen at typical ratios).
+    pub fn cpu_xeon() -> PowerModel {
+        PowerModel { idle_w: 35.0, load_w: 85.0 }
+    }
+
+    pub fn gpu_midrange() -> PowerModel {
+        PowerModel { idle_w: 30.0, load_w: 125.0 }
+    }
+
+    pub fn fpga_card() -> PowerModel {
+        PowerModel { idle_w: 10.0, load_w: 28.0 }
+    }
+
+    /// Energy (J) for a run that is busy `busy_s` within wall `wall_s`.
+    pub fn energy_j(&self, busy_s: f64, wall_s: f64) -> f64 {
+        let idle = (wall_s - busy_s).max(0.0);
+        self.load_w * busy_s + self.idle_w * idle
+    }
+}
+
+/// Accumulates busy intervals + completed items for efficiency metrics.
+#[derive(Debug, Default, Clone)]
+pub struct EnergyMeter {
+    pub busy_s: f64,
+    pub wall_s: f64,
+    pub items: u64,
+}
+
+impl EnergyMeter {
+    pub fn record(&mut self, busy_s: f64, items: u64) {
+        self.busy_s += busy_s;
+        self.items += items;
+    }
+
+    pub fn finish(&mut self, wall_s: f64) {
+        self.wall_s = wall_s.max(self.busy_s);
+    }
+
+    pub fn throughput(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.items as f64 / self.wall_s
+    }
+
+    /// images/s/W at load power — the Table I efficiency metric.
+    pub fn efficiency(&self, pm: &PowerModel) -> f64 {
+        let e = pm.energy_j(self.busy_s, self.wall_s);
+        if e <= 0.0 {
+            return 0.0;
+        }
+        self.items as f64 / e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_split() {
+        let pm = PowerModel { idle_w: 10.0, load_w: 100.0 };
+        // 1 s busy + 1 s idle = 110 J
+        assert!((pm.energy_j(1.0, 2.0) - 110.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_efficiency_scale() {
+        // FPGA at 284.7 img/s fully busy at 28 W -> 10.17 img/s/W
+        let pm = PowerModel::fpga_card();
+        let mut m = EnergyMeter::default();
+        let wall = 10_000.0 / 284.7;
+        m.record(wall, 10_000);
+        m.finish(wall);
+        let eff = m.efficiency(&pm);
+        assert!((eff - 10.17).abs() < 0.05, "eff {eff}");
+    }
+
+    #[test]
+    fn throughput() {
+        let mut m = EnergyMeter::default();
+        m.record(2.0, 100);
+        m.finish(4.0);
+        assert!((m.throughput() - 25.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,231 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts and executes them
+//! on the CPU PJRT client — the only place the framework touches XLA.
+//!
+//! Python never runs on this path: `make artifacts` produced
+//! `artifacts/*.hlo.txt` + `manifest.json` once; this module compiles
+//! them on startup (lazily, with a cache) and serves executions.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax>=0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use crate::graph::Network;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// Shape + dtype of one executable port.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PortSpec {
+    pub dims: Vec<i64>,
+    pub dtype: String,
+}
+
+impl PortSpec {
+    fn from_json(j: &Json) -> Result<PortSpec> {
+        Ok(PortSpec {
+            dims: j
+                .req("shape")?
+                .usize_vec()?
+                .into_iter()
+                .map(|x| x as i64)
+                .collect(),
+            dtype: j.req("dtype")?.as_str().unwrap_or("float32").to_string(),
+        })
+    }
+
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product::<i64>() as usize
+    }
+}
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: PathBuf,
+    pub role: String,
+    pub precision: Option<String>,
+    pub batch: Option<usize>,
+    pub unit: Option<String>,
+    pub inputs: Vec<PortSpec>,
+    pub outputs: Vec<PortSpec>,
+}
+
+/// The parsed manifest + lazily-compiled executable cache.
+pub struct ArtifactStore {
+    pub root: PathBuf,
+    pub manifest: Json,
+    pub network: Network,
+    metas: HashMap<String, ArtifactMeta>,
+    client: xla::PjRtClient,
+    // xla handles are Rc-backed (not Send): the store lives on one thread
+    // (the server builds its own store inside the worker thread).
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ArtifactStore {
+    /// Open `dir` (containing manifest.json) and start a PJRT CPU client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<ArtifactStore> {
+        let root = dir.as_ref().to_path_buf();
+        let manifest_path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let manifest = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let network = Network::from_manifest(&manifest)?;
+
+        let mut metas = HashMap::new();
+        for a in manifest.req("artifacts")?.as_arr().unwrap_or(&[]) {
+            let name = a.req("name")?.as_str().unwrap_or_default().to_string();
+            let rel = a.req("path")?.as_str().unwrap_or_default();
+            // manifest paths are repo-relative ("artifacts/x.hlo.txt")
+            let file = Path::new(rel)
+                .file_name()
+                .ok_or_else(|| anyhow!("bad artifact path {rel}"))?;
+            metas.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name,
+                    path: root.join(file),
+                    role: a.req("role")?.as_str().unwrap_or_default().to_string(),
+                    precision: a.get("precision").and_then(|x| x.as_str()).map(String::from),
+                    batch: a.get("batch").and_then(|x| x.as_usize()),
+                    unit: a.get("unit").and_then(|x| x.as_str()).map(String::from),
+                    inputs: a
+                        .req("inputs")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(PortSpec::from_json)
+                        .collect::<Result<_>>()?,
+                    outputs: a
+                        .req("outputs")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(PortSpec::from_json)
+                        .collect::<Result<_>>()?,
+                },
+            );
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(ArtifactStore { root, manifest, network, metas, client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.metas
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.metas.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Artifact name for a CNN unit executable.
+    pub fn unit_artifact(&self, unit: &str, precision: &str, batch: usize) -> String {
+        format!("cnn_{precision}_{unit}_b{batch}")
+    }
+
+    /// Compile (cached) an artifact.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self.meta(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", meta.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on f32 inputs; returns all tuple outputs as
+    /// flat f32 vectors.  Input shapes come from the manifest entry.
+    pub fn run_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let meta = self.meta(name)?.clone();
+        if inputs.len() != meta.inputs.len() {
+            return Err(anyhow!(
+                "'{name}': {} inputs given, {} expected",
+                inputs.len(),
+                meta.inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, spec) in inputs.iter().zip(&meta.inputs) {
+            if data.len() != spec.elems() {
+                return Err(anyhow!(
+                    "'{name}': input has {} elems, spec {:?} wants {}",
+                    data.len(),
+                    spec.dims,
+                    spec.elems()
+                ));
+            }
+            literals.push(literal_f32(data, &spec.dims)?);
+        }
+        self.run_literals(name, literals)?
+            .into_iter()
+            .map(|l| Ok(l.to_vec::<f32>()?))
+            .collect()
+    }
+
+    /// Execute with pre-built literals (mixed dtypes); returns the
+    /// decomposed output tuple.
+    pub fn run_literals(&self, name: &str, inputs: Vec<xla::Literal>) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        // all artifacts are lowered with return_tuple=True
+        let mut tup = result;
+        Ok(tup.decompose_tuple()?)
+    }
+}
+
+/// Build an f32 literal of the given dims.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    Ok(lit.reshape(dims)?)
+}
+
+/// Build an i32 literal (rank-0 when dims is empty).
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    Ok(lit.reshape(dims)?)
+}
+
+/// Row-major argmax over a [rows, classes] flat buffer.
+pub fn argmax_rows(data: &[f32], classes: usize) -> Vec<usize> {
+    data.chunks_exact(classes)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax() {
+        let d = [0.1, 0.9, 0.0, 1.0, -1.0, 0.5];
+        assert_eq!(argmax_rows(&d, 3), vec![1, 0]);
+    }
+
+    #[test]
+    fn portspec_elems() {
+        let p = PortSpec { dims: vec![2, 3, 4], dtype: "float32".into() };
+        assert_eq!(p.elems(), 24);
+    }
+}

@@ -1,0 +1,264 @@
+//! Inference server: request router + dynamic batcher + worker loop.
+//!
+//! The paper's runtime agent sits inside a serving loop ("prioritize
+//! certain inference requests or alternate between CPU-based and
+//! FPGA-based computations under variable loads", §III.C).  This module
+//! provides that loop: requests arrive on a queue, the batcher coalesces
+//! them up to the largest compiled batch within a latency budget, the
+//! worker executes through the [`Coordinator`] and metrics are recorded.
+//!
+//! Threading is std-only (no tokio in the offline build): one ingress
+//! queue (mpsc), one worker thread, respondents via per-request channels.
+
+use crate::agent::{Policy, SchedulingEnv};
+use crate::coordinator::Coordinator;
+use crate::runtime::ArtifactStore;
+use crate::util::stats::Samples;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One inference request: a single image (flat NHWC f32).
+pub struct Request {
+    pub image: Vec<f32>,
+    pub enqueued: Instant,
+    pub respond: Sender<Response>,
+}
+
+/// Response: predicted class + tracing info.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub class: usize,
+    pub batch_size: usize,
+    /// Queueing delay before the batch launched (s).
+    pub queue_s: f64,
+    /// Simulated device latency of the batch (s).
+    pub sim_batch_s: f64,
+}
+
+/// Batching configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchConfig {
+    /// Max time the batcher waits to fill a batch.
+    pub max_wait: Duration,
+    /// Preferred (largest) batch size.
+    pub max_batch: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig { max_wait: Duration::from_millis(2), max_batch: 8 }
+    }
+}
+
+/// Shared server metrics.
+#[derive(Default)]
+pub struct Metrics {
+    pub served: AtomicU64,
+    pub batches: AtomicU64,
+    pub errors: AtomicU64,
+    pub latency: Mutex<Samples>,
+    pub queue_delay: Mutex<Samples>,
+    pub sim_latency: Mutex<Samples>,
+    pub batch_sizes: Mutex<Samples>,
+}
+
+impl Metrics {
+    pub fn summary(&self) -> String {
+        let lat = self.latency.lock().unwrap();
+        let q = self.queue_delay.lock().unwrap();
+        let sim = self.sim_latency.lock().unwrap();
+        format!(
+            "served={} batches={} errors={} wall p50={:.2}ms p99={:.2}ms queue p50={:.2}ms sim/batch p50={:.2}ms",
+            self.served.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            lat.p50() * 1e3,
+            lat.p99() * 1e3,
+            q.p50() * 1e3,
+            sim.p50() * 1e3,
+        )
+    }
+}
+
+/// Handle for submitting requests.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: Sender<Request>,
+}
+
+impl ServerHandle {
+    /// Submit one image; returns a receiver for the response.
+    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Response>> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Request { image, enqueued: Instant::now(), respond: tx })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(rx)
+    }
+}
+
+/// Collect a batch from the queue honoring the batching window.
+fn collect_batch(rx: &Receiver<Request>, cfg: &BatchConfig) -> Option<Vec<Request>> {
+    // block for the first request (server idles until work arrives)
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + cfg.max_wait;
+    while batch.len() < cfg.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => batch.push(r),
+            Err(_) => break,
+        }
+    }
+    Some(batch)
+}
+
+/// Run the serving loop on the current thread until the ingress closes.
+///
+/// The caller supplies the policy (Q-agent, heuristic, ...) and whether
+/// the fabric is congested (multi-tenant scenario).
+pub fn serve_loop(
+    coord: &Coordinator,
+    policy: &dyn Policy,
+    rx: Receiver<Request>,
+    cfg: BatchConfig,
+    metrics: &Metrics,
+) {
+    let ie = coord.env.net.units[0].in_elems(1);
+    while let Some(mut batch) = collect_batch(&rx, &cfg) {
+        // pad to a compiled batch size with zero images (classic serving
+        // trick: compiled shapes are static)
+        let real = batch.len();
+        let exec_b = coord
+            .unit_batches
+            .iter()
+            .copied()
+            .filter(|b| *b >= real)
+            .min()
+            .unwrap_or(cfg.max_batch);
+        let mut flat = Vec::with_capacity(exec_b * ie);
+        for r in &batch {
+            flat.extend_from_slice(&r.image);
+        }
+        flat.resize(exec_b * ie, 0.0);
+
+        let started = Instant::now();
+        match coord.infer(&flat, exec_b, policy, false) {
+            Ok(res) => {
+                let preds = crate::runtime::argmax_rows(&res.logits, res.classes);
+                metrics.batches.fetch_add(1, Ordering::Relaxed);
+                metrics.batch_sizes.lock().unwrap().push(real as f64);
+                metrics.sim_latency.lock().unwrap().push(res.sim_latency_s);
+                for (i, req) in batch.drain(..).enumerate() {
+                    let queue_s = (started - req.enqueued).as_secs_f64();
+                    let wall = req.enqueued.elapsed().as_secs_f64();
+                    metrics.served.fetch_add(1, Ordering::Relaxed);
+                    metrics.latency.lock().unwrap().push(wall);
+                    metrics.queue_delay.lock().unwrap().push(queue_s);
+                    let _ = req.respond.send(Response {
+                        class: preds[i],
+                        batch_size: real,
+                        queue_s,
+                        sim_batch_s: res.sim_latency_s,
+                    });
+                }
+            }
+            Err(e) => {
+                log::error!("batch inference failed: {e:#}");
+                metrics.errors.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Spawn the server on a background thread.
+///
+/// PJRT handles are thread-local (`Rc`-backed), so the worker builds its
+/// own [`ArtifactStore`] from `artifact_dir` and derives the scheduling
+/// environment via `make_env` once the network metadata is loaded.
+pub struct Server {
+    pub handle: ServerHandle,
+    pub metrics: Arc<Metrics>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn start(
+        artifact_dir: std::path::PathBuf,
+        make_env: impl FnOnce(&ArtifactStore) -> SchedulingEnv + Send + 'static,
+        policy: Box<dyn Policy + Send>,
+        cfg: BatchConfig,
+    ) -> Result<Server> {
+        let (tx, rx) = channel::<Request>();
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        let worker = std::thread::spawn(move || {
+            let store = match ArtifactStore::open(&artifact_dir) {
+                Ok(s) => s,
+                Err(e) => {
+                    log::error!("artifact store open failed: {e:#}");
+                    return;
+                }
+            };
+            let env = make_env(&store);
+            let coord = match Coordinator::new(&store, env) {
+                Ok(c) => c,
+                Err(e) => {
+                    log::error!("coordinator init failed: {e:#}");
+                    return;
+                }
+            };
+            serve_loop(&coord, policy.as_ref(), rx, cfg, &m2);
+        });
+        Ok(Server { handle: ServerHandle { tx }, metrics, worker: Some(worker) })
+    }
+
+    /// Close ingress and join the worker.
+    pub fn shutdown(mut self) {
+        drop(self.handle);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_collection_respects_max() {
+        let (tx, rx) = channel::<Request>();
+        for _ in 0..5 {
+            let (rtx, _rrx) = channel();
+            tx.send(Request { image: vec![], enqueued: Instant::now(), respond: rtx }).unwrap();
+        }
+        let cfg = BatchConfig { max_wait: Duration::from_millis(1), max_batch: 3 };
+        let b = collect_batch(&rx, &cfg).unwrap();
+        assert_eq!(b.len(), 3);
+        let b2 = collect_batch(&rx, &cfg).unwrap();
+        assert_eq!(b2.len(), 2);
+    }
+
+    #[test]
+    fn closed_queue_ends_loop() {
+        let (tx, rx) = channel::<Request>();
+        drop(tx);
+        let cfg = BatchConfig::default();
+        assert!(collect_batch(&rx, &cfg).is_none());
+    }
+
+    #[test]
+    fn metrics_summary_renders() {
+        let m = Metrics::default();
+        m.served.store(10, Ordering::Relaxed);
+        m.latency.lock().unwrap().push(0.004);
+        assert!(m.summary().contains("served=10"));
+    }
+}

@@ -1,0 +1,77 @@
+//! Micro-bench timer for the `harness = false` bench targets (no
+//! criterion in the offline build): warmup + timed iterations with
+//! percentile reporting.
+
+use crate::util::stats::Samples;
+use std::time::Instant;
+
+/// Result of timing one closure.
+#[derive(Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Samples,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:40} mean {:>10}  p50 {:>10}  p95 {:>10}  (n={})",
+            self.name,
+            crate::util::table::fmt_time(self.samples.mean()),
+            crate::util::table::fmt_time(self.samples.p50()),
+            crate::util::table::fmt_time(self.samples.p95()),
+            self.samples.len()
+        )
+    }
+}
+
+/// Time `f` with `warmup` unmeasured and `iters` measured runs.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Samples::new();
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), samples }
+}
+
+/// Adaptive variant: run until `min_time_s` of measurement accumulates
+/// (at least 3 iterations).
+pub fn bench_for(name: &str, min_time_s: f64, mut f: impl FnMut()) -> BenchResult {
+    f(); // warmup
+    let mut samples = Samples::new();
+    let start = Instant::now();
+    while samples.sum() < min_time_s || samples.len() < 3 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        if start.elapsed().as_secs_f64() > 60.0 {
+            break; // hard cap
+        }
+    }
+    BenchResult { name: name.to_string(), samples }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples() {
+        let r = bench("noop", 2, 10, || { std::hint::black_box(1 + 1); });
+        assert_eq!(r.samples.len(), 10);
+        assert!(r.line().contains("noop"));
+    }
+
+    #[test]
+    fn adaptive_runs_minimum() {
+        let r = bench_for("spin", 0.001, || {
+            std::thread::sleep(std::time::Duration::from_micros(200))
+        });
+        assert!(r.samples.len() >= 3);
+    }
+}

@@ -1,0 +1,6 @@
+//! In-tree testing support: a property-based harness (no proptest in the
+//! offline build) and a micro-bench timer used by the `cargo bench`
+//! targets (which run with `harness = false`).
+
+pub mod bench;
+pub mod prop;

@@ -1,0 +1,134 @@
+//! Minimal property-based testing harness.
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` on `cases` generated
+//! inputs; on failure it attempts shrink-by-halving via the generator's
+//! size parameter and panics with the seed + smallest failing case, so
+//! failures are reproducible (`AIFA_PROP_SEED` env var overrides).
+
+use crate::util::rng::Rng;
+
+/// Generation context handed to generators: rng + a size hint that the
+/// shrinker lowers on failure.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    /// usize in [lo, hi], biased by the current size.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_eff = lo + ((hi - lo).min(self.size.max(1)));
+        lo + self.rng.below(hi_eff - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Self) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    pub fn pick<'t, T>(&mut self, xs: &'t [T]) -> &'t T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+fn env_seed(default: u64) -> u64 {
+    std::env::var("AIFA_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Run a property over `cases` random inputs.
+///
+/// `generate` builds an input from a [`Gen`]; `prop` returns Err(msg) on
+/// violation.  On failure the harness retries at smaller sizes to report
+/// a smaller counterexample.
+pub fn check<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut generate: impl FnMut(&mut Gen) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let seed = env_seed(seed);
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let size = 8 + (case * 97) % 1024; // sweep sizes deterministically
+        let mut g = Gen { rng: &mut rng, size };
+        let input = generate(&mut g);
+        if let Err(msg) = prop(&input) {
+            // shrink: try smaller sizes with forked rngs
+            let mut smallest = (format!("{input:?}"), msg.clone());
+            let mut shrink_rng = Rng::new(seed ^ 0xdead_beef);
+            let mut s = size;
+            while s > 1 {
+                s /= 2;
+                let mut g = Gen { rng: &mut shrink_rng, size: s };
+                let candidate = generate(&mut g);
+                if let Err(m) = prop(&candidate) {
+                    smallest = (format!("{candidate:?}"), m);
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}): {}\nsmallest counterexample: {}",
+                smallest.1, smallest.0
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        check(
+            1,
+            200,
+            |g| g.usize_in(0, 100),
+            |&x| {
+                if x <= 100 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} > 100"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_invalid_property() {
+        check(
+            2,
+            200,
+            |g| g.usize_in(0, 100),
+            |&x| {
+                if x < 50 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} >= 50"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        let mut rng = Rng::new(3);
+        let mut g = Gen { rng: &mut rng, size: 1000 };
+        for _ in 0..1000 {
+            let x = g.usize_in(5, 10);
+            assert!((5..=10).contains(&x));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Declarative CLI argument parsing (no clap in the offline build).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct Opt {
+    name: String,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Builder-style argument parser.
+#[derive(Debug, Default)]
+pub struct Cli {
+    bin: String,
+    about: String,
+    opts: Vec<Opt>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(bin: &str, about: &str) -> Self {
+        Cli { bin: bin.into(), about: about.into(), opts: vec![] }
+    }
+
+    /// Option with a value, e.g. `--batch 8`.
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.into(),
+            help: help.into(),
+            takes_value: true,
+            default: default.map(|s| s.into()),
+        });
+        self
+    }
+
+    /// Boolean flag, e.g. `--verbose`.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.into(),
+            help: help.into(),
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.bin, self.about);
+        for o in &self.opts {
+            let arg = if o.takes_value {
+                format!("--{} <v>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let def = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {arg:24} {}{def}\n", o.help));
+        }
+        s.push_str("  --help                   show this help\n");
+        s
+    }
+
+    /// Parse; returns Err(usage) on `--help` or bad input.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?;
+                if opt.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} needs a value"))?
+                        }
+                    };
+                    args.values.insert(name.to_string(), v);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Option<usize> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn get_f64(&self, name: &str) -> Option<f64> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn get_u64(&self, name: &str) -> Option<u64> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("batch", Some("8"), "batch size")
+            .opt("name", None, "a name")
+            .flag("verbose", "chatty")
+    }
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli().parse(&v(&[])).unwrap();
+        assert_eq!(a.get_usize("batch"), Some(8));
+        let a = cli().parse(&v(&["--batch", "32"])).unwrap();
+        assert_eq!(a.get_usize("batch"), Some(32));
+        let a = cli().parse(&v(&["--batch=64"])).unwrap();
+        assert_eq!(a.get_usize("batch"), Some(64));
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = cli().parse(&v(&["--verbose", "input.txt"])).unwrap();
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["input.txt"]);
+        assert!(!a.has("nope"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(cli().parse(&v(&["--bogus"])).is_err());
+        assert!(cli().parse(&v(&["--name"])).is_err());
+        assert!(cli().parse(&v(&["--help"])).is_err());
+    }
+}

@@ -1,0 +1,27 @@
+//! Foundation utilities built in-tree (the offline build vendors only the
+//! `xla` crate closure — no rand/serde/clap/criterion), per DESIGN.md.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Wall-clock stopwatch used across benches and the server metrics.
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(std::time::Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}

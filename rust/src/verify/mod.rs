@@ -1,0 +1,118 @@
+//! SystemC-testbench analog (Fig 2): before a configuration is "deployed",
+//! the behavioural model (int8 HLO via PJRT), the reference model (fp32
+//! HLO) and the timing model (accel cycle counts) are co-simulated and
+//! checked against each other — the same verification flow the paper runs
+//! in SystemC before synthesis.
+
+use crate::accel::{unit_compute_s, unit_mac_utilization, AccelConfig};
+use crate::graph::Network;
+use crate::runtime::{argmax_rows, ArtifactStore};
+use anyhow::Result;
+
+/// Outcome of verifying one unit.
+#[derive(Debug, Clone)]
+pub struct UnitVerdict {
+    pub unit: String,
+    /// Normalized RMS error of the int8 chain vs the fp32 chain at this
+    /// unit's output: ||q - f|| / ||f||.  Element-wise relative error is
+    /// meaningless here (near-zero activations), and the error compounds
+    /// down the chain by design — NRMSE is the standard PTQ fidelity
+    /// gauge.
+    pub nrmse: f64,
+    /// Mean absolute error.
+    pub mean_abs_err: f64,
+    /// Modelled compute time (s) at the verification batch.
+    pub timing_s: f64,
+    /// Modelled MAC utilization.
+    pub mac_utilization: f64,
+    pub pass: bool,
+}
+
+/// Full-flow verification report (the Fig 2 gate).
+#[derive(Debug)]
+pub struct FlowReport {
+    pub units: Vec<UnitVerdict>,
+    /// End-to-end class agreement between fp32 and int8 on the sample.
+    pub class_agreement: f64,
+    pub pass: bool,
+}
+
+/// Per-unit NRMSE tolerance: int8 vs fp32 on the *same* input (isolated
+/// quantization error of one unit).  End-to-end class agreement gates the
+/// compounded chain separately.
+pub const UNIT_NRMSE_TOL: f64 = 0.20;
+pub const CLASS_AGREEMENT_TOL: f64 = 0.97;
+
+/// Run the Fig 2 verification flow on `n` test images (batch must be a
+/// compiled per-unit batch size).
+pub fn verify_flow(store: &ArtifactStore, images: &[f32], batch: usize,
+                   accel: &AccelConfig) -> Result<FlowReport> {
+    let net: &Network = &store.network;
+    let mut act_f = images.to_vec();
+    let mut act_q = images.to_vec();
+    let mut units = Vec::with_capacity(net.len());
+
+    for u in &net.units {
+        let f_name = store.unit_artifact(&u.name, "fp32", batch);
+        let q_name = store.unit_artifact(&u.name, "int8", batch);
+        // isolated per-unit error: both precisions on the SAME (fp32-chain)
+        // input — the unit-level behavioural check
+        let f_out = store.run_f32(&f_name, &[&act_f])?.pop().unwrap();
+        let q_iso = store.run_f32(&q_name, &[&act_f])?.pop().unwrap();
+        // compounded int8 chain: what the all-FPGA deployment actually
+        // computes — feeds the end-to-end class-agreement gate
+        act_q = store.run_f32(&q_name, &[&act_q])?.pop().unwrap();
+        act_f = f_out;
+
+        let mut sum_sq_err = 0.0;
+        let mut sum_sq_ref = 0.0;
+        let mut sum_abs = 0.0;
+        for (a, b) in act_f.iter().zip(&q_iso) {
+            let d = (*a - *b) as f64;
+            sum_sq_err += d * d;
+            sum_sq_ref += (*a as f64) * (*a as f64);
+            sum_abs += d.abs();
+        }
+        let nrmse = (sum_sq_err / sum_sq_ref.max(1e-12)).sqrt();
+        let timing = unit_compute_s(u, batch, accel);
+        let util = unit_mac_utilization(u, batch, accel);
+        let pass = nrmse <= UNIT_NRMSE_TOL;
+        units.push(UnitVerdict {
+            unit: u.name.clone(),
+            nrmse,
+            mean_abs_err: sum_abs / act_f.len() as f64,
+            timing_s: timing,
+            mac_utilization: util,
+            pass,
+        });
+    }
+
+    let classes = net.units.last().unwrap().cout;
+    let pf = argmax_rows(&act_f, classes);
+    let pq = argmax_rows(&act_q, classes);
+    let agree = pf.iter().zip(&pq).filter(|(a, b)| a == b).count() as f64 / pf.len() as f64;
+    let pass = units.iter().all(|u| u.pass) && agree >= CLASS_AGREEMENT_TOL;
+    Ok(FlowReport { units, class_agreement: agree, pass })
+}
+
+/// Render the report as the markdown table examples/quickstart prints.
+pub fn report_markdown(r: &FlowReport) -> String {
+    use crate::util::table::Table;
+    let mut t = Table::new(&["unit", "NRMSE", "mean abs err", "model time", "MAC util", "verdict"]);
+    for u in &r.units {
+        t.row(&[
+            u.unit.clone(),
+            format!("{:.4}", u.nrmse),
+            format!("{:.5}", u.mean_abs_err),
+            crate::util::table::fmt_time(u.timing_s),
+            format!("{:.0}%", u.mac_utilization * 100.0),
+            if u.pass { "PASS".into() } else { "FAIL".into() },
+        ]);
+    }
+    format!(
+        "{}\nclass agreement fp32 vs int8: {:.1}%  => flow {}\n",
+        t.to_markdown(),
+        r.class_agreement * 100.0,
+        if r.pass { "PASS" } else { "FAIL" }
+    )
+}

@@ -1,0 +1,177 @@
+//! Integration tests over the real artifacts: PJRT load/execute, golden
+//! agreement with the Python build (Fig 2's "system-level verification"
+//! in test form), and the coordinator's mixed-placement execution.
+//!
+//! Requires `make artifacts` to have run (the Makefile's `test` target
+//! guarantees it).
+
+use aifa::agent::{EnvConfig, Policy, SchedulingEnv, StaticAllFpga};
+use aifa::coordinator::Coordinator;
+use aifa::data::TestSet;
+use aifa::platform::{CpuModel, FpgaPlatform, Placement};
+use aifa::runtime::{argmax_rows, ArtifactStore};
+
+fn store() -> ArtifactStore {
+    ArtifactStore::open(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("artifacts missing — run `make artifacts`")
+}
+
+fn testset(store: &ArtifactStore) -> TestSet {
+    TestSet::load(store.root.join("testset.bin")).unwrap()
+}
+
+fn golden_logits(store: &ArtifactStore, key: &str) -> Vec<Vec<f32>> {
+    store.manifest.req("golden").unwrap().req(key).unwrap()
+        .as_arr().unwrap()
+        .iter()
+        .map(|row| row.f32_vec().unwrap())
+        .collect()
+}
+
+fn env(store: &ArtifactStore) -> SchedulingEnv {
+    SchedulingEnv::new(
+        store.network.clone(),
+        FpgaPlatform::table1_card(),
+        CpuModel::default(),
+        EnvConfig { batch: 8, ..EnvConfig::default() },
+    )
+}
+
+#[test]
+fn manifest_parses_and_lists_artifacts() {
+    let s = store();
+    assert!(s.names().len() >= 40, "expected >=40 artifacts, got {}", s.names().len());
+    assert_eq!(s.network.len(), 9);
+    s.network.validate().unwrap();
+}
+
+/// fp32 full model reproduces the python goldens bit-close.
+#[test]
+fn fp32_full_matches_python_golden() {
+    let s = store();
+    let ts = testset(&s);
+    let imgs = ts.decode_batch(0, 8).unwrap();
+    let out = s.run_f32("cnn_fp32_full_b8", &[&imgs]).unwrap();
+    let gold = golden_logits(&s, "logits_fp32");
+    let classes = gold[0].len();
+    for (i, row) in gold.iter().enumerate() {
+        for (j, &g) in row.iter().enumerate() {
+            let got = out[0][i * classes + j];
+            assert!(
+                (got - g).abs() < 1e-3 + 1e-3 * g.abs(),
+                "fp32 logit[{i}][{j}] {got} vs golden {g}"
+            );
+        }
+    }
+}
+
+/// int8 full model (the FPGA behavioural model) matches its golden too.
+#[test]
+fn int8_full_matches_python_golden() {
+    let s = store();
+    let ts = testset(&s);
+    let imgs = ts.decode_batch(0, 8).unwrap();
+    let out = s.run_f32("cnn_int8_full_b8", &[&imgs]).unwrap();
+    let gold = golden_logits(&s, "logits_int8");
+    let classes = gold[0].len();
+    for (i, row) in gold.iter().enumerate() {
+        for (j, &g) in row.iter().enumerate() {
+            let got = out[0][i * classes + j];
+            assert!(
+                (got - g).abs() < 1e-3 + 1e-3 * g.abs(),
+                "int8 logit[{i}][{j}] {got} vs golden {g}"
+            );
+        }
+    }
+}
+
+/// Chaining per-unit artifacts equals the fused full model (fp32).
+#[test]
+fn unit_chain_equals_fused_model() {
+    let s = store();
+    let ts = testset(&s);
+    let imgs = ts.decode_batch(0, 8).unwrap();
+    let mut act = imgs.clone();
+    for u in &s.network.units {
+        let name = s.unit_artifact(&u.name, "fp32", 8);
+        act = s.run_f32(&name, &[&act]).unwrap().pop().unwrap();
+    }
+    let fused = s.run_f32("cnn_fp32_full_b8", &[&imgs]).unwrap().pop().unwrap();
+    assert_eq!(act.len(), fused.len());
+    for (a, b) in act.iter().zip(&fused) {
+        assert!((a - b).abs() < 1e-3 + 1e-3 * b.abs(), "{a} vs {b}");
+    }
+}
+
+/// The coordinator's all-FPGA (int8) path predicts the same classes as
+/// the int8 golden and reports a simulated latency > 0.
+#[test]
+fn coordinator_mixed_execution() {
+    let s = store();
+    let ts = testset(&s);
+    let e = env(&s);
+    let coord = Coordinator::new(&s, e).unwrap();
+    let imgs = ts.decode_batch(0, 8).unwrap();
+    let res = coord.infer(&imgs, 8, &StaticAllFpga, false).unwrap();
+    assert_eq!(res.placement, vec![Placement::Fpga; 9]);
+    assert!(res.sim_latency_s > 0.0);
+    assert!(res.sim_energy_j > 0.0);
+
+    let gold = golden_logits(&s, "logits_int8");
+    let classes = gold[0].len();
+    let got = argmax_rows(&res.logits, classes);
+    let expect: Vec<usize> = gold
+        .iter()
+        .map(|r| argmax_rows(r, classes)[0])
+        .collect();
+    assert_eq!(got, expect, "int8 class predictions must match golden");
+}
+
+/// Mixed CPU/FPGA placement still computes correct fp32/int8 hybrid
+/// numerics (classes should almost always agree with fp32).
+#[test]
+fn hybrid_placement_is_numerically_sane() {
+    let s = store();
+    let ts = testset(&s);
+    let e = env(&s);
+    let coord = Coordinator::new(&s, e).unwrap();
+    let imgs = ts.decode_batch(0, 8).unwrap();
+
+    struct EveryOther;
+    impl Policy for EveryOther {
+        fn name(&self) -> &'static str {
+            "every-other"
+        }
+        fn decide(&self, _e: &SchedulingEnv, s: &aifa::agent::State) -> Placement {
+            if s.unit % 2 == 0 {
+                Placement::Fpga
+            } else {
+                Placement::Cpu
+            }
+        }
+    }
+    let res = coord.infer(&imgs, 8, &EveryOther, false).unwrap();
+    let gold = golden_logits(&s, "logits_fp32");
+    let classes = gold[0].len();
+    let got = argmax_rows(&res.logits, classes);
+    let expect: Vec<usize> = gold.iter().map(|r| argmax_rows(r, classes)[0]).collect();
+    let agree = got.iter().zip(&expect).filter(|(a, b)| a == b).count();
+    assert!(agree >= 7, "hybrid agreement {agree}/8 too low");
+    // hybrid must be slower than all-FPGA in simulated time (boundary xfers)
+    let all = coord.infer(&imgs, 8, &StaticAllFpga, false).unwrap();
+    assert!(res.sim_latency_s > all.sim_latency_s);
+}
+
+/// Accuracy on a 1000-image slice lands in the trained band and int8
+/// stays within the paper's 0.2% of fp32 (full 10k run in the benches).
+#[test]
+fn accuracy_slice_matches_band() {
+    let s = store();
+    let ts = testset(&s);
+    let e = env(&s);
+    let coord = Coordinator::new(&s, e).unwrap();
+    let acc_f = coord.accuracy(&ts, "fp32", 200, 1000).unwrap();
+    let acc_q = coord.accuracy(&ts, "int8", 8, 1000).unwrap();
+    assert!(acc_f > 0.85, "fp32 acc {acc_f}");
+    assert!((acc_f - acc_q).abs() <= 0.012, "fp32 {acc_f} vs int8 {acc_q}");
+}

@@ -1,0 +1,67 @@
+//! LLM pipeline integration: the compiled int4 decoder generates the
+//! same greedy tokens as the Python build (manifest golden), and the
+//! KV-cache session behaves (positions advance, context cap enforced).
+
+use aifa::llm::LlmSession;
+use aifa::runtime::ArtifactStore;
+
+fn store() -> ArtifactStore {
+    ArtifactStore::open(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("artifacts missing — run `make artifacts`")
+}
+
+#[test]
+fn greedy_generation_matches_python_golden() {
+    let s = store();
+    let golden = s.manifest.req("golden").unwrap();
+    let prompt: Vec<i32> = golden
+        .req("llm_prompt")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_i64().unwrap() as i32)
+        .collect();
+    let expect: Vec<i32> = golden
+        .req("llm_greedy_tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_i64().unwrap() as i32)
+        .collect();
+    let mut sess = LlmSession::new(&s).unwrap();
+    let got = sess.generate(&prompt, expect.len()).unwrap();
+    assert_eq!(got, expect, "decoder diverged from python golden");
+}
+
+#[test]
+fn positions_advance_and_tokens_in_vocab() {
+    let s = store();
+    let mut sess = LlmSession::new(&s).unwrap();
+    let prompt: Vec<i32> = (0..sess.prefill_len as i32).collect();
+    let first = sess.prefill(&prompt).unwrap();
+    assert_eq!(sess.pos, sess.prefill_len);
+    assert!((first as usize) < sess.vocab);
+    let second = sess.decode_step(first).unwrap();
+    assert_eq!(sess.pos, sess.prefill_len + 1);
+    assert!((second as usize) < sess.vocab);
+}
+
+#[test]
+fn wrong_prompt_length_rejected() {
+    let s = store();
+    let mut sess = LlmSession::new(&s).unwrap();
+    assert!(sess.prefill(&[1, 2, 3]).is_err());
+}
+
+#[test]
+fn generation_is_deterministic() {
+    let s = store();
+    let prompt: Vec<i32> = (0..16).map(|i| (i * 13) % 400).collect();
+    let mut s1 = LlmSession::new(&s).unwrap();
+    let a = s1.generate(&prompt, 6).unwrap();
+    let mut s2 = LlmSession::new(&s).unwrap();
+    let b = s2.generate(&prompt, 6).unwrap();
+    assert_eq!(a, b);
+}

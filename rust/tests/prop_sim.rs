@@ -1,0 +1,236 @@
+//! Property tests over the hardware-simulation substrates: the physical
+//! invariants every timing/capacity model must satisfy regardless of
+//! parameters (in-tree prop harness; seeds overridable via
+//! AIFA_PROP_SEED).
+
+use aifa::accel::{gemm_cycles, plan_tiles, AccelConfig, GemmShape};
+use aifa::dma::{double_buffered, single_buffered, Link};
+use aifa::fpga::synth::{synthesize, CostModel};
+use aifa::fpga::Resources;
+use aifa::memory::{Ddr, DdrConfig};
+use aifa::power::PowerModel;
+use aifa::testing::prop::{check, Gen};
+
+fn gen_gemm(g: &mut Gen) -> GemmShape {
+    GemmShape {
+        m: g.usize_in(1, 4096),
+        k: g.usize_in(1, 1024),
+        n: g.usize_in(1, 512),
+    }
+}
+
+#[test]
+fn overlap_never_loses_to_serial() {
+    check(
+        0x51_0001,
+        500,
+        |g| {
+            (
+                g.usize_in(0, 64) as u64,
+                g.f64_in(1e-7, 1e-3),
+                g.f64_in(1e-7, 1e-3),
+                g.f64_in(0.0, 1e-4),
+            )
+        },
+        |&(tiles, in_s, comp_s, out_s)| {
+            let db = double_buffered(tiles, in_s, comp_s, out_s);
+            let sb = single_buffered(tiles, in_s, comp_s, out_s);
+            if db.total_s <= sb.total_s + 1e-15 {
+                Ok(())
+            } else {
+                Err(format!("overlap {} > serial {}", db.total_s, sb.total_s))
+            }
+        },
+    );
+}
+
+#[test]
+fn overlap_bounded_below_by_both_resources() {
+    // wall time can never beat either the pure-compute or pure-transfer bound
+    check(
+        0x51_0002,
+        500,
+        |g| {
+            (
+                g.usize_in(1, 64) as u64,
+                g.f64_in(1e-7, 1e-3),
+                g.f64_in(1e-7, 1e-3),
+            )
+        },
+        |&(tiles, in_s, comp_s)| {
+            let db = double_buffered(tiles, in_s, comp_s, 0.0);
+            let n = tiles as f64;
+            if db.total_s + 1e-15 >= n * comp_s && db.total_s + 1e-15 >= n * in_s {
+                Ok(())
+            } else {
+                Err(format!(
+                    "wall {} below resource bound ({} compute, {} transfer)",
+                    db.total_s,
+                    n * comp_s,
+                    n * in_s
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn gemm_cycles_exceed_ideal_and_scale_monotonically() {
+    let cfg = AccelConfig::default();
+    check(
+        0x51_0003,
+        300,
+        |g| gen_gemm(g),
+        |&g| {
+            let c = gemm_cycles(g, &cfg, None).total();
+            // ideal: every MAC slot busy every cycle
+            let ideal = (g.m as u64 * g.k as u64 * g.n as u64)
+                .div_ceil((cfg.mac_rows * cfg.mac_cols) as u64);
+            if c < ideal {
+                return Err(format!("cycles {c} < ideal {ideal} for {g:?}"));
+            }
+            // doubling M must not reduce cycles
+            let c2 = gemm_cycles(GemmShape { m: g.m * 2, ..g }, &cfg, None).total();
+            if c2 < c {
+                return Err(format!("2x M reduced cycles: {c2} < {c}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tile_plans_fit_the_buffer() {
+    check(
+        0x51_0004,
+        300,
+        |g| {
+            let shape = gen_gemm(g);
+            let buf = g.usize_in(64 << 10, 4 << 20) as u64;
+            (shape, buf)
+        },
+        |&(shape, buf)| {
+            let cfg = AccelConfig { buffer_bytes: buf, ..AccelConfig::default() };
+            let p = plan_tiles(shape, &cfg, None);
+            let bytes =
+                p.tile_m * p.tile_k + p.tile_k * p.tile_n + p.tile_m * p.tile_n * 4;
+            // planner may floor at mac_rows for tiny buffers; allow that floor
+            let floor = cfg.mac_rows * p.tile_k + p.tile_k * p.tile_n + cfg.mac_rows * p.tile_n * 4;
+            if bytes as u64 <= (buf / 2).max(floor as u64) {
+                Ok(())
+            } else {
+                Err(format!("tile {bytes} B over budget {buf}/2 for {shape:?}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn ddr_occupancy_and_bandwidth_bounded() {
+    check(
+        0x51_0005,
+        200,
+        |g| {
+            let cap = g.usize_in(1 << 20, 1 << 30) as u64;
+            let n_allocs = g.usize_in(1, 12);
+            let allocs = g.vec(n_allocs, |g| g.usize_in(1, 1 << 22) as u64);
+            (cap, allocs)
+        },
+        |(cap, allocs)| {
+            let mut ddr = Ddr::new(DdrConfig {
+                capacity_bytes: *cap,
+                peak_bytes_per_s: 10e9,
+                efficiency: 0.9,
+            });
+            for (i, a) in allocs.iter().enumerate() {
+                let _ = ddr.alloc(&format!("a{i}"), *a); // may OOM; ledger must stay sane
+            }
+            if ddr.used_bytes() > *cap {
+                return Err(format!("ledger over capacity: {} > {cap}", ddr.used_bytes()));
+            }
+            if !(0.0..=1.0).contains(&ddr.occupancy()) {
+                return Err(format!("occupancy {}", ddr.occupancy()));
+            }
+            // traffic at effective rate can never exceed 90% of peak window
+            ddr.record_traffic(0.0, (ddr.config.effective_bytes_per_s() * 0.5) as u64);
+            let u = ddr.bandwidth_utilization(0.0, 0.5);
+            if u <= 0.91 {
+                Ok(())
+            } else {
+                Err(format!("bw util {u} above efficiency ceiling"))
+            }
+        },
+    );
+}
+
+#[test]
+fn synthesis_monotone_in_array_size() {
+    let cost = CostModel::default();
+    let total = Resources::alveo_u50_like();
+    check(
+        0x51_0006,
+        200,
+        |g| (g.usize_in(4, 64), g.usize_in(4, 64)),
+        |&(rows, cols)| {
+            let small = synthesize(
+                &AccelConfig { mac_rows: rows, mac_cols: cols, ..AccelConfig::default() },
+                &total,
+                &cost,
+            );
+            let big = synthesize(
+                &AccelConfig { mac_rows: rows * 2, mac_cols: cols, ..AccelConfig::default() },
+                &total,
+                &cost,
+            );
+            if big.usage.dsps >= small.usage.dsps
+                && big.usage.luts >= small.usage.luts
+                && big.fmax_hz <= small.fmax_hz + 1e-6
+            {
+                Ok(())
+            } else {
+                Err(format!("non-monotone synth: {small:?} vs {big:?}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn energy_accounting_consistent() {
+    check(
+        0x51_0007,
+        300,
+        |g| (g.f64_in(0.0, 100.0), g.f64_in(0.0, 100.0)),
+        |&(busy, extra)| {
+            let pm = PowerModel { idle_w: 10.0, load_w: 90.0 };
+            let wall = busy + extra;
+            let e = pm.energy_j(busy, wall);
+            let lo = pm.idle_w * wall;
+            let hi = pm.load_w * wall;
+            if e >= lo - 1e-9 && e <= hi + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("energy {e} outside [{lo}, {hi}]"))
+            }
+        },
+    );
+}
+
+#[test]
+fn link_transfer_time_superadditive_in_chunks() {
+    // splitting a transfer into more descriptors can only add setup cost
+    check(
+        0x51_0008,
+        300,
+        |g| (g.usize_in(1, 1 << 24) as u64, g.usize_in(1, 64) as u64),
+        |&(bytes, chunks)| {
+            let link = Link::pcie_gen3x8();
+            let whole = link.transfer_s(bytes);
+            let split = link.chunked_transfer_s(bytes, chunks);
+            if split + 1e-15 >= whole {
+                Ok(())
+            } else {
+                Err(format!("chunked {split} < single {whole}"))
+            }
+        },
+    );
+}

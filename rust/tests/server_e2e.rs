@@ -1,0 +1,79 @@
+//! Server end-to-end test: submit concurrent requests through the
+//! batching server with an agent placement, check classifications,
+//! batching behaviour and metrics.
+
+use aifa::agent::{EnvConfig, FixedPlacement, SchedulingEnv, StaticAllFpga, Policy};
+use aifa::data::TestSet;
+use aifa::platform::{CpuModel, FpgaPlatform};
+use aifa::runtime::ArtifactStore;
+use aifa::server::{BatchConfig, Server};
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+fn make_env(store: &ArtifactStore) -> SchedulingEnv {
+    SchedulingEnv::new(
+        store.network.clone(),
+        FpgaPlatform::table1_card(),
+        CpuModel::default(),
+        EnvConfig { batch: 8, ..EnvConfig::default() },
+    )
+}
+
+#[test]
+fn serves_batched_requests_correctly() {
+    let probe = ArtifactStore::open(artifact_dir()).unwrap();
+    let ts = TestSet::load(probe.root.join("testset.bin")).unwrap();
+    let env = make_env(&probe);
+    let placement = StaticAllFpga.placement(&env, false);
+    drop(probe);
+
+    let server = Server::start(
+        artifact_dir(),
+        make_env,
+        Box::new(FixedPlacement { placement }),
+        BatchConfig { max_wait: Duration::from_millis(5), max_batch: 8 },
+    )
+    .unwrap();
+
+    // submit 40 requests as fast as possible -> batches should form
+    let n = 40;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let img = ts.decode_batch(i, 1).unwrap();
+        rxs.push((i, server.handle.submit(img).unwrap()));
+    }
+    let mut hits = 0;
+    for (i, rx) in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        hits += (resp.class == ts.labels[i] as usize) as usize;
+        assert!(resp.sim_batch_s > 0.0);
+    }
+    // trained model is ~91-92% accurate; 40 draws leave slack
+    assert!(hits >= 30, "only {hits}/{n} correct");
+
+    let served = server.metrics.served.load(std::sync::atomic::Ordering::Relaxed);
+    let batches = server.metrics.batches.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(served, n as u64);
+    assert!(batches < n as u64, "no batching happened ({batches} batches for {n} reqs)");
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_is_clean_with_no_requests() {
+    let probe = ArtifactStore::open(artifact_dir()).unwrap();
+    let env = make_env(&probe);
+    let placement = StaticAllFpga.placement(&env, false);
+    drop(probe);
+    let server = Server::start(
+        artifact_dir(),
+        make_env,
+        Box::new(FixedPlacement { placement }),
+        BatchConfig::default(),
+    )
+    .unwrap();
+    server.shutdown(); // must not hang
+}

@@ -1,0 +1,55 @@
+//! Fig 2 verification-flow integration test: behavioural (int8) vs
+//! reference (fp32) vs timing-model co-simulation over the real
+//! artifacts must pass before "deployment".
+
+use aifa::accel::AccelConfig;
+use aifa::data::TestSet;
+use aifa::runtime::ArtifactStore;
+use aifa::verify::{report_markdown, verify_flow};
+
+fn store() -> ArtifactStore {
+    ArtifactStore::open(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("artifacts missing — run `make artifacts`")
+}
+
+#[test]
+fn flow_passes_on_shipped_artifacts() {
+    let s = store();
+    let ts = TestSet::load(s.root.join("testset.bin")).unwrap();
+    let imgs = ts.decode_batch(0, 8).unwrap();
+    let rep = verify_flow(&s, &imgs, 8, &AccelConfig::default()).unwrap();
+    let md = report_markdown(&rep);
+    assert!(rep.pass, "verification flow failed:\n{md}");
+    assert_eq!(rep.units.len(), 9);
+    assert!(rep.class_agreement >= 0.97, "{md}");
+}
+
+#[test]
+fn timing_model_tracks_unit_size() {
+    let s = store();
+    let ts = TestSet::load(s.root.join("testset.bin")).unwrap();
+    let imgs = ts.decode_batch(0, 8).unwrap();
+    let rep = verify_flow(&s, &imgs, 8, &AccelConfig::default()).unwrap();
+    // block1 (4.7 MMACs) must be modelled slower than dense8 (640 MACs)
+    let t = |name: &str| rep.units.iter().find(|u| u.unit == name).unwrap().timing_s;
+    assert!(t("block1") > 10.0 * t("dense8"));
+    // MAC utilization sane on the deep block
+    let u5 = rep.units.iter().find(|u| u.unit == "block5").unwrap();
+    assert!(u5.mac_utilization > 0.3, "block5 util {}", u5.mac_utilization);
+}
+
+#[test]
+fn quantization_error_grows_but_stays_bounded() {
+    let s = store();
+    let ts = TestSet::load(s.root.join("testset.bin")).unwrap();
+    let imgs = ts.decode_batch(0, 8).unwrap();
+    let rep = verify_flow(&s, &imgs, 8, &AccelConfig::default()).unwrap();
+    for u in &rep.units {
+        assert!(u.nrmse.is_finite());
+        assert!(u.nrmse < 0.20, "unit {} NRMSE {}", u.unit, u.nrmse);
+    }
+    // MAC-array units actually quantize -> nonzero isolated error; the
+    // pooling units are exact (no arithmetic re-quantization)
+    let conv0 = rep.units.iter().find(|u| u.unit == "conv0").unwrap();
+    assert!(conv0.nrmse > 1e-5, "conv0 should show quantization error");
+}

@@ -12,5 +12,7 @@ pub mod policy;
 pub mod qlearn;
 
 pub use env::{EnvConfig, SchedulingEnv, State};
-pub use policy::{AllCpu, FixedPlacement, GreedyStep, IntensityHeuristic, Policy, StaticAllFpga};
+pub use policy::{
+    AllCpu, DecisionTrace, FixedPlacement, GreedyStep, IntensityHeuristic, Policy, StaticAllFpga,
+};
 pub use qlearn::{EpisodeStats, QAgent, QConfig};

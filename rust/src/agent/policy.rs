@@ -7,6 +7,27 @@
 use super::env::{SchedulingEnv, State};
 use crate::platform::Placement;
 
+/// Full decision trace of one policy walk: the placement plus each step's
+/// simulated cost and energy under the platform timing models.  This is
+/// the unit the serving layer's placement-plan cache memoizes, so a
+/// steady-state request replays the trace instead of re-running the walk.
+#[derive(Debug, Clone)]
+pub struct DecisionTrace {
+    pub placement: Vec<Placement>,
+    pub step_costs_s: Vec<f64>,
+    pub step_energy_j: Vec<f64>,
+}
+
+impl DecisionTrace {
+    pub fn total_cost_s(&self) -> f64 {
+        self.step_costs_s.iter().sum()
+    }
+
+    pub fn total_energy_j(&self) -> f64 {
+        self.step_energy_j.iter().sum()
+    }
+}
+
 /// A scheduling policy: maps each decision point to a placement.
 pub trait Policy {
     fn name(&self) -> &'static str;
@@ -22,6 +43,29 @@ pub trait Policy {
             s = State { unit: s.unit + 1, prev: p, congestion: s.congestion };
         }
         out
+    }
+
+    /// Walk the full network once, recording placement and per-step
+    /// cost/energy — the plan-extraction entry used by the serving layer.
+    /// Caching the result is sound only for deterministic policies; every
+    /// serving policy in this module is (exploration lives in the trainer,
+    /// not in the deployed policy).
+    fn trace(&self, env: &SchedulingEnv, congested: bool) -> DecisionTrace {
+        let n = env.n_units();
+        let mut t = DecisionTrace {
+            placement: Vec::with_capacity(n),
+            step_costs_s: Vec::with_capacity(n),
+            step_energy_j: Vec::with_capacity(n),
+        };
+        let mut s = env.initial_state(congested);
+        while !env.is_terminal(&s) {
+            let p = self.decide(env, &s);
+            t.placement.push(p);
+            t.step_costs_s.push(env.step_cost_s(&s, p));
+            t.step_energy_j.push(env.step_energy_j(&s, p));
+            s = State { unit: s.unit + 1, prev: p, congestion: s.congestion };
+        }
+        t
     }
 }
 
@@ -157,6 +201,21 @@ mod tests {
         for p in [&StaticAllFpga as &dyn Policy, &AllCpu, &IntensityHeuristic::default(), &GreedyStep] {
             let cost = e.placement_latency_s(&p.placement(&e, false));
             assert!(oracle <= cost + 1e-12, "oracle {oracle} vs {} {cost}", p.name());
+        }
+    }
+
+    #[test]
+    fn trace_matches_placement_and_timeline() {
+        let e = env();
+        for p in [&StaticAllFpga as &dyn Policy, &AllCpu, &GreedyStep] {
+            let tr = p.trace(&e, false);
+            assert_eq!(tr.placement, p.placement(&e, false), "{}", p.name());
+            assert_eq!(tr.step_costs_s.len(), e.n_units());
+            assert_eq!(tr.step_energy_j.len(), e.n_units());
+            // step costs sum to the timeline total (same decomposition)
+            let tl = e.placement_latency_s(&tr.placement);
+            assert!((tr.total_cost_s() - tl).abs() < 1e-12, "{}", p.name());
+            assert!(tr.total_energy_j() > 0.0);
         }
     }
 

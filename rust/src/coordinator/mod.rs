@@ -6,11 +6,29 @@
 //! the CPU path, int8 artifact on the FPGA path — Fig 2's SystemC role),
 //! and advances the *timing* model (platform simulators) for the same
 //! decision.  Results carry both real logits and the simulated timeline.
+//!
+//! Serving hot path: policies are deterministic, so the full per-unit
+//! decision trace for a `(policy, batch, congested)` key never changes
+//! between requests.  [`PlanCache`] memoizes that trace as a [`PlacementPlan`]
+//! (placement + precomputed artifact names + per-unit sim cost/energy);
+//! steady-state [`Coordinator::infer_cached`] does zero policy walks and
+//! zero `format!` calls, and activations move through a ping/pong buffer
+//! pair so the only per-unit allocation left is the output copy the XLA
+//! literal boundary itself produces.
+//!
+//! The coordinator is generic over how it holds the [`ArtifactStore`]:
+//! borrowed (`Coordinator::new(&store, env)`, the CLI/bench style) or
+//! owned (`Coordinator::new(store, env)`, how a serving-pool worker keeps
+//! store + coordinator together in one engine).
 
-use crate::agent::{Policy, SchedulingEnv, State};
+use crate::agent::{Policy, SchedulingEnv};
 use crate::platform::Placement;
-use crate::runtime::ArtifactStore;
+use crate::runtime::{unit_artifact_name, ArtifactStore};
 use anyhow::{anyhow, Result};
+use std::borrow::Borrow;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
 
 /// Outcome of one coordinated inference.
 #[derive(Debug)]
@@ -31,22 +49,145 @@ pub struct InferenceResult {
     pub unit_times_s: Vec<f64>,
 }
 
-/// The coordinator: owns the artifact store and the scheduling env.
-pub struct Coordinator<'a> {
-    pub store: &'a ArtifactStore,
+/// A memoized serving decision for one `(batch, congested)` key: the full
+/// placement trace with artifact names and per-unit simulated cost/energy
+/// precomputed, so replaying it costs no policy walk and no string work.
+#[derive(Debug)]
+pub struct PlacementPlan {
+    pub batch: usize,
+    pub congested: bool,
+    pub placement: Vec<Placement>,
+    /// Per-unit artifact names (precision follows the placement).
+    pub artifacts: Vec<String>,
+    pub unit_times_s: Vec<f64>,
+    pub sim_latency_s: f64,
+    pub sim_energy_j: f64,
+}
+
+impl PlacementPlan {
+    /// One policy walk + name precomputation.  Pure w.r.t. the store: only
+    /// the env (timing models) and policy are consulted.
+    pub fn build(
+        env: &SchedulingEnv,
+        policy: &dyn Policy,
+        batch: usize,
+        congested: bool,
+    ) -> PlacementPlan {
+        let tr = policy.trace(env, congested);
+        let artifacts = env
+            .net
+            .units
+            .iter()
+            .zip(&tr.placement)
+            .map(|(u, p)| {
+                let precision = match p {
+                    Placement::Cpu => "fp32",
+                    Placement::Fpga => "int8",
+                };
+                unit_artifact_name(&u.name, precision, batch)
+            })
+            .collect();
+        PlacementPlan {
+            batch,
+            congested,
+            placement: tr.placement,
+            artifacts,
+            sim_latency_s: tr.step_costs_s.iter().sum(),
+            sim_energy_j: tr.step_energy_j.iter().sum(),
+            unit_times_s: tr.step_costs_s,
+        }
+    }
+}
+
+/// Cache of [`PlacementPlan`]s keyed on `(policy name, batch, congested)`,
+/// with hit/miss counters so tests can assert the steady state does no
+/// policy walks.  Sound only for deterministic policies — every serving
+/// policy in [`crate::agent`] is.  The policy is identified by
+/// [`Policy::name`]: two *different instances* of the same policy type on
+/// one coordinator would collide, so give each its own coordinator/engine
+/// (the serving pool already does — one frozen policy per worker).
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    plans: HashMap<(&'static str, usize, bool), Rc<PlacementPlan>>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Cached plan lookup; builds (one policy walk) on miss.
+    pub fn plan(
+        &mut self,
+        env: &SchedulingEnv,
+        policy: &dyn Policy,
+        batch: usize,
+        congested: bool,
+    ) -> Rc<PlacementPlan> {
+        let key = (policy.name(), batch, congested);
+        if let Some(p) = self.plans.get(&key) {
+            self.hits += 1;
+            return p.clone();
+        }
+        self.misses += 1;
+        let p = Rc::new(PlacementPlan::build(env, policy, batch, congested));
+        self.plans.insert(key, p.clone());
+        p
+    }
+
+    pub fn len(&self) -> usize {
+        self.plans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+}
+
+/// Reusable ping/pong activation buffers for the per-unit chain.
+#[derive(Debug, Default)]
+struct Scratch {
+    ping: Vec<f32>,
+    pong: Vec<f32>,
+}
+
+/// The coordinator: owns/borrows the artifact store and the scheduling env.
+pub struct Coordinator<S: Borrow<ArtifactStore>> {
+    store: S,
     pub env: SchedulingEnv,
     /// Batch sizes for which per-unit artifacts exist.
     pub unit_batches: Vec<usize>,
+    plans: RefCell<PlanCache>,
+    scratch: RefCell<Scratch>,
 }
 
-impl<'a> Coordinator<'a> {
-    pub fn new(store: &'a ArtifactStore, env: SchedulingEnv) -> Result<Self> {
+impl<S: Borrow<ArtifactStore>> Coordinator<S> {
+    pub fn new(store: S, env: SchedulingEnv) -> Result<Self> {
         let unit_batches = store
+            .borrow()
             .manifest
             .req("batches")?
             .req("cnn_unit")?
             .usize_vec()?;
-        Ok(Coordinator { store, env, unit_batches })
+        Ok(Coordinator {
+            store,
+            env,
+            unit_batches,
+            plans: RefCell::new(PlanCache::new()),
+            scratch: RefCell::new(Scratch::default()),
+        })
+    }
+
+    pub fn store(&self) -> &ArtifactStore {
+        self.store.borrow()
+    }
+
+    /// `(hits, misses)` of the placement-plan cache.
+    pub fn plan_cache_stats(&self) -> (u64, u64) {
+        let p = self.plans.borrow();
+        (p.hits, p.misses)
     }
 
     /// Largest supported per-unit batch <= requested (requests are split).
@@ -63,13 +204,63 @@ impl<'a> Coordinator<'a> {
     ///
     /// `images` is flat NHWC f32 of exactly `batch` images.  The batch
     /// must be one of `unit_batches` (the server handles splitting).
+    /// Stateless w.r.t. the policy: every call walks the policy afresh,
+    /// so ad-hoc / reconfigured policy instances are always honored.
+    /// The serving hot path uses [`Coordinator::infer_cached`] instead.
     pub fn infer(&self, images: &[f32], batch: usize, policy: &dyn Policy,
                  congested: bool) -> Result<InferenceResult> {
+        self.check_input(images, batch)?;
+        let t0 = std::time::Instant::now();
+        let plan = PlacementPlan::build(&self.env, policy, batch, congested);
+        let mut logits = Vec::new();
+        self.run_plan(images, &plan, &mut logits)?;
+        let classes = self.env.net.units.last().unwrap().cout;
+        Ok(InferenceResult {
+            logits,
+            classes,
+            sim_latency_s: plan.sim_latency_s,
+            sim_energy_j: plan.sim_energy_j,
+            wall_s: t0.elapsed().as_secs_f64(),
+            placement: plan.placement,
+            unit_times_s: plan.unit_times_s,
+        })
+    }
+
+    /// Hot-path inference: the plan comes from the cache (zero policy
+    /// walks and zero name formatting after the first request per key),
+    /// activations flow through a ping/pong buffer pair (no copies beyond
+    /// the XLA output literal), and the final logits land in the caller's
+    /// buffer.  Returns the shared plan and the host wall-clock spent.
+    ///
+    /// Plans are cached per [`Policy::name`], so a coordinator on this
+    /// path must serve **one** policy instance (the pool gives each
+    /// worker engine exactly one); use [`Coordinator::infer`] when
+    /// cycling ad-hoc policy instances through a shared coordinator.
+    pub fn infer_cached(
+        &self,
+        images: &[f32],
+        batch: usize,
+        policy: &dyn Policy,
+        congested: bool,
+        logits: &mut Vec<f32>,
+    ) -> Result<(Rc<PlacementPlan>, f64)> {
+        self.check_input(images, batch)?;
+        let t0 = std::time::Instant::now();
+        let plan = self
+            .plans
+            .borrow_mut()
+            .plan(&self.env, policy, batch, congested);
+        self.run_plan(images, &plan, logits)?;
+        Ok((plan, t0.elapsed().as_secs_f64()))
+    }
+
+    fn check_input(&self, images: &[f32], batch: usize) -> Result<()> {
         if !self.unit_batches.contains(&batch) {
             return Err(anyhow!("unsupported unit batch {batch} (have {:?})", self.unit_batches));
         }
-        let net = &self.env.net;
-        let first = net
+        let first = self
+            .env
+            .net
             .units
             .first()
             .ok_or_else(|| anyhow!("empty network"))?;
@@ -80,54 +271,31 @@ impl<'a> Coordinator<'a> {
                 first.in_elems(batch)
             ));
         }
+        Ok(())
+    }
 
-        let t0 = std::time::Instant::now();
-        let mut s = self.env.initial_state(congested);
-        let mut placement = Vec::with_capacity(net.len());
-        let mut unit_times = Vec::with_capacity(net.len());
-        let mut sim_latency = 0.0;
-        let mut sim_energy = 0.0;
-        let mut act: Vec<f32> = images.to_vec();
-
-        for u in &net.units {
-            let p = policy.decide(&self.env, &s);
-            // timing model
-            let dt = self.env.step_cost_s(&s, p);
-            sim_latency += dt;
-            sim_energy += self.env.step_energy_j(&s, p);
-            // behavioural model: fp32 artifact on CPU, int8 on FPGA
-            let precision = match p {
-                Placement::Cpu => "fp32",
-                Placement::Fpga => "int8",
-            };
-            let name = self.store.unit_artifact(&u.name, precision, batch);
-            let out = self.store.run_f32(&name, &[&act])?;
-            act = out
-                .into_iter()
-                .next()
-                .ok_or_else(|| anyhow!("unit '{name}' returned no outputs"))?;
-            placement.push(p);
-            unit_times.push(dt);
-            s = State { unit: s.unit + 1, prev: p, congestion: s.congestion };
+    /// Execute a plan's artifact chain through the ping/pong buffers,
+    /// leaving the final activations in `logits` (cleared + refilled).
+    fn run_plan(&self, images: &[f32], plan: &PlacementPlan, logits: &mut Vec<f32>) -> Result<()> {
+        let mut scratch = self.scratch.borrow_mut();
+        let Scratch { ping, pong } = &mut *scratch;
+        ping.clear();
+        ping.extend_from_slice(images);
+        let store = self.store.borrow();
+        for name in &plan.artifacts {
+            store.run_f32_into(name, &[&ping[..]], pong)?;
+            std::mem::swap(ping, pong);
         }
-
-        let classes = net.units.last().unwrap().cout;
-        Ok(InferenceResult {
-            logits: act,
-            classes,
-            placement,
-            sim_latency_s: sim_latency,
-            sim_energy_j: sim_energy,
-            wall_s: t0.elapsed().as_secs_f64(),
-            unit_times_s: unit_times,
-        })
+        logits.clear();
+        logits.extend_from_slice(ping);
+        Ok(())
     }
 
     /// Run the fused full-model artifact (fp32 or int8) — the fast path
     /// used for accuracy sweeps and the CPU/GPU baselines.
     pub fn infer_full(&self, images: &[f32], batch: usize, precision: &str) -> Result<Vec<f32>> {
         let name = format!("cnn_{precision}_full_b{batch}");
-        let mut out = self.store.run_f32(&name, &[images])?;
+        let mut out = self.store.borrow().run_f32(&name, &[images])?;
         out.pop().ok_or_else(|| anyhow!("no output from {name}"))
     }
 
@@ -153,5 +321,110 @@ impl<'a> Coordinator<'a> {
             return Err(anyhow!("no complete batches of {batch} within {n}"));
         }
         Ok(hits as f64 / seen as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::{EnvConfig, GreedyStep, State};
+    use crate::graph::Network;
+    use crate::platform::{CpuModel, FpgaPlatform};
+    use std::cell::Cell;
+
+    fn env() -> SchedulingEnv {
+        SchedulingEnv::new(
+            Network::paper_scale(),
+            FpgaPlatform::table1_card(),
+            CpuModel::default(),
+            EnvConfig::default(),
+        )
+    }
+
+    /// Wraps a policy, counting `decide` calls — proves the cache replays
+    /// the trace instead of re-walking.
+    struct Counting {
+        inner: GreedyStep,
+        n: Cell<u64>,
+    }
+
+    impl Policy for Counting {
+        fn name(&self) -> &'static str {
+            "counting"
+        }
+        fn decide(&self, env: &SchedulingEnv, s: &State) -> Placement {
+            self.n.set(self.n.get() + 1);
+            self.inner.decide(env, s)
+        }
+    }
+
+    #[test]
+    fn plan_cache_hits_skip_policy_walks() {
+        let e = env();
+        let pol = Counting { inner: GreedyStep, n: Cell::new(0) };
+        let mut cache = PlanCache::new();
+
+        let p1 = cache.plan(&e, &pol, 8, false);
+        assert_eq!(pol.n.get(), e.n_units() as u64, "miss walks once");
+        assert_eq!((cache.hits, cache.misses), (0, 1));
+
+        let p2 = cache.plan(&e, &pol, 8, false);
+        assert_eq!(pol.n.get(), e.n_units() as u64, "hit must not call decide");
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+        assert!(Rc::ptr_eq(&p1, &p2), "hit returns the shared plan");
+
+        // a different key is a fresh walk
+        let _ = cache.plan(&e, &pol, 1, false);
+        assert_eq!(pol.n.get(), 2 * e.n_units() as u64);
+        let _ = cache.plan(&e, &pol, 8, true);
+        assert_eq!((cache.hits, cache.misses), (1, 3));
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn different_policies_never_share_plans() {
+        // regression: the cache must key on the policy too, or a second
+        // policy silently replays the first one's placement
+        let e = env();
+        let mut cache = PlanCache::new();
+        let all = cache.plan(&e, &crate::agent::StaticAllFpga, 8, false);
+        let greedy = cache.plan(&e, &GreedyStep, 8, false);
+        assert_eq!(cache.misses, 2, "second policy must be a miss");
+        assert_eq!(all.placement, vec![Placement::Fpga; e.n_units()]);
+        assert_eq!(greedy.placement, GreedyStep.placement(&e, false));
+    }
+
+    #[test]
+    fn plan_contents_match_the_policy() {
+        let e = env();
+        let plan = PlacementPlan::build(&e, &GreedyStep, 8, false);
+        assert_eq!(plan.placement, GreedyStep.placement(&e, false));
+        assert_eq!(plan.artifacts.len(), e.n_units());
+        for (name, p) in plan.artifacts.iter().zip(&plan.placement) {
+            let precision = match p {
+                Placement::Cpu => "fp32",
+                Placement::Fpga => "int8",
+            };
+            assert!(name.starts_with(&format!("cnn_{precision}_")), "{name}");
+            assert!(name.ends_with("_b8"), "{name}");
+        }
+        // precomputed sim totals equal the timing-model decomposition
+        let tl = e.placement_latency_s(&plan.placement);
+        assert!((plan.sim_latency_s - tl).abs() < 1e-12);
+        assert!(plan.sim_energy_j > 0.0);
+        assert_eq!(plan.unit_times_s.len(), e.n_units());
+    }
+
+    #[test]
+    fn congestion_is_a_distinct_plan_key() {
+        let e = SchedulingEnv::new(
+            Network::paper_scale(),
+            FpgaPlatform::table1_card(),
+            CpuModel::default(),
+            EnvConfig { congestion_p: 1.0, ..EnvConfig::default() },
+        );
+        let free = PlacementPlan::build(&e, &crate::agent::StaticAllFpga, 8, false);
+        let busy = PlacementPlan::build(&e, &crate::agent::StaticAllFpga, 8, true);
+        assert!(busy.sim_latency_s > free.sim_latency_s);
     }
 }

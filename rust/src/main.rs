@@ -7,17 +7,23 @@
 //!   accuracy      fp32/int8 top-1 over the test set
 //!   llm           greedy generation through the Fig 3 decoder
 //!   eda           run the Fig 4 agentic design-flow simulation
+//!   serve         N-worker serving pool over the real artifacts
+//!   bench serve   simulated-path serving throughput sweep -> BENCH_serve.json
 
 use aifa::accel::AccelConfig;
-use aifa::agent::{EnvConfig, QAgent, QConfig, SchedulingEnv};
+use aifa::agent::{EnvConfig, FixedPlacement, GreedyStep, QAgent, QConfig, SchedulingEnv};
 use aifa::data::TestSet;
 use aifa::eda;
 use aifa::graph::Network;
 use aifa::llm::LlmSession;
 use aifa::platform::{CpuModel, FpgaPlatform};
 use aifa::runtime::ArtifactStore;
+use aifa::server::{BatchConfig, BatchEngine, EngineFactory, Server, ServingPool, SimEngine};
 use aifa::util::cli::Cli;
+use aifa::util::json::Json;
 use anyhow::Result;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn artifact_dir(args: &aifa::util::cli::Args) -> String {
     args.get("artifacts").unwrap_or("artifacts").to_string()
@@ -36,7 +42,11 @@ fn main() {
         .opt("n", Some("1000"), "images / tokens / specs to process")
         .opt("batch", Some("8"), "batch size")
         .opt("episodes", Some("400"), "Q-learning episodes")
-        .opt("seed", Some("42"), "rng seed");
+        .opt("seed", Some("42"), "rng seed")
+        .opt("workers", Some("auto"), "serving pool size; comma list for `bench serve` (auto = 1 / 1,2,4)")
+        .opt("wait-ms", Some("2"), "batcher window in ms")
+        .opt("work", Some("32"), "bench serve: synthetic host passes per batch")
+        .opt("out", Some("BENCH_serve.json"), "bench serve: output JSON path");
     let args = match cli.parse(&rest) {
         Ok(a) => a,
         Err(msg) => {
@@ -55,7 +65,7 @@ fn main() {
 }
 
 fn usage() -> String {
-    "aifa <info|verify|train-agent|accuracy|llm|eda> [--help]".to_string()
+    "aifa <info|verify|train-agent|accuracy|llm|eda|serve|bench> [--help]".to_string()
 }
 
 fn run(cmd: &str, args: &aifa::util::cli::Args) -> Result<()> {
@@ -162,6 +172,191 @@ fn run(cmd: &str, args: &aifa::util::cli::Args) -> Result<()> {
             }
             Ok(())
         }
+        "serve" => cmd_serve(args),
+        "bench" => match args.positional.first().map(String::as_str) {
+            Some("serve") | None => bench_serve(args),
+            Some(other) => anyhow::bail!("unknown bench target '{other}' (have: serve)"),
+        },
         other => anyhow::bail!("unknown command '{other}'\n{}", usage()),
     }
+}
+
+/// `aifa serve`: replay the test set through an N-worker pool over the
+/// real artifacts with a Q-trained placement, then print merged metrics.
+fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(artifact_dir(args));
+    let n = args.get_usize("n").unwrap_or(1000);
+    let workers = args.get_usize("workers").unwrap_or(1);
+    let episodes = args.get_usize("episodes").unwrap_or(400);
+    let seed = args.get_u64("seed").unwrap_or(42);
+    let wait = Duration::from_millis(args.get_u64("wait-ms").unwrap_or(2));
+
+    let probe = ArtifactStore::open(&dir)?;
+    let ts = TestSet::load(probe.root.join("testset.bin"))?;
+    let env = SchedulingEnv::new(
+        probe.network.clone(),
+        FpgaPlatform::table1_card(),
+        CpuModel::default(),
+        EnvConfig { batch: 8, ..EnvConfig::default() },
+    );
+    let mut agent = QAgent::new(QConfig::default(), seed);
+    agent.train(&env, episodes);
+    let placement = agent.policy(&env, false);
+    println!("learned placement: {placement:?}");
+    drop(probe); // workers build their own stores (PJRT is thread-local)
+
+    let server = Server::start_pool(
+        workers,
+        dir,
+        |store| {
+            SchedulingEnv::new(
+                store.network.clone(),
+                FpgaPlatform::table1_card(),
+                CpuModel::default(),
+                EnvConfig { batch: 8, ..EnvConfig::default() },
+            )
+        },
+        Arc::new(FixedPlacement { placement }),
+        BatchConfig { max_wait: wait, max_batch: 8 },
+    )?;
+
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n);
+    for i in 0..n {
+        let img = ts.decode_batch(i % ts.n, 1)?;
+        pending.push((i % ts.n, server.handle.submit(img)?));
+    }
+    let mut hits = 0usize;
+    for (idx, rx) in pending {
+        let resp = rx.recv()?;
+        hits += (resp.class == ts.labels[idx] as usize) as usize;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", server.metrics.summary());
+    println!(
+        "workers={workers} accuracy={:.4} throughput={:.1} req/s over {wall:.2}s",
+        hits as f64 / n as f64,
+        n as f64 / wall
+    );
+    server.shutdown();
+    Ok(())
+}
+
+struct ServeBenchRow {
+    workers: usize,
+    rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    queue_p50_ms: f64,
+    batches: u64,
+    plan_hits: u64,
+    plan_misses: u64,
+}
+
+/// One simulated-path pool run: submit `n` single-image requests as fast
+/// as possible, wait for every response, report throughput + percentiles.
+fn run_sim_serve(workers: usize, n: usize, work: usize, wait: Duration) -> Result<ServeBenchRow> {
+    let factory: Arc<EngineFactory> = Arc::new(move |_w: usize| -> Result<Box<dyn BatchEngine>> {
+        let env = SchedulingEnv::new(
+            Network::paper_scale(),
+            FpgaPlatform::table1_card(),
+            CpuModel::default(),
+            EnvConfig { batch: 8, ..EnvConfig::default() },
+        );
+        Ok(Box::new(SimEngine::new(env, Box::new(GreedyStep), vec![1, 8], work)))
+    });
+    let pool = ServingPool::start(workers, BatchConfig { max_wait: wait, max_batch: 8 }, factory)?;
+    let handle = pool.handle();
+
+    let ie = Network::paper_scale().units[0].in_elems(1);
+    let base: Vec<f32> = (0..ie).map(|i| (i % 13) as f32 * 0.07).collect();
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut img = base.clone();
+        img[0] = i as f32; // vary the hash-derived class
+        pending.push(handle.submit(img)?);
+    }
+    for rx in pending {
+        let _ = rx.recv()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let merged = pool.metrics.merged();
+    let row = ServeBenchRow {
+        workers,
+        rps: n as f64 / wall,
+        p50_ms: merged.latency.p50() * 1e3,
+        p99_ms: merged.latency.p99() * 1e3,
+        queue_p50_ms: merged.queue_delay.p50() * 1e3,
+        batches: pool.metrics.batches(),
+        plan_hits: pool.metrics.plan_hits(),
+        plan_misses: pool.metrics.plan_misses(),
+    };
+    drop(handle);
+    pool.shutdown();
+    Ok(row)
+}
+
+/// `aifa bench serve`: sweep the simulated serving path over worker
+/// counts and emit machine-readable BENCH_serve.json so the serving perf
+/// trajectory is tracked from this PR onward.
+fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
+    let n = args.get_usize("n").unwrap_or(1000);
+    let work = args.get_usize("work").unwrap_or(32);
+    let wait = Duration::from_millis(args.get_u64("wait-ms").unwrap_or(2));
+    let workers_list = match args.get("workers") {
+        Some("auto") | None => vec![1, 2, 4],
+        Some(_) => args
+            .get_usize_list("workers")
+            .ok_or_else(|| anyhow::anyhow!("--workers wants a comma list, e.g. 1,2,4"))?,
+    };
+
+    let mut rows = Vec::new();
+    for &w in &workers_list {
+        let r = run_sim_serve(w, n, work, wait)?;
+        println!(
+            "workers={:<2} rps={:>9.1} p50={:>8.3}ms p99={:>8.3}ms queue p50={:>8.3}ms batches={} plan={}h/{}m",
+            r.workers, r.rps, r.p50_ms, r.p99_ms, r.queue_p50_ms, r.batches, r.plan_hits, r.plan_misses
+        );
+        rows.push(r);
+    }
+
+    let row_objs: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("workers", Json::num(r.workers as f64)),
+                ("rps", Json::num(r.rps)),
+                ("p50_ms", Json::num(r.p50_ms)),
+                ("p99_ms", Json::num(r.p99_ms)),
+                ("queue_p50_ms", Json::num(r.queue_p50_ms)),
+                ("batches", Json::num(r.batches as f64)),
+                ("plan_hits", Json::num(r.plan_hits as f64)),
+                ("plan_misses", Json::num(r.plan_misses as f64)),
+            ])
+        })
+        .collect();
+    let speedup_key;
+    let mut fields = vec![
+        ("bench", Json::str("serve")),
+        ("sim", Json::Bool(true)),
+        ("n", Json::num(n as f64)),
+        ("work_passes", Json::num(work as f64)),
+        ("rows", Json::Arr(row_objs)),
+    ];
+    let base = rows.iter().find(|r| r.workers == 1);
+    let peak = rows.iter().max_by(|a, b| a.workers.cmp(&b.workers));
+    if let (Some(b), Some(p)) = (base, peak) {
+        if p.workers > 1 && b.rps > 0.0 {
+            speedup_key = format!("speedup_{}v1", p.workers);
+            fields.push((&speedup_key, Json::num(p.rps / b.rps)));
+        }
+    }
+    let json = Json::obj(fields).to_string();
+
+    let out = args.get("out").unwrap_or("BENCH_serve.json");
+    std::fs::write(out, &json)?;
+    println!("wrote {out}");
+    Ok(())
 }

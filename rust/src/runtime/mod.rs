@@ -127,7 +127,7 @@ impl ArtifactStore {
 
     /// Artifact name for a CNN unit executable.
     pub fn unit_artifact(&self, unit: &str, precision: &str, batch: usize) -> String {
-        format!("cnn_{precision}_{unit}_b{batch}")
+        unit_artifact_name(unit, precision, batch)
     }
 
     /// Compile (cached) an artifact.
@@ -148,10 +148,10 @@ impl ArtifactStore {
         Ok(exe)
     }
 
-    /// Execute an artifact on f32 inputs; returns all tuple outputs as
-    /// flat f32 vectors.  Input shapes come from the manifest entry.
-    pub fn run_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
-        let meta = self.meta(name)?.clone();
+    /// Validate f32 inputs against the (borrowed) manifest entry and build
+    /// the PJRT literals — shared by [`run_f32`] and [`run_f32_into`].
+    fn literals_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<xla::Literal>> {
+        let meta = self.meta(name)?;
         if inputs.len() != meta.inputs.len() {
             return Err(anyhow!(
                 "'{name}': {} inputs given, {} expected",
@@ -171,10 +171,33 @@ impl ArtifactStore {
             }
             literals.push(literal_f32(data, &spec.dims)?);
         }
+        Ok(literals)
+    }
+
+    /// Execute an artifact on f32 inputs; returns all tuple outputs as
+    /// flat f32 vectors.  Input shapes come from the manifest entry.
+    pub fn run_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let literals = self.literals_f32(name, inputs)?;
         self.run_literals(name, literals)?
             .into_iter()
             .map(|l| Ok(l.to_vec::<f32>()?))
             .collect()
+    }
+
+    /// Like [`run_f32`] but moves the artifact's *first* output into a
+    /// caller-owned buffer — the serving hot path's entry, so per-unit
+    /// execution stops growing garbage beyond the one output copy the
+    /// XLA literal boundary itself produces (`to_vec` owns its storage;
+    /// we move it into `out` rather than memcpy a second time).
+    pub fn run_f32_into(&self, name: &str, inputs: &[&[f32]], out: &mut Vec<f32>) -> Result<()> {
+        let literals = self.literals_f32(name, inputs)?;
+        let first = self
+            .run_literals(name, literals)?
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("'{name}' returned no outputs"))?;
+        *out = first.to_vec::<f32>()?;
+        Ok(())
     }
 
     /// Execute with pre-built literals (mixed dtypes); returns the
@@ -186,6 +209,13 @@ impl ArtifactStore {
         let mut tup = result;
         Ok(tup.decompose_tuple()?)
     }
+}
+
+/// Artifact name for a CNN unit executable — pure function of the unit /
+/// precision / batch triple, so placement plans can precompute names
+/// without a store (and the serving hot path does zero `format!` calls).
+pub fn unit_artifact_name(unit: &str, precision: &str, batch: usize) -> String {
+    format!("cnn_{precision}_{unit}_b{batch}")
 }
 
 /// Build an f32 literal of the given dims.
@@ -201,12 +231,16 @@ pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
 }
 
 /// Row-major argmax over a [rows, classes] flat buffer.
+///
+/// Uses `f32::total_cmp`, so NaN logits (which a buggy artifact can emit)
+/// pick a deterministic winner instead of panicking — positive NaN sorts
+/// above +inf under the IEEE total order.
 pub fn argmax_rows(data: &[f32], classes: usize) -> Vec<usize> {
     data.chunks_exact(classes)
         .map(|row| {
             row.iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(i, _)| i)
                 .unwrap_or(0)
         })
@@ -221,6 +255,25 @@ mod tests {
     fn argmax() {
         let d = [0.1, 0.9, 0.0, 1.0, -1.0, 0.5];
         assert_eq!(argmax_rows(&d, 3), vec![1, 0]);
+    }
+
+    #[test]
+    fn argmax_survives_nan() {
+        // regression: partial_cmp().unwrap() used to panic here
+        let d = [f32::NAN, 1.0, 0.5, 2.0, f32::NAN, f32::NAN];
+        let got = argmax_rows(&d, 3);
+        assert_eq!(got.len(), 2);
+        for i in &got {
+            assert!(*i < 3);
+        }
+        // positive NaN sorts above everything under total_cmp
+        assert_eq!(got[0], 0);
+    }
+
+    #[test]
+    fn unit_artifact_names_are_stable() {
+        assert_eq!(unit_artifact_name("conv1", "fp32", 8), "cnn_fp32_conv1_b8");
+        assert_eq!(unit_artifact_name("head", "int8", 1), "cnn_int8_head_b1");
     }
 
     #[test]

@@ -1,21 +1,48 @@
-//! Inference server: request router + dynamic batcher + worker loop.
+//! Inference server: request router + dynamic batcher + worker pool.
 //!
 //! The paper's runtime agent sits inside a serving loop ("prioritize
 //! certain inference requests or alternate between CPU-based and
 //! FPGA-based computations under variable loads", §III.C).  This module
-//! provides that loop: requests arrive on a queue, the batcher coalesces
-//! them up to the largest compiled batch within a latency budget, the
-//! worker executes through the [`Coordinator`] and metrics are recorded.
+//! provides that loop at pool scale:
 //!
-//! Threading is std-only (no tokio in the offline build): one ingress
-//! queue (mpsc), one worker thread, respondents via per-request channels.
+//! ```text
+//!   clients --(mpsc ingress)--> dispatcher --(batch queue)--> worker 0..N-1
+//!                               [fill_batch window]           [own ArtifactStore
+//!                                                              + Coordinator
+//!                                                              + plan cache
+//!                                                              + metric shard]
+//! ```
+//!
+//! * **Dispatcher** — one thread coalesces requests up to the largest
+//!   compiled batch within the latency window ([`BatchConfig`]), then
+//!   hands whole batches to a shared work queue; idle workers pick up the
+//!   next batch (work-conserving, no per-worker queues to go stale).
+//! * **Workers** ([`pool`]) — `--workers N` threads, each owning its own
+//!   [`crate::runtime::ArtifactStore`] and [`crate::coordinator::Coordinator`]
+//!   (PJRT handles are `Rc`-backed and thread-local, so per-worker stores
+//!   are the correct sharding).  The per-request hot path is
+//!   decision-cached and copy-lean: placement plans come from the
+//!   coordinator's [`crate::coordinator::PlanCache`], activations move
+//!   through a ping/pong buffer pair, and oversized batches are split
+//!   across *compiled* sizes by [`split_exec_batches`] instead of
+//!   silently padding to an uncompiled `max_batch`.
+//! * **Metrics** — per-worker [`pool::MetricShard`]s (atomic counters,
+//!   single-writer sample reservoirs) merged only in
+//!   [`pool::PoolMetrics::summary`]; no cross-worker lock contention on
+//!   the push path.
+//!
+//! Threading is std-only (no tokio in the offline build).
+
+pub mod pool;
+
+pub use pool::{
+    BatchEngine, BatchOutput, CoordEngine, EngineFactory, MetricShard, PoolMetrics, ServingPool,
+    ShardSamples, SimEngine,
+};
 
 use crate::agent::{Policy, SchedulingEnv};
-use crate::coordinator::Coordinator;
 use crate::runtime::ArtifactStore;
-use crate::util::stats::Samples;
 use anyhow::Result;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -36,6 +63,8 @@ pub struct Response {
     pub queue_s: f64,
     /// Simulated device latency of the batch (s).
     pub sim_batch_s: f64,
+    /// Which pool worker executed the batch.
+    pub worker: usize,
 }
 
 /// Batching configuration.
@@ -50,36 +79,6 @@ pub struct BatchConfig {
 impl Default for BatchConfig {
     fn default() -> Self {
         BatchConfig { max_wait: Duration::from_millis(2), max_batch: 8 }
-    }
-}
-
-/// Shared server metrics.
-#[derive(Default)]
-pub struct Metrics {
-    pub served: AtomicU64,
-    pub batches: AtomicU64,
-    pub errors: AtomicU64,
-    pub latency: Mutex<Samples>,
-    pub queue_delay: Mutex<Samples>,
-    pub sim_latency: Mutex<Samples>,
-    pub batch_sizes: Mutex<Samples>,
-}
-
-impl Metrics {
-    pub fn summary(&self) -> String {
-        let lat = self.latency.lock().unwrap();
-        let q = self.queue_delay.lock().unwrap();
-        let sim = self.sim_latency.lock().unwrap();
-        format!(
-            "served={} batches={} errors={} wall p50={:.2}ms p99={:.2}ms queue p50={:.2}ms sim/batch p50={:.2}ms",
-            self.served.load(Ordering::Relaxed),
-            self.batches.load(Ordering::Relaxed),
-            self.errors.load(Ordering::Relaxed),
-            lat.p50() * 1e3,
-            lat.p99() * 1e3,
-            q.p50() * 1e3,
-            sim.p50() * 1e3,
-        )
     }
 }
 
@@ -100,10 +99,8 @@ impl ServerHandle {
     }
 }
 
-/// Collect a batch from the queue honoring the batching window.
-fn collect_batch(rx: &Receiver<Request>, cfg: &BatchConfig) -> Option<Vec<Request>> {
-    // block for the first request (server idles until work arrives)
-    let first = rx.recv().ok()?;
+/// Coalesce more requests onto `first` within the batching window.
+fn fill_batch(first: Request, rx: &Receiver<Request>, cfg: &BatchConfig) -> Vec<Request> {
     let mut batch = vec![first];
     let deadline = Instant::now() + cfg.max_wait;
     while batch.len() < cfg.max_batch {
@@ -116,115 +113,106 @@ fn collect_batch(rx: &Receiver<Request>, cfg: &BatchConfig) -> Option<Vec<Reques
             Err(_) => break,
         }
     }
-    Some(batch)
+    batch
 }
 
-/// Run the serving loop on the current thread until the ingress closes.
-///
-/// The caller supplies the policy (Q-agent, heuristic, ...) and whether
-/// the fabric is congested (multi-tenant scenario).
-pub fn serve_loop(
-    coord: &Coordinator,
-    policy: &dyn Policy,
-    rx: Receiver<Request>,
-    cfg: BatchConfig,
-    metrics: &Metrics,
-) {
-    let ie = coord.env.net.units[0].in_elems(1);
-    while let Some(mut batch) = collect_batch(&rx, &cfg) {
-        // pad to a compiled batch size with zero images (classic serving
-        // trick: compiled shapes are static)
-        let real = batch.len();
-        let exec_b = coord
-            .unit_batches
-            .iter()
-            .copied()
-            .filter(|b| *b >= real)
-            .min()
-            .unwrap_or(cfg.max_batch);
-        let mut flat = Vec::with_capacity(exec_b * ie);
-        for r in &batch {
-            flat.extend_from_slice(&r.image);
-        }
-        flat.resize(exec_b * ie, 0.0);
+/// Collect a batch from the queue honoring the batching window.  The
+/// pool's dispatcher inlines this as a stop-flag-aware poll + `fill_batch`
+/// so shutdown stays bounded; this blocking form remains the reference
+/// semantics (and the unit-test surface) for the batching window.
+#[cfg_attr(not(test), allow(dead_code))]
+fn collect_batch(rx: &Receiver<Request>, cfg: &BatchConfig) -> Option<Vec<Request>> {
+    // block for the first request (server idles until work arrives)
+    let first = rx.recv().ok()?;
+    Some(fill_batch(first, rx, cfg))
+}
 
-        let started = Instant::now();
-        match coord.infer(&flat, exec_b, policy, false) {
-            Ok(res) => {
-                let preds = crate::runtime::argmax_rows(&res.logits, res.classes);
-                metrics.batches.fetch_add(1, Ordering::Relaxed);
-                metrics.batch_sizes.lock().unwrap().push(real as f64);
-                metrics.sim_latency.lock().unwrap().push(res.sim_latency_s);
-                for (i, req) in batch.drain(..).enumerate() {
-                    let queue_s = (started - req.enqueued).as_secs_f64();
-                    let wall = req.enqueued.elapsed().as_secs_f64();
-                    metrics.served.fetch_add(1, Ordering::Relaxed);
-                    metrics.latency.lock().unwrap().push(wall);
-                    metrics.queue_delay.lock().unwrap().push(queue_s);
-                    let _ = req.respond.send(Response {
-                        class: preds[i],
-                        batch_size: real,
-                        queue_s,
-                        sim_batch_s: res.sim_latency_s,
-                    });
-                }
-            }
-            Err(e) => {
-                log::error!("batch inference failed: {e:#}");
-                metrics.errors.fetch_add(batch.len() as u64, Ordering::Relaxed);
-            }
-        }
+/// Split `real` collected requests into executable chunk sizes, each drawn
+/// from the *compiled* batch set.  Rule: if a single compiled batch covers
+/// the remainder, take the smallest such (one padded launch); otherwise
+/// run the largest compiled batch full and continue.  This replaces the
+/// seed's silent fallback to `cfg.max_batch` — which was not guaranteed to
+/// be a compiled size — whenever a batch outgrew every compiled shape.
+pub fn split_exec_batches(real: usize, compiled: &[usize]) -> Vec<usize> {
+    if compiled.is_empty() {
+        return vec![real.max(1)];
     }
+    let largest = *compiled.iter().max().unwrap();
+    let mut out = Vec::new();
+    let mut rem = real.max(1);
+    loop {
+        if let Some(b) = compiled.iter().copied().filter(|b| *b >= rem).min() {
+            out.push(b);
+            break;
+        }
+        out.push(largest);
+        rem -= largest;
+    }
+    out
 }
 
-/// Spawn the server on a background thread.
-///
-/// PJRT handles are thread-local (`Rc`-backed), so the worker builds its
-/// own [`ArtifactStore`] from `artifact_dir` and derives the scheduling
-/// environment via `make_env` once the network metadata is loaded.
+/// The serving front-end: an N-worker [`ServingPool`] behind the classic
+/// single-store constructor.  PJRT handles are thread-local (`Rc`-backed),
+/// so each worker builds its own [`ArtifactStore`] from `artifact_dir` and
+/// derives the scheduling environment via `make_env` once the network
+/// metadata is loaded.
 pub struct Server {
     pub handle: ServerHandle,
-    pub metrics: Arc<Metrics>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<PoolMetrics>,
+    pool: ServingPool,
 }
 
 impl Server {
+    /// Single-worker server (seed-compatible signature).
     pub fn start(
         artifact_dir: std::path::PathBuf,
         make_env: impl FnOnce(&ArtifactStore) -> SchedulingEnv + Send + 'static,
         policy: Box<dyn Policy + Send>,
         cfg: BatchConfig,
     ) -> Result<Server> {
-        let (tx, rx) = channel::<Request>();
-        let metrics = Arc::new(Metrics::default());
-        let m2 = metrics.clone();
-        let worker = std::thread::spawn(move || {
-            let store = match ArtifactStore::open(&artifact_dir) {
-                Ok(s) => s,
-                Err(e) => {
-                    log::error!("artifact store open failed: {e:#}");
-                    return;
-                }
-            };
+        let slot = Mutex::new(Some((make_env, policy)));
+        let factory = move |_worker: usize| -> Result<Box<dyn BatchEngine>> {
+            let (make_env, policy) = slot
+                .lock()
+                .unwrap()
+                .take()
+                .ok_or_else(|| anyhow::anyhow!("single-worker engine factory reused"))?;
+            let store = ArtifactStore::open(&artifact_dir)?;
             let env = make_env(&store);
-            let coord = match Coordinator::new(&store, env) {
-                Ok(c) => c,
-                Err(e) => {
-                    log::error!("coordinator init failed: {e:#}");
-                    return;
-                }
-            };
-            serve_loop(&coord, policy.as_ref(), rx, cfg, &m2);
-        });
-        Ok(Server { handle: ServerHandle { tx }, metrics, worker: Some(worker) })
+            let policy: Box<dyn Policy> = policy;
+            Ok(Box::new(CoordEngine::new(store, env, policy, false)?))
+        };
+        Self::from_pool(ServingPool::start(1, cfg, Arc::new(factory))?)
     }
 
-    /// Close ingress and join the worker.
-    pub fn shutdown(mut self) {
-        drop(self.handle);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+    /// N-worker pool over the real artifact path.  `make_env` runs once
+    /// per worker (inside the worker thread, against that worker's own
+    /// store); the policy is shared — serving policies are stateless.
+    pub fn start_pool(
+        workers: usize,
+        artifact_dir: std::path::PathBuf,
+        make_env: impl Fn(&ArtifactStore) -> SchedulingEnv + Send + Sync + 'static,
+        policy: Arc<dyn Policy + Send + Sync>,
+        cfg: BatchConfig,
+    ) -> Result<Server> {
+        let factory = move |_worker: usize| -> Result<Box<dyn BatchEngine>> {
+            let store = ArtifactStore::open(&artifact_dir)?;
+            let env = make_env(&store);
+            let policy: Box<dyn Policy> = Box::new(pool::SharedPolicy(policy.clone()));
+            Ok(Box::new(CoordEngine::new(store, env, policy, false)?))
+        };
+        Self::from_pool(ServingPool::start(workers, cfg, Arc::new(factory))?)
+    }
+
+    fn from_pool(pool: ServingPool) -> Result<Server> {
+        Ok(Server { handle: pool.handle(), metrics: pool.metrics.clone(), pool })
+    }
+
+    /// Close ingress and join dispatcher + workers.
+    pub fn shutdown(self) {
+        let Server { handle, metrics: _, pool } = self;
+        drop(handle); // the pool holds the last sender; drop ours first
+        pool.shutdown();
     }
 }
 
@@ -255,10 +243,42 @@ mod tests {
     }
 
     #[test]
+    fn split_prefers_single_padded_launch() {
+        assert_eq!(split_exec_batches(5, &[1, 8]), vec![8]);
+        assert_eq!(split_exec_batches(8, &[1, 8]), vec![8]);
+        assert_eq!(split_exec_batches(1, &[1, 8]), vec![1]);
+        assert_eq!(split_exec_batches(3, &[1, 2, 4, 8]), vec![4]);
+    }
+
+    #[test]
+    fn split_covers_oversized_batches_with_compiled_sizes() {
+        // seed regression: real > max compiled used to fall back to an
+        // uncompiled cfg.max_batch and fail inside the coordinator
+        assert_eq!(split_exec_batches(11, &[1, 8]), vec![8, 8]);
+        assert_eq!(split_exec_batches(11, &[1, 2, 4, 8]), vec![8, 4]);
+        assert_eq!(split_exec_batches(17, &[8]), vec![8, 8, 8]);
+        for real in 1..40 {
+            let chunks = split_exec_batches(real, &[1, 2, 4, 8]);
+            assert!(chunks.iter().sum::<usize>() >= real, "real={real}");
+            assert!(chunks.iter().all(|c| [1, 2, 4, 8].contains(c)), "real={real}");
+        }
+    }
+
+    #[test]
+    fn split_handles_degenerate_inputs() {
+        assert_eq!(split_exec_batches(0, &[1, 8]), vec![1]);
+        assert_eq!(split_exec_batches(5, &[]), vec![5]);
+    }
+
+    #[test]
     fn metrics_summary_renders() {
-        let m = Metrics::default();
-        m.served.store(10, Ordering::Relaxed);
-        m.latency.lock().unwrap().push(0.004);
-        assert!(m.summary().contains("served=10"));
+        use std::sync::atomic::Ordering;
+        let m = PoolMetrics::new(2);
+        m.shard(0).served.fetch_add(10, Ordering::Relaxed);
+        m.shard(0).samples.lock().unwrap().latency.push(0.004);
+        m.shard(1).served.fetch_add(5, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("served=15"), "{s}");
+        assert!(s.contains("workers=2"), "{s}");
     }
 }

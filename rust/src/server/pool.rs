@@ -1,0 +1,513 @@
+//! N-worker serving pool: dispatcher + engine-per-worker execution with
+//! sharded metrics.
+//!
+//! Workers own everything thread-local (PJRT stores are `Rc`-backed):
+//! each worker thread calls the [`EngineFactory`] once to build its own
+//! [`BatchEngine`], then pulls whole batches from the shared work queue.
+//! The queue is a single mpsc receiver behind a mutex, so an idle worker
+//! always takes the next batch — work-conserving without per-worker
+//! queues that could go stale behind a slow worker.
+//!
+//! Metrics are sharded per worker ([`MetricShard`]): counters are
+//! lock-free atomics, and the sample reservoirs sit behind a mutex with
+//! exactly **one** writer (the owning worker, one lock per executed
+//! chunk) — the push path never contends, unlike the seed's four global
+//! mutexes shared by every request.  [`PoolMetrics::merged`] folds the
+//! shards together only when a summary is asked for.
+
+use super::{fill_batch, split_exec_batches, BatchConfig, Request, Response, ServerHandle};
+use crate::agent::{Policy, SchedulingEnv, State};
+use crate::coordinator::{Coordinator, PlanCache};
+use crate::platform::Placement;
+use crate::runtime::{argmax_rows, ArtifactStore};
+use crate::util::stats::Samples;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// What one engine execution reports back to the worker loop.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchOutput {
+    /// Simulated device latency of the batch (s).
+    pub sim_latency_s: f64,
+    /// Simulated energy of the batch (J).
+    pub sim_energy_j: f64,
+}
+
+/// One worker's execution backend: turns a padded flat image batch into
+/// logits plus the simulated timeline.  Implementations are constructed
+/// *inside* the worker thread by the [`EngineFactory`], so they may hold
+/// non-`Send` state (PJRT executables, `Rc` plans).
+pub trait BatchEngine {
+    /// Compiled batch sizes this engine can execute directly.
+    fn unit_batches(&self) -> &[usize];
+    /// Flat input elements for one image.
+    fn image_elems(&self) -> usize;
+    /// Width of one logits row.
+    fn classes(&self) -> usize;
+    /// Run `batch` images (`flat.len() == batch * image_elems()`), filling
+    /// `logits` with `batch * classes()` values.
+    fn run(&mut self, flat: &[f32], batch: usize, logits: &mut Vec<f32>) -> Result<BatchOutput>;
+    /// `(hits, misses)` of the placement-plan cache, for telemetry.
+    fn plan_cache_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
+}
+
+/// Builds a worker's engine; invoked once per worker, on that worker's
+/// thread, with the worker index.
+pub type EngineFactory = dyn Fn(usize) -> Result<Box<dyn BatchEngine>> + Send + Sync;
+
+/// Adapter letting a shared (`Arc`) policy be used where the engine wants
+/// an owned `Box<dyn Policy>` — serving policies are stateless.
+pub struct SharedPolicy(pub Arc<dyn Policy + Send + Sync>);
+
+impl Policy for SharedPolicy {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+    fn decide(&self, env: &SchedulingEnv, s: &State) -> Placement {
+        self.0.decide(env, s)
+    }
+}
+
+/// The real-artifact engine: one [`ArtifactStore`] + [`Coordinator`] pair
+/// owned by this worker, executing through the cached/allocation-free
+/// [`Coordinator::infer_cached`] path.
+pub struct CoordEngine {
+    coord: Coordinator<ArtifactStore>,
+    policy: Box<dyn Policy>,
+    congested: bool,
+    classes: usize,
+    image_elems: usize,
+}
+
+impl CoordEngine {
+    pub fn new(
+        store: ArtifactStore,
+        env: SchedulingEnv,
+        policy: Box<dyn Policy>,
+        congested: bool,
+    ) -> Result<CoordEngine> {
+        let classes = env.net.units.last().map(|u| u.cout).unwrap_or(1);
+        let image_elems = env.net.units.first().map(|u| u.in_elems(1)).unwrap_or(0);
+        let coord = Coordinator::new(store, env)?;
+        Ok(CoordEngine { coord, policy, congested, classes, image_elems })
+    }
+}
+
+impl BatchEngine for CoordEngine {
+    fn unit_batches(&self) -> &[usize] {
+        &self.coord.unit_batches
+    }
+    fn image_elems(&self) -> usize {
+        self.image_elems
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn run(&mut self, flat: &[f32], batch: usize, logits: &mut Vec<f32>) -> Result<BatchOutput> {
+        let (plan, _wall) =
+            self.coord
+                .infer_cached(flat, batch, self.policy.as_ref(), self.congested, logits)?;
+        Ok(BatchOutput { sim_latency_s: plan.sim_latency_s, sim_energy_j: plan.sim_energy_j })
+    }
+    fn plan_cache_stats(&self) -> (u64, u64) {
+        self.coord.plan_cache_stats()
+    }
+}
+
+/// Artifact-free engine for the simulated serving path (`aifa bench
+/// serve` and the pool tests): the plan cache and timing models run
+/// exactly as in [`CoordEngine`], but the behavioural PJRT execution is
+/// replaced by a deterministic host-side workload proportional to the
+/// batch, plus hash-derived logits so responses stay checkable.
+pub struct SimEngine {
+    env: SchedulingEnv,
+    policy: Box<dyn Policy>,
+    plans: PlanCache,
+    unit_batches: Vec<usize>,
+    classes: usize,
+    image_elems: usize,
+    /// Passes of synthetic FP work over the flat batch per execution —
+    /// stands in for the behavioural-model host cost the pool parallelizes.
+    work_passes: usize,
+    sink: f64,
+}
+
+impl SimEngine {
+    pub fn new(
+        env: SchedulingEnv,
+        policy: Box<dyn Policy>,
+        unit_batches: Vec<usize>,
+        work_passes: usize,
+    ) -> SimEngine {
+        let classes = env.net.units.last().map(|u| u.cout).unwrap_or(1);
+        let image_elems = env.net.units.first().map(|u| u.in_elems(1)).unwrap_or(1);
+        SimEngine { env, policy, plans: PlanCache::new(), unit_batches, classes, image_elems, work_passes, sink: 0.0 }
+    }
+}
+
+impl BatchEngine for SimEngine {
+    fn unit_batches(&self) -> &[usize] {
+        &self.unit_batches
+    }
+    fn image_elems(&self) -> usize {
+        self.image_elems
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn run(&mut self, flat: &[f32], batch: usize, logits: &mut Vec<f32>) -> Result<BatchOutput> {
+        let plan = self.plans.plan(&self.env, self.policy.as_ref(), batch, false);
+        // synthetic behavioural cost (serial FMA chain, kept via black_box)
+        let mut acc = self.sink;
+        for _ in 0..self.work_passes {
+            for &x in flat {
+                acc = acc.mul_add(1.000000119, x as f64);
+            }
+        }
+        self.sink = std::hint::black_box(acc);
+        // deterministic pseudo-logits: class = hash of the image bits
+        logits.clear();
+        logits.resize(batch * self.classes, 0.0);
+        for r in 0..batch {
+            let row = &flat[r * self.image_elems..(r + 1) * self.image_elems];
+            let h = row.iter().fold(0u32, |h, &x| {
+                h.wrapping_mul(31).wrapping_add(x.to_bits().rotate_left(7))
+            });
+            logits[r * self.classes + (h as usize % self.classes)] = 1.0;
+        }
+        Ok(BatchOutput { sim_latency_s: plan.sim_latency_s, sim_energy_j: plan.sim_energy_j })
+    }
+    fn plan_cache_stats(&self) -> (u64, u64) {
+        (self.plans.hits, self.plans.misses)
+    }
+}
+
+/// Per-worker sample reservoirs — single writer (the owning worker).
+#[derive(Debug, Default)]
+pub struct ShardSamples {
+    pub latency: Samples,
+    pub queue_delay: Samples,
+    pub sim_latency: Samples,
+    pub batch_sizes: Samples,
+}
+
+impl ShardSamples {
+    /// Fold `other`'s reservoirs into this one (summary-time merge).
+    pub fn merge(&mut self, other: &ShardSamples) {
+        self.latency.merge(&other.latency);
+        self.queue_delay.merge(&other.queue_delay);
+        self.sim_latency.merge(&other.sim_latency);
+        self.batch_sizes.merge(&other.batch_sizes);
+    }
+}
+
+/// One worker's metrics.  Counters are lock-free atomics; `samples` has
+/// exactly one writer (the owning worker, one lock per executed chunk),
+/// so pushes never contend — readers only lock briefly during a merge.
+#[derive(Debug, Default)]
+pub struct MetricShard {
+    pub served: AtomicU64,
+    pub batches: AtomicU64,
+    pub errors: AtomicU64,
+    pub plan_hits: AtomicU64,
+    pub plan_misses: AtomicU64,
+    pub samples: Mutex<ShardSamples>,
+}
+
+/// All shards of the pool; everything here is summary-time aggregation.
+pub struct PoolMetrics {
+    shards: Vec<Arc<MetricShard>>,
+}
+
+impl PoolMetrics {
+    pub fn new(workers: usize) -> PoolMetrics {
+        PoolMetrics { shards: (0..workers.max(1)).map(|_| Arc::new(MetricShard::default())).collect() }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, worker: usize) -> &MetricShard {
+        &self.shards[worker]
+    }
+
+    fn shard_arc(&self, worker: usize) -> Arc<MetricShard> {
+        self.shards[worker].clone()
+    }
+
+    fn sum(&self, f: impl Fn(&MetricShard) -> &AtomicU64) -> u64 {
+        self.shards.iter().map(|s| f(s).load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn served(&self) -> u64 {
+        self.sum(|s| &s.served)
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.sum(|s| &s.batches)
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.sum(|s| &s.errors)
+    }
+
+    pub fn plan_hits(&self) -> u64 {
+        self.sum(|s| &s.plan_hits)
+    }
+
+    pub fn plan_misses(&self) -> u64 {
+        self.sum(|s| &s.plan_misses)
+    }
+
+    /// Merge all shards' sample reservoirs (summary-time only).
+    pub fn merged(&self) -> ShardSamples {
+        let mut out = ShardSamples::default();
+        for sh in &self.shards {
+            out.merge(&sh.samples.lock().unwrap());
+        }
+        out
+    }
+
+    pub fn summary(&self) -> String {
+        let m = self.merged();
+        format!(
+            "served={} batches={} errors={} workers={} plan={}h/{}m wall p50={:.2}ms p99={:.2}ms queue p50={:.2}ms sim/batch p50={:.2}ms",
+            self.served(),
+            self.batches(),
+            self.errors(),
+            self.workers(),
+            self.plan_hits(),
+            self.plan_misses(),
+            m.latency.p50() * 1e3,
+            m.latency.p99() * 1e3,
+            m.queue_delay.p50() * 1e3,
+            m.sim_latency.p50() * 1e3,
+        )
+    }
+}
+
+/// The pool itself: dispatcher thread + N engine workers.
+pub struct ServingPool {
+    ingress: ServerHandle,
+    pub metrics: Arc<PoolMetrics>,
+    stop: Arc<AtomicBool>,
+    dispatcher: JoinHandle<()>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ServingPool {
+    /// Spawn `workers` engine threads (each builds its engine via
+    /// `factory`) behind one batching dispatcher.
+    pub fn start(workers: usize, cfg: BatchConfig, factory: Arc<EngineFactory>) -> Result<ServingPool> {
+        let n = workers.max(1);
+        let (tx, rx) = channel::<Request>();
+        let (btx, brx) = channel::<Vec<Request>>();
+        let shared_rx = Arc::new(Mutex::new(brx));
+        let metrics = Arc::new(PoolMetrics::new(n));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        // The dispatcher polls the stop flag between batches so shutdown
+        // terminates even while cloned `ServerHandle`s keep the ingress
+        // channel open somewhere else.
+        let stop_d = stop.clone();
+        let dispatcher = std::thread::spawn(move || loop {
+            if stop_d.load(Ordering::Relaxed) {
+                break;
+            }
+            let first = match rx.recv_timeout(Duration::from_millis(25)) {
+                Ok(r) => r,
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => break,
+            };
+            let batch = fill_batch(first, &rx, &cfg);
+            if btx.send(batch).is_err() {
+                break; // every worker exited
+            }
+        });
+
+        let mut handles = Vec::with_capacity(n);
+        for w in 0..n {
+            let rx = shared_rx.clone();
+            let factory = factory.clone();
+            let shard = metrics.shard_arc(w);
+            handles.push(std::thread::spawn(move || worker_loop(w, rx, factory, shard)));
+        }
+        Ok(ServingPool { ingress: ServerHandle { tx }, metrics, stop, dispatcher, workers: handles })
+    }
+
+    /// A submit handle (cloneable across producer threads).
+    pub fn handle(&self) -> ServerHandle {
+        self.ingress.clone()
+    }
+
+    /// Stop the dispatcher, close ingress, and join dispatcher + workers.
+    /// Safe even when cloned handles are still alive elsewhere: the pool
+    /// stops accepting within one dispatcher poll (~25ms); requests still
+    /// undelivered at that point are dropped, which their submitters see
+    /// as a disconnected response channel.
+    pub fn shutdown(self) {
+        let ServingPool { ingress, metrics: _, stop, dispatcher, workers } = self;
+        stop.store(true, Ordering::Relaxed);
+        drop(ingress);
+        let _ = dispatcher.join();
+        for w in workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    worker: usize,
+    rx: Arc<Mutex<Receiver<Vec<Request>>>>,
+    factory: Arc<EngineFactory>,
+    shard: Arc<MetricShard>,
+) {
+    let mut engine = match factory(worker) {
+        Ok(e) => e,
+        Err(e) => {
+            log::error!("worker {worker}: engine init failed: {e:#}");
+            return;
+        }
+    };
+    let ie = engine.image_elems();
+    let mut flat: Vec<f32> = Vec::new();
+    let mut logits: Vec<f32> = Vec::new();
+    // engine counters are cumulative; publish deltas to the shard
+    let (mut seen_hits, mut seen_misses) = (0u64, 0u64);
+
+    loop {
+        // take the whole next batch; lock released before executing
+        let batch = { rx.lock().unwrap().recv() };
+        let batch = match batch {
+            Ok(b) => b,
+            Err(_) => break, // dispatcher gone: drain-and-exit
+        };
+
+        let mut start = 0usize;
+        for exec_b in split_exec_batches(batch.len(), engine.unit_batches()) {
+            let end = (start + exec_b).min(batch.len());
+            let real = end - start;
+            if real == 0 {
+                break;
+            }
+            // pad to the compiled batch with zero images (compiled shapes
+            // are static); `flat` is reused across batches
+            flat.clear();
+            for r in &batch[start..end] {
+                flat.extend_from_slice(&r.image);
+            }
+            flat.resize(exec_b * ie, 0.0);
+
+            let started = Instant::now();
+            let result = engine.run(&flat, exec_b, &mut logits);
+            // publish plan-cache stats before responding, so a summary
+            // read right after the last response is already consistent
+            let (h, m) = engine.plan_cache_stats();
+            shard.plan_hits.fetch_add(h - seen_hits, Ordering::Relaxed);
+            shard.plan_misses.fetch_add(m - seen_misses, Ordering::Relaxed);
+            (seen_hits, seen_misses) = (h, m);
+            match result {
+                Ok(out) => {
+                    let preds = argmax_rows(&logits, engine.classes());
+                    shard.batches.fetch_add(1, Ordering::Relaxed);
+                    shard.served.fetch_add(real as u64, Ordering::Relaxed);
+                    // one (single-writer, uncontended) lock per chunk
+                    let mut s = shard.samples.lock().unwrap();
+                    s.batch_sizes.push(real as f64);
+                    s.sim_latency.push(out.sim_latency_s);
+                    for (i, req) in batch[start..end].iter().enumerate() {
+                        let queue_s = (started - req.enqueued).as_secs_f64();
+                        let wall = req.enqueued.elapsed().as_secs_f64();
+                        s.latency.push(wall);
+                        s.queue_delay.push(queue_s);
+                        let _ = req.respond.send(Response {
+                            class: preds[i],
+                            batch_size: real,
+                            queue_s,
+                            sim_batch_s: out.sim_latency_s,
+                            worker,
+                        });
+                    }
+                }
+                Err(e) => {
+                    log::error!("worker {worker}: batch inference failed: {e:#}");
+                    shard.errors.fetch_add(real as u64, Ordering::Relaxed);
+                }
+            }
+            start = end;
+            if start >= batch.len() {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::{EnvConfig, GreedyStep};
+    use crate::graph::Network;
+    use crate::platform::{CpuModel, FpgaPlatform};
+
+    fn sim_env() -> SchedulingEnv {
+        SchedulingEnv::new(
+            Network::paper_scale(),
+            FpgaPlatform::table1_card(),
+            CpuModel::default(),
+            EnvConfig::default(),
+        )
+    }
+
+    #[test]
+    fn metric_shards_merge() {
+        use std::sync::atomic::Ordering;
+        let m = PoolMetrics::new(3);
+        m.shard(0).served.fetch_add(3, Ordering::Relaxed);
+        m.shard(1).served.fetch_add(2, Ordering::Relaxed);
+        m.shard(2).errors.fetch_add(1, Ordering::Relaxed);
+        m.shard(0).samples.lock().unwrap().latency.push(0.001);
+        m.shard(0).samples.lock().unwrap().latency.push(0.002);
+        m.shard(1).samples.lock().unwrap().latency.push(0.003);
+        m.shard(2).samples.lock().unwrap().queue_delay.push(0.004);
+
+        assert_eq!(m.served(), 5);
+        assert_eq!(m.errors(), 1);
+        let merged = m.merged();
+        assert_eq!(merged.latency.len(), 3);
+        assert_eq!(merged.queue_delay.len(), 1);
+        assert!((merged.latency.max() - 0.003).abs() < 1e-12);
+        assert!(m.summary().contains("served=5"));
+    }
+
+    #[test]
+    fn sim_engine_runs_and_caches_plans() {
+        let env = sim_env();
+        let ie = env.net.units[0].in_elems(1);
+        let classes = env.net.units.last().unwrap().cout;
+        let mut e = SimEngine::new(env, Box::new(GreedyStep), vec![1, 8], 1);
+        assert_eq!(e.image_elems(), ie);
+        assert_eq!(e.classes(), classes);
+
+        let flat = vec![0.5f32; 8 * ie];
+        let mut logits = Vec::new();
+        let out = e.run(&flat, 8, &mut logits).unwrap();
+        assert!(out.sim_latency_s > 0.0);
+        assert_eq!(logits.len(), 8 * classes);
+        assert_eq!(e.plan_cache_stats(), (0, 1));
+
+        let out2 = e.run(&flat, 8, &mut logits).unwrap();
+        assert_eq!(e.plan_cache_stats(), (1, 1), "second run must hit the plan cache");
+        assert!((out.sim_latency_s - out2.sim_latency_s).abs() < 1e-15);
+
+        // identical rows hash to identical classes
+        let preds = argmax_rows(&logits, classes);
+        assert!(preds.windows(2).all(|w| w[0] == w[1]));
+    }
+}

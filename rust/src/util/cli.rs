@@ -139,6 +139,25 @@ impl Args {
         self.get(name).and_then(|s| s.parse().ok())
     }
 
+    /// Comma-separated usize list, e.g. `--workers 1,2,4`.  Returns
+    /// `None` when the option is absent or any element fails to parse.
+    pub fn get_usize_list(&self, name: &str) -> Option<Vec<usize>> {
+        let s = self.get(name)?;
+        let mut out = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            out.push(part.parse().ok()?);
+        }
+        if out.is_empty() {
+            None
+        } else {
+            Some(out)
+        }
+    }
+
     pub fn has(&self, flag: &str) -> bool {
         self.flags.iter().any(|f| f == flag)
     }
@@ -175,6 +194,18 @@ mod tests {
         assert!(a.has("verbose"));
         assert_eq!(a.positional, vec!["input.txt"]);
         assert!(!a.has("nope"));
+    }
+
+    #[test]
+    fn usize_lists() {
+        let c = Cli::new("t", "test").opt("workers", Some("1"), "pool sizes");
+        let a = c.parse(&v(&["--workers", "1,2,4"])).unwrap();
+        assert_eq!(a.get_usize_list("workers"), Some(vec![1, 2, 4]));
+        let a = c.parse(&v(&[])).unwrap();
+        assert_eq!(a.get_usize_list("workers"), Some(vec![1]));
+        let a = c.parse(&v(&["--workers", "1,x"])).unwrap();
+        assert_eq!(a.get_usize_list("workers"), None);
+        assert_eq!(a.get_usize_list("missing"), None);
     }
 
     #[test]

@@ -16,6 +16,12 @@ impl Samples {
         self.xs.push(x);
     }
 
+    /// Append all of `other`'s samples — the shard-merge path for the
+    /// serving pool's per-worker metrics.
+    pub fn merge(&mut self, other: &Samples) {
+        self.xs.extend_from_slice(&other.xs);
+    }
+
     pub fn len(&self) -> usize {
         self.xs.len()
     }
@@ -140,6 +146,25 @@ mod tests {
         assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
         assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
         assert!(s.p95() > 95.0 && s.p95() < 96.1);
+    }
+
+    #[test]
+    fn merge_concatenates_shards() {
+        let mut a = Samples::new();
+        let mut b = Samples::new();
+        for x in [1.0, 2.0] {
+            a.push(x);
+        }
+        for x in [3.0, 4.0] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), 4);
+        assert!((a.mean() - 2.5).abs() < 1e-12);
+        assert_eq!(a.max(), 4.0);
+        // merging an empty shard is a no-op
+        a.merge(&Samples::new());
+        assert_eq!(a.len(), 4);
     }
 
     #[test]

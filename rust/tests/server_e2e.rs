@@ -1,13 +1,15 @@
 //! Server end-to-end test: submit concurrent requests through the
 //! batching server with an agent placement, check classifications,
-//! batching behaviour and metrics.
+//! batching behaviour and pool metrics.  Requires real artifacts
+//! (`make artifacts`); the artifact-free pool tests live in pool_sim.rs.
 
-use aifa::agent::{EnvConfig, FixedPlacement, SchedulingEnv, StaticAllFpga, Policy};
+use aifa::agent::{EnvConfig, FixedPlacement, Policy, SchedulingEnv, StaticAllFpga};
 use aifa::data::TestSet;
 use aifa::platform::{CpuModel, FpgaPlatform};
 use aifa::runtime::ArtifactStore;
 use aifa::server::{BatchConfig, Server};
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
 fn artifact_dir() -> PathBuf {
@@ -55,10 +57,60 @@ fn serves_batched_requests_correctly() {
     // trained model is ~91-92% accurate; 40 draws leave slack
     assert!(hits >= 30, "only {hits}/{n} correct");
 
-    let served = server.metrics.served.load(std::sync::atomic::Ordering::Relaxed);
-    let batches = server.metrics.batches.load(std::sync::atomic::Ordering::Relaxed);
-    assert_eq!(served, n as u64);
+    assert_eq!(server.metrics.served(), n as u64);
+    let batches = server.metrics.batches();
     assert!(batches < n as u64, "no batching happened ({batches} batches for {n} reqs)");
+    // join first so the counters are settled, then assert that every
+    // executed batch after the first reused the cached plan
+    let metrics = server.metrics.clone();
+    server.shutdown();
+    assert_eq!(
+        metrics.plan_hits() + metrics.plan_misses(),
+        metrics.batches(),
+        "one plan lookup per executed batch: {}",
+        metrics.summary()
+    );
+    // exec sizes come from compiled {1, 8}, uncongested -> at most two
+    // distinct plan keys ever get built; everything else is a cache hit
+    assert!(
+        metrics.plan_misses() <= 2,
+        "steady-state batches must reuse cached placement plans: {}",
+        metrics.summary()
+    );
+}
+
+#[test]
+fn pool_of_two_workers_serves_real_artifacts() {
+    let probe = ArtifactStore::open(artifact_dir()).unwrap();
+    let ts = TestSet::load(probe.root.join("testset.bin")).unwrap();
+    let env = make_env(&probe);
+    let placement = StaticAllFpga.placement(&env, false);
+    drop(probe);
+
+    let server = Server::start_pool(
+        2,
+        artifact_dir(),
+        make_env,
+        Arc::new(FixedPlacement { placement }),
+        BatchConfig { max_wait: Duration::from_millis(5), max_batch: 8 },
+    )
+    .unwrap();
+
+    let n = 32;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let img = ts.decode_batch(i, 1).unwrap();
+        rxs.push((i, server.handle.submit(img).unwrap()));
+    }
+    let mut hits = 0;
+    for (i, rx) in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(resp.worker < 2);
+        hits += (resp.class == ts.labels[i] as usize) as usize;
+    }
+    assert!(hits >= 24, "only {hits}/{n} correct");
+    assert_eq!(server.metrics.served(), n as u64);
+    assert_eq!(server.metrics.errors(), 0);
     server.shutdown();
 }
 

@@ -11,8 +11,8 @@
 
 use aifa::accel::{gemm_cycles, gemm_shape, AccelConfig, GemmShape};
 use aifa::agent::{
-    EnvConfig, GreedyStep, IntensityHeuristic, Policy, QAgent, QConfig, SchedulingEnv,
-    StaticAllFpga,
+    CongestionLevel, EnvConfig, GreedyStep, IntensityHeuristic, Policy, QAgent, QConfig,
+    SchedulingEnv, StaticAllFpga,
 };
 use aifa::dma::{double_buffered, single_buffered, Link};
 use aifa::graph::Network;
@@ -70,24 +70,25 @@ fn policy_ablation() -> Table {
             EnvConfig { congestion_p, ..EnvConfig::default() },
         )
     };
-    let mut t = Table::new(&["policy", "latency free (ms)", "latency congested (ms)"]);
+    let mut t = Table::new(&[
+        "policy",
+        "latency free (ms)",
+        "latency shared (ms)",
+        "latency saturated (ms)",
+    ]);
     let env = mk(0.0);
     let env_busy = mk(1.0);
-    let eval = |p: &dyn Policy| {
-        (
-            env.placement_latency_s(&p.placement(&env, false)),
-            // congested latency: same policy decisions but the fabric is busy
-            {
-                let placement = p.placement(&env_busy, true);
-                let mut s = env_busy.initial_state(true);
-                let mut total = 0.0;
-                for &pl in &placement {
-                    total += env_busy.step_cost_s(&s, pl);
-                    s = aifa::agent::State { unit: s.unit + 1, prev: pl, congestion: 1 };
-                }
-                total
-            },
-        )
+    // latency of a policy's placement when the whole request runs at
+    // `level` (the per-level plans the serving arbiter switches between)
+    let lat_at = |p: &dyn Policy, level: CongestionLevel| {
+        let placement = p.placement(&env_busy, level);
+        let mut s = env_busy.initial_state(level);
+        let mut total = 0.0;
+        for &pl in &placement {
+            total += env_busy.step_cost_s(&s, pl);
+            s = aifa::agent::State { unit: s.unit + 1, prev: pl, congestion: level };
+        }
+        total
     };
     let (o, _) = env.oracle_placement();
     let oracle_pol = aifa::agent::FixedPlacement { placement: o };
@@ -97,33 +98,32 @@ fn policy_ablation() -> Table {
         &IntensityHeuristic::default(),
         &GreedyStep,
     ] {
-        let (free, busy) = eval(p);
         t.row(&[
             p.name().into(),
-            format!("{:.3}", free * 1e3),
-            format!("{:.3}", busy * 1e3),
+            format!("{:.3}", env.placement_latency_s(&p.placement(&env, CongestionLevel::Free)) * 1e3),
+            format!("{:.3}", lat_at(p, CongestionLevel::Shared) * 1e3),
+            format!("{:.3}", lat_at(p, CongestionLevel::Saturated) * 1e3),
         ]);
     }
-    // the learned agent, trained WITH congestion in the mix, adapts:
+    // the learned agent, trained WITH congestion in the mix, adapts per level:
     let env_mixed = mk(0.5);
     let mut agent = QAgent::new(QConfig::default(), 42);
     agent.train(&env_mixed, 800);
-    let free_pol = agent.policy(&env_mixed, false);
-    let busy_pol = agent.policy(&env_mixed, true);
-    let free = env.placement_latency_s(&free_pol);
-    let busy = {
-        let mut s = env_busy.initial_state(true);
+    let level_lat = |level: CongestionLevel| {
+        let pol = agent.policy(&env_mixed, level);
+        let mut s = env_busy.initial_state(level);
         let mut total = 0.0;
-        for &pl in &busy_pol {
+        for &pl in &pol {
             total += env_busy.step_cost_s(&s, pl);
-            s = aifa::agent::State { unit: s.unit + 1, prev: pl, congestion: 1 };
+            s = aifa::agent::State { unit: s.unit + 1, prev: pl, congestion: level };
         }
         total
     };
     t.row(&[
         "q-agent (congestion-aware)".into(),
-        format!("{:.3}", free * 1e3),
-        format!("{:.3}", busy * 1e3),
+        format!("{:.3}", env.placement_latency_s(&agent.policy(&env_mixed, CongestionLevel::Free)) * 1e3),
+        format!("{:.3}", level_lat(CongestionLevel::Shared) * 1e3),
+        format!("{:.3}", level_lat(CongestionLevel::Saturated) * 1e3),
     ]);
     t
 }

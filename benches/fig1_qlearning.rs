@@ -6,8 +6,8 @@
 //!     cargo bench --bench fig1_qlearning
 
 use aifa::agent::{
-    AllCpu, EnvConfig, GreedyStep, IntensityHeuristic, Policy, QAgent, QConfig, SchedulingEnv,
-    StaticAllFpga,
+    AllCpu, CongestionLevel, EnvConfig, GreedyStep, IntensityHeuristic, Policy, QAgent, QConfig,
+    SchedulingEnv, StaticAllFpga,
 };
 use aifa::graph::Network;
 use aifa::platform::{CpuModel, FpgaPlatform};
@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
             latency[b] += s.latency_s / (bucket * seeds.len()) as f64;
             eps[b] += s.epsilon / (bucket * seeds.len()) as f64;
         }
-        final_lat += env.placement_latency_s(&agent.policy(&env, false)) / seeds.len() as f64;
+        final_lat += env.placement_latency_s(&agent.policy(&env, CongestionLevel::Free)) / seeds.len() as f64;
     }
 
     let mut curve_t = Table::new(&["episodes", "mean reward", "mean latency (ms)", "ε"]);
@@ -69,17 +69,17 @@ fn main() -> anyhow::Result<()> {
     add("q-agent (learned, 5-seed mean)", final_lat);
     add(
         "static-all-fpga",
-        env.placement_latency_s(&StaticAllFpga.placement(&env, false)),
+        env.placement_latency_s(&StaticAllFpga.placement(&env, CongestionLevel::Free)),
     );
     add(
         "intensity-heuristic",
-        env.placement_latency_s(&IntensityHeuristic::default().placement(&env, false)),
+        env.placement_latency_s(&IntensityHeuristic::default().placement(&env, CongestionLevel::Free)),
     );
     add(
         "greedy-step",
-        env.placement_latency_s(&GreedyStep.placement(&env, false)),
+        env.placement_latency_s(&GreedyStep.placement(&env, CongestionLevel::Free)),
     );
-    add("all-cpu", env.placement_latency_s(&AllCpu.placement(&env, false)));
+    add("all-cpu", env.placement_latency_s(&AllCpu.placement(&env, CongestionLevel::Free)));
     println!("== converged policies ==");
     println!("{}", pol_t.to_markdown());
     println!("oracle placement: {oracle_placement:?}");

@@ -5,7 +5,7 @@
 //!     cargo run --release --example quickstart
 
 use aifa::accel::AccelConfig;
-use aifa::agent::{EnvConfig, FixedPlacement, QAgent, QConfig, SchedulingEnv};
+use aifa::agent::{CongestionLevel, EnvConfig, FixedPlacement, QAgent, QConfig, SchedulingEnv};
 use aifa::coordinator::Coordinator;
 use aifa::data::TestSet;
 use aifa::platform::{CpuModel, FpgaPlatform};
@@ -39,7 +39,7 @@ fn main() -> Result<()> {
     );
     let mut agent = QAgent::new(QConfig::default(), 42);
     agent.train(&env, 300);
-    let placement = agent.policy(&env, false);
+    let placement = agent.policy(&env, CongestionLevel::Free);
     println!("\n-- learned placement --");
     for (u, p) in env.net.units.iter().zip(&placement) {
         println!("  {:8} -> {:?}", u.name, p);
@@ -48,7 +48,7 @@ fn main() -> Result<()> {
     // 4. Serve a few classifications through the learned placement.
     let coord = Coordinator::new(&store, env)?;
     let policy = FixedPlacement { placement };
-    let res = coord.infer(&imgs, 8, &policy, false)?;
+    let res = coord.infer(&imgs, 8, &policy, CongestionLevel::Free)?;
     let preds = argmax_rows(&res.logits, res.classes);
     println!("\n-- classifications (first 8 test images) --");
     for (i, (p, l)) in preds.iter().zip(ts.label_slice(0, 8)).enumerate() {

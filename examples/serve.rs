@@ -4,56 +4,63 @@
 //! throughput, accuracy, and simulated power/energy — the serving-paper
 //! deliverable.  The run is recorded in EXPERIMENTS.md.
 //!
-//!     cargo run --release --example serve -- [n_images] [rate_per_s]
+//!     cargo run --release --example serve -- [n_images] [rate_per_s] [workers]
 
-use aifa::agent::{EnvConfig, FixedPlacement, QAgent, QConfig, SchedulingEnv};
+use aifa::agent::{CongestionLevel, EnvConfig, LevelPlacements, QAgent, QConfig, SchedulingEnv};
 use aifa::data::TestSet;
 use aifa::platform::{CpuModel, FpgaPlatform};
 use aifa::power::PowerModel;
-use aifa::server::{BatchConfig, Server};
+use aifa::server::{ArbiterConfig, BatchConfig, FabricArbiter, Server};
 use aifa::util::rng::Rng;
 use aifa::util::stats::Samples;
 use aifa::util::Stopwatch;
 use anyhow::Result;
+use std::sync::Arc;
 use std::time::Duration;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(2000);
     let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(400.0);
+    let workers: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(2);
     let dir = std::path::PathBuf::from("artifacts");
 
-    println!("== aifa serving driver: {n} requests @ {rate}/s ==");
+    println!("== aifa serving driver: {n} requests @ {rate}/s, {workers} workers ==");
 
-    // Train the scheduler up front (placement is frozen into the server).
+    // Train the scheduler up front (placement is frozen into the server;
+    // congestion is NOT — the shared arbiter feeds it per batch).
     let probe = aifa::runtime::ArtifactStore::open(&dir)?;
     let ts = TestSet::load(probe.root.join("testset.bin"))?;
     let env = SchedulingEnv::new(
         probe.network.clone(),
         FpgaPlatform::table1_card(),
         CpuModel::default(),
-        EnvConfig { batch: 8, ..EnvConfig::default() },
+        // contention in the training mix so every level's policy is learned
+        EnvConfig { batch: 8, congestion_p: 0.5, ..EnvConfig::default() },
     );
     let mut agent = QAgent::new(QConfig::default(), 42);
-    agent.train(&env, 300);
-    let placement = agent.policy(&env, false);
-    println!("learned placement: {placement:?}");
-    drop(probe); // the server builds its own store (PJRT is thread-local)
+    agent.train(&env, 600);
+    let policy = LevelPlacements::extract(|level| agent.policy(&env, level));
+    for level in CongestionLevel::ALL {
+        println!("learned placement [{level}]: {:?}", policy.by_level[level.index()]);
+    }
+    drop(probe); // workers build their own stores (PJRT is thread-local)
 
-    let server = Server::start(
+    let arbiter = FabricArbiter::new(ArbiterConfig::for_workers(workers));
+    let server = Server::start_pool_with(
+        workers,
         dir,
-        {
-            move |store| {
-                SchedulingEnv::new(
-                    store.network.clone(),
-                    FpgaPlatform::table1_card(),
-                    CpuModel::default(),
-                    EnvConfig { batch: 8, ..EnvConfig::default() },
-                )
-            }
+        move |store| {
+            SchedulingEnv::new(
+                store.network.clone(),
+                FpgaPlatform::table1_card(),
+                CpuModel::default(),
+                EnvConfig { batch: 8, ..EnvConfig::default() },
+            )
         },
-        Box::new(FixedPlacement { placement }),
+        Arc::new(policy),
         BatchConfig { max_wait: Duration::from_millis(4), max_batch: 8 },
+        arbiter.clone(),
     )?;
 
     // Replay the test set as Poisson arrivals.
@@ -67,13 +74,15 @@ fn main() -> Result<()> {
         std::thread::sleep(Duration::from_secs_f64(gap.min(0.050)));
     }
 
-    // Collect responses + accuracy.
+    // Collect responses + accuracy + arbitration telemetry.
     let mut hits = 0usize;
     let mut sim_batch = Samples::new();
+    let mut level_seen = [0u64; 3];
     for (idx, rx) in pending {
         let resp = rx.recv()?;
         hits += (resp.class == ts.labels[idx] as usize) as usize;
         sim_batch.push(resp.sim_batch_s);
+        level_seen[resp.congestion.index()] += 1;
     }
     let wall = sw.secs();
     let m = &server.metrics;
@@ -81,6 +90,14 @@ fn main() -> Result<()> {
     println!("{}", m.summary());
     println!("accuracy (mixed int8/fp32 placement): {:.4}", hits as f64 / n as f64);
     println!("offered rate {rate}/s, achieved {:.1}/s over {wall:.1}s wall", n as f64 / wall);
+    println!(
+        "arbitration: responses free={} shared={} saturated={}, peak in-flight leases={}, plan generation={}",
+        level_seen[0],
+        level_seen[1],
+        level_seen[2],
+        arbiter.peak_inflight(),
+        m.plan_generation()
+    );
 
     // Simulated platform economics (the Table I quantities for this run).
     let fpga_power = PowerModel::fpga_card();

@@ -5,12 +5,87 @@
 //!
 //! The state the paper's agent observes is "the runtime performance
 //! characteristics of both the AI model and hardware platform"; we encode
-//! it as (unit index, previous placement, FPGA congestion bucket) — the
-//! previous placement is what lets the agent discover that *contiguous*
-//! offload segments avoid host-link round-trips.
+//! it as (unit index, previous placement, quantized fabric congestion) —
+//! the previous placement is what lets the agent discover that
+//! *contiguous* offload segments avoid host-link round-trips, and the
+//! [`CongestionLevel`] is the same three-way signal the serving pool's
+//! fabric arbiter publishes at runtime.
 
 use crate::graph::Network;
 use crate::platform::{CpuModel, FpgaPlatform, Placement};
+use std::fmt;
+
+/// Quantized fabric contention, shared by every layer of the stack: the
+/// scheduling MDP observes it, placement plans are keyed on it, and the
+/// serving pool's `FabricArbiter` derives it per batch from live leases.
+///
+/// Ordered: `Free < Shared < Saturated`, so arbitration signals combine
+/// with `max`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum CongestionLevel {
+    /// Sole tenant: the fabric runs at full effective throughput.
+    #[default]
+    Free,
+    /// Time-shared with other in-flight work; moderate slowdown.
+    Shared,
+    /// Oversubscribed (every slot leased / DMA budget exceeded / fabric
+    /// nearly full); worst-case slowdown.
+    Saturated,
+}
+
+impl CongestionLevel {
+    pub const ALL: [CongestionLevel; 3] =
+        [CongestionLevel::Free, CongestionLevel::Shared, CongestionLevel::Saturated];
+
+    /// Dense index for per-level counters (0..3).
+    pub fn index(self) -> usize {
+        match self {
+            CongestionLevel::Free => 0,
+            CongestionLevel::Shared => 1,
+            CongestionLevel::Saturated => 2,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CongestionLevel::Free => "free",
+            CongestionLevel::Shared => "shared",
+            CongestionLevel::Saturated => "saturated",
+        }
+    }
+
+    /// One level worse (saturates at `Saturated`) — how the arbiter folds
+    /// an exceeded DMA budget into a lease-count-derived level.
+    pub fn escalate(self) -> CongestionLevel {
+        match self {
+            CongestionLevel::Free => CongestionLevel::Shared,
+            _ => CongestionLevel::Saturated,
+        }
+    }
+}
+
+impl fmt::Display for CongestionLevel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Epoch-versioned snapshot of the shared fabric, as observed by one
+/// batch: the quantized contention level plus the reconfiguration
+/// generation.  Plans built under one generation are invalid after a
+/// fabric reconfiguration or an online policy retrain bumps it — the
+/// plan cache compares generations and rebuilds stale entries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FabricState {
+    pub level: CongestionLevel,
+    pub generation: u64,
+}
+
+impl FabricState {
+    pub fn new(level: CongestionLevel, generation: u64) -> FabricState {
+        FabricState { level, generation }
+    }
+}
 
 /// Discrete environment state.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -19,9 +94,9 @@ pub struct State {
     pub unit: usize,
     /// Where the activations currently live.
     pub prev: Placement,
-    /// FPGA contention bucket (0 = free, 1 = busy) — exercised by the
-    /// multi-tenant scenario where another workload holds the fabric.
-    pub congestion: u8,
+    /// Quantized fabric contention — exercised by the multi-tenant
+    /// scenario where other workloads time-share the fabric.
+    pub congestion: CongestionLevel,
 }
 
 /// Agent actions, one per unit (Fig 1: "action a = offload decision").
@@ -33,10 +108,13 @@ pub struct EnvConfig {
     pub batch: usize,
     /// Energy weight λ in the reward (J -> s conversion).
     pub energy_lambda: f64,
-    /// Probability the fabric is busy when an episode starts (multi-tenant).
+    /// Probability the fabric is busy when an episode starts (multi-tenant);
+    /// busy episodes split evenly between `Shared` and `Saturated`.
     pub congestion_p: f64,
-    /// Latency multiplier while congested (time-sharing the fabric).
-    pub congestion_slowdown: f64,
+    /// Latency multiplier while time-sharing the fabric with other work.
+    pub shared_slowdown: f64,
+    /// Latency multiplier when the fabric is oversubscribed.
+    pub saturated_slowdown: f64,
     /// Reward scale: rewards are -cost_s * scale (keeps Q magnitudes O(1)).
     pub reward_scale: f64,
 }
@@ -47,8 +125,20 @@ impl Default for EnvConfig {
             batch: 1,
             energy_lambda: 0.005,
             congestion_p: 0.0,
-            congestion_slowdown: 2.0,
+            shared_slowdown: 1.5,
+            saturated_slowdown: 3.0,
             reward_scale: 100.0,
+        }
+    }
+}
+
+impl EnvConfig {
+    /// Effective-latency multiplier for FPGA work under `level`.
+    pub fn slowdown(&self, level: CongestionLevel) -> f64 {
+        match level {
+            CongestionLevel::Free => 1.0,
+            CongestionLevel::Shared => self.shared_slowdown,
+            CongestionLevel::Saturated => self.saturated_slowdown,
         }
     }
 }
@@ -66,8 +156,8 @@ impl SchedulingEnv {
         SchedulingEnv { net, fpga, cpu, cfg }
     }
 
-    pub fn initial_state(&self, congested: bool) -> State {
-        State { unit: 0, prev: Placement::Cpu, congestion: congested as u8 }
+    pub fn initial_state(&self, level: CongestionLevel) -> State {
+        State { unit: 0, prev: Placement::Cpu, congestion: level }
     }
 
     pub fn n_units(&self) -> usize {
@@ -96,11 +186,7 @@ impl SchedulingEnv {
                 if s.prev != Placement::Fpga {
                     t += self.fpga.invoke_s + self.fpga.link.transfer_s(u.in_bytes(b));
                 }
-                let mut eff = self.fpga.unit_effective_s(u, b);
-                if s.congestion == 1 {
-                    eff *= self.cfg.congestion_slowdown;
-                }
-                t += eff;
+                t += self.fpga.unit_effective_s(u, b) * self.cfg.slowdown(s.congestion);
             }
         }
         // terminal drain: last unit's results return to the host
@@ -146,7 +232,7 @@ impl SchedulingEnv {
             for r in 0..2 {
                 let prev = if r == 0 { Placement::Cpu } else { Placement::Fpga };
                 for &a in &ACTIONS {
-                    let s = State { unit: i, prev, congestion: 0 };
+                    let s = State { unit: i, prev, congestion: CongestionLevel::Free };
                     let c = self.step_cost_s(&s, a);
                     let nr = matches!(a, Placement::Fpga) as usize;
                     let total = c + dp[i + 1][nr];
@@ -191,11 +277,11 @@ mod tests {
                 .map(|i| if i < 3 { Placement::Cpu } else { Placement::Fpga })
                 .collect::<Vec<_>>(),
         ] {
-            let mut s = e.initial_state(false);
+            let mut s = e.initial_state(CongestionLevel::Free);
             let mut sum = 0.0;
             for &p in &placement {
                 sum += e.step_cost_s(&s, p);
-                s = State { unit: s.unit + 1, prev: p, congestion: 0 };
+                s = State { unit: s.unit + 1, prev: p, congestion: CongestionLevel::Free };
             }
             let tl = e.placement_latency_s(&placement);
             assert!(
@@ -230,26 +316,41 @@ mod tests {
     }
 
     #[test]
-    fn congestion_increases_fpga_cost() {
+    fn congestion_levels_order_fpga_cost() {
         let e = SchedulingEnv::new(
             Network::paper_scale(),
             FpgaPlatform::table1_card(),
             CpuModel::default(),
             EnvConfig { congestion_p: 1.0, ..EnvConfig::default() },
         );
-        let s_free = e.initial_state(false);
-        let s_busy = e.initial_state(true);
+        let s_free = e.initial_state(CongestionLevel::Free);
+        let s_shared = e.initial_state(CongestionLevel::Shared);
+        let s_sat = e.initial_state(CongestionLevel::Saturated);
         let free = e.step_cost_s(&s_free, Placement::Fpga);
-        let busy = e.step_cost_s(&s_busy, Placement::Fpga);
-        assert!(busy > free);
-        // CPU cost unaffected
-        assert_eq!(e.step_cost_s(&s_free, Placement::Cpu), e.step_cost_s(&s_busy, Placement::Cpu));
+        let shared = e.step_cost_s(&s_shared, Placement::Fpga);
+        let sat = e.step_cost_s(&s_sat, Placement::Fpga);
+        assert!(free < shared && shared < sat, "{free} / {shared} / {sat}");
+        // CPU cost unaffected by fabric contention
+        assert_eq!(e.step_cost_s(&s_free, Placement::Cpu), e.step_cost_s(&s_sat, Placement::Cpu));
+    }
+
+    #[test]
+    fn levels_are_ordered_and_escalate() {
+        use CongestionLevel::*;
+        assert!(Free < Shared && Shared < Saturated);
+        assert_eq!(Free.escalate(), Shared);
+        assert_eq!(Shared.escalate(), Saturated);
+        assert_eq!(Saturated.escalate(), Saturated);
+        assert_eq!(Free.max(Saturated), Saturated);
+        for (i, l) in CongestionLevel::ALL.iter().enumerate() {
+            assert_eq!(l.index(), i);
+        }
     }
 
     #[test]
     fn rewards_are_negative_costs() {
         let e = env();
-        let s = e.initial_state(false);
+        let s = e.initial_state(CongestionLevel::Free);
         let (next, r) = e.step(&s, Placement::Fpga);
         assert!(r < 0.0);
         assert_eq!(next.unit, 1);

@@ -11,8 +11,9 @@ pub mod env;
 pub mod policy;
 pub mod qlearn;
 
-pub use env::{EnvConfig, SchedulingEnv, State};
+pub use env::{CongestionLevel, EnvConfig, FabricState, SchedulingEnv, State};
 pub use policy::{
-    AllCpu, DecisionTrace, FixedPlacement, GreedyStep, IntensityHeuristic, Policy, StaticAllFpga,
+    AllCpu, DecisionTrace, FixedPlacement, GreedyStep, IntensityHeuristic, LevelPlacements, Policy,
+    StaticAllFpga,
 };
 pub use qlearn::{EpisodeStats, QAgent, QConfig};

@@ -4,7 +4,7 @@
 //! thumb, without learning).  The ablation bench compares these against
 //! the Q-agent and the DP oracle.
 
-use super::env::{SchedulingEnv, State};
+use super::env::{CongestionLevel, SchedulingEnv, State};
 use crate::platform::Placement;
 
 /// Full decision trace of one policy walk: the placement plus each step's
@@ -33,9 +33,9 @@ pub trait Policy {
     fn name(&self) -> &'static str;
     fn decide(&self, env: &SchedulingEnv, s: &State) -> Placement;
 
-    /// Schedule the full network.
-    fn placement(&self, env: &SchedulingEnv, congested: bool) -> Vec<Placement> {
-        let mut s = env.initial_state(congested);
+    /// Schedule the full network under the given fabric contention.
+    fn placement(&self, env: &SchedulingEnv, level: CongestionLevel) -> Vec<Placement> {
+        let mut s = env.initial_state(level);
         let mut out = Vec::with_capacity(env.n_units());
         while !env.is_terminal(&s) {
             let p = self.decide(env, &s);
@@ -50,14 +50,14 @@ pub trait Policy {
     /// Caching the result is sound only for deterministic policies; every
     /// serving policy in this module is (exploration lives in the trainer,
     /// not in the deployed policy).
-    fn trace(&self, env: &SchedulingEnv, congested: bool) -> DecisionTrace {
+    fn trace(&self, env: &SchedulingEnv, level: CongestionLevel) -> DecisionTrace {
         let n = env.n_units();
         let mut t = DecisionTrace {
             placement: Vec::with_capacity(n),
             step_costs_s: Vec::with_capacity(n),
             step_energy_j: Vec::with_capacity(n),
         };
-        let mut s = env.initial_state(congested);
+        let mut s = env.initial_state(level);
         while !env.is_terminal(&s) {
             let p = self.decide(env, &s);
             t.placement.push(p);
@@ -141,6 +141,43 @@ impl Policy for FixedPlacement {
     }
 }
 
+/// One frozen placement vector **per congestion level** — the serving
+/// form of a congestion-conditioned Q-policy.  The fabric arbiter's
+/// level selects which vector replays, so a pool under contention
+/// actually changes placement instead of just repricing the same one.
+/// Indexed by [`CongestionLevel::index`]; deterministic per state, so
+/// plan-caching it per level is sound.
+pub struct LevelPlacements {
+    pub by_level: [Vec<Placement>; 3],
+}
+
+impl LevelPlacements {
+    /// Extract the greedy placement for every level from a policy source
+    /// (e.g. `|level| agent.policy(&env, level)`).
+    pub fn extract(mut policy_for: impl FnMut(CongestionLevel) -> Vec<Placement>) -> LevelPlacements {
+        LevelPlacements {
+            by_level: [
+                policy_for(CongestionLevel::Free),
+                policy_for(CongestionLevel::Shared),
+                policy_for(CongestionLevel::Saturated),
+            ],
+        }
+    }
+}
+
+impl Policy for LevelPlacements {
+    fn name(&self) -> &'static str {
+        "level-placements"
+    }
+
+    fn decide(&self, _env: &SchedulingEnv, s: &State) -> Placement {
+        self.by_level[s.congestion.index()]
+            .get(s.unit)
+            .copied()
+            .unwrap_or(Placement::Cpu)
+    }
+}
+
 /// Greedy *myopic cost* policy: pick whichever device is cheaper for this
 /// single step (ignores downstream residency effects).
 pub struct GreedyStep;
@@ -179,15 +216,17 @@ mod tests {
     fn policies_produce_full_placements() {
         let e = env();
         for p in [&StaticAllFpga as &dyn Policy, &AllCpu, &IntensityHeuristic::default(), &GreedyStep] {
-            let placement = p.placement(&e, false);
-            assert_eq!(placement.len(), e.n_units(), "{}", p.name());
+            for level in CongestionLevel::ALL {
+                let placement = p.placement(&e, level);
+                assert_eq!(placement.len(), e.n_units(), "{} @ {level}", p.name());
+            }
         }
     }
 
     #[test]
     fn heuristic_offloads_convs_keeps_pools() {
         let e = env();
-        let placement = IntensityHeuristic::default().placement(&e, false);
+        let placement = IntensityHeuristic::default().placement(&e, CongestionLevel::Free);
         // the 512-channel stage is extremely intense -> FPGA
         assert_eq!(placement[8], Placement::Fpga);
         // GAP has ~zero intensity -> CPU under the myopic rule
@@ -199,7 +238,7 @@ mod tests {
         let e = env();
         let (_, oracle) = e.oracle_placement();
         for p in [&StaticAllFpga as &dyn Policy, &AllCpu, &IntensityHeuristic::default(), &GreedyStep] {
-            let cost = e.placement_latency_s(&p.placement(&e, false));
+            let cost = e.placement_latency_s(&p.placement(&e, CongestionLevel::Free));
             assert!(oracle <= cost + 1e-12, "oracle {oracle} vs {} {cost}", p.name());
         }
     }
@@ -208,8 +247,8 @@ mod tests {
     fn trace_matches_placement_and_timeline() {
         let e = env();
         for p in [&StaticAllFpga as &dyn Policy, &AllCpu, &GreedyStep] {
-            let tr = p.trace(&e, false);
-            assert_eq!(tr.placement, p.placement(&e, false), "{}", p.name());
+            let tr = p.trace(&e, CongestionLevel::Free);
+            assert_eq!(tr.placement, p.placement(&e, CongestionLevel::Free), "{}", p.name());
             assert_eq!(tr.step_costs_s.len(), e.n_units());
             assert_eq!(tr.step_energy_j.len(), e.n_units());
             // step costs sum to the timeline total (same decomposition)
@@ -220,11 +259,37 @@ mod tests {
     }
 
     #[test]
+    fn level_placements_switch_on_congestion() {
+        let e = env();
+        let n = e.n_units();
+        let pol = LevelPlacements {
+            by_level: [
+                vec![Placement::Fpga; n],
+                {
+                    let mut v = vec![Placement::Fpga; n];
+                    v[0] = Placement::Cpu;
+                    v
+                },
+                vec![Placement::Cpu; n],
+            ],
+        };
+        assert_eq!(pol.placement(&e, CongestionLevel::Free), vec![Placement::Fpga; n]);
+        assert_eq!(pol.placement(&e, CongestionLevel::Saturated), vec![Placement::Cpu; n]);
+        let shared = pol.placement(&e, CongestionLevel::Shared);
+        assert_eq!(shared[0], Placement::Cpu);
+        assert!(shared[1..].iter().all(|p| *p == Placement::Fpga));
+        // the trace walked for a level replays that level's vector
+        let tr = pol.trace(&e, CongestionLevel::Saturated);
+        assert_eq!(tr.placement, vec![Placement::Cpu; n]);
+    }
+
+    #[test]
     fn myopic_heuristic_pays_for_round_trips() {
         // On the paper-scale net the heuristic strands GAP/head on CPU,
         // paying a link round-trip the oracle avoids or exploits better.
         let e = env();
-        let h = e.placement_latency_s(&IntensityHeuristic::default().placement(&e, false));
+        let h =
+            e.placement_latency_s(&IntensityHeuristic::default().placement(&e, CongestionLevel::Free));
         let (_, oracle) = e.oracle_placement();
         assert!(h > oracle, "heuristic {h} should trail oracle {oracle}");
     }

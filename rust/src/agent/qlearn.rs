@@ -6,7 +6,7 @@
 //!   trick Fig 1 highlights;
 //! * actions are ε-greedy on `Q_A` with multiplicative ε decay.
 
-use super::env::{SchedulingEnv, State, ACTIONS};
+use super::env::{CongestionLevel, SchedulingEnv, State, ACTIONS};
 use crate::platform::Placement;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
@@ -124,8 +124,8 @@ impl QAgent {
     }
 
     /// Run one episode (schedule the whole network once), learning online.
-    pub fn run_episode(&mut self, env: &SchedulingEnv, congested: bool) -> (Vec<Placement>, f64) {
-        let mut s = env.initial_state(congested);
+    pub fn run_episode(&mut self, env: &SchedulingEnv, level: CongestionLevel) -> (Vec<Placement>, f64) {
+        let mut s = env.initial_state(level);
         let mut placement = Vec::with_capacity(env.n_units());
         let mut total_r = 0.0;
         while !env.is_terminal(&s) {
@@ -146,9 +146,19 @@ impl QAgent {
         let mut curve = Vec::with_capacity(episodes);
         let mut rng = self.rng.fork();
         for ep in 0..episodes {
-            let congested = rng.chance(env.cfg.congestion_p);
+            // multi-tenant mix: busy episodes split between the two
+            // non-free levels so the agent learns a policy per level
+            let level = if rng.chance(env.cfg.congestion_p) {
+                if rng.chance(0.5) {
+                    CongestionLevel::Saturated
+                } else {
+                    CongestionLevel::Shared
+                }
+            } else {
+                CongestionLevel::Free
+            };
             let eps_before = self.epsilon;
-            let (placement, total_r) = self.run_episode(env, congested);
+            let (placement, total_r) = self.run_episode(env, level);
             curve.push(EpisodeStats {
                 episode: ep,
                 total_reward: total_r,
@@ -159,9 +169,9 @@ impl QAgent {
         curve
     }
 
-    /// The converged (greedy) placement.
-    pub fn policy(&self, env: &SchedulingEnv, congested: bool) -> Vec<Placement> {
-        let mut s = env.initial_state(congested);
+    /// The converged (greedy) placement for one contention level.
+    pub fn policy(&self, env: &SchedulingEnv, level: CongestionLevel) -> Vec<Placement> {
+        let mut s = env.initial_state(level);
         let mut placement = Vec::with_capacity(env.n_units());
         while !env.is_terminal(&s) {
             let a = self.greedy(&s);
@@ -197,7 +207,7 @@ mod tests {
         let e = env();
         let mut agent = QAgent::new(QConfig::default(), 42);
         agent.train(&e, 400);
-        let learned = agent.policy(&e, false);
+        let learned = agent.policy(&e, CongestionLevel::Free);
         let (_, oracle_cost) = e.oracle_placement();
         let learned_cost = e.placement_latency_s(&learned);
         // within 10% of the DP optimum after 400 episodes
@@ -241,10 +251,11 @@ mod tests {
 
     #[test]
     fn q_table_stays_small() {
-        // state space = units x residency x congestion; table must not blow up
+        // state space = units x residency x congestion level x actions;
+        // the table must not blow up past it
         let e = env();
         let mut agent = QAgent::new(QConfig::default(), 3);
         agent.train(&e, 200);
-        assert!(agent.q_table_size() <= e.n_units() * 2 * 2 * 2);
+        assert!(agent.q_table_size() <= e.n_units() * 2 * 3 * 2);
     }
 }

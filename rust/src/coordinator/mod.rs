@@ -8,12 +8,16 @@
 //! decision.  Results carry both real logits and the simulated timeline.
 //!
 //! Serving hot path: policies are deterministic, so the full per-unit
-//! decision trace for a `(policy, batch, congested)` key never changes
-//! between requests.  [`PlanCache`] memoizes that trace as a [`PlacementPlan`]
-//! (placement + precomputed artifact names + per-unit sim cost/energy);
-//! steady-state [`Coordinator::infer_cached`] does zero policy walks and
-//! zero `format!` calls, and activations move through a ping/pong buffer
-//! pair so the only per-unit allocation left is the output copy the XLA
+//! decision trace for a `(policy, batch, congestion level)` key never
+//! changes between requests *within one fabric generation*.  [`PlanCache`]
+//! memoizes that trace as a [`PlacementPlan`] (placement + precomputed
+//! artifact names + per-unit sim cost/energy) and is epoch-versioned: the
+//! serving pool's fabric arbiter bumps a generation on fabric
+//! reconfiguration or online policy retrain, and the cache drops every
+//! stale plan the first time it sees the new generation.  Steady-state
+//! [`Coordinator::infer_cached`] does zero policy walks and zero
+//! `format!` calls, and activations move through a ping/pong buffer pair
+//! so the only per-unit allocation left is the output copy the XLA
 //! literal boundary itself produces.
 //!
 //! The coordinator is generic over how it holds the [`ArtifactStore`]:
@@ -21,7 +25,7 @@
 //! owned (`Coordinator::new(store, env)`, how a serving-pool worker keeps
 //! store + coordinator together in one engine).
 
-use crate::agent::{Policy, SchedulingEnv};
+use crate::agent::{CongestionLevel, FabricState, Policy, SchedulingEnv};
 use crate::platform::Placement;
 use crate::runtime::{unit_artifact_name, ArtifactStore};
 use anyhow::{anyhow, Result};
@@ -49,13 +53,17 @@ pub struct InferenceResult {
     pub unit_times_s: Vec<f64>,
 }
 
-/// A memoized serving decision for one `(batch, congested)` key: the full
-/// placement trace with artifact names and per-unit simulated cost/energy
-/// precomputed, so replaying it costs no policy walk and no string work.
+/// A memoized serving decision for one `(batch, congestion level)` key:
+/// the full placement trace with artifact names and per-unit simulated
+/// cost/energy precomputed, so replaying it costs no policy walk and no
+/// string work.  `generation` stamps the fabric epoch the plan was built
+/// under; the cache rebuilds plans whose generation has passed.
 #[derive(Debug)]
 pub struct PlacementPlan {
     pub batch: usize,
-    pub congested: bool,
+    pub level: CongestionLevel,
+    /// Fabric epoch this plan was built under (0 for ad-hoc builds).
+    pub generation: u64,
     pub placement: Vec<Placement>,
     /// Per-unit artifact names (precision follows the placement).
     pub artifacts: Vec<String>,
@@ -71,9 +79,9 @@ impl PlacementPlan {
         env: &SchedulingEnv,
         policy: &dyn Policy,
         batch: usize,
-        congested: bool,
+        level: CongestionLevel,
     ) -> PlacementPlan {
-        let tr = policy.trace(env, congested);
+        let tr = policy.trace(env, level);
         let artifacts = env
             .net
             .units
@@ -89,7 +97,8 @@ impl PlacementPlan {
             .collect();
         PlacementPlan {
             batch,
-            congested,
+            level,
+            generation: 0,
             placement: tr.placement,
             artifacts,
             sim_latency_s: tr.step_costs_s.iter().sum(),
@@ -99,18 +108,27 @@ impl PlacementPlan {
     }
 }
 
-/// Cache of [`PlacementPlan`]s keyed on `(policy name, batch, congested)`,
-/// with hit/miss counters so tests can assert the steady state does no
-/// policy walks.  Sound only for deterministic policies — every serving
-/// policy in [`crate::agent`] is.  The policy is identified by
+/// Cache of [`PlacementPlan`]s keyed on `(policy name, batch, congestion
+/// level)`, with hit/miss counters so tests can assert the steady state
+/// does no policy walks.  Sound only for deterministic policies — every
+/// serving policy in [`crate::agent`] is.  The policy is identified by
 /// [`Policy::name`]: two *different instances* of the same policy type on
 /// one coordinator would collide, so give each its own coordinator/engine
 /// (the serving pool already does — one frozen policy per worker).
+///
+/// The cache is **epoch-versioned**: [`PlanCache::sync_generation`] (fed
+/// from the arbiter's [`FabricState`]) drops every cached plan the first
+/// time a new generation is observed, closing the cache-immortality gap —
+/// a fabric reconfiguration or online policy retrain invalidates plans
+/// without restarting workers.
 #[derive(Debug, Default)]
 pub struct PlanCache {
-    plans: HashMap<(&'static str, usize, bool), Rc<PlacementPlan>>,
+    plans: HashMap<(&'static str, usize, CongestionLevel), Rc<PlacementPlan>>,
+    generation: u64,
     pub hits: u64,
     pub misses: u64,
+    /// Generation bumps observed (each drops the whole plan set).
+    pub invalidations: u64,
 }
 
 impl PlanCache {
@@ -118,21 +136,39 @@ impl PlanCache {
         PlanCache::default()
     }
 
-    /// Cached plan lookup; builds (one policy walk) on miss.
+    /// Fabric epoch the cached plans belong to.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Adopt the observed fabric generation; a change drops every cached
+    /// plan (they were built against a fabric that no longer exists).
+    pub fn sync_generation(&mut self, generation: u64) {
+        if generation != self.generation {
+            self.plans.clear();
+            self.generation = generation;
+            self.invalidations += 1;
+        }
+    }
+
+    /// Cached plan lookup; builds (one policy walk) on miss.  Plans are
+    /// stamped with the cache's current generation.
     pub fn plan(
         &mut self,
         env: &SchedulingEnv,
         policy: &dyn Policy,
         batch: usize,
-        congested: bool,
+        level: CongestionLevel,
     ) -> Rc<PlacementPlan> {
-        let key = (policy.name(), batch, congested);
+        let key = (policy.name(), batch, level);
         if let Some(p) = self.plans.get(&key) {
             self.hits += 1;
             return p.clone();
         }
         self.misses += 1;
-        let p = Rc::new(PlacementPlan::build(env, policy, batch, congested));
+        let mut built = PlacementPlan::build(env, policy, batch, level);
+        built.generation = self.generation;
+        let p = Rc::new(built);
         self.plans.insert(key, p.clone());
         p
     }
@@ -208,10 +244,10 @@ impl<S: Borrow<ArtifactStore>> Coordinator<S> {
     /// so ad-hoc / reconfigured policy instances are always honored.
     /// The serving hot path uses [`Coordinator::infer_cached`] instead.
     pub fn infer(&self, images: &[f32], batch: usize, policy: &dyn Policy,
-                 congested: bool) -> Result<InferenceResult> {
+                 level: CongestionLevel) -> Result<InferenceResult> {
         self.check_input(images, batch)?;
         let t0 = std::time::Instant::now();
-        let plan = PlacementPlan::build(&self.env, policy, batch, congested);
+        let plan = PlacementPlan::build(&self.env, policy, batch, level);
         let mut logits = Vec::new();
         self.run_plan(images, &plan, &mut logits)?;
         let classes = self.env.net.units.last().unwrap().cout;
@@ -232,6 +268,10 @@ impl<S: Borrow<ArtifactStore>> Coordinator<S> {
     /// the XLA output literal), and the final logits land in the caller's
     /// buffer.  Returns the shared plan and the host wall-clock spent.
     ///
+    /// `fabric` is the arbiter's per-batch snapshot: the plan is keyed on
+    /// its congestion level, and a generation change first drops every
+    /// cached plan (stale after a fabric reconfiguration or retrain).
+    ///
     /// Plans are cached per [`Policy::name`], so a coordinator on this
     /// path must serve **one** policy instance (the pool gives each
     /// worker engine exactly one); use [`Coordinator::infer`] when
@@ -241,15 +281,16 @@ impl<S: Borrow<ArtifactStore>> Coordinator<S> {
         images: &[f32],
         batch: usize,
         policy: &dyn Policy,
-        congested: bool,
+        fabric: FabricState,
         logits: &mut Vec<f32>,
     ) -> Result<(Rc<PlacementPlan>, f64)> {
         self.check_input(images, batch)?;
         let t0 = std::time::Instant::now();
-        let plan = self
-            .plans
-            .borrow_mut()
-            .plan(&self.env, policy, batch, congested);
+        let plan = {
+            let mut plans = self.plans.borrow_mut();
+            plans.sync_generation(fabric.generation);
+            plans.plan(&self.env, policy, batch, fabric.level)
+        };
         self.run_plan(images, &plan, logits)?;
         Ok((plan, t0.elapsed().as_secs_f64()))
     }
@@ -364,21 +405,53 @@ mod tests {
         let pol = Counting { inner: GreedyStep, n: Cell::new(0) };
         let mut cache = PlanCache::new();
 
-        let p1 = cache.plan(&e, &pol, 8, false);
+        let p1 = cache.plan(&e, &pol, 8, CongestionLevel::Free);
         assert_eq!(pol.n.get(), e.n_units() as u64, "miss walks once");
         assert_eq!((cache.hits, cache.misses), (0, 1));
 
-        let p2 = cache.plan(&e, &pol, 8, false);
+        let p2 = cache.plan(&e, &pol, 8, CongestionLevel::Free);
         assert_eq!(pol.n.get(), e.n_units() as u64, "hit must not call decide");
         assert_eq!((cache.hits, cache.misses), (1, 1));
         assert!(Rc::ptr_eq(&p1, &p2), "hit returns the shared plan");
 
         // a different key is a fresh walk
-        let _ = cache.plan(&e, &pol, 1, false);
+        let _ = cache.plan(&e, &pol, 1, CongestionLevel::Free);
         assert_eq!(pol.n.get(), 2 * e.n_units() as u64);
-        let _ = cache.plan(&e, &pol, 8, true);
-        assert_eq!((cache.hits, cache.misses), (1, 3));
-        assert_eq!(cache.len(), 3);
+        let _ = cache.plan(&e, &pol, 8, CongestionLevel::Shared);
+        let _ = cache.plan(&e, &pol, 8, CongestionLevel::Saturated);
+        assert_eq!((cache.hits, cache.misses), (1, 4));
+        assert_eq!(cache.len(), 4, "every congestion level is a distinct key");
+    }
+
+    #[test]
+    fn generation_bump_invalidates_cached_plans() {
+        // the cache-immortality fix: a fabric reconfiguration (or policy
+        // retrain) bumps the generation, and the stale plan MUST be
+        // rebuilt — counted as a fresh miss, not served as a hit
+        let e = env();
+        let pol = Counting { inner: GreedyStep, n: Cell::new(0) };
+        let mut cache = PlanCache::new();
+
+        cache.sync_generation(7);
+        let p1 = cache.plan(&e, &pol, 8, CongestionLevel::Free);
+        assert_eq!(p1.generation, 7, "plans are stamped with the build epoch");
+        let _ = cache.plan(&e, &pol, 8, CongestionLevel::Free);
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+
+        // same generation observed again: nothing dropped
+        cache.sync_generation(7);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.invalidations, 1, "0 -> 7 was the only bump so far");
+
+        // reconfiguration epoch: stale plan dropped and rebuilt
+        cache.sync_generation(8);
+        assert!(cache.is_empty(), "stale plans must not survive a bump");
+        assert_eq!(cache.invalidations, 2);
+        let p2 = cache.plan(&e, &pol, 8, CongestionLevel::Free);
+        assert_eq!((cache.hits, cache.misses), (1, 2), "rebuild is a miss");
+        assert_eq!(p2.generation, 8);
+        assert!(!Rc::ptr_eq(&p1, &p2), "rebuilt plan is a fresh object");
+        assert_eq!(pol.n.get(), 2 * e.n_units() as u64, "rebuild re-walks the policy");
     }
 
     #[test]
@@ -387,18 +460,18 @@ mod tests {
         // policy silently replays the first one's placement
         let e = env();
         let mut cache = PlanCache::new();
-        let all = cache.plan(&e, &crate::agent::StaticAllFpga, 8, false);
-        let greedy = cache.plan(&e, &GreedyStep, 8, false);
+        let all = cache.plan(&e, &crate::agent::StaticAllFpga, 8, CongestionLevel::Free);
+        let greedy = cache.plan(&e, &GreedyStep, 8, CongestionLevel::Free);
         assert_eq!(cache.misses, 2, "second policy must be a miss");
         assert_eq!(all.placement, vec![Placement::Fpga; e.n_units()]);
-        assert_eq!(greedy.placement, GreedyStep.placement(&e, false));
+        assert_eq!(greedy.placement, GreedyStep.placement(&e, CongestionLevel::Free));
     }
 
     #[test]
     fn plan_contents_match_the_policy() {
         let e = env();
-        let plan = PlacementPlan::build(&e, &GreedyStep, 8, false);
-        assert_eq!(plan.placement, GreedyStep.placement(&e, false));
+        let plan = PlacementPlan::build(&e, &GreedyStep, 8, CongestionLevel::Free);
+        assert_eq!(plan.placement, GreedyStep.placement(&e, CongestionLevel::Free));
         assert_eq!(plan.artifacts.len(), e.n_units());
         for (name, p) in plan.artifacts.iter().zip(&plan.placement) {
             let precision = match p {
@@ -423,8 +496,12 @@ mod tests {
             CpuModel::default(),
             EnvConfig { congestion_p: 1.0, ..EnvConfig::default() },
         );
-        let free = PlacementPlan::build(&e, &crate::agent::StaticAllFpga, 8, false);
-        let busy = PlacementPlan::build(&e, &crate::agent::StaticAllFpga, 8, true);
-        assert!(busy.sim_latency_s > free.sim_latency_s);
+        let free = PlacementPlan::build(&e, &crate::agent::StaticAllFpga, 8, CongestionLevel::Free);
+        let shared =
+            PlacementPlan::build(&e, &crate::agent::StaticAllFpga, 8, CongestionLevel::Shared);
+        let sat =
+            PlacementPlan::build(&e, &crate::agent::StaticAllFpga, 8, CongestionLevel::Saturated);
+        assert!(free.sim_latency_s < shared.sim_latency_s);
+        assert!(shared.sim_latency_s < sat.sim_latency_s);
     }
 }

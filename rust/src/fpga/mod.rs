@@ -178,6 +178,24 @@ impl Fabric {
         }
         used
     }
+
+    /// Fraction of the fabric in use, taken over the *binding* resource
+    /// class (the max of LUT/DSP/BRAM/URAM utilization) — the signal the
+    /// serving arbiter folds into its congestion level: a fabric whose
+    /// DSP columns are exhausted is saturated even with LUTs to spare.
+    pub fn occupancy(&self) -> f64 {
+        self.used()
+            .utilization(&self.total)
+            .values()
+            .fold(0.0f64, |m, &u| m.max(u))
+    }
+
+    /// `(loaded, total)` PR-region counts — how much of the dynamic
+    /// fabric currently holds a bitstream.
+    pub fn region_load(&self) -> (usize, usize) {
+        let loaded = self.regions.iter().filter(|r| r.loaded.is_some()).count();
+        (loaded, self.regions.len())
+    }
 }
 
 #[cfg(test)]
@@ -220,6 +238,52 @@ mod tests {
             fmax_hz: 200e6,
         };
         assert!(f.load(r0, bs).is_err());
+    }
+
+    #[test]
+    fn region_reload_accounting() {
+        // reconfiguration accounting: reloading a region REPLACES its
+        // bitstream (usage must not accumulate), every load counts, and
+        // occupancy tracks the binding resource class
+        let mut f = Fabric::kv260();
+        let empty_occ = f.occupancy();
+        assert!(empty_occ > 0.0, "static shell occupies the fabric");
+        assert_eq!(f.region_load(), (0, 0));
+
+        let budget = Resources { luts: 50_000, dsps: 600, bram36: 60, uram: 40 };
+        let r0 = f.add_region("pr0", budget).unwrap();
+        assert_eq!(f.region_load(), (0, 1), "carved but nothing loaded");
+        assert_eq!(f.used(), f.static_usage, "empty region adds no usage");
+
+        let big = Bitstream {
+            name: "conv_big".into(),
+            usage: Resources { luts: 40_000, dsps: 512, bram36: 48, uram: 16 },
+            fmax_hz: 200e6,
+        };
+        let small = Bitstream {
+            name: "conv_small".into(),
+            usage: Resources { luts: 10_000, dsps: 128, bram36: 12, uram: 4 },
+            fmax_hz: 250e6,
+        };
+        f.load(r0, big.clone()).unwrap();
+        let occ_big = f.occupancy();
+        assert_eq!(f.used(), f.static_usage.add(&big.usage));
+        assert_eq!(f.region_load(), (1, 1));
+        // LUTs bind here: (shell + 40k)/117120 ≈ 0.425 beats DSP 512/1248
+        let expected = (f.static_usage.luts + 40_000) as f64 / f.total.luts as f64;
+        assert!((occ_big - expected).abs() < 1e-12, "occupancy {occ_big} != {expected}");
+        assert!(occ_big > 512.0 / 1248.0, "the binding class must win");
+
+        // reconfigure the same region with the small core
+        f.load(r0, small.clone()).unwrap();
+        assert_eq!(f.reconfigurations(), 2, "every load is a reconfiguration");
+        assert_eq!(
+            f.used(),
+            f.static_usage.add(&small.usage),
+            "reload replaces, never accumulates"
+        );
+        assert!(f.occupancy() < occ_big);
+        assert_eq!(f.region_load(), (1, 1));
     }
 
     #[test]

@@ -8,19 +8,28 @@
 //!   llm           greedy generation through the Fig 3 decoder
 //!   eda           run the Fig 4 agentic design-flow simulation
 //!   serve         N-worker serving pool over the real artifacts
-//!   bench serve   simulated-path serving throughput sweep -> BENCH_serve.json
+//!                 (fabric arbiter knobs: --shared-at / --saturated-at /
+//!                  --dma-budget-mb)
+//!   bench serve   simulated-path serving sweeps -> BENCH_serve.json
+//!                 (closed-loop worker sweep + open-loop Poisson λ sweep)
 
 use aifa::accel::AccelConfig;
-use aifa::agent::{EnvConfig, FixedPlacement, GreedyStep, QAgent, QConfig, SchedulingEnv};
+use aifa::agent::{
+    CongestionLevel, EnvConfig, GreedyStep, LevelPlacements, QAgent, QConfig, SchedulingEnv,
+};
 use aifa::data::TestSet;
 use aifa::eda;
 use aifa::graph::Network;
 use aifa::llm::LlmSession;
 use aifa::platform::{CpuModel, FpgaPlatform};
 use aifa::runtime::ArtifactStore;
-use aifa::server::{BatchConfig, BatchEngine, EngineFactory, Server, ServingPool, SimEngine};
+use aifa::server::{
+    ArbiterConfig, BatchConfig, BatchEngine, EngineFactory, FabricArbiter, Server, ServingPool,
+    SimEngine,
+};
 use aifa::util::cli::Cli;
 use aifa::util::json::Json;
+use aifa::util::rng::Rng;
 use anyhow::Result;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -46,7 +55,11 @@ fn main() {
         .opt("workers", Some("auto"), "serving pool size; comma list for `bench serve` (auto = 1 / 1,2,4)")
         .opt("wait-ms", Some("2"), "batcher window in ms")
         .opt("work", Some("32"), "bench serve: synthetic host passes per batch")
-        .opt("out", Some("BENCH_serve.json"), "bench serve: output JSON path");
+        .opt("out", Some("BENCH_serve.json"), "bench serve: output JSON path")
+        .opt("shared-at", Some("2"), "arbiter: in-flight leases at/above which the fabric is Shared")
+        .opt("saturated-at", Some("auto"), "arbiter: leases at/above which it is Saturated (auto = max(workers, 3))")
+        .opt("dma-budget-mb", Some("32"), "arbiter: in-flight DMA MiB before the level escalates")
+        .opt("rates", Some("auto"), "bench serve: Poisson arrival λ grid, req/s (auto = 500,2000,8000)");
     let args = match cli.parse(&rest) {
         Ok(a) => a,
         Err(msg) => {
@@ -110,7 +123,7 @@ fn run(cmd: &str, args: &aifa::util::cli::Args) -> Result<()> {
             );
             let mut agent = QAgent::new(QConfig::default(), seed);
             let curve = agent.train(&env, episodes);
-            let learned = agent.policy(&env, false);
+            let learned = agent.policy(&env, CongestionLevel::Free);
             let (oracle, oracle_cost) = env.oracle_placement();
             println!("episodes: {episodes}  final ε: {:.3}", agent.epsilon);
             println!(
@@ -181,6 +194,33 @@ fn run(cmd: &str, args: &aifa::util::cli::Args) -> Result<()> {
     }
 }
 
+/// Build the fabric arbiter from the `--shared-at` / `--saturated-at` /
+/// `--dma-budget-mb` knobs (defaults scale with the pool size).  Bad
+/// values error instead of silently keeping defaults.
+fn arbiter_from_args(args: &aifa::util::cli::Args, workers: usize) -> Result<Arc<FabricArbiter>> {
+    let mut cfg = ArbiterConfig::for_workers(workers);
+    if let Some(v) = args.get("shared-at") {
+        let s: usize = v.parse().map_err(|_| anyhow::anyhow!("--shared-at wants a lease count"))?;
+        cfg.shared_at = s.max(1);
+    }
+    match args.get("saturated-at") {
+        Some("auto") | None => {}
+        Some(v) => {
+            cfg.saturated_at = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--saturated-at wants a lease count or 'auto'"))?;
+        }
+    }
+    // Shared must engage at or below Saturated whatever the knob combo
+    // (e.g. --shared-at raised past the auto saturated_at).
+    cfg.saturated_at = cfg.saturated_at.max(cfg.shared_at);
+    if let Some(v) = args.get("dma-budget-mb") {
+        let mb: u64 = v.parse().map_err(|_| anyhow::anyhow!("--dma-budget-mb wants MiB"))?;
+        cfg.dma_budget_bytes = mb << 20;
+    }
+    Ok(FabricArbiter::new(cfg))
+}
+
 /// `aifa serve`: replay the test set through an N-worker pool over the
 /// real artifacts with a Q-trained placement, then print merged metrics.
 fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
@@ -197,15 +237,29 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
         probe.network.clone(),
         FpgaPlatform::table1_card(),
         CpuModel::default(),
-        EnvConfig { batch: 8, ..EnvConfig::default() },
+        // train with contention in the mix so every level has a policy
+        EnvConfig { batch: 8, congestion_p: 0.5, ..EnvConfig::default() },
     );
     let mut agent = QAgent::new(QConfig::default(), seed);
     agent.train(&env, episodes);
-    let placement = agent.policy(&env, false);
-    println!("learned placement: {placement:?}");
+    // one frozen placement per congestion level: the arbiter's live level
+    // selects which one replays, so contention actually moves placement
+    let policy = LevelPlacements::extract(|level| agent.policy(&env, level));
+    for level in CongestionLevel::ALL {
+        println!("learned placement [{level}]: {:?}", policy.by_level[level.index()]);
+    }
     drop(probe); // workers build their own stores (PJRT is thread-local)
 
-    let server = Server::start_pool(
+    let arbiter = arbiter_from_args(args, workers)?;
+    let acfg = arbiter.config();
+    println!(
+        "arbiter: shared_at={} saturated_at={} dma_budget={} MiB generation={}",
+        acfg.shared_at,
+        acfg.saturated_at,
+        acfg.dma_budget_bytes >> 20,
+        arbiter.generation()
+    );
+    let server = Server::start_pool_with(
         workers,
         dir,
         |store| {
@@ -216,8 +270,9 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
                 EnvConfig { batch: 8, ..EnvConfig::default() },
             )
         },
-        Arc::new(FixedPlacement { placement }),
+        Arc::new(policy),
         BatchConfig { max_wait: wait, max_batch: 8 },
+        arbiter.clone(),
     )?;
 
     let t0 = Instant::now();
@@ -227,12 +282,21 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
         pending.push((i % ts.n, server.handle.submit(img)?));
     }
     let mut hits = 0usize;
+    let mut level_seen = [0u64; 3];
     for (idx, rx) in pending {
         let resp = rx.recv()?;
         hits += (resp.class == ts.labels[idx] as usize) as usize;
+        level_seen[resp.congestion.index()] += 1;
     }
     let wall = t0.elapsed().as_secs_f64();
     println!("{}", server.metrics.summary());
+    println!(
+        "responses by level: free={} shared={} saturated={}  peak in-flight leases={}",
+        level_seen[0],
+        level_seen[1],
+        level_seen[2],
+        arbiter.peak_inflight()
+    );
     println!(
         "workers={workers} accuracy={:.4} throughput={:.1} req/s over {wall:.2}s",
         hits as f64 / n as f64,
@@ -253,10 +317,20 @@ struct ServeBenchRow {
     plan_misses: u64,
 }
 
-/// One simulated-path pool run: submit `n` single-image requests as fast
-/// as possible, wait for every response, report throughput + percentiles.
-fn run_sim_serve(workers: usize, n: usize, work: usize, wait: Duration) -> Result<ServeBenchRow> {
-    let factory: Arc<EngineFactory> = Arc::new(move |_w: usize| -> Result<Box<dyn BatchEngine>> {
+struct OpenLoopRow {
+    rate: f64,
+    workers: usize,
+    achieved_rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    queue_p50_ms: f64,
+    /// Fraction of executed batches per congestion level (free/shared/sat).
+    level_frac: [f64; 3],
+    peak_inflight: usize,
+}
+
+fn sim_factory(work: usize) -> Arc<EngineFactory> {
+    Arc::new(move |_w: usize| -> Result<Box<dyn BatchEngine>> {
         let env = SchedulingEnv::new(
             Network::paper_scale(),
             FpgaPlatform::table1_card(),
@@ -264,8 +338,17 @@ fn run_sim_serve(workers: usize, n: usize, work: usize, wait: Duration) -> Resul
             EnvConfig { batch: 8, ..EnvConfig::default() },
         );
         Ok(Box::new(SimEngine::new(env, Box::new(GreedyStep), vec![1, 8], work)))
-    });
-    let pool = ServingPool::start(workers, BatchConfig { max_wait: wait, max_batch: 8 }, factory)?;
+    })
+}
+
+/// One simulated-path pool run: submit `n` single-image requests as fast
+/// as possible, wait for every response, report throughput + percentiles.
+fn run_sim_serve(workers: usize, n: usize, work: usize, wait: Duration) -> Result<ServeBenchRow> {
+    let pool = ServingPool::start(
+        workers,
+        BatchConfig { max_wait: wait, max_batch: 8 },
+        sim_factory(work),
+    )?;
     let handle = pool.handle();
 
     let ie = Network::paper_scale().units[0].in_elems(1);
@@ -298,18 +381,85 @@ fn run_sim_serve(workers: usize, n: usize, work: usize, wait: Duration) -> Resul
     Ok(row)
 }
 
+/// One open-loop run: Poisson arrivals at `rate` req/s (exponential
+/// inter-arrival gaps, offered load independent of completions), every
+/// response collected afterwards.  Open-loop latency percentiles expose
+/// queueing collapse that closed-loop throughput sweeps hide, and the
+/// per-level occupancy shows the arbiter quantizing that load.
+fn run_open_loop(
+    workers: usize,
+    n: usize,
+    work: usize,
+    wait: Duration,
+    rate: f64,
+    seed: u64,
+) -> Result<OpenLoopRow> {
+    let pool = ServingPool::start(
+        workers,
+        BatchConfig { max_wait: wait, max_batch: 8 },
+        sim_factory(work),
+    )?;
+    let handle = pool.handle();
+    let arbiter = pool.arbiter().clone();
+
+    let ie = Network::paper_scale().units[0].in_elems(1);
+    let base: Vec<f32> = (0..ie).map(|i| (i % 13) as f32 * 0.07).collect();
+    let mut rng = Rng::new(seed);
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut img = base.clone();
+        img[0] = i as f32;
+        pending.push(handle.submit(img)?);
+        std::thread::sleep(Duration::from_secs_f64(rng.exp(rate).min(0.050)));
+    }
+    for rx in pending {
+        let _ = rx.recv()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let merged = pool.metrics.merged();
+    let lv = pool.metrics.level_batches();
+    let total_batches = lv.iter().sum::<u64>().max(1) as f64;
+    let row = OpenLoopRow {
+        rate,
+        workers,
+        achieved_rps: n as f64 / wall,
+        p50_ms: merged.latency.p50() * 1e3,
+        p99_ms: merged.latency.p99() * 1e3,
+        queue_p50_ms: merged.queue_delay.p50() * 1e3,
+        level_frac: [
+            lv[0] as f64 / total_batches,
+            lv[1] as f64 / total_batches,
+            lv[2] as f64 / total_batches,
+        ],
+        peak_inflight: arbiter.peak_inflight(),
+    };
+    drop(handle);
+    pool.shutdown();
+    Ok(row)
+}
+
 /// `aifa bench serve`: sweep the simulated serving path over worker
-/// counts and emit machine-readable BENCH_serve.json so the serving perf
+/// counts (closed loop) and over a Poisson arrival-rate grid (open loop),
+/// emitting machine-readable BENCH_serve.json so the serving perf
 /// trajectory is tracked from this PR onward.
 fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
     let n = args.get_usize("n").unwrap_or(1000);
     let work = args.get_usize("work").unwrap_or(32);
+    let seed = args.get_u64("seed").unwrap_or(42);
     let wait = Duration::from_millis(args.get_u64("wait-ms").unwrap_or(2));
     let workers_list = match args.get("workers") {
         Some("auto") | None => vec![1, 2, 4],
         Some(_) => args
             .get_usize_list("workers")
             .ok_or_else(|| anyhow::anyhow!("--workers wants a comma list, e.g. 1,2,4"))?,
+    };
+    let rates = match args.get("rates") {
+        Some("auto") | None => vec![500.0, 2000.0, 8000.0],
+        Some(_) => args
+            .get_f64_list("rates")
+            .ok_or_else(|| anyhow::anyhow!("--rates wants a comma list, e.g. 500,2000,8000"))?,
     };
 
     let mut rows = Vec::new();
@@ -320,6 +470,27 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
             r.workers, r.rps, r.p50_ms, r.p99_ms, r.queue_p50_ms, r.batches, r.plan_hits, r.plan_misses
         );
         rows.push(r);
+    }
+
+    // open-loop Poisson sweep at the largest pool in the grid
+    let ol_workers = workers_list.iter().copied().max().unwrap_or(1);
+    let mut ol_rows = Vec::new();
+    for &rate in &rates {
+        let r = run_open_loop(ol_workers, n, work, wait, rate, seed)?;
+        println!(
+            "λ={:<8.0} workers={} achieved={:>9.1}/s p50={:>8.3}ms p99={:>8.3}ms queue p50={:>8.3}ms levels={:.2}/{:.2}/{:.2} peak-leases={}",
+            r.rate,
+            r.workers,
+            r.achieved_rps,
+            r.p50_ms,
+            r.p99_ms,
+            r.queue_p50_ms,
+            r.level_frac[0],
+            r.level_frac[1],
+            r.level_frac[2],
+            r.peak_inflight
+        );
+        ol_rows.push(r);
     }
 
     let row_objs: Vec<Json> = rows
@@ -337,6 +508,23 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
             ])
         })
         .collect();
+    let ol_objs: Vec<Json> = ol_rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("rate", Json::num(r.rate)),
+                ("workers", Json::num(r.workers as f64)),
+                ("achieved_rps", Json::num(r.achieved_rps)),
+                ("p50_ms", Json::num(r.p50_ms)),
+                ("p99_ms", Json::num(r.p99_ms)),
+                ("queue_p50_ms", Json::num(r.queue_p50_ms)),
+                ("free_frac", Json::num(r.level_frac[0])),
+                ("shared_frac", Json::num(r.level_frac[1])),
+                ("saturated_frac", Json::num(r.level_frac[2])),
+                ("peak_inflight", Json::num(r.peak_inflight as f64)),
+            ])
+        })
+        .collect();
     let speedup_key;
     let mut fields = vec![
         ("bench", Json::str("serve")),
@@ -344,6 +532,7 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
         ("n", Json::num(n as f64)),
         ("work_passes", Json::num(work as f64)),
         ("rows", Json::Arr(row_objs)),
+        ("open_loop", Json::Arr(ol_objs)),
     ];
     let base = rows.iter().find(|r| r.workers == 1);
     let peak = rows.iter().max_by(|a, b| a.workers.cmp(&b.workers));

@@ -1,0 +1,321 @@
+//! Shared fabric arbiter: one [`FabricArbiter`] owns the congestion state
+//! for the whole serving pool.
+//!
+//! The seed froze fabric congestion as a `bool` chosen at engine
+//! construction, so N workers time-shared one fabric with no shared view
+//! of load.  The arbiter replaces that scalar with a live, epoch-versioned
+//! [`FabricState`]:
+//!
+//! * **Leases** — a worker takes a [`FabricLease`] around each offloaded
+//!   batch; the lease snapshot carries the [`CongestionLevel`] the batch
+//!   runs under and is released (RAII) when the batch completes.  The
+//!   level is derived from the number of in-flight leases against the
+//!   configured slot thresholds, the [`Fabric`]'s binding-resource
+//!   occupancy, and the DMA link budget — all three signals combine with
+//!   `max`, so whichever resource binds first sets the level.
+//! * **Generations** — [`FabricArbiter::reconfigure`] (partial
+//!   reconfiguration of a PR region) and [`FabricArbiter::bump_generation`]
+//!   (online policy retrain hook) advance a monotone epoch counter.  Every
+//!   worker's `PlanCache` compares the generation on its next lookup and
+//!   drops stale plans, so placement plans never outlive the fabric or the
+//!   policy they were built against.
+//!
+//! The hot path is lock-free: lease grant/release and level derivation
+//! are atomics; the `Mutex<Fabric>` is touched only on reconfiguration,
+//! which also refreshes a cached occupancy word the hot path reads.
+
+use crate::agent::{CongestionLevel, FabricState};
+use crate::fpga::{Bitstream, Fabric, Resources};
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Arbitration thresholds.  Lease counts *include* the lease being
+/// granted, so `shared_at: 2` means "Shared once a second batch is in
+/// flight".
+#[derive(Debug, Clone, Copy)]
+pub struct ArbiterConfig {
+    /// In-flight leases at/above which the fabric counts as time-shared.
+    pub shared_at: usize,
+    /// In-flight leases at/above which the fabric counts as oversubscribed.
+    pub saturated_at: usize,
+    /// Fabric occupancy (binding resource class) above which the level is
+    /// at least `Shared` / `Saturated`.
+    pub shared_occupancy: f64,
+    pub saturated_occupancy: f64,
+    /// In-flight DMA bytes above which the derived level escalates one
+    /// step (the host link, not the fabric, is the bottleneck).
+    pub dma_budget_bytes: u64,
+}
+
+impl Default for ArbiterConfig {
+    fn default() -> Self {
+        ArbiterConfig {
+            shared_at: 2,
+            saturated_at: 4,
+            shared_occupancy: 0.75,
+            saturated_occupancy: 0.92,
+            dma_budget_bytes: 32 << 20,
+        }
+    }
+}
+
+impl ArbiterConfig {
+    /// Thresholds scaled to a pool of `workers` engines: a second
+    /// concurrent batch means sharing, and saturation means every worker
+    /// (of at least 3 fabric slots) holds a lease at once.
+    pub fn for_workers(workers: usize) -> ArbiterConfig {
+        ArbiterConfig { saturated_at: workers.max(3), ..ArbiterConfig::default() }
+    }
+}
+
+/// The pool-wide fabric owner.  Cheap to share (`Arc`); all hot-path
+/// state is atomic.
+pub struct FabricArbiter {
+    cfg: ArbiterConfig,
+    fabric: Mutex<Fabric>,
+    /// Cached `fabric.occupancy()` as f64 bits — refreshed on
+    /// reconfiguration so `lease()` never takes the fabric lock.
+    occupancy_bits: AtomicU64,
+    inflight: AtomicUsize,
+    inflight_bytes: AtomicU64,
+    generation: AtomicU64,
+    // telemetry
+    leases_granted: AtomicU64,
+    peak_inflight: AtomicUsize,
+}
+
+impl FabricArbiter {
+    /// Arbiter over the default (Table I card class) fabric.
+    pub fn new(cfg: ArbiterConfig) -> Arc<FabricArbiter> {
+        FabricArbiter::with_fabric(cfg, Fabric::new(Resources::alveo_u50_like()))
+    }
+
+    /// Arbiter over an explicitly modelled fabric (regions already carved
+    /// or about to be, via [`FabricArbiter::add_region`]).
+    pub fn with_fabric(cfg: ArbiterConfig, fabric: Fabric) -> Arc<FabricArbiter> {
+        let occ = fabric.occupancy();
+        Arc::new(FabricArbiter {
+            cfg,
+            fabric: Mutex::new(fabric),
+            occupancy_bits: AtomicU64::new(occ.to_bits()),
+            inflight: AtomicUsize::new(0),
+            inflight_bytes: AtomicU64::new(0),
+            generation: AtomicU64::new(1),
+            leases_granted: AtomicU64::new(0),
+            peak_inflight: AtomicUsize::new(0),
+        })
+    }
+
+    pub fn config(&self) -> ArbiterConfig {
+        self.cfg
+    }
+
+    /// Take a fabric slot for one offloaded batch moving `dma_bytes`
+    /// across the host link.  The returned lease's [`FabricState`] is the
+    /// contention snapshot this batch runs under (its own lease included)
+    /// and is released when the lease drops.
+    pub fn lease(self: &Arc<Self>, dma_bytes: u64) -> FabricLease {
+        let inflight = self.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+        let bytes = self.inflight_bytes.fetch_add(dma_bytes, Ordering::SeqCst) + dma_bytes;
+        self.leases_granted.fetch_add(1, Ordering::Relaxed);
+        self.peak_inflight.fetch_max(inflight, Ordering::Relaxed);
+        let state = FabricState::new(
+            self.level_for(inflight, bytes),
+            self.generation.load(Ordering::SeqCst),
+        );
+        FabricLease { arbiter: self.clone(), dma_bytes, state }
+    }
+
+    /// Current snapshot without granting a lease (telemetry / responses
+    /// on the non-offloaded path).
+    pub fn state(&self) -> FabricState {
+        FabricState::new(
+            self.level_for(
+                self.inflight.load(Ordering::SeqCst),
+                self.inflight_bytes.load(Ordering::SeqCst),
+            ),
+            self.generation.load(Ordering::SeqCst),
+        )
+    }
+
+    fn level_for(&self, inflight: usize, inflight_bytes: u64) -> CongestionLevel {
+        let by_leases = if inflight >= self.cfg.saturated_at {
+            CongestionLevel::Saturated
+        } else if inflight >= self.cfg.shared_at {
+            CongestionLevel::Shared
+        } else {
+            CongestionLevel::Free
+        };
+        let occ = f64::from_bits(self.occupancy_bits.load(Ordering::Relaxed));
+        let by_occupancy = if occ > self.cfg.saturated_occupancy {
+            CongestionLevel::Saturated
+        } else if occ > self.cfg.shared_occupancy {
+            CongestionLevel::Shared
+        } else {
+            CongestionLevel::Free
+        };
+        let mut level = by_leases.max(by_occupancy);
+        if inflight_bytes > self.cfg.dma_budget_bytes {
+            level = level.escalate();
+        }
+        level
+    }
+
+    fn release(&self, dma_bytes: u64) {
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+        self.inflight_bytes.fetch_sub(dma_bytes, Ordering::SeqCst);
+    }
+
+    /// Current fabric epoch.  Monotone; plans stamped with an older value
+    /// are stale.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::SeqCst)
+    }
+
+    /// Advance the epoch without touching the fabric — the invalidation
+    /// hook for policies retrained online (the placement changed, the
+    /// hardware did not).  Returns the new generation.
+    pub fn bump_generation(&self) -> u64 {
+        self.generation.fetch_add(1, Ordering::SeqCst) + 1
+    }
+
+    /// Carve a PR region out of the arbiter's fabric (setup-time).
+    pub fn add_region(&self, name: &str, budget: Resources) -> Result<usize> {
+        let mut fabric = self.fabric.lock().unwrap();
+        let idx = fabric.add_region(name, budget)?;
+        self.occupancy_bits.store(fabric.occupancy().to_bits(), Ordering::Relaxed);
+        Ok(idx)
+    }
+
+    /// Partially reconfigure one region: load the bitstream, refresh the
+    /// cached occupancy, and bump the generation so every worker's plan
+    /// cache rebuilds against the new fabric.  Returns (reconfig time s,
+    /// new generation).
+    pub fn reconfigure(&self, region: usize, bs: Bitstream) -> Result<(f64, u64)> {
+        let mut fabric = self.fabric.lock().unwrap();
+        let t = fabric.load(region, bs)?;
+        self.occupancy_bits.store(fabric.occupancy().to_bits(), Ordering::Relaxed);
+        drop(fabric);
+        Ok((t, self.bump_generation()))
+    }
+
+    /// Run `f` against the modelled fabric (telemetry, tests).
+    pub fn with_fabric_ref<T>(&self, f: impl FnOnce(&Fabric) -> T) -> T {
+        f(&self.fabric.lock().unwrap())
+    }
+
+    /// Cached binding-resource occupancy the hot path sees.
+    pub fn occupancy(&self) -> f64 {
+        f64::from_bits(self.occupancy_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    pub fn leases_granted(&self) -> u64 {
+        self.leases_granted.load(Ordering::Relaxed)
+    }
+
+    pub fn peak_inflight(&self) -> usize {
+        self.peak_inflight.load(Ordering::Relaxed)
+    }
+}
+
+/// RAII fabric slot held for the duration of one offloaded batch.
+pub struct FabricLease {
+    arbiter: Arc<FabricArbiter>,
+    dma_bytes: u64,
+    /// Contention snapshot at grant time (this lease included).
+    pub state: FabricState,
+}
+
+impl Drop for FabricLease {
+    fn drop(&mut self) {
+        self.arbiter.release(self.dma_bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arb(cfg: ArbiterConfig) -> Arc<FabricArbiter> {
+        FabricArbiter::new(cfg)
+    }
+
+    #[test]
+    fn lease_counts_drive_the_level() {
+        let a = arb(ArbiterConfig { shared_at: 2, saturated_at: 3, ..ArbiterConfig::default() });
+        let l1 = a.lease(0);
+        assert_eq!(l1.state.level, CongestionLevel::Free, "sole tenant");
+        let l2 = a.lease(0);
+        assert_eq!(l2.state.level, CongestionLevel::Shared);
+        let l3 = a.lease(0);
+        assert_eq!(l3.state.level, CongestionLevel::Saturated);
+        assert_eq!(a.inflight(), 3);
+        assert_eq!(a.peak_inflight(), 3);
+        drop(l3);
+        drop(l2);
+        assert_eq!(a.inflight(), 1);
+        // releases free the fabric again for the next tenant
+        drop(l1);
+        let l4 = a.lease(0);
+        assert_eq!(l4.state.level, CongestionLevel::Free);
+        assert_eq!(a.leases_granted(), 4);
+    }
+
+    #[test]
+    fn dma_budget_escalates_one_level() {
+        let a = arb(ArbiterConfig { dma_budget_bytes: 1000, ..ArbiterConfig::default() });
+        let l = a.lease(4096);
+        assert_eq!(l.state.level, CongestionLevel::Shared, "link-bound, not slot-bound");
+        drop(l);
+        assert_eq!(a.state().level, CongestionLevel::Free);
+    }
+
+    #[test]
+    fn occupancy_thresholds_raise_the_floor() {
+        // a nearly-full fabric is Shared/Saturated even with no leases
+        let a = arb(ArbiterConfig { shared_occupancy: 0.05, ..ArbiterConfig::default() });
+        assert!(a.occupancy() > 0.05, "static shell already past the bar");
+        assert_eq!(a.state().level, CongestionLevel::Shared);
+    }
+
+    #[test]
+    fn reconfiguration_bumps_generation_and_occupancy() {
+        let a = arb(ArbiterConfig::default());
+        let g0 = a.generation();
+        let occ0 = a.occupancy();
+        let r = a
+            .add_region("pr0", Resources { luts: 100_000, dsps: 2048, bram36: 256, uram: 64 })
+            .unwrap();
+        let bs = Bitstream {
+            name: "core".into(),
+            usage: Resources { luts: 80_000, dsps: 2000, bram36: 200, uram: 32 },
+            fmax_hz: 250e6,
+        };
+        let (t, g1) = a.reconfigure(r, bs).unwrap();
+        assert!(t > 0.0);
+        assert_eq!(g1, g0 + 1, "reconfiguration is a new epoch");
+        assert_eq!(a.generation(), g1);
+        assert!(a.occupancy() > occ0, "loaded core raises occupancy");
+        assert_eq!(a.with_fabric_ref(|f| f.reconfigurations()), 1);
+
+        // retrain hook bumps without touching the fabric
+        let g2 = a.bump_generation();
+        assert_eq!(g2, g1 + 1);
+        assert_eq!(a.with_fabric_ref(|f| f.reconfigurations()), 1);
+    }
+
+    #[test]
+    fn state_snapshot_carries_generation() {
+        let a = arb(ArbiterConfig::default());
+        let s = a.state();
+        assert_eq!(s, FabricState::new(CongestionLevel::Free, a.generation()));
+        a.bump_generation();
+        let l = a.lease(0);
+        assert_eq!(l.state.generation, a.generation());
+    }
+}

@@ -26,6 +26,12 @@
 //!   through a ping/pong buffer pair, and oversized batches are split
 //!   across *compiled* sizes by [`split_exec_batches`] instead of
 //!   silently padding to an uncompiled `max_batch`.
+//! * **Arbitration** ([`arbiter`]) — every worker leases a fabric slot
+//!   around each offloaded batch from one shared [`FabricArbiter`], which
+//!   derives a quantized [`crate::agent::CongestionLevel`] from live
+//!   leases, fabric occupancy, and the DMA budget, and versions the
+//!   fabric with a generation counter so plan caches invalidate on
+//!   reconfiguration or retrain.
 //! * **Metrics** — per-worker [`pool::MetricShard`]s (atomic counters,
 //!   single-writer sample reservoirs) merged only in
 //!   [`pool::PoolMetrics::summary`]; no cross-worker lock contention on
@@ -33,14 +39,16 @@
 //!
 //! Threading is std-only (no tokio in the offline build).
 
+pub mod arbiter;
 pub mod pool;
 
+pub use arbiter::{ArbiterConfig, FabricArbiter, FabricLease};
 pub use pool::{
     BatchEngine, BatchOutput, CoordEngine, EngineFactory, MetricShard, PoolMetrics, ServingPool,
     ShardSamples, SimEngine,
 };
 
-use crate::agent::{Policy, SchedulingEnv};
+use crate::agent::{CongestionLevel, Policy, SchedulingEnv};
 use crate::runtime::ArtifactStore;
 use anyhow::Result;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -65,6 +73,10 @@ pub struct Response {
     pub sim_batch_s: f64,
     /// Which pool worker executed the batch.
     pub worker: usize,
+    /// Fabric contention the batch ran under (from the shared arbiter).
+    pub congestion: CongestionLevel,
+    /// Fabric epoch of the placement plan that served this request.
+    pub plan_generation: u64,
 }
 
 /// Batching configuration.
@@ -180,14 +192,13 @@ impl Server {
             let store = ArtifactStore::open(&artifact_dir)?;
             let env = make_env(&store);
             let policy: Box<dyn Policy> = policy;
-            Ok(Box::new(CoordEngine::new(store, env, policy, false)?))
+            Ok(Box::new(CoordEngine::new(store, env, policy)?))
         };
         Self::from_pool(ServingPool::start(1, cfg, Arc::new(factory))?)
     }
 
-    /// N-worker pool over the real artifact path.  `make_env` runs once
-    /// per worker (inside the worker thread, against that worker's own
-    /// store); the policy is shared — serving policies are stateless.
+    /// N-worker pool over the real artifact path with a default arbiter
+    /// sized to the pool.
     pub fn start_pool(
         workers: usize,
         artifact_dir: std::path::PathBuf,
@@ -195,17 +206,38 @@ impl Server {
         policy: Arc<dyn Policy + Send + Sync>,
         cfg: BatchConfig,
     ) -> Result<Server> {
+        let arbiter = FabricArbiter::new(ArbiterConfig::for_workers(workers.max(1)));
+        Self::start_pool_with(workers, artifact_dir, make_env, policy, cfg, arbiter)
+    }
+
+    /// N-worker pool over the real artifact path, arbitrated by the given
+    /// [`FabricArbiter`].  `make_env` runs once per worker (inside the
+    /// worker thread, against that worker's own store); the policy is
+    /// shared — serving policies are stateless.
+    pub fn start_pool_with(
+        workers: usize,
+        artifact_dir: std::path::PathBuf,
+        make_env: impl Fn(&ArtifactStore) -> SchedulingEnv + Send + Sync + 'static,
+        policy: Arc<dyn Policy + Send + Sync>,
+        cfg: BatchConfig,
+        arbiter: Arc<FabricArbiter>,
+    ) -> Result<Server> {
         let factory = move |_worker: usize| -> Result<Box<dyn BatchEngine>> {
             let store = ArtifactStore::open(&artifact_dir)?;
             let env = make_env(&store);
             let policy: Box<dyn Policy> = Box::new(pool::SharedPolicy(policy.clone()));
-            Ok(Box::new(CoordEngine::new(store, env, policy, false)?))
+            Ok(Box::new(CoordEngine::new(store, env, policy)?))
         };
-        Self::from_pool(ServingPool::start(workers, cfg, Arc::new(factory))?)
+        Self::from_pool(ServingPool::start_with(workers, cfg, Arc::new(factory), arbiter)?)
     }
 
     fn from_pool(pool: ServingPool) -> Result<Server> {
         Ok(Server { handle: pool.handle(), metrics: pool.metrics.clone(), pool })
+    }
+
+    /// The pool's shared fabric arbiter.
+    pub fn arbiter(&self) -> &Arc<FabricArbiter> {
+        self.pool.arbiter()
     }
 
     /// Close ingress and join dispatcher + workers.

@@ -15,8 +15,9 @@
 //! mutexes shared by every request.  [`PoolMetrics::merged`] folds the
 //! shards together only when a summary is asked for.
 
+use super::arbiter::FabricArbiter;
 use super::{fill_batch, split_exec_batches, BatchConfig, Request, Response, ServerHandle};
-use crate::agent::{Policy, SchedulingEnv, State};
+use crate::agent::{FabricState, Policy, SchedulingEnv, State};
 use crate::coordinator::{Coordinator, PlanCache};
 use crate::platform::Placement;
 use crate::runtime::{argmax_rows, ArtifactStore};
@@ -35,6 +36,8 @@ pub struct BatchOutput {
     pub sim_latency_s: f64,
     /// Simulated energy of the batch (J).
     pub sim_energy_j: f64,
+    /// Fabric epoch the executed plan was built under.
+    pub plan_generation: u64,
 }
 
 /// One worker's execution backend: turns a padded flat image batch into
@@ -49,8 +52,16 @@ pub trait BatchEngine {
     /// Width of one logits row.
     fn classes(&self) -> usize;
     /// Run `batch` images (`flat.len() == batch * image_elems()`), filling
-    /// `logits` with `batch * classes()` values.
-    fn run(&mut self, flat: &[f32], batch: usize, logits: &mut Vec<f32>) -> Result<BatchOutput>;
+    /// `logits` with `batch * classes()` values.  `fabric` is the
+    /// arbiter's snapshot for this batch: the placement plan is keyed on
+    /// its congestion level and rebuilt when its generation moves.
+    fn run(
+        &mut self,
+        flat: &[f32],
+        batch: usize,
+        fabric: FabricState,
+        logits: &mut Vec<f32>,
+    ) -> Result<BatchOutput>;
     /// `(hits, misses)` of the placement-plan cache, for telemetry.
     fn plan_cache_stats(&self) -> (u64, u64) {
         (0, 0)
@@ -76,11 +87,11 @@ impl Policy for SharedPolicy {
 
 /// The real-artifact engine: one [`ArtifactStore`] + [`Coordinator`] pair
 /// owned by this worker, executing through the cached/allocation-free
-/// [`Coordinator::infer_cached`] path.
+/// [`Coordinator::infer_cached`] path.  Congestion arrives per batch from
+/// the pool's shared arbiter — nothing is frozen at construction.
 pub struct CoordEngine {
     coord: Coordinator<ArtifactStore>,
     policy: Box<dyn Policy>,
-    congested: bool,
     classes: usize,
     image_elems: usize,
 }
@@ -90,12 +101,11 @@ impl CoordEngine {
         store: ArtifactStore,
         env: SchedulingEnv,
         policy: Box<dyn Policy>,
-        congested: bool,
     ) -> Result<CoordEngine> {
         let classes = env.net.units.last().map(|u| u.cout).unwrap_or(1);
         let image_elems = env.net.units.first().map(|u| u.in_elems(1)).unwrap_or(0);
         let coord = Coordinator::new(store, env)?;
-        Ok(CoordEngine { coord, policy, congested, classes, image_elems })
+        Ok(CoordEngine { coord, policy, classes, image_elems })
     }
 }
 
@@ -109,11 +119,21 @@ impl BatchEngine for CoordEngine {
     fn classes(&self) -> usize {
         self.classes
     }
-    fn run(&mut self, flat: &[f32], batch: usize, logits: &mut Vec<f32>) -> Result<BatchOutput> {
+    fn run(
+        &mut self,
+        flat: &[f32],
+        batch: usize,
+        fabric: FabricState,
+        logits: &mut Vec<f32>,
+    ) -> Result<BatchOutput> {
         let (plan, _wall) =
             self.coord
-                .infer_cached(flat, batch, self.policy.as_ref(), self.congested, logits)?;
-        Ok(BatchOutput { sim_latency_s: plan.sim_latency_s, sim_energy_j: plan.sim_energy_j })
+                .infer_cached(flat, batch, self.policy.as_ref(), fabric, logits)?;
+        Ok(BatchOutput {
+            sim_latency_s: plan.sim_latency_s,
+            sim_energy_j: plan.sim_energy_j,
+            plan_generation: plan.generation,
+        })
     }
     fn plan_cache_stats(&self) -> (u64, u64) {
         self.coord.plan_cache_stats()
@@ -161,8 +181,17 @@ impl BatchEngine for SimEngine {
     fn classes(&self) -> usize {
         self.classes
     }
-    fn run(&mut self, flat: &[f32], batch: usize, logits: &mut Vec<f32>) -> Result<BatchOutput> {
-        let plan = self.plans.plan(&self.env, self.policy.as_ref(), batch, false);
+    fn run(
+        &mut self,
+        flat: &[f32],
+        batch: usize,
+        fabric: FabricState,
+        logits: &mut Vec<f32>,
+    ) -> Result<BatchOutput> {
+        // the simulated path honors the arbiter exactly like CoordEngine:
+        // plans per congestion level, dropped on a generation bump
+        self.plans.sync_generation(fabric.generation);
+        let plan = self.plans.plan(&self.env, self.policy.as_ref(), batch, fabric.level);
         // synthetic behavioural cost (serial FMA chain, kept via black_box)
         let mut acc = self.sink;
         for _ in 0..self.work_passes {
@@ -181,7 +210,11 @@ impl BatchEngine for SimEngine {
             });
             logits[r * self.classes + (h as usize % self.classes)] = 1.0;
         }
-        Ok(BatchOutput { sim_latency_s: plan.sim_latency_s, sim_energy_j: plan.sim_energy_j })
+        Ok(BatchOutput {
+            sim_latency_s: plan.sim_latency_s,
+            sim_energy_j: plan.sim_energy_j,
+            plan_generation: plan.generation,
+        })
     }
     fn plan_cache_stats(&self) -> (u64, u64) {
         (self.plans.hits, self.plans.misses)
@@ -217,6 +250,11 @@ pub struct MetricShard {
     pub errors: AtomicU64,
     pub plan_hits: AtomicU64,
     pub plan_misses: AtomicU64,
+    /// Executed batches per observed [`crate::agent::CongestionLevel`]
+    /// (indexed by its `index()`) — makes arbitration visible in summaries.
+    pub level_batches: [AtomicU64; 3],
+    /// Highest plan generation this worker has executed under.
+    pub plan_generation: AtomicU64,
     pub samples: Mutex<ShardSamples>,
 }
 
@@ -266,6 +304,27 @@ impl PoolMetrics {
         self.sum(|s| &s.plan_misses)
     }
 
+    /// Executed batches per congestion level, summed across shards and
+    /// indexed by [`crate::agent::CongestionLevel::index`].
+    pub fn level_batches(&self) -> [u64; 3] {
+        let mut out = [0u64; 3];
+        for sh in &self.shards {
+            for (o, c) in out.iter_mut().zip(&sh.level_batches) {
+                *o += c.load(Ordering::Relaxed);
+            }
+        }
+        out
+    }
+
+    /// Highest plan generation any worker has executed under.
+    pub fn plan_generation(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.plan_generation.load(Ordering::Relaxed))
+            .max()
+            .unwrap_or(0)
+    }
+
     /// Merge all shards' sample reservoirs (summary-time only).
     pub fn merged(&self) -> ShardSamples {
         let mut out = ShardSamples::default();
@@ -277,14 +336,19 @@ impl PoolMetrics {
 
     pub fn summary(&self) -> String {
         let m = self.merged();
+        let lv = self.level_batches();
         format!(
-            "served={} batches={} errors={} workers={} plan={}h/{}m wall p50={:.2}ms p99={:.2}ms queue p50={:.2}ms sim/batch p50={:.2}ms",
+            "served={} batches={} errors={} workers={} plan={}h/{}m gen={} levels={}f/{}s/{}x wall p50={:.2}ms p99={:.2}ms queue p50={:.2}ms sim/batch p50={:.2}ms",
             self.served(),
             self.batches(),
             self.errors(),
             self.workers(),
             self.plan_hits(),
             self.plan_misses(),
+            self.plan_generation(),
+            lv[0],
+            lv[1],
+            lv[2],
             m.latency.p50() * 1e3,
             m.latency.p99() * 1e3,
             m.queue_delay.p50() * 1e3,
@@ -293,19 +357,36 @@ impl PoolMetrics {
     }
 }
 
-/// The pool itself: dispatcher thread + N engine workers.
+/// The pool itself: dispatcher thread + N engine workers sharing one
+/// [`FabricArbiter`].
 pub struct ServingPool {
     ingress: ServerHandle,
     pub metrics: Arc<PoolMetrics>,
+    arbiter: Arc<FabricArbiter>,
     stop: Arc<AtomicBool>,
     dispatcher: JoinHandle<()>,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl ServingPool {
-    /// Spawn `workers` engine threads (each builds its engine via
-    /// `factory`) behind one batching dispatcher.
+    /// Spawn `workers` engine threads behind one batching dispatcher,
+    /// arbitrated by a default arbiter sized to the pool (see
+    /// [`super::arbiter::ArbiterConfig::for_workers`]).
     pub fn start(workers: usize, cfg: BatchConfig, factory: Arc<EngineFactory>) -> Result<ServingPool> {
+        let arbiter =
+            FabricArbiter::new(super::arbiter::ArbiterConfig::for_workers(workers.max(1)));
+        ServingPool::start_with(workers, cfg, factory, arbiter)
+    }
+
+    /// Spawn `workers` engine threads (each builds its engine via
+    /// `factory`) behind one batching dispatcher, sharing `arbiter` for
+    /// per-batch congestion and plan-generation state.
+    pub fn start_with(
+        workers: usize,
+        cfg: BatchConfig,
+        factory: Arc<EngineFactory>,
+        arbiter: Arc<FabricArbiter>,
+    ) -> Result<ServingPool> {
         let n = workers.max(1);
         let (tx, rx) = channel::<Request>();
         let (btx, brx) = channel::<Vec<Request>>();
@@ -337,14 +418,28 @@ impl ServingPool {
             let rx = shared_rx.clone();
             let factory = factory.clone();
             let shard = metrics.shard_arc(w);
-            handles.push(std::thread::spawn(move || worker_loop(w, rx, factory, shard)));
+            let arb = arbiter.clone();
+            handles.push(std::thread::spawn(move || worker_loop(w, rx, factory, shard, arb)));
         }
-        Ok(ServingPool { ingress: ServerHandle { tx }, metrics, stop, dispatcher, workers: handles })
+        Ok(ServingPool {
+            ingress: ServerHandle { tx },
+            metrics,
+            arbiter,
+            stop,
+            dispatcher,
+            workers: handles,
+        })
     }
 
     /// A submit handle (cloneable across producer threads).
     pub fn handle(&self) -> ServerHandle {
         self.ingress.clone()
+    }
+
+    /// The shared fabric arbiter — reconfigure regions or bump the plan
+    /// generation through this while the pool serves.
+    pub fn arbiter(&self) -> &Arc<FabricArbiter> {
+        &self.arbiter
     }
 
     /// Stop the dispatcher, close ingress, and join dispatcher + workers.
@@ -353,7 +448,7 @@ impl ServingPool {
     /// undelivered at that point are dropped, which their submitters see
     /// as a disconnected response channel.
     pub fn shutdown(self) {
-        let ServingPool { ingress, metrics: _, stop, dispatcher, workers } = self;
+        let ServingPool { ingress, metrics: _, arbiter: _, stop, dispatcher, workers } = self;
         stop.store(true, Ordering::Relaxed);
         drop(ingress);
         let _ = dispatcher.join();
@@ -368,6 +463,7 @@ fn worker_loop(
     rx: Arc<Mutex<Receiver<Vec<Request>>>>,
     factory: Arc<EngineFactory>,
     shard: Arc<MetricShard>,
+    arbiter: Arc<FabricArbiter>,
 ) {
     let mut engine = match factory(worker) {
         Ok(e) => e,
@@ -406,7 +502,16 @@ fn worker_loop(
             flat.resize(exec_b * ie, 0.0);
 
             let started = Instant::now();
-            let result = engine.run(&flat, exec_b, &mut logits);
+            // Reserve a fabric slot for the batch *before* the placement
+            // is known (the plan itself depends on the level the lease
+            // returns) — a conservative admission model: even a batch
+            // whose plan ends up CPU-only holds its slot until done.
+            // Only the real (unpadded) payload counts against the DMA
+            // budget; the slot frees (RAII) as soon as execution ends.
+            let lease = arbiter.lease((real * ie * std::mem::size_of::<f32>()) as u64);
+            let fabric = lease.state;
+            let result = engine.run(&flat, exec_b, fabric, &mut logits);
+            drop(lease);
             // publish plan-cache stats before responding, so a summary
             // read right after the last response is already consistent
             let (h, m) = engine.plan_cache_stats();
@@ -418,6 +523,8 @@ fn worker_loop(
                     let preds = argmax_rows(&logits, engine.classes());
                     shard.batches.fetch_add(1, Ordering::Relaxed);
                     shard.served.fetch_add(real as u64, Ordering::Relaxed);
+                    shard.level_batches[fabric.level.index()].fetch_add(1, Ordering::Relaxed);
+                    shard.plan_generation.fetch_max(out.plan_generation, Ordering::Relaxed);
                     // one (single-writer, uncontended) lock per chunk
                     let mut s = shard.samples.lock().unwrap();
                     s.batch_sizes.push(real as f64);
@@ -433,6 +540,8 @@ fn worker_loop(
                             queue_s,
                             sim_batch_s: out.sim_latency_s,
                             worker,
+                            congestion: fabric.level,
+                            plan_generation: out.plan_generation,
                         });
                     }
                 }
@@ -452,7 +561,7 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::agent::{EnvConfig, GreedyStep};
+    use crate::agent::{CongestionLevel, EnvConfig, GreedyStep};
     use crate::graph::Network;
     use crate::platform::{CpuModel, FpgaPlatform};
 
@@ -495,19 +604,45 @@ mod tests {
         assert_eq!(e.image_elems(), ie);
         assert_eq!(e.classes(), classes);
 
+        let free = FabricState::new(CongestionLevel::Free, 1);
         let flat = vec![0.5f32; 8 * ie];
         let mut logits = Vec::new();
-        let out = e.run(&flat, 8, &mut logits).unwrap();
+        let out = e.run(&flat, 8, free, &mut logits).unwrap();
         assert!(out.sim_latency_s > 0.0);
+        assert_eq!(out.plan_generation, 1);
         assert_eq!(logits.len(), 8 * classes);
         assert_eq!(e.plan_cache_stats(), (0, 1));
 
-        let out2 = e.run(&flat, 8, &mut logits).unwrap();
+        let out2 = e.run(&flat, 8, free, &mut logits).unwrap();
         assert_eq!(e.plan_cache_stats(), (1, 1), "second run must hit the plan cache");
         assert!((out.sim_latency_s - out2.sim_latency_s).abs() < 1e-15);
 
         // identical rows hash to identical classes
         let preds = argmax_rows(&logits, classes);
         assert!(preds.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn sim_engine_honors_fabric_state() {
+        let env = sim_env();
+        let ie = env.net.units[0].in_elems(1);
+        let mut e = SimEngine::new(env, Box::new(GreedyStep), vec![1, 8], 0);
+        let flat = vec![0.5f32; 8 * ie];
+        let mut logits = Vec::new();
+
+        // distinct congestion levels build distinct plans
+        let free = e.run(&flat, 8, FabricState::new(CongestionLevel::Free, 1), &mut logits).unwrap();
+        let sat = e
+            .run(&flat, 8, FabricState::new(CongestionLevel::Saturated, 1), &mut logits)
+            .unwrap();
+        assert!(sat.sim_latency_s >= free.sim_latency_s, "saturated plan must not cost less");
+        assert_eq!(e.plan_cache_stats(), (0, 2), "each level is its own plan key");
+
+        // a generation bump drops both and rebuilds on demand
+        let again =
+            e.run(&flat, 8, FabricState::new(CongestionLevel::Free, 2), &mut logits).unwrap();
+        assert_eq!(e.plan_cache_stats(), (0, 3), "stale plan must rebuild, not hit");
+        assert_eq!(again.plan_generation, 2);
+        assert!((again.sim_latency_s - free.sim_latency_s).abs() < 1e-15);
     }
 }

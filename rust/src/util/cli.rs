@@ -158,6 +158,25 @@ impl Args {
         }
     }
 
+    /// Comma-separated f64 list, e.g. `--rates 200,1000,4000`.  Returns
+    /// `None` when the option is absent or any element fails to parse.
+    pub fn get_f64_list(&self, name: &str) -> Option<Vec<f64>> {
+        let s = self.get(name)?;
+        let mut out = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            out.push(part.parse().ok()?);
+        }
+        if out.is_empty() {
+            None
+        } else {
+            Some(out)
+        }
+    }
+
     pub fn has(&self, flag: &str) -> bool {
         self.flags.iter().any(|f| f == flag)
     }
@@ -206,6 +225,18 @@ mod tests {
         let a = c.parse(&v(&["--workers", "1,x"])).unwrap();
         assert_eq!(a.get_usize_list("workers"), None);
         assert_eq!(a.get_usize_list("missing"), None);
+    }
+
+    #[test]
+    fn f64_lists() {
+        let c = Cli::new("t", "test").opt("rates", Some("100"), "arrival rates");
+        let a = c.parse(&v(&["--rates", "200,1000,4000.5"])).unwrap();
+        assert_eq!(a.get_f64_list("rates"), Some(vec![200.0, 1000.0, 4000.5]));
+        let a = c.parse(&v(&[])).unwrap();
+        assert_eq!(a.get_f64_list("rates"), Some(vec![100.0]));
+        let a = c.parse(&v(&["--rates", "1,x"])).unwrap();
+        assert_eq!(a.get_f64_list("rates"), None);
+        assert_eq!(a.get_f64_list("missing"), None);
     }
 
     #[test]

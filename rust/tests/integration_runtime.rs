@@ -5,7 +5,7 @@
 //! Requires `make artifacts` to have run (the Makefile's `test` target
 //! guarantees it).
 
-use aifa::agent::{EnvConfig, Policy, SchedulingEnv, StaticAllFpga};
+use aifa::agent::{CongestionLevel, EnvConfig, Policy, SchedulingEnv, StaticAllFpga};
 use aifa::coordinator::Coordinator;
 use aifa::data::TestSet;
 use aifa::platform::{CpuModel, FpgaPlatform, Placement};
@@ -112,7 +112,7 @@ fn coordinator_mixed_execution() {
     let e = env(&s);
     let coord = Coordinator::new(&s, e).unwrap();
     let imgs = ts.decode_batch(0, 8).unwrap();
-    let res = coord.infer(&imgs, 8, &StaticAllFpga, false).unwrap();
+    let res = coord.infer(&imgs, 8, &StaticAllFpga, CongestionLevel::Free).unwrap();
     assert_eq!(res.placement, vec![Placement::Fpga; 9]);
     assert!(res.sim_latency_s > 0.0);
     assert!(res.sim_energy_j > 0.0);
@@ -150,7 +150,7 @@ fn hybrid_placement_is_numerically_sane() {
             }
         }
     }
-    let res = coord.infer(&imgs, 8, &EveryOther, false).unwrap();
+    let res = coord.infer(&imgs, 8, &EveryOther, CongestionLevel::Free).unwrap();
     let gold = golden_logits(&s, "logits_fp32");
     let classes = gold[0].len();
     let got = argmax_rows(&res.logits, classes);
@@ -158,7 +158,7 @@ fn hybrid_placement_is_numerically_sane() {
     let agree = got.iter().zip(&expect).filter(|(a, b)| a == b).count();
     assert!(agree >= 7, "hybrid agreement {agree}/8 too low");
     // hybrid must be slower than all-FPGA in simulated time (boundary xfers)
-    let all = coord.infer(&imgs, 8, &StaticAllFpga, false).unwrap();
+    let all = coord.infer(&imgs, 8, &StaticAllFpga, CongestionLevel::Free).unwrap();
     assert!(res.sim_latency_s > all.sim_latency_s);
 }
 

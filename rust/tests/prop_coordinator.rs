@@ -8,7 +8,7 @@
 //!   * contiguous placements never lose to their fragmented permutations
 //!   * the batcher's padding choice is the minimal compiled batch >= n
 
-use aifa::agent::{EnvConfig, SchedulingEnv, State};
+use aifa::agent::{CongestionLevel, EnvConfig, SchedulingEnv, State};
 use aifa::graph::Network;
 use aifa::platform::{CpuModel, FpgaPlatform, Placement};
 use aifa::testing::prop::{check, Gen};
@@ -37,11 +37,11 @@ fn step_costs_always_sum_to_timeline() {
         300,
         |g| random_placement(g, n),
         |placement| {
-            let mut s = e.initial_state(false);
+            let mut s = e.initial_state(CongestionLevel::Free);
             let mut sum = 0.0;
             for &p in placement {
                 sum += e.step_cost_s(&s, p);
-                s = State { unit: s.unit + 1, prev: p, congestion: 0 };
+                s = State { unit: s.unit + 1, prev: p, congestion: CongestionLevel::Free };
             }
             let tl = e.placement_latency_s(placement);
             if (sum - tl).abs() < 1e-9 {
@@ -152,6 +152,7 @@ fn count_segments(p: &[Placement]) -> usize {
 
 #[test]
 fn congested_fpga_never_faster() {
+    // latency must be monotone in the congestion level for any placement
     let e = env(1);
     let n = e.n_units();
     check(
@@ -159,20 +160,19 @@ fn congested_fpga_never_faster() {
         200,
         |g| random_placement(g, n),
         |placement| {
-            let mut s_free = e.initial_state(false);
-            let mut s_busy = e.initial_state(true);
-            let mut free = 0.0;
-            let mut busy = 0.0;
-            for &p in placement {
-                free += e.step_cost_s(&s_free, p);
-                busy += e.step_cost_s(&s_busy, p);
-                s_free = State { unit: s_free.unit + 1, prev: p, congestion: 0 };
-                s_busy = State { unit: s_busy.unit + 1, prev: p, congestion: 1 };
+            let mut costs = [0.0f64; 3];
+            for (li, &level) in CongestionLevel::ALL.iter().enumerate() {
+                let mut s = e.initial_state(level);
+                for &p in placement {
+                    costs[li] += e.step_cost_s(&s, p);
+                    s = State { unit: s.unit + 1, prev: p, congestion: level };
+                }
             }
-            if busy + 1e-15 >= free {
+            let [free, shared, sat] = costs;
+            if shared + 1e-15 >= free && sat + 1e-15 >= shared {
                 Ok(())
             } else {
-                Err(format!("congested {busy} < free {free}"))
+                Err(format!("levels not monotone: {free} / {shared} / {sat}"))
             }
         },
     );

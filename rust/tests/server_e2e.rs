@@ -3,7 +3,7 @@
 //! batching behaviour and pool metrics.  Requires real artifacts
 //! (`make artifacts`); the artifact-free pool tests live in pool_sim.rs.
 
-use aifa::agent::{EnvConfig, FixedPlacement, Policy, SchedulingEnv, StaticAllFpga};
+use aifa::agent::{CongestionLevel, EnvConfig, FixedPlacement, Policy, SchedulingEnv, StaticAllFpga};
 use aifa::data::TestSet;
 use aifa::platform::{CpuModel, FpgaPlatform};
 use aifa::runtime::ArtifactStore;
@@ -30,7 +30,7 @@ fn serves_batched_requests_correctly() {
     let probe = ArtifactStore::open(artifact_dir()).unwrap();
     let ts = TestSet::load(probe.root.join("testset.bin")).unwrap();
     let env = make_env(&probe);
-    let placement = StaticAllFpga.placement(&env, false);
+    let placement = StaticAllFpga.placement(&env, CongestionLevel::Free);
     drop(probe);
 
     let server = Server::start(
@@ -84,7 +84,7 @@ fn pool_of_two_workers_serves_real_artifacts() {
     let probe = ArtifactStore::open(artifact_dir()).unwrap();
     let ts = TestSet::load(probe.root.join("testset.bin")).unwrap();
     let env = make_env(&probe);
-    let placement = StaticAllFpga.placement(&env, false);
+    let placement = StaticAllFpga.placement(&env, CongestionLevel::Free);
     drop(probe);
 
     let server = Server::start_pool(
@@ -118,7 +118,7 @@ fn pool_of_two_workers_serves_real_artifacts() {
 fn shutdown_is_clean_with_no_requests() {
     let probe = ArtifactStore::open(artifact_dir()).unwrap();
     let env = make_env(&probe);
-    let placement = StaticAllFpga.placement(&env, false);
+    let placement = StaticAllFpga.placement(&env, CongestionLevel::Free);
     drop(probe);
     let server = Server::start(
         artifact_dir(),

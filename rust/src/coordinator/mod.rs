@@ -106,6 +106,13 @@ impl PlacementPlan {
             unit_times_s: tr.step_costs_s,
         }
     }
+
+    /// Whether any unit of this plan runs on the fabric.  An all-CPU
+    /// plan needs no fabric lease — the serving pool peeks this before
+    /// reserving a slot.
+    pub fn offloads(&self) -> bool {
+        self.placement.contains(&Placement::Fpga)
+    }
 }
 
 /// Cache of [`PlacementPlan`]s keyed on `(policy name, batch, congestion
@@ -149,6 +156,20 @@ impl PlanCache {
             self.generation = generation;
             self.invalidations += 1;
         }
+    }
+
+    /// Non-counting lookup: the cached plan for the key, if one exists
+    /// under the cache's current generation.  This is the serving pool's
+    /// offload peek — it must not distort hit/miss telemetry (the one
+    /// counted lookup per executed chunk stays in [`PlanCache::plan`]),
+    /// so a missing plan is simply `None`, never a build.
+    pub fn peek(
+        &self,
+        policy: &dyn Policy,
+        batch: usize,
+        level: CongestionLevel,
+    ) -> Option<&Rc<PlacementPlan>> {
+        self.plans.get(&(policy.name(), batch, level))
     }
 
     /// Cached plan lookup; builds (one policy walk) on miss.  Plans are
@@ -224,6 +245,23 @@ impl<S: Borrow<ArtifactStore>> Coordinator<S> {
     pub fn plan_cache_stats(&self) -> (u64, u64) {
         let p = self.plans.borrow();
         (p.hits, p.misses)
+    }
+
+    /// Offload peek for the serving pool's lease decision: whether the
+    /// *cached* plan for `(batch, fabric.level)` places any unit on the
+    /// fabric.  `None` when no plan is cached yet — the caller should
+    /// then lease conservatively.  Never counts a hit or miss; the one
+    /// counted lookup happens in the subsequent
+    /// [`Coordinator::infer_cached`].
+    pub fn plan_offloads(
+        &self,
+        policy: &dyn Policy,
+        batch: usize,
+        fabric: FabricState,
+    ) -> Option<bool> {
+        let mut plans = self.plans.borrow_mut();
+        plans.sync_generation(fabric.generation);
+        plans.peek(policy, batch, fabric.level).map(|p| p.offloads())
     }
 
     /// Largest supported per-unit batch <= requested (requests are split).
@@ -452,6 +490,27 @@ mod tests {
         assert_eq!(p2.generation, 8);
         assert!(!Rc::ptr_eq(&p1, &p2), "rebuilt plan is a fresh object");
         assert_eq!(pol.n.get(), 2 * e.n_units() as u64, "rebuild re-walks the policy");
+    }
+
+    #[test]
+    fn peek_is_non_counting_and_offload_aware() {
+        let e = env();
+        let mut cache = PlanCache::new();
+        assert!(cache.peek(&GreedyStep, 8, CongestionLevel::Free).is_none());
+        assert_eq!((cache.hits, cache.misses), (0, 0), "peeking must count nothing");
+
+        let _ = cache.plan(&e, &crate::agent::AllCpu, 8, CongestionLevel::Free);
+        let _ = cache.plan(&e, &crate::agent::StaticAllFpga, 8, CongestionLevel::Free);
+        let cpu = cache.peek(&crate::agent::AllCpu, 8, CongestionLevel::Free).unwrap();
+        assert!(!cpu.offloads(), "an all-CPU plan needs no fabric lease");
+        let fpga = cache.peek(&crate::agent::StaticAllFpga, 8, CongestionLevel::Free).unwrap();
+        assert!(fpga.offloads());
+        assert_eq!((cache.hits, cache.misses), (0, 2), "peeks left the counters alone");
+
+        // stale plans are not peekable either: a generation bump clears
+        // the cache before the next lease decision reads it
+        cache.sync_generation(9);
+        assert!(cache.peek(&crate::agent::AllCpu, 8, CongestionLevel::Free).is_none());
     }
 
     #[test]

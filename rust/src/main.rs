@@ -9,9 +9,10 @@
 //!   eda           run the Fig 4 agentic design-flow simulation
 //!   serve         N-worker serving pool over the real artifacts
 //!                 (fabric arbiter knobs: --shared-at / --saturated-at /
-//!                  --dma-budget-mb)
+//!                  --dma-budget-mb; admission knobs: --shed / --queue-cap)
 //!   bench serve   simulated-path serving sweeps -> BENCH_serve.json
-//!                 (closed-loop worker sweep + open-loop Poisson λ sweep)
+//!                 (closed-loop worker sweep + open-loop Poisson λ sweep
+//!                  with an auto-found knee: the max sustainable λ)
 
 use aifa::accel::AccelConfig;
 use aifa::agent::{
@@ -24,8 +25,8 @@ use aifa::llm::LlmSession;
 use aifa::platform::{CpuModel, FpgaPlatform};
 use aifa::runtime::ArtifactStore;
 use aifa::server::{
-    ArbiterConfig, BatchConfig, BatchEngine, EngineFactory, FabricArbiter, Server, ServingPool,
-    SimEngine,
+    AdmissionConfig, ArbiterConfig, BatchConfig, BatchEngine, EngineFactory, FabricArbiter, Reply,
+    Server, ServingPool, SimEngine,
 };
 use aifa::util::cli::Cli;
 use aifa::util::json::Json;
@@ -59,7 +60,9 @@ fn main() {
         .opt("shared-at", Some("2"), "arbiter: in-flight leases at/above which the fabric is Shared")
         .opt("saturated-at", Some("auto"), "arbiter: leases at/above which it is Saturated (auto = max(workers, 3))")
         .opt("dma-budget-mb", Some("32"), "arbiter: in-flight DMA MiB before the level escalates")
-        .opt("rates", Some("auto"), "bench serve: Poisson arrival λ grid, req/s (auto = 500,2000,8000)");
+        .opt("rates", Some("auto"), "bench serve: Poisson arrival λ grid, req/s (auto = 500,2000,8000)")
+        .opt("queue-cap", Some("auto"), "admission: ingress depth before overload handling (auto = 64*workers; bench defer runs stay uncapped)")
+        .flag("shed", "admission: reject (typed Rejected reply) instead of deferring under sustained saturation");
     let args = match cli.parse(&rest) {
         Ok(a) => a,
         Err(msg) => {
@@ -221,6 +224,21 @@ fn arbiter_from_args(args: &aifa::util::cli::Args, workers: usize) -> Result<Arc
     Ok(FabricArbiter::new(cfg))
 }
 
+/// Build the admission config from `--shed` / `--queue-cap`.  The auto
+/// cap scales with the pool (64 requests of headroom per worker).
+fn admission_from_args(args: &aifa::util::cli::Args, workers: usize) -> Result<AdmissionConfig> {
+    let mut cfg = AdmissionConfig { queue_cap: 64 * workers.max(1), shed: args.has("shed") };
+    match args.get("queue-cap") {
+        Some("auto") | None => {}
+        Some(v) => {
+            cfg.queue_cap = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--queue-cap wants a request count or 'auto'"))?;
+        }
+    }
+    Ok(cfg)
+}
+
 /// `aifa serve`: replay the test set through an N-worker pool over the
 /// real artifacts with a Q-trained placement, then print merged metrics.
 fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
@@ -252,14 +270,21 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
 
     let arbiter = arbiter_from_args(args, workers)?;
     let acfg = arbiter.config();
+    let admission = admission_from_args(args, workers)?;
     println!(
-        "arbiter: shared_at={} saturated_at={} dma_budget={} MiB generation={}",
+        "arbiter: shared_at={} saturated_at={} dma_budget={} MiB window={} ms generation={}",
         acfg.shared_at,
         acfg.saturated_at,
         acfg.dma_budget_bytes >> 20,
+        acfg.saturation_window.as_millis(),
         arbiter.generation()
     );
-    let server = Server::start_pool_with(
+    println!(
+        "admission: queue_cap={} mode={}",
+        admission.queue_cap,
+        if admission.shed { "shed" } else { "defer" }
+    );
+    let server = Server::start_pool_admission(
         workers,
         dir,
         |store| {
@@ -272,6 +297,7 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
         },
         Arc::new(policy),
         BatchConfig { max_wait: wait, max_batch: 8 },
+        admission,
         arbiter.clone(),
     )?;
 
@@ -282,24 +308,32 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
         pending.push((i % ts.n, server.handle.submit(img)?));
     }
     let mut hits = 0usize;
+    let (mut ok, mut rejected, mut failed) = (0usize, 0usize, 0usize);
     let mut level_seen = [0u64; 3];
     for (idx, rx) in pending {
-        let resp = rx.recv()?;
-        hits += (resp.class == ts.labels[idx] as usize) as usize;
-        level_seen[resp.congestion.index()] += 1;
+        match rx.recv()? {
+            Reply::Ok(resp) => {
+                ok += 1;
+                hits += (resp.class == ts.labels[idx] as usize) as usize;
+                level_seen[resp.congestion.index()] += 1;
+            }
+            Reply::Rejected { .. } => rejected += 1,
+            Reply::Failed { .. } => failed += 1,
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     println!("{}", server.metrics.summary());
     println!(
-        "responses by level: free={} shared={} saturated={}  peak in-flight leases={}",
+        "replies: ok={ok} rejected={rejected} failed={failed}  responses by level: free={} shared={} saturated={}  peak in-flight leases={}",
         level_seen[0],
         level_seen[1],
         level_seen[2],
         arbiter.peak_inflight()
     );
     println!(
-        "workers={workers} accuracy={:.4} throughput={:.1} req/s over {wall:.2}s",
-        hits as f64 / n as f64,
+        "workers={workers} accuracy={:.4} goodput={:.1} ok/s (offered {:.1} req/s) over {wall:.2}s",
+        hits as f64 / ok.max(1) as f64,
+        ok as f64 / wall,
         n as f64 / wall
     );
     server.shutdown();
@@ -318,9 +352,27 @@ struct ServeBenchRow {
 }
 
 struct OpenLoopRow {
+    /// Nominal λ from the sweep grid.
     rate: f64,
+    /// Measured arrival rate over the submission phase — sleep wake-up
+    /// overhead makes this fall short of `rate` at high λ, and the knee
+    /// must be judged against what was actually offered.
+    offered_rps: f64,
     workers: usize,
+    /// Reply rate (every typed reply counts — Ok, Rejected, Failed).
     achieved_rps: f64,
+    /// Goodput: `Ok` replies per second over the full run (informational
+    /// — biased low by the post-arrival drain tail for short runs).
+    goodput_rps: f64,
+    /// The knee criterion: the pool kept pace while load was offered —
+    /// at the end of the arrival window the unanswered backlog fits in
+    /// the worker pipeline (2 batches per worker + the one being
+    /// coalesced), i.e. nothing had piled up in the ingress.  Judged at
+    /// arrival end so the drain tail cannot bias it for small n/λ.
+    sustained: bool,
+    ok: u64,
+    rejected: u64,
+    failed: u64,
     p50_ms: f64,
     p99_ms: f64,
     queue_p50_ms: f64,
@@ -343,11 +395,15 @@ fn sim_factory(work: usize) -> Arc<EngineFactory> {
 
 /// One simulated-path pool run: submit `n` single-image requests as fast
 /// as possible, wait for every response, report throughput + percentiles.
+/// Admission is uncapped: the closed loop measures raw pool capacity, so
+/// deferral must never throttle it.
 fn run_sim_serve(workers: usize, n: usize, work: usize, wait: Duration) -> Result<ServeBenchRow> {
-    let pool = ServingPool::start(
+    let pool = ServingPool::start_full(
         workers,
         BatchConfig { max_wait: wait, max_batch: 8 },
+        AdmissionConfig { queue_cap: usize::MAX, shed: false },
         sim_factory(work),
+        FabricArbiter::new(ArbiterConfig::for_workers(workers.max(1))),
     )?;
     let handle = pool.handle();
 
@@ -383,9 +439,11 @@ fn run_sim_serve(workers: usize, n: usize, work: usize, wait: Duration) -> Resul
 
 /// One open-loop run: Poisson arrivals at `rate` req/s (exponential
 /// inter-arrival gaps, offered load independent of completions), every
-/// response collected afterwards.  Open-loop latency percentiles expose
-/// queueing collapse that closed-loop throughput sweeps hide, and the
-/// per-level occupancy shows the arbiter quantizing that load.
+/// typed reply collected afterwards.  Open-loop latency percentiles
+/// expose queueing collapse that closed-loop throughput sweeps hide, the
+/// per-level occupancy shows the arbiter quantizing that load, and with
+/// shedding enabled the ok/rejected split shows admission control
+/// holding goodput at the knee.
 fn run_open_loop(
     workers: usize,
     n: usize,
@@ -393,11 +451,15 @@ fn run_open_loop(
     wait: Duration,
     rate: f64,
     seed: u64,
+    admission: AdmissionConfig,
 ) -> Result<OpenLoopRow> {
-    let pool = ServingPool::start(
+    let cfg = BatchConfig { max_wait: wait, max_batch: 8 };
+    let pool = ServingPool::start_full(
         workers,
-        BatchConfig { max_wait: wait, max_batch: 8 },
+        cfg,
+        admission,
         sim_factory(work),
+        FabricArbiter::new(ArbiterConfig::for_workers(workers.max(1))),
     )?;
     let handle = pool.handle();
     let arbiter = pool.arbiter().clone();
@@ -411,20 +473,46 @@ fn run_open_loop(
         let mut img = base.clone();
         img[0] = i as f32;
         pending.push(handle.submit(img)?);
-        std::thread::sleep(Duration::from_secs_f64(rng.exp(rate).min(0.050)));
+        // rate-relative cap (10 mean gaps): the old fixed 50 ms cap
+        // silently distorted the offered load of every λ below ~20/s
+        std::thread::sleep(Duration::from_secs_f64(rng.exp_capped(rate)));
     }
+    let arrival_wall = t0.elapsed().as_secs_f64();
+    // requests actually *served* by the time offering ended — shed
+    // requests deliberately don't count: admission keeping the queue
+    // bounded by rejecting is not the same as sustaining the load
+    let served_at_arrival_end = pool.metrics.served();
+    let (mut ok, mut rejected, mut failed) = (0u64, 0u64, 0u64);
     for rx in pending {
-        let _ = rx.recv()?;
+        match rx.recv()? {
+            Reply::Ok(_) => ok += 1,
+            Reply::Rejected { .. } => rejected += 1,
+            Reply::Failed { .. } => failed += 1,
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
 
     let merged = pool.metrics.merged();
     let lv = pool.metrics.level_batches();
     let total_batches = lv.iter().sum::<u64>().max(1) as f64;
+    // sustained ⇔ everything offered was *served* by the end of the
+    // arrival window except what fits inside the bounded worker pipeline
+    // (2 batches per worker in flight/buffered, plus the batch the
+    // dispatcher is coalescing), with 5% slack — anything more means
+    // requests were piling up (ingress backlog) or being rejected, i.e.
+    // λ exceeded serving capacity.
+    let pipeline = (2 * workers * cfg.max_batch + cfg.max_batch) as u64;
+    let sustained = (n as u64).saturating_sub(served_at_arrival_end) <= pipeline + n as u64 / 20;
     let row = OpenLoopRow {
         rate,
+        offered_rps: n as f64 / arrival_wall.max(1e-9),
         workers,
         achieved_rps: n as f64 / wall,
+        goodput_rps: ok as f64 / wall,
+        sustained,
+        ok,
+        rejected,
+        failed,
         p50_ms: merged.latency.p50() * 1e3,
         p99_ms: merged.latency.p99() * 1e3,
         queue_p50_ms: merged.queue_delay.p50() * 1e3,
@@ -474,14 +562,32 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
 
     // open-loop Poisson sweep at the largest pool in the grid
     let ol_workers = workers_list.iter().copied().max().unwrap_or(1);
+    // default (auto, no --shed): pure observation — uncapped defer, the
+    // sweep just records where queueing collapses; with --shed the same
+    // sweep shows admission control trading rejections for goodput
+    let mut admission = admission_from_args(args, ol_workers)?;
+    if !admission.shed && matches!(args.get("queue-cap"), Some("auto") | None) {
+        admission.queue_cap = usize::MAX;
+    }
+    println!(
+        "open-loop: inter-arrival cap 10/λ (rate-relative; a fixed 50 ms cap distorted λ < 20/s), admission queue_cap={} mode={}",
+        admission.queue_cap,
+        if admission.shed { "shed" } else { "defer" }
+    );
     let mut ol_rows = Vec::new();
     for &rate in &rates {
-        let r = run_open_loop(ol_workers, n, work, wait, rate, seed)?;
+        let r = run_open_loop(ol_workers, n, work, wait, rate, seed, admission)?;
         println!(
-            "λ={:<8.0} workers={} achieved={:>9.1}/s p50={:>8.3}ms p99={:>8.3}ms queue p50={:>8.3}ms levels={:.2}/{:.2}/{:.2} peak-leases={}",
+            "λ={:<8.0} offered={:>9.1}/s workers={} achieved={:>9.1}/s goodput={:>9.1}/s {} ok/rej/fail={}/{}/{} p50={:>8.3}ms p99={:>8.3}ms queue p50={:>8.3}ms levels={:.2}/{:.2}/{:.2} peak-leases={}",
             r.rate,
+            r.offered_rps,
             r.workers,
             r.achieved_rps,
+            r.goodput_rps,
+            if r.sustained { "sustained" } else { "COLLAPSED" },
+            r.ok,
+            r.rejected,
+            r.failed,
             r.p50_ms,
             r.p99_ms,
             r.queue_p50_ms,
@@ -491,6 +597,22 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
             r.peak_inflight
         );
         ol_rows.push(r);
+    }
+
+    // auto-found knee: the largest swept λ the pool actually sustained.
+    // The per-row criterion is judged at the end of the arrival window
+    // (backlog fits the worker pipeline), so neither the post-run drain
+    // tail nor generator shortfall vs the nominal λ can bias it; the
+    // measured offered_rps rides along in the row for calibration.
+    let knee_rate = ol_rows
+        .iter()
+        .filter(|r| r.sustained)
+        .map(|r| r.rate)
+        .fold(f64::NAN, f64::max);
+    if knee_rate.is_nan() {
+        println!("knee: no swept λ was sustained (every rate left an ingress backlog)");
+    } else {
+        println!("knee: max sustainable λ = {knee_rate:.0}/s (served kept pace with arrivals)");
     }
 
     let row_objs: Vec<Json> = rows
@@ -513,8 +635,14 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
         .map(|r| {
             Json::obj(vec![
                 ("rate", Json::num(r.rate)),
+                ("offered_rps", Json::num(r.offered_rps)),
                 ("workers", Json::num(r.workers as f64)),
                 ("achieved_rps", Json::num(r.achieved_rps)),
+                ("goodput_rps", Json::num(r.goodput_rps)),
+                ("sustained", Json::Bool(r.sustained)),
+                ("ok", Json::num(r.ok as f64)),
+                ("rejected", Json::num(r.rejected as f64)),
+                ("failed", Json::num(r.failed as f64)),
                 ("p50_ms", Json::num(r.p50_ms)),
                 ("p99_ms", Json::num(r.p99_ms)),
                 ("queue_p50_ms", Json::num(r.queue_p50_ms)),
@@ -531,6 +659,11 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
         ("sim", Json::Bool(true)),
         ("n", Json::num(n as f64)),
         ("work_passes", Json::num(work as f64)),
+        ("shed", Json::Bool(admission.shed)),
+        (
+            "knee_rate",
+            if knee_rate.is_nan() { Json::Null } else { Json::num(knee_rate) },
+        ),
         ("rows", Json::Arr(row_objs)),
         ("open_loop", Json::Arr(ol_objs)),
     ];

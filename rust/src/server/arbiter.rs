@@ -29,6 +29,7 @@ use crate::fpga::{Bitstream, Fabric, Resources};
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Arbitration thresholds.  Lease counts *include* the lease being
 /// granted, so `shared_at: 2` means "Shared once a second batch is in
@@ -46,6 +47,11 @@ pub struct ArbiterConfig {
     /// In-flight DMA bytes above which the derived level escalates one
     /// step (the host link, not the fabric, is the bottleneck).
     pub dma_budget_bytes: u64,
+    /// Continuous time at `Saturated` before the arbiter reports
+    /// *sustained* saturation — the admission-control signal.  A single
+    /// spiky batch must not shed traffic; a fabric that stays pinned for
+    /// this long should.
+    pub saturation_window: Duration,
 }
 
 impl Default for ArbiterConfig {
@@ -56,6 +62,7 @@ impl Default for ArbiterConfig {
             shared_occupancy: 0.75,
             saturated_occupancy: 0.92,
             dma_budget_bytes: 32 << 20,
+            saturation_window: Duration::from_millis(25),
         }
     }
 }
@@ -80,6 +87,12 @@ pub struct FabricArbiter {
     inflight: AtomicUsize,
     inflight_bytes: AtomicU64,
     generation: AtomicU64,
+    /// Epoch base for the saturation run-length clock.
+    started: Instant,
+    /// Microsecond offset (from `started`) when the current continuous
+    /// run of `Saturated` observations began; `u64::MAX` when the last
+    /// observed level was below `Saturated`.
+    sat_since_us: AtomicU64,
     // telemetry
     leases_granted: AtomicU64,
     peak_inflight: AtomicUsize,
@@ -102,6 +115,8 @@ impl FabricArbiter {
             inflight: AtomicUsize::new(0),
             inflight_bytes: AtomicU64::new(0),
             generation: AtomicU64::new(1),
+            started: Instant::now(),
+            sat_since_us: AtomicU64::new(u64::MAX),
             leases_granted: AtomicU64::new(0),
             peak_inflight: AtomicUsize::new(0),
         })
@@ -120,23 +135,68 @@ impl FabricArbiter {
         let bytes = self.inflight_bytes.fetch_add(dma_bytes, Ordering::SeqCst) + dma_bytes;
         self.leases_granted.fetch_add(1, Ordering::Relaxed);
         self.peak_inflight.fetch_max(inflight, Ordering::Relaxed);
-        let state = FabricState::new(
-            self.level_for(inflight, bytes),
-            self.generation.load(Ordering::SeqCst),
-        );
+        let level = self.level_for(inflight, bytes);
+        self.observe(level);
+        let state = FabricState::new(level, self.generation.load(Ordering::SeqCst));
         FabricLease { arbiter: self.clone(), dma_bytes, state }
     }
 
-    /// Current snapshot without granting a lease (telemetry / responses
-    /// on the non-offloaded path).
+    /// Current snapshot without granting a lease (telemetry and the
+    /// dispatcher's admission check).
     pub fn state(&self) -> FabricState {
-        FabricState::new(
-            self.level_for(
-                self.inflight.load(Ordering::SeqCst),
-                self.inflight_bytes.load(Ordering::SeqCst),
-            ),
-            self.generation.load(Ordering::SeqCst),
-        )
+        let level = self.level_for(
+            self.inflight.load(Ordering::SeqCst),
+            self.inflight_bytes.load(Ordering::SeqCst),
+        );
+        self.observe(level);
+        FabricState::new(level, self.generation.load(Ordering::SeqCst))
+    }
+
+    /// The [`FabricState`] a lease for `dma_bytes` *would* be granted
+    /// right now, without taking one.  The serving pool peeks placement
+    /// plans under this state so the peek key always matches the key a
+    /// leased run would cache — peeking under the lease-free level would
+    /// diverge whenever the lease itself crosses a threshold (e.g.
+    /// `shared_at: 1`), and the skip would never engage.  Purely
+    /// predictive: it does **not** feed the saturation tracker (the +1
+    /// phantom lease is not an observation of real load).
+    pub fn peek_lease_state(&self, dma_bytes: u64) -> FabricState {
+        let level = self.level_for(
+            self.inflight.load(Ordering::SeqCst) + 1,
+            self.inflight_bytes.load(Ordering::SeqCst) + dma_bytes,
+        );
+        FabricState::new(level, self.generation.load(Ordering::SeqCst))
+    }
+
+    /// Feed the saturation run-length tracker.  Only the *start* of a
+    /// `Saturated` run is stamped; any lower observation resets it.
+    fn observe(&self, level: CongestionLevel) {
+        if level == CongestionLevel::Saturated {
+            let now_us = self.started.elapsed().as_micros() as u64;
+            let _ = self.sat_since_us.compare_exchange(
+                u64::MAX,
+                now_us,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            );
+        } else {
+            self.sat_since_us.store(u64::MAX, Ordering::SeqCst);
+        }
+    }
+
+    /// True when the fabric has been continuously `Saturated` for at
+    /// least [`ArbiterConfig::saturation_window`] — the dispatcher's
+    /// shed/defer signal.  Re-derives the live level first (and feeds
+    /// the tracker), so a fabric that cooled since the last lease
+    /// reports false immediately.
+    pub fn sustained_saturated(&self) -> bool {
+        if self.state().level != CongestionLevel::Saturated {
+            return false;
+        }
+        let since = self.sat_since_us.load(Ordering::SeqCst);
+        since != u64::MAX
+            && self.started.elapsed().as_micros() as u64 - since
+                >= self.cfg.saturation_window.as_micros() as u64
     }
 
     fn level_for(&self, inflight: usize, inflight_bytes: u64) -> CongestionLevel {
@@ -163,8 +223,13 @@ impl FabricArbiter {
     }
 
     fn release(&self, dma_bytes: u64) {
-        self.inflight.fetch_sub(1, Ordering::SeqCst);
-        self.inflight_bytes.fetch_sub(dma_bytes, Ordering::SeqCst);
+        let inflight = self.inflight.fetch_sub(1, Ordering::SeqCst) - 1;
+        let bytes = self.inflight_bytes.fetch_sub(dma_bytes, Ordering::SeqCst) - dma_bytes;
+        // Re-observe after the release: if this drop cooled the fabric
+        // below Saturated, the run-length stamp must reset *now*, not at
+        // the next lease — otherwise a long-idle fabric would carry a
+        // stale stamp and treat a brand-new spike as already sustained.
+        self.observe(self.level_for(inflight, bytes));
     }
 
     /// Current fabric epoch.  Monotone; plans stamped with an older value
@@ -307,6 +372,43 @@ mod tests {
         let g2 = a.bump_generation();
         assert_eq!(g2, g1 + 1);
         assert_eq!(a.with_fabric_ref(|f| f.reconfigurations()), 1);
+    }
+
+    #[test]
+    fn sustained_saturation_needs_the_window() {
+        let a = arb(ArbiterConfig {
+            shared_at: 1,
+            saturated_at: 1,
+            saturation_window: Duration::from_millis(50),
+            ..ArbiterConfig::default()
+        });
+        assert!(!a.sustained_saturated(), "idle fabric is never sustained-saturated");
+
+        let l = a.lease(0);
+        assert_eq!(l.state.level, CongestionLevel::Saturated);
+        assert!(!a.sustained_saturated(), "a fresh spike has not sustained yet");
+        std::thread::sleep(Duration::from_millis(75));
+        assert!(a.sustained_saturated(), "still saturated after the window");
+
+        // releasing the slot cools the fabric immediately...
+        drop(l);
+        assert!(!a.sustained_saturated(), "released fabric is not saturated");
+        // ...and a new spike starts a fresh run, not a resumed one
+        let l2 = a.lease(0);
+        assert!(!a.sustained_saturated(), "new run must re-earn the window");
+
+        // regression: the release itself must reset the stamp — with NO
+        // observation between cool-down and the next spike, a stale stamp
+        // would otherwise mark the fresh spike as instantly sustained
+        std::thread::sleep(Duration::from_millis(75));
+        assert!(a.sustained_saturated(), "second run sustained after its window");
+        drop(l2);
+        std::thread::sleep(Duration::from_millis(75)); // idle gap, nobody observing
+        let _l3 = a.lease(0);
+        assert!(
+            !a.sustained_saturated(),
+            "a spike after an unobserved idle gap must re-earn the window"
+        );
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Inference server: request router + dynamic batcher + worker pool.
+//! Inference server: request router + admission control + dynamic
+//! batcher + worker pool.
 //!
 //! The paper's runtime agent sits inside a serving loop ("prioritize
 //! certain inference requests or alternate between CPU-based and
@@ -6,13 +7,27 @@
 //! provides that loop at pool scale:
 //!
 //! ```text
-//!   clients --(mpsc ingress)--> dispatcher --(batch queue)--> worker 0..N-1
-//!                               [fill_batch window]           [own ArtifactStore
-//!                                                              + Coordinator
-//!                                                              + plan cache
-//!                                                              + metric shard]
+//!   clients --(mpsc ingress, depth-tracked)--> dispatcher --(batch queue)--> worker 0..N-1
+//!            [submit -> Receiver<Reply>]       [admission:                  [own ArtifactStore
+//!                                               depth vs queue_cap           + Coordinator
+//!                                               + sustained Saturated        + plan cache
+//!                                               -> shed | defer]             + metric shard]
+//!                                              [fill_batch window]
 //! ```
 //!
+//! * **Typed replies** — every accepted `submit` terminates in exactly
+//!   one [`Reply`]: `Ok(Response)` when served, `Rejected` when admission
+//!   control sheds it, `Failed` when an engine errors or the pool has no
+//!   live worker.  Response channels are never silently dropped, so a
+//!   submitter blocked on `recv` always wakes with an answer.
+//! * **Admission** ([`AdmissionConfig`]) — the ingress depth is tracked
+//!   live; when it passes `queue_cap` while the shared arbiter reports
+//!   `Saturated` over a sustained window, the dispatcher either **sheds**
+//!   overflow requests (immediate `Reply::Rejected` with a retry hint) or
+//!   **defers** (keeps queueing but throttles dispatch so the fabric
+//!   drains).  CPU-only batches take no fabric lease (plan peek), so they
+//!   neither exert slot pressure nor trigger the saturation they would
+//!   then be shed for.
 //! * **Dispatcher** — one thread coalesces requests up to the largest
 //!   compiled batch within the latency window ([`BatchConfig`]), then
 //!   hands whole batches to a shared work queue; idle workers pick up the
@@ -44,13 +59,14 @@ pub mod pool;
 
 pub use arbiter::{ArbiterConfig, FabricArbiter, FabricLease};
 pub use pool::{
-    BatchEngine, BatchOutput, CoordEngine, EngineFactory, MetricShard, PoolMetrics, ServingPool,
-    ShardSamples, SimEngine,
+    AdmissionStats, BatchEngine, BatchOutput, CoordEngine, EngineFactory, MetricShard,
+    PoolMetrics, ServingPool, ShardSamples, SimEngine,
 };
 
 use crate::agent::{CongestionLevel, Policy, SchedulingEnv};
 use crate::runtime::ArtifactStore;
 use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -59,7 +75,49 @@ use std::time::{Duration, Instant};
 pub struct Request {
     pub image: Vec<f32>,
     pub enqueued: Instant,
-    pub respond: Sender<Response>,
+    pub respond: Sender<Reply>,
+}
+
+/// Terminal outcome of one submitted request.  The pool's contract is
+/// that **every** accepted [`ServerHandle::submit`] resolves to a
+/// `Reply` — no response channel is ever dropped unanswered, not on
+/// engine errors, dead workers, admission shedding, or shutdown.
+#[derive(Debug, Clone)]
+pub enum Reply {
+    /// Served: predicted class + tracing info.
+    Ok(Response),
+    /// Admission control refused the request: the ingress queue was past
+    /// its cap while the fabric sat at `Saturated` for the configured
+    /// window (shed mode).  Resubmit after roughly `retry_hint`.
+    Rejected {
+        level: CongestionLevel,
+        retry_hint: Duration,
+    },
+    /// Execution failed.  `worker` is the failing worker index, or
+    /// [`usize::MAX`] when the request never reached one (pool shutting
+    /// down, or no worker alive to take the batch).
+    Failed { worker: usize, error: String },
+}
+
+impl Reply {
+    /// The served response, or an error describing the rejection/failure
+    /// — the one-liner for callers that treat anything but `Ok` as fatal.
+    pub fn into_result(self) -> Result<Response> {
+        match self {
+            Reply::Ok(r) => Ok(r),
+            Reply::Rejected { level, retry_hint } => Err(anyhow::anyhow!(
+                "request rejected: fabric {level}, retry in {:.0} ms",
+                retry_hint.as_secs_f64() * 1e3
+            )),
+            Reply::Failed { worker, error } if worker == usize::MAX => {
+                Err(anyhow::anyhow!("request failed: {error}"))
+            }
+            Reply::Failed { worker, error } => {
+                Err(anyhow::anyhow!("request failed on worker {worker}: {error}"))
+            }
+        }
+    }
+
 }
 
 /// Response: predicted class + tracing info.
@@ -94,20 +152,80 @@ impl Default for BatchConfig {
     }
 }
 
-/// Handle for submitting requests.
+/// Overload handling: what the dispatcher does when the ingress queue is
+/// past `queue_cap` while the arbiter reports sustained saturation (see
+/// [`arbiter::FabricArbiter::sustained_saturated`]).
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    /// Ingress depth (submitted, not yet dispatched) at/above which
+    /// overload handling engages.  In shed mode a backlog past **8x**
+    /// this cap is shed even without fabric saturation — CPU-bound
+    /// overload (plans that never lease) must not grow the ingress
+    /// without bound just because the arbiter never saturates.
+    pub queue_cap: usize,
+    /// `true`: shed — answer overflow requests `Reply::Rejected`
+    /// immediately so clients can back off.  `false` (default): defer —
+    /// keep every request queued but throttle dispatch so the fabric
+    /// drains; latency absorbs the overload instead of rejections.
+    pub shed: bool,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { queue_cap: 1024, shed: false }
+    }
+}
+
+/// Handle for submitting requests.  Cloneable across producer threads;
+/// tracks the live ingress depth the dispatcher's admission check reads.
 #[derive(Clone)]
 pub struct ServerHandle {
     tx: Sender<Request>,
+    depth: Arc<AtomicUsize>,
+    metrics: Arc<PoolMetrics>,
+    stop: Arc<AtomicBool>,
 }
 
 impl ServerHandle {
-    /// Submit one image; returns a receiver for the response.
-    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Response>> {
+    /// Submit one image; returns a receiver that resolves to at least one
+    /// typed [`Reply`] (exactly one except in a benign shutdown race, when
+    /// a backstop `Failed` may accompany the real reply — one `recv` only
+    /// ever sees one).  Errors immediately when the pool has stopped or
+    /// every worker's engine failed to initialize — the only two cases
+    /// where no reply could ever arrive.
+    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Reply>> {
+        if self.metrics.dead_workers.load(Ordering::Relaxed) >= self.metrics.workers() as u64 {
+            anyhow::bail!("serving pool has no live workers (every engine failed to initialize)");
+        }
         let (tx, rx) = channel();
-        self.tx
-            .send(Request { image, enqueued: Instant::now(), respond: tx })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        let backstop = tx.clone();
+        let req = Request { image, enqueued: Instant::now(), respond: tx };
+        // count the request in *before* sending so the dispatcher's
+        // decrement can never observe a depth it would underflow
+        let d = self.depth.fetch_add(1, Ordering::Relaxed) as u64 + 1;
+        self.metrics.admission.queue_peak.fetch_max(d, Ordering::Relaxed);
+        if self.tx.send(req).is_err() {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+            anyhow::bail!("server stopped");
+        }
+        // Shutdown backstop: the stop flag is set (SeqCst) *before* the
+        // dispatcher's exit drain, so a send that raced past that drain
+        // observes it here and self-answers — the request may sit in a
+        // channel nobody will read, but the submitter still gets a typed
+        // reply.  In the benign overlap (request drained or served AND
+        // flag observed) the receiver holds two replies; one recv sees one.
+        if self.stop.load(Ordering::SeqCst) {
+            let _ = backstop.send(Reply::Failed {
+                worker: usize::MAX,
+                error: "server stopped while the request was in flight".to_string(),
+            });
+        }
         Ok(rx)
+    }
+
+    /// Live ingress depth (submitted, not yet dispatched).
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
     }
 }
 
@@ -222,13 +340,35 @@ impl Server {
         cfg: BatchConfig,
         arbiter: Arc<FabricArbiter>,
     ) -> Result<Server> {
+        Self::start_pool_admission(
+            workers,
+            artifact_dir,
+            make_env,
+            policy,
+            cfg,
+            AdmissionConfig::default(),
+            arbiter,
+        )
+    }
+
+    /// Full constructor: N-worker pool over the real artifact path with
+    /// explicit admission control (`aifa serve --shed/--queue-cap`).
+    pub fn start_pool_admission(
+        workers: usize,
+        artifact_dir: std::path::PathBuf,
+        make_env: impl Fn(&ArtifactStore) -> SchedulingEnv + Send + Sync + 'static,
+        policy: Arc<dyn Policy + Send + Sync>,
+        cfg: BatchConfig,
+        admission: AdmissionConfig,
+        arbiter: Arc<FabricArbiter>,
+    ) -> Result<Server> {
         let factory = move |_worker: usize| -> Result<Box<dyn BatchEngine>> {
             let store = ArtifactStore::open(&artifact_dir)?;
             let env = make_env(&store);
             let policy: Box<dyn Policy> = Box::new(pool::SharedPolicy(policy.clone()));
             Ok(Box::new(CoordEngine::new(store, env, policy)?))
         };
-        Self::from_pool(ServingPool::start_with(workers, cfg, Arc::new(factory), arbiter)?)
+        Self::from_pool(ServingPool::start_full(workers, cfg, admission, Arc::new(factory), arbiter)?)
     }
 
     fn from_pool(pool: ServingPool) -> Result<Server> {

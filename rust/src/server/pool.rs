@@ -4,9 +4,11 @@
 //! Workers own everything thread-local (PJRT stores are `Rc`-backed):
 //! each worker thread calls the [`EngineFactory`] once to build its own
 //! [`BatchEngine`], then pulls whole batches from the shared work queue.
-//! The queue is a single mpsc receiver behind a mutex, so an idle worker
-//! always takes the next batch — work-conserving without per-worker
-//! queues that could go stale behind a slow worker.
+//! The queue is a single **bounded** mpsc receiver behind a mutex, so an
+//! idle worker always takes the next batch — work-conserving without
+//! per-worker queues that could go stale behind a slow worker — while a
+//! fully busy pool pushes backlog back into the ingress, where the
+//! dispatcher's admission check can see (and shed) it.
 //!
 //! Metrics are sharded per worker ([`MetricShard`]): counters are
 //! lock-free atomics, and the sample reservoirs sit behind a mutex with
@@ -16,15 +18,18 @@
 //! shards together only when a summary is asked for.
 
 use super::arbiter::FabricArbiter;
-use super::{fill_batch, split_exec_batches, BatchConfig, Request, Response, ServerHandle};
+use super::{
+    fill_batch, split_exec_batches, AdmissionConfig, BatchConfig, Reply, Request, Response,
+    ServerHandle,
+};
 use crate::agent::{FabricState, Policy, SchedulingEnv, State};
 use crate::coordinator::{Coordinator, PlanCache};
 use crate::platform::Placement;
 use crate::runtime::{argmax_rows, ArtifactStore};
 use crate::util::stats::Samples;
 use anyhow::Result;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -65,6 +70,16 @@ pub trait BatchEngine {
     /// `(hits, misses)` of the placement-plan cache, for telemetry.
     fn plan_cache_stats(&self) -> (u64, u64) {
         (0, 0)
+    }
+    /// Whether the plan this engine would execute for `(batch, fabric)`
+    /// places any unit on the fabric.  The worker consults this *before*
+    /// taking a fabric lease so CPU-only batches exert no slot or DMA
+    /// pressure.  Implementations must answer from the cached plan only
+    /// and count **no** hit/miss (the one counted lookup happens inside
+    /// [`BatchEngine::run`]); when the plan is not cached yet, answer
+    /// `true` — unknown plans lease conservatively.
+    fn plan_offloads(&mut self, _batch: usize, _fabric: FabricState) -> bool {
+        true
     }
 }
 
@@ -137,6 +152,9 @@ impl BatchEngine for CoordEngine {
     }
     fn plan_cache_stats(&self) -> (u64, u64) {
         self.coord.plan_cache_stats()
+    }
+    fn plan_offloads(&mut self, batch: usize, fabric: FabricState) -> bool {
+        self.coord.plan_offloads(self.policy.as_ref(), batch, fabric).unwrap_or(true)
     }
 }
 
@@ -219,6 +237,12 @@ impl BatchEngine for SimEngine {
     fn plan_cache_stats(&self) -> (u64, u64) {
         (self.plans.hits, self.plans.misses)
     }
+    fn plan_offloads(&mut self, batch: usize, fabric: FabricState) -> bool {
+        self.plans.sync_generation(fabric.generation);
+        self.plans
+            .peek(self.policy.as_ref(), batch, fabric.level)
+            .map_or(true, |p| p.offloads())
+    }
 }
 
 /// Per-worker sample reservoirs — single writer (the owning worker).
@@ -258,14 +282,39 @@ pub struct MetricShard {
     pub samples: Mutex<ShardSamples>,
 }
 
+/// Dispatcher-side admission telemetry.  Per-level arrays are indexed by
+/// [`crate::agent::CongestionLevel::index`]; the dispatcher is the only
+/// writer (plus `queue_peak`, raced benignly by submitters).
+#[derive(Debug, Default)]
+pub struct AdmissionStats {
+    /// Requests handed to workers, by arbiter level at dispatch time.
+    pub admitted: [AtomicU64; 3],
+    /// Requests answered [`Reply::Rejected`], by level at shed time.
+    pub shed: [AtomicU64; 3],
+    /// Dispatch throttles taken in defer mode (one per deferred batch).
+    pub deferred: AtomicU64,
+    /// Deepest the ingress queue has ever been.
+    pub queue_peak: AtomicU64,
+}
+
 /// All shards of the pool; everything here is summary-time aggregation.
 pub struct PoolMetrics {
     shards: Vec<Arc<MetricShard>>,
+    /// Admission-control counters (shed/defer/admitted per level).
+    pub admission: AdmissionStats,
+    /// Workers whose engine failed to initialize and exited.  When this
+    /// reaches the pool size, `submit` refuses new work instead of
+    /// queueing requests nobody will ever answer.
+    pub dead_workers: AtomicU64,
 }
 
 impl PoolMetrics {
     pub fn new(workers: usize) -> PoolMetrics {
-        PoolMetrics { shards: (0..workers.max(1)).map(|_| Arc::new(MetricShard::default())).collect() }
+        PoolMetrics {
+            shards: (0..workers.max(1)).map(|_| Arc::new(MetricShard::default())).collect(),
+            admission: AdmissionStats::default(),
+            dead_workers: AtomicU64::new(0),
+        }
     }
 
     pub fn workers(&self) -> usize {
@@ -316,6 +365,30 @@ impl PoolMetrics {
         out
     }
 
+    /// Requests answered `Rejected` across all levels.
+    pub fn shed_total(&self) -> u64 {
+        self.admission.shed.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Requests dispatched to workers across all levels.
+    pub fn admitted_total(&self) -> u64 {
+        self.admission.admitted.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Requests shed per congestion level (free/shared/saturated).
+    pub fn shed_by_level(&self) -> [u64; 3] {
+        [
+            self.admission.shed[0].load(Ordering::Relaxed),
+            self.admission.shed[1].load(Ordering::Relaxed),
+            self.admission.shed[2].load(Ordering::Relaxed),
+        ]
+    }
+
+    /// Dispatch throttles taken in defer mode.
+    pub fn deferred(&self) -> u64 {
+        self.admission.deferred.load(Ordering::Relaxed)
+    }
+
     /// Highest plan generation any worker has executed under.
     pub fn plan_generation(&self) -> u64 {
         self.shards
@@ -338,10 +411,13 @@ impl PoolMetrics {
         let m = self.merged();
         let lv = self.level_batches();
         format!(
-            "served={} batches={} errors={} workers={} plan={}h/{}m gen={} levels={}f/{}s/{}x wall p50={:.2}ms p99={:.2}ms queue p50={:.2}ms sim/batch p50={:.2}ms",
+            "served={} batches={} errors={} shed={} deferred={} dead={} workers={} plan={}h/{}m gen={} levels={}f/{}s/{}x qpeak={} wall p50={:.2}ms p99={:.2}ms queue p50={:.2}ms sim/batch p50={:.2}ms",
             self.served(),
             self.batches(),
             self.errors(),
+            self.shed_total(),
+            self.deferred(),
+            self.dead_workers.load(Ordering::Relaxed),
             self.workers(),
             self.plan_hits(),
             self.plan_misses(),
@@ -349,6 +425,7 @@ impl PoolMetrics {
             lv[0],
             lv[1],
             lv[2],
+            self.admission.queue_peak.load(Ordering::Relaxed),
             m.latency.p50() * 1e3,
             m.latency.p99() * 1e3,
             m.queue_delay.p50() * 1e3,
@@ -380,49 +457,81 @@ impl ServingPool {
 
     /// Spawn `workers` engine threads (each builds its engine via
     /// `factory`) behind one batching dispatcher, sharing `arbiter` for
-    /// per-batch congestion and plan-generation state.
+    /// per-batch congestion and plan-generation state.  Admission is the
+    /// default (deep queue cap, defer mode).
     pub fn start_with(
         workers: usize,
         cfg: BatchConfig,
         factory: Arc<EngineFactory>,
         arbiter: Arc<FabricArbiter>,
     ) -> Result<ServingPool> {
+        ServingPool::start_full(workers, cfg, AdmissionConfig::default(), factory, arbiter)
+    }
+
+    /// Full constructor: explicit admission control on top of
+    /// [`ServingPool::start_with`].  Fails fast (after tearing the
+    /// threads down again) when worker 0 cannot build its engine — a
+    /// pool that would serve nothing must not start.
+    pub fn start_full(
+        workers: usize,
+        cfg: BatchConfig,
+        admission: AdmissionConfig,
+        factory: Arc<EngineFactory>,
+        arbiter: Arc<FabricArbiter>,
+    ) -> Result<ServingPool> {
         let n = workers.max(1);
         let (tx, rx) = channel::<Request>();
-        let (btx, brx) = channel::<Vec<Request>>();
+        // The batch hand-off is *bounded* (one buffered batch per worker):
+        // when every worker is busy the dispatcher blocks here instead of
+        // racing ahead, so overload backlog accumulates in the ingress —
+        // where the depth counter the admission check reads can see it.
+        // An unbounded hand-off would hide the entire backlog from
+        // admission control in an invisible middle queue.
+        let (btx, brx) = sync_channel::<Vec<Request>>(n);
         let shared_rx = Arc::new(Mutex::new(brx));
         let metrics = Arc::new(PoolMetrics::new(n));
+        let depth = Arc::new(AtomicUsize::new(0));
         let stop = Arc::new(AtomicBool::new(false));
 
-        // The dispatcher polls the stop flag between batches so shutdown
-        // terminates even while cloned `ServerHandle`s keep the ingress
-        // channel open somewhere else.
         let stop_d = stop.clone();
-        let dispatcher = std::thread::spawn(move || loop {
-            if stop_d.load(Ordering::Relaxed) {
-                break;
-            }
-            let first = match rx.recv_timeout(Duration::from_millis(25)) {
-                Ok(r) => r,
-                Err(RecvTimeoutError::Timeout) => continue,
-                Err(RecvTimeoutError::Disconnected) => break,
-            };
-            let batch = fill_batch(first, &rx, &cfg);
-            if btx.send(batch).is_err() {
-                break; // every worker exited
-            }
+        let depth_d = depth.clone();
+        let metrics_d = metrics.clone();
+        let arb_d = arbiter.clone();
+        let dispatcher = std::thread::spawn(move || {
+            dispatch_loop(rx, btx, cfg, admission, stop_d, depth_d, metrics_d, arb_d)
         });
 
+        let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
         let mut handles = Vec::with_capacity(n);
         for w in 0..n {
             let rx = shared_rx.clone();
             let factory = factory.clone();
-            let shard = metrics.shard_arc(w);
+            let m = metrics.clone();
             let arb = arbiter.clone();
-            handles.push(std::thread::spawn(move || worker_loop(w, rx, factory, shard, arb)));
+            let ready = if w == 0 { Some(ready_tx.clone()) } else { None };
+            handles.push(std::thread::spawn(move || worker_loop(w, rx, factory, m, arb, ready)));
         }
+        drop(ready_tx);
+
+        // Fail fast when worker 0 cannot build its engine: the seed let
+        // every worker die silently and then accepted requests forever
+        // with zero errors recorded.
+        let init = match ready_rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err("worker 0 thread exited before reporting engine init".to_string()),
+        };
+        if let Err(msg) = init {
+            stop.store(true, Ordering::SeqCst);
+            drop(tx); // dispatcher sees Disconnected, drops the batch queue
+            let _ = dispatcher.join();
+            for w in handles {
+                let _ = w.join();
+            }
+            anyhow::bail!("serving pool failed to start: worker 0 engine init failed: {msg}");
+        }
+
         Ok(ServingPool {
-            ingress: ServerHandle { tx },
+            ingress: ServerHandle { tx, depth, metrics: metrics.clone(), stop: stop.clone() },
             metrics,
             arbiter,
             stop,
@@ -445,11 +554,15 @@ impl ServingPool {
     /// Stop the dispatcher, close ingress, and join dispatcher + workers.
     /// Safe even when cloned handles are still alive elsewhere: the pool
     /// stops accepting within one dispatcher poll (~25ms); requests still
-    /// undelivered at that point are dropped, which their submitters see
-    /// as a disconnected response channel.
+    /// queued at that point receive a typed `Reply::Failed` from the
+    /// dispatcher's exit drain — no submitter is left blocked on a
+    /// silently dropped channel.
     pub fn shutdown(self) {
         let ServingPool { ingress, metrics: _, arbiter: _, stop, dispatcher, workers } = self;
-        stop.store(true, Ordering::Relaxed);
+        // SeqCst: the store must be totally ordered before the
+        // dispatcher's exit drain so a submit racing past that drain
+        // observes the flag and self-answers (see ServerHandle::submit).
+        stop.store(true, Ordering::SeqCst);
         drop(ingress);
         let _ = dispatcher.join();
         for w in workers {
@@ -458,17 +571,133 @@ impl ServingPool {
     }
 }
 
+/// Client backoff suggested with a shed reply: roughly the time the pool
+/// needs to work off the backlog the request queued behind, bounded so
+/// pathological depths still produce a sane hint.
+fn retry_hint(queued: usize, cfg: &BatchConfig) -> Duration {
+    let batches_behind = (queued / cfg.max_batch.max(1) + 1).min(1_000) as u32;
+    let per_batch = cfg.max_wait.max(Duration::from_millis(1));
+    per_batch.saturating_mul(batches_behind).min(Duration::from_secs(1))
+}
+
+/// The dispatcher: pop the ingress, run admission, coalesce a batch,
+/// hand it to the worker queue.  On exit it drains the ingress with
+/// typed `Failed` replies so shutdown never strands a submitter.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_loop(
+    rx: Receiver<Request>,
+    btx: SyncSender<Vec<Request>>,
+    cfg: BatchConfig,
+    admission: AdmissionConfig,
+    stop: Arc<AtomicBool>,
+    depth: Arc<AtomicUsize>,
+    metrics: Arc<PoolMetrics>,
+    arbiter: Arc<FabricArbiter>,
+) {
+    loop {
+        // Poll the stop flag between batches so shutdown terminates even
+        // while cloned `ServerHandle`s keep the ingress channel open.
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let first = match rx.recv_timeout(Duration::from_millis(25)) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
+        depth.fetch_sub(1, Ordering::Relaxed);
+        // Admission: overload = a backlog past the cap while the fabric
+        // has sat at Saturated for the configured window.  The depth
+        // check is first so the underloaded path pays no admission-side
+        // arbiter derivation per request (just the one per-batch
+        // admitted-counter snapshot below); `snap.level == Saturated`
+        // looks redundant next to `sustained_saturated()` (which
+        // re-derives the live level) but is load-bearing: it pins the
+        // level the `Rejected` reply reports to Saturated even if the
+        // fabric moves between the two reads.  Shedding drops the
+        // *oldest* request (queue head): under overload it has already
+        // burned the most latency budget, so freeing its slot for
+        // fresher work — and telling its client to back off — beats
+        // serving a reply that arrives too late.
+        let queued = depth.load(Ordering::Relaxed);
+        if queued >= admission.queue_cap {
+            let snap = arbiter.state();
+            // Backstop: a backlog 8x past the cap is overload even when
+            // the fabric never saturates (CPU-only plans take no lease,
+            // so pure CPU overload is invisible to the arbiter) — in
+            // shed mode the ingress must stay bounded regardless.
+            let runaway = queued >= admission.queue_cap.saturating_mul(8);
+            let saturated = snap.level == crate::agent::CongestionLevel::Saturated
+                && arbiter.sustained_saturated();
+            if saturated || (runaway && admission.shed) {
+                if admission.shed {
+                    metrics.admission.shed[snap.level.index()].fetch_add(1, Ordering::Relaxed);
+                    let _ = first.respond.send(Reply::Rejected {
+                        level: snap.level,
+                        retry_hint: retry_hint(queued, &cfg),
+                    });
+                    continue;
+                }
+                // defer: keep the request, but throttle dispatch one
+                // batching window so the fabric drains instead of piling
+                // deeper
+                metrics.admission.deferred.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(cfg.max_wait.max(Duration::from_millis(1)));
+            }
+        }
+        let batch = fill_batch(first, &rx, &cfg);
+        if batch.len() > 1 {
+            depth.fetch_sub(batch.len() - 1, Ordering::Relaxed);
+        }
+        metrics.admission.admitted[arbiter.state().level.index()]
+            .fetch_add(batch.len() as u64, Ordering::Relaxed);
+        if let Err(undelivered) = btx.send(batch) {
+            // every worker exited: answer the batch instead of dropping
+            // it, and raise the stop flag so racing submits self-answer
+            // through the same backstop shutdown uses
+            stop.store(true, Ordering::SeqCst);
+            for req in undelivered.0 {
+                let _ = req.respond.send(Reply::Failed {
+                    worker: usize::MAX,
+                    error: "serving pool has no live workers".to_string(),
+                });
+            }
+            break;
+        }
+    }
+    // Exit drain: whatever is still queued gets a typed reply rather
+    // than a dropped channel.
+    while let Ok(req) = rx.try_recv() {
+        depth.fetch_sub(1, Ordering::Relaxed);
+        let _ = req.respond.send(Reply::Failed {
+            worker: usize::MAX,
+            error: "server stopped before the request was dispatched".to_string(),
+        });
+    }
+}
+
 fn worker_loop(
     worker: usize,
     rx: Arc<Mutex<Receiver<Vec<Request>>>>,
     factory: Arc<EngineFactory>,
-    shard: Arc<MetricShard>,
+    metrics: Arc<PoolMetrics>,
     arbiter: Arc<FabricArbiter>,
+    ready: Option<Sender<std::result::Result<(), String>>>,
 ) {
+    let shard = metrics.shard_arc(worker);
     let mut engine = match factory(worker) {
-        Ok(e) => e,
+        Ok(e) => {
+            if let Some(t) = &ready {
+                let _ = t.send(Ok(()));
+            }
+            e
+        }
         Err(e) => {
             log::error!("worker {worker}: engine init failed: {e:#}");
+            metrics.dead_workers.fetch_add(1, Ordering::Relaxed);
+            if let Some(t) = &ready {
+                let _ = t.send(Err(format!("{e:#}")));
+            }
             return;
         }
     };
@@ -502,15 +731,44 @@ fn worker_loop(
             flat.resize(exec_b * ie, 0.0);
 
             let started = Instant::now();
-            // Reserve a fabric slot for the batch *before* the placement
-            // is known (the plan itself depends on the level the lease
-            // returns) — a conservative admission model: even a batch
-            // whose plan ends up CPU-only holds its slot until done.
+            // Offload-aware lease: peek the cached plan under the state a
+            // lease WOULD be granted (self-inclusive, same key a leased
+            // run caches under — peeking the lease-free level instead
+            // would miss forever whenever this worker's own lease crosses
+            // a threshold).  A cached CPU-only plan takes no fabric slot
+            // and moves no DMA, so it neither pressures co-tenants nor
+            // feeds the saturation it would then be shed for; unknown
+            // plans (first touch per key) lease conservatively, and the
+            // peek never touches the plan cache's hit/miss counters.
             // Only the real (unpadded) payload counts against the DMA
-            // budget; the slot frees (RAII) as soon as execution ends.
-            let lease = arbiter.lease((real * ie * std::mem::size_of::<f32>()) as u64);
-            let fabric = lease.state;
-            let result = engine.run(&flat, exec_b, fabric, &mut logits);
+            // budget; a taken slot frees (RAII) as soon as execution
+            // ends.  A skipped batch still *runs* under the predicted
+            // state, keeping the plan key stable across batches.
+            let dma_bytes = (real * ie * std::mem::size_of::<f32>()) as u64;
+            let predicted = arbiter.peek_lease_state(dma_bytes);
+            let lease = if engine.plan_offloads(exec_b, predicted) {
+                Some(arbiter.lease(dma_bytes))
+            } else {
+                None
+            };
+            let fabric = lease.as_ref().map_or(predicted, |l| l.state);
+            // A panicking engine (foreign PJRT/XLA code, or a bug) must
+            // not kill the worker thread: with the bounded hand-off a
+            // dead worker would eventually wedge the dispatcher in
+            // btx.send while submit keeps accepting — the stranded-
+            // submitter hang this module exists to eliminate.  Catch the
+            // unwind and fold it into the normal typed-Failed error path.
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                engine.run(&flat, exec_b, fabric, &mut logits)
+            }))
+            .unwrap_or_else(|payload| {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "engine panicked".to_string());
+                Err(anyhow::anyhow!("engine panicked: {msg}"))
+            });
             drop(lease);
             // publish plan-cache stats before responding, so a summary
             // read right after the last response is already consistent
@@ -534,7 +792,7 @@ fn worker_loop(
                         let wall = req.enqueued.elapsed().as_secs_f64();
                         s.latency.push(wall);
                         s.queue_delay.push(queue_s);
-                        let _ = req.respond.send(Response {
+                        let _ = req.respond.send(Reply::Ok(Response {
                             class: preds[i],
                             batch_size: real,
                             queue_s,
@@ -542,12 +800,19 @@ fn worker_loop(
                             worker,
                             congestion: fabric.level,
                             plan_generation: out.plan_generation,
-                        });
+                        }));
                     }
                 }
                 Err(e) => {
+                    // the seed dropped the chunk's response channels here,
+                    // leaving submitters blocked in recv() — every affected
+                    // request now gets a typed Failed reply instead
                     log::error!("worker {worker}: batch inference failed: {e:#}");
                     shard.errors.fetch_add(real as u64, Ordering::Relaxed);
+                    let error = format!("{e:#}");
+                    for req in &batch[start..end] {
+                        let _ = req.respond.send(Reply::Failed { worker, error: error.clone() });
+                    }
                 }
             }
             start = end;

@@ -83,6 +83,22 @@ impl Rng {
         -self.f64().max(1e-12).ln() / lambda
     }
 
+    /// Exponential inter-arrival gap capped at ten mean gaps (`10/rate`).
+    /// The cap is *rate-relative*: a fixed cap (the open-loop generator
+    /// used 50 ms) silently inflates the offered load of every rate whose
+    /// mean gap approaches it — at λ = 20/s a 50 ms cap truncates half
+    /// the distribution.  Ten mean gaps chop only ~`e^-10` ≈ 0.005% of
+    /// the mass at any rate, so offered load stays faithful to λ.
+    /// A non-positive rate means "no pacing" and yields a zero gap
+    /// (`exp` would return ±inf there, which panics in
+    /// `Duration::from_secs_f64`).
+    pub fn exp_capped(&mut self, rate: f64) -> f64 {
+        if rate <= 0.0 {
+            return 0.0;
+        }
+        self.exp(rate).min(10.0 / rate)
+    }
+
     /// Fisher-Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
@@ -150,6 +166,33 @@ mod tests {
         let var = s2 / n as f64 - mean * mean;
         assert!(mean.abs() < 0.02, "mean {mean}");
         assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn exp_capped_preserves_the_offered_rate() {
+        let mut r = Rng::new(5);
+        // non-positive rates mean "no pacing", not a Duration panic
+        assert_eq!(r.exp_capped(0.0), 0.0);
+        assert_eq!(r.exp_capped(-3.0), 0.0);
+        for rate in [0.5, 20.0, 5000.0] {
+            let n = 20_000;
+            let mut sum = 0.0;
+            for _ in 0..n {
+                let gap = r.exp_capped(rate);
+                assert!(gap <= 10.0 / rate, "cap must scale with the rate");
+                assert!(gap >= 0.0);
+                sum += gap;
+            }
+            let mean = sum / n as f64;
+            // the cap removes ~0.005% of mass, so the mean stays ~1/rate
+            // (the old fixed 50 ms cap pulled λ=0.5 down to a 50 ms mean,
+            // a 40x distortion)
+            assert!(
+                (mean * rate - 1.0).abs() < 0.05,
+                "rate {rate}: mean gap {mean} vs expected {}",
+                1.0 / rate
+            );
+        }
     }
 
     #[test]

@@ -1,20 +1,26 @@
 //! Artifact-free serving-pool tests over the simulated execution path:
 //! concurrent submission across M producers x N workers, exact served
 //! accounting, plan-cache steady-state behaviour, metric-shard merging,
-//! and end-to-end fabric arbitration (shared congestion levels + plan
-//! invalidation on reconfiguration).  (The real-artifact pool path is
-//! covered in server_e2e.rs.)
+//! end-to-end fabric arbitration (shared congestion levels + plan
+//! invalidation on reconfiguration), typed-reply invariants (engine
+//! errors, dead workers), and arbiter-driven admission control under
+//! sustained saturation.  (The real-artifact pool path is covered in
+//! server_e2e.rs.)
 
-use aifa::agent::{CongestionLevel, EnvConfig, GreedyStep, SchedulingEnv};
+use aifa::agent::{
+    AllCpu, CongestionLevel, EnvConfig, FabricState, GreedyStep, SchedulingEnv, StaticAllFpga,
+};
 use aifa::fpga::{Bitstream, Resources};
 use aifa::graph::Network;
 use aifa::platform::{CpuModel, FpgaPlatform};
 use aifa::server::{
-    ArbiterConfig, BatchConfig, BatchEngine, EngineFactory, FabricArbiter, ServingPool, SimEngine,
+    AdmissionConfig, ArbiterConfig, BatchConfig, BatchEngine, BatchOutput, EngineFactory,
+    FabricArbiter, Reply, Response, ServingPool, SimEngine,
 };
 use anyhow::Result;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn sim_env() -> SchedulingEnv {
     SchedulingEnv::new(
@@ -31,10 +37,24 @@ fn sim_factory(work: usize) -> Arc<EngineFactory> {
     })
 }
 
+/// Factory whose plans always offload (every unit on the fabric), so a
+/// lease is taken for every batch — contention tests stay deterministic
+/// under the offload-aware lease peek.
+fn fpga_factory(work: usize) -> Arc<EngineFactory> {
+    Arc::new(move |_w: usize| -> Result<Box<dyn BatchEngine>> {
+        Ok(Box::new(SimEngine::new(sim_env(), Box::new(StaticAllFpga), vec![1, 8], work)))
+    })
+}
+
 fn image(ie: usize, tag: usize) -> Vec<f32> {
     let mut img = vec![0.25f32; ie];
     img[0] = tag as f32;
     img
+}
+
+/// Unwrap a reply that must be a served response.
+fn ok(reply: Reply) -> Response {
+    reply.into_result().expect("expected Reply::Ok")
 }
 
 #[test]
@@ -64,7 +84,7 @@ fn concurrent_producers_all_served_exactly() {
             }
             let mut got = 0usize;
             for rx in rxs {
-                let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+                let resp = ok(rx.recv_timeout(Duration::from_secs(60)).unwrap());
                 assert!(resp.class < classes);
                 assert!(resp.worker < WORKERS);
                 assert!(resp.sim_batch_s > 0.0);
@@ -108,7 +128,7 @@ fn steady_state_reuses_cached_plans() {
     let n = 30;
     for i in 0..n {
         let rx = handle.submit(image(ie, i)).unwrap();
-        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        let resp = ok(rx.recv_timeout(Duration::from_secs(60)).unwrap());
         assert_eq!(resp.congestion, CongestionLevel::Free, "sole tenant must see a free fabric");
     }
     drop(handle);
@@ -146,7 +166,7 @@ fn oversized_batches_split_across_compiled_sizes() {
         rxs.push(handle.submit(image(ie, i)).unwrap());
     }
     for rx in rxs {
-        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        let resp = ok(rx.recv_timeout(Duration::from_secs(60)).unwrap());
         assert!(resp.batch_size <= 8, "chunks must not exceed compiled sizes");
     }
     assert_eq!(pool.metrics.served(), n as u64);
@@ -172,9 +192,12 @@ fn arbitration_end_to_end() {
     });
     let pool = ServingPool::start_with(
         WORKERS,
-        // tiny window so bursts split into many batches that overlap
+        // tiny window so bursts split into many batches that overlap;
+        // all-FPGA plans so every batch leases (the offload-aware peek
+        // skips leases for CPU-only plans, which would starve this test
+        // of the very contention it asserts)
         BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
-        sim_factory(24),
+        fpga_factory(24),
         arbiter.clone(),
     )
     .unwrap();
@@ -193,7 +216,7 @@ fn arbitration_end_to_end() {
             rxs.push(handle.submit(image(ie, waves * 1000 + i)).unwrap());
         }
         for rx in rxs {
-            let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            let resp = ok(rx.recv_timeout(Duration::from_secs(60)).unwrap());
             assert_eq!(resp.plan_generation, gen0, "phase 1 runs under the initial epoch");
             if resp.congestion > CongestionLevel::Free {
                 contended += 1;
@@ -237,7 +260,7 @@ fn arbitration_end_to_end() {
     }
     let mut new_epoch = 0u64;
     for rx in rxs {
-        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        let resp = ok(rx.recv_timeout(Duration::from_secs(60)).unwrap());
         if resp.plan_generation == gen1 {
             new_epoch += 1;
         }
@@ -251,6 +274,369 @@ fn arbitration_end_to_end() {
     );
     assert_eq!(pool.metrics.plan_generation(), gen1);
 
+    drop(handle);
+    pool.shutdown();
+}
+
+/// Engine that fails every batch — the regression harness for the
+/// seed's silent-drop path (`worker_loop` used to drop the chunk's
+/// response channels on error, leaving submitters blocked in `recv`).
+struct FailingEngine {
+    batches: Vec<usize>,
+    ie: usize,
+    classes: usize,
+}
+
+impl BatchEngine for FailingEngine {
+    fn unit_batches(&self) -> &[usize] {
+        &self.batches
+    }
+    fn image_elems(&self) -> usize {
+        self.ie
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn run(
+        &mut self,
+        _flat: &[f32],
+        _batch: usize,
+        _fabric: FabricState,
+        _logits: &mut Vec<f32>,
+    ) -> Result<BatchOutput> {
+        anyhow::bail!("injected engine failure")
+    }
+}
+
+#[test]
+fn engine_errors_reply_failed_to_every_request() {
+    const WORKERS: usize = 2;
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+    let classes = env.net.units.last().unwrap().cout;
+
+    let factory: Arc<EngineFactory> = Arc::new(move |_w: usize| -> Result<Box<dyn BatchEngine>> {
+        Ok(Box::new(FailingEngine { batches: vec![1, 8], ie, classes }))
+    });
+    let pool = ServingPool::start(
+        WORKERS,
+        BatchConfig { max_wait: Duration::from_millis(2), max_batch: 8 },
+        factory,
+    )
+    .unwrap();
+    let handle = pool.handle();
+
+    let n = 40;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        rxs.push(handle.submit(image(ie, i)).unwrap());
+    }
+    let mut failed = 0u64;
+    for rx in rxs {
+        match rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("a submitter was left blocked after an engine error")
+        {
+            Reply::Failed { worker, error } => {
+                assert!(worker < WORKERS, "failure must name the worker");
+                assert!(error.contains("injected engine failure"), "{error}");
+                failed += 1;
+            }
+            other => panic!("expected Reply::Failed, got {other:?}"),
+        }
+    }
+    assert_eq!(failed, n as u64, "every affected request gets a typed Failed");
+    assert_eq!(pool.metrics.errors(), n as u64);
+    assert_eq!(pool.metrics.served(), 0);
+    drop(handle);
+    pool.shutdown();
+}
+
+/// Engine that panics (not errors) on every batch — foreign-code crash
+/// stand-in.  The worker must survive, reply `Failed`, and keep serving.
+struct PanickingEngine {
+    batches: Vec<usize>,
+    ie: usize,
+    classes: usize,
+}
+
+impl BatchEngine for PanickingEngine {
+    fn unit_batches(&self) -> &[usize] {
+        &self.batches
+    }
+    fn image_elems(&self) -> usize {
+        self.ie
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn run(
+        &mut self,
+        _flat: &[f32],
+        _batch: usize,
+        _fabric: FabricState,
+        _logits: &mut Vec<f32>,
+    ) -> Result<BatchOutput> {
+        panic!("injected engine panic")
+    }
+}
+
+#[test]
+fn engine_panics_reply_failed_and_worker_survives() {
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+    let classes = env.net.units.last().unwrap().cout;
+
+    let factory: Arc<EngineFactory> = Arc::new(move |_w: usize| -> Result<Box<dyn BatchEngine>> {
+        Ok(Box::new(PanickingEngine { batches: vec![1, 8], ie, classes }))
+    });
+    let pool = ServingPool::start(1, BatchConfig::default(), factory).unwrap();
+    let handle = pool.handle();
+
+    // two waves: the second proves the worker outlived the first panic
+    for wave in 0..2 {
+        let mut rxs = Vec::new();
+        for i in 0..10 {
+            rxs.push(handle.submit(image(ie, wave * 100 + i)).unwrap());
+        }
+        for rx in rxs {
+            match rx
+                .recv_timeout(Duration::from_secs(60))
+                .expect("a submitter was stranded by an engine panic")
+            {
+                Reply::Failed { worker, error } => {
+                    assert_eq!(worker, 0);
+                    assert!(error.contains("panic"), "{error}");
+                }
+                other => panic!("expected Reply::Failed, got {other:?}"),
+            }
+        }
+    }
+    assert_eq!(pool.metrics.errors(), 20);
+    assert_eq!(pool.metrics.served(), 0);
+    drop(handle);
+    pool.shutdown();
+}
+
+#[test]
+fn worker_zero_init_failure_fails_start_fast() {
+    let factory: Arc<EngineFactory> = Arc::new(|w: usize| -> Result<Box<dyn BatchEngine>> {
+        anyhow::bail!("no engine for worker {w}")
+    });
+    let err = ServingPool::start(3, BatchConfig::default(), factory)
+        .err()
+        .expect("a pool whose first worker cannot build must not start");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("worker 0"), "{msg}");
+    assert!(msg.contains("no engine for worker 0"), "{msg}");
+}
+
+#[test]
+fn partial_init_failures_are_counted_and_survivors_serve() {
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+
+    // worker 0 builds, workers 1 and 2 die at init
+    let factory: Arc<EngineFactory> = Arc::new(move |w: usize| -> Result<Box<dyn BatchEngine>> {
+        if w == 0 {
+            Ok(Box::new(SimEngine::new(sim_env(), Box::new(GreedyStep), vec![1, 8], 0)))
+        } else {
+            anyhow::bail!("worker {w} has no device")
+        }
+    });
+    let pool = ServingPool::start(
+        3,
+        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
+        factory,
+    )
+    .unwrap();
+    let handle = pool.handle();
+
+    let n = 20;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        rxs.push(handle.submit(image(ie, i)).unwrap());
+    }
+    for rx in rxs {
+        let resp = ok(rx.recv_timeout(Duration::from_secs(60)).unwrap());
+        assert_eq!(resp.worker, 0, "only the surviving worker serves");
+    }
+    assert_eq!(pool.metrics.served(), n as u64);
+    assert_eq!(pool.metrics.errors(), 0);
+
+    // the dead workers are surfaced, not silent (they exit fast, but
+    // give the threads a moment to record the failure)
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while pool.metrics.dead_workers.load(Ordering::Relaxed) < 2 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(pool.metrics.dead_workers.load(Ordering::Relaxed), 2);
+    assert!(pool.metrics.summary().contains("dead=2"), "{}", pool.metrics.summary());
+    drop(handle);
+    pool.shutdown();
+}
+
+#[test]
+fn submit_errors_once_every_worker_is_dead() {
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+    let pool = ServingPool::start(1, BatchConfig::default(), sim_factory(0)).unwrap();
+    let handle = pool.handle();
+    assert!(handle.submit(image(ie, 0)).is_ok());
+
+    // start() fails fast when worker 0 dies, so all-dead is only
+    // reachable through later death — drive the guard directly
+    pool.metrics.dead_workers.fetch_add(1, Ordering::Relaxed);
+    let err = handle.submit(image(ie, 1)).err().expect("dead pool must refuse work");
+    assert!(format!("{err:#}").contains("no live workers"), "{err:#}");
+    drop(handle);
+    pool.shutdown();
+}
+
+#[test]
+fn cpu_only_plans_skip_the_fabric_lease() {
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+
+    let factory: Arc<EngineFactory> = Arc::new(move |_w: usize| -> Result<Box<dyn BatchEngine>> {
+        Ok(Box::new(SimEngine::new(sim_env(), Box::new(AllCpu), vec![1, 8], 0)))
+    });
+    let pool = ServingPool::start(
+        1,
+        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
+        factory,
+    )
+    .unwrap();
+    let handle = pool.handle();
+
+    // sequential singles: every chunk shares the (1, Free) plan key
+    let n = 20;
+    for i in 0..n {
+        let rx = handle.submit(image(ie, i)).unwrap();
+        let _ = ok(rx.recv_timeout(Duration::from_secs(60)).unwrap());
+    }
+    assert_eq!(pool.metrics.served(), n as u64);
+    // only the first (uncached, conservative) chunk leased; every later
+    // chunk peeked the cached all-CPU plan and skipped the fabric
+    assert_eq!(
+        pool.arbiter().leases_granted(),
+        1,
+        "CPU-only batches must not hold fabric slots"
+    );
+    drop(handle);
+    pool.shutdown();
+}
+
+/// The acceptance scenario for admission control: a 3-worker pool driven
+/// far past `saturated_at` with shedding enabled observes `Rejected`
+/// replies and non-zero shed counters — and, the core invariant, **zero
+/// submitters waiting forever**: every submit resolves in a typed reply
+/// within the test timeout.
+#[test]
+fn sustained_saturation_sheds_with_typed_replies() {
+    const WORKERS: usize = 3;
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+
+    let arbiter = FabricArbiter::new(ArbiterConfig {
+        shared_at: 1,
+        saturated_at: 1, // any in-flight lease saturates the fabric
+        saturation_window: Duration::from_millis(1),
+        ..ArbiterConfig::default()
+    });
+    let pool = ServingPool::start_full(
+        WORKERS,
+        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
+        AdmissionConfig { queue_cap: 16, shed: true },
+        fpga_factory(24), // heavy all-FPGA batches: the backlog must build
+        arbiter,
+    )
+    .unwrap();
+    let handle = pool.handle();
+
+    let n = 300u64;
+    let mut rxs = Vec::new();
+    for i in 0..n as usize {
+        rxs.push(handle.submit(image(ie, i)).unwrap());
+    }
+    let (mut ok_n, mut rejected, mut rejected_saturated) = (0u64, 0u64, 0u64);
+    for rx in rxs {
+        match rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("a submitter was left waiting forever under overload")
+        {
+            Reply::Ok(_) => ok_n += 1,
+            Reply::Rejected { level, retry_hint } => {
+                assert!(retry_hint > Duration::ZERO, "a shed must carry a backoff hint");
+                assert!(retry_hint <= Duration::from_secs(1), "hint stays sane");
+                rejected += 1;
+                // the depth-only runaway backstop may shed a handful of
+                // requests before the first leases saturate the fabric;
+                // the bulk must still be saturation sheds (checked below)
+                rejected_saturated += (level == CongestionLevel::Saturated) as u64;
+            }
+            Reply::Failed { worker, error } => {
+                panic!("no engine failures were injected (worker {worker}: {error})")
+            }
+        }
+    }
+    assert_eq!(ok_n + rejected, n, "every request resolved exactly once");
+    assert!(rejected > 0, "sustained saturation past the cap must shed");
+    assert!(rejected_saturated > 0, "sheds under sustained saturation must occur");
+    assert!(ok_n > 0, "shedding must not starve the pool completely");
+    assert_eq!(pool.metrics.shed_total(), rejected, "shed counters match Rejected replies");
+    assert_eq!(
+        pool.metrics.shed_by_level()[2],
+        rejected_saturated,
+        "per-level shed counters match the levels the replies reported"
+    );
+    assert_eq!(pool.metrics.served(), ok_n);
+    assert_eq!(pool.metrics.errors(), 0);
+    assert!(
+        pool.metrics.admission.queue_peak.load(Ordering::Relaxed) > 16,
+        "the backlog must actually have crossed the cap"
+    );
+    drop(handle);
+    pool.shutdown();
+}
+
+/// Same overload, defer mode: nothing is rejected, nothing is lost —
+/// every request resolves `Ok` (latency absorbs the overload).
+#[test]
+fn defer_mode_answers_every_request_ok() {
+    const WORKERS: usize = 3;
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+
+    let arbiter = FabricArbiter::new(ArbiterConfig {
+        shared_at: 1,
+        saturated_at: 1,
+        saturation_window: Duration::from_millis(1),
+        ..ArbiterConfig::default()
+    });
+    let pool = ServingPool::start_full(
+        WORKERS,
+        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
+        AdmissionConfig { queue_cap: 16, shed: false },
+        fpga_factory(8),
+        arbiter,
+    )
+    .unwrap();
+    let handle = pool.handle();
+
+    let n = 120u64;
+    let mut rxs = Vec::new();
+    for i in 0..n as usize {
+        rxs.push(handle.submit(image(ie, i)).unwrap());
+    }
+    for rx in rxs {
+        let _ = ok(rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("defer mode must still answer every submitter"));
+    }
+    assert_eq!(pool.metrics.served(), n);
+    assert_eq!(pool.metrics.shed_total(), 0, "defer mode never rejects");
+    assert_eq!(pool.metrics.errors(), 0);
     drop(handle);
     pool.shutdown();
 }

@@ -7,13 +7,18 @@ use aifa::agent::{CongestionLevel, EnvConfig, FixedPlacement, Policy, Scheduling
 use aifa::data::TestSet;
 use aifa::platform::{CpuModel, FpgaPlatform};
 use aifa::runtime::ArtifactStore;
-use aifa::server::{BatchConfig, Server};
+use aifa::server::{BatchConfig, Reply, Response, Server};
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
 fn artifact_dir() -> PathBuf {
     PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+/// Unwrap a reply that must be a served response.
+fn ok(reply: Reply) -> Response {
+    reply.into_result().expect("expected Reply::Ok")
 }
 
 fn make_env(store: &ArtifactStore) -> SchedulingEnv {
@@ -50,7 +55,7 @@ fn serves_batched_requests_correctly() {
     }
     let mut hits = 0;
     for (i, rx) in rxs {
-        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        let resp = ok(rx.recv_timeout(Duration::from_secs(120)).unwrap());
         hits += (resp.class == ts.labels[i] as usize) as usize;
         assert!(resp.sim_batch_s > 0.0);
     }
@@ -104,7 +109,7 @@ fn pool_of_two_workers_serves_real_artifacts() {
     }
     let mut hits = 0;
     for (i, rx) in rxs {
-        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        let resp = ok(rx.recv_timeout(Duration::from_secs(120)).unwrap());
         assert!(resp.worker < 2);
         hits += (resp.class == ts.labels[i] as usize) as usize;
     }

@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""Bench-regression gate for BENCH_serve.json (stdlib only).
+
+`aifa bench serve` writes the serving sweep's machine-readable results;
+this script turns the CI smoke run into a real regression gate.  It
+fails (exit 1) when:
+
+  * the file is missing, unparseable, or not the serve bench;
+  * `knee_rate` is absent, null, or zero — every sweep must sustain at
+    least its lowest swept rate, otherwise the serving path regressed;
+  * any closed-loop row is missing its fields or reports zero rps;
+  * any open-loop row is missing the per-class fields (the priority
+    admission contract: per-class ok/rejected/expired/goodput/p99);
+  * reply accounting doesn't add up (ok + rejected + expired + failed
+    != n) for any open-loop row;
+  * High-class goodput falls below Low-class goodput on any *overloaded*
+    (non-sustained) row — under overload, shedding starts with the Low
+    class, so High goodput >= Low goodput is the measurable claim;
+  * --require-overload is set and no swept rate actually overloaded the
+    pool (the CI sweep must include a saturating rate, or the previous
+    check silently checks nothing).
+
+Usage: ci/check_bench.py BENCH_serve.json [--require-overload]
+"""
+
+import json
+import sys
+
+CLOSED_FIELDS = ["workers", "rps", "p50_ms", "p99_ms", "queue_p50_ms", "batches"]
+OPEN_FIELDS = [
+    "rate", "offered_rps", "achieved_rps", "goodput_rps", "sustained",
+    "ok", "rejected", "expired", "failed", "p50_ms", "p99_ms",
+    "high_ok", "low_ok", "high_rejected", "low_rejected",
+    "high_expired", "low_expired", "high_goodput_rps", "low_goodput_rps",
+    "high_p99_ms", "low_p99_ms",
+]
+
+
+def fail(msg: str) -> None:
+    print(f"check_bench: FAIL: {msg}")
+    sys.exit(1)
+
+
+def main() -> None:
+    args = sys.argv[1:]
+    require_overload = "--require-overload" in args
+    paths = [a for a in args if not a.startswith("--")]
+    if len(paths) != 1:
+        fail("usage: check_bench.py BENCH_serve.json [--require-overload]")
+    path = paths[0]
+
+    try:
+        with open(path, encoding="utf-8") as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot read {path}: {e}")
+
+    if data.get("bench") != "serve":
+        fail(f"{path} is not a serve bench report (bench={data.get('bench')!r})")
+
+    knee = data.get("knee_rate", "missing")
+    if knee == "missing":
+        fail("knee_rate field is missing")
+    if knee is None or knee == 0:
+        fail(
+            "knee_rate is null/zero: no swept rate was sustained — "
+            "the serving path lost its capacity floor"
+        )
+
+    rows = data.get("rows") or []
+    if not rows:
+        fail("closed-loop rows are empty")
+    for row in rows:
+        for field in CLOSED_FIELDS:
+            if field not in row:
+                fail(f"closed-loop row (workers={row.get('workers')}) missing '{field}'")
+        if not row["rps"] > 0:
+            fail(f"closed-loop row workers={row['workers']} reports rps={row['rps']}")
+
+    open_loop = data.get("open_loop") or []
+    if not open_loop:
+        fail("open_loop rows are empty")
+    n = data.get("n", 0)
+    for row in open_loop:
+        for field in OPEN_FIELDS:
+            if field not in row:
+                fail(f"open-loop row (rate={row.get('rate')}) missing per-class field '{field}'")
+        replies = row["ok"] + row["rejected"] + row["expired"] + row["failed"]
+        if replies != n:
+            fail(
+                f"open-loop row rate={row['rate']}: ok+rejected+expired+failed={replies} != n={n} "
+                "(a submit did not resolve to exactly one reply)"
+            )
+
+    overloaded = [r for r in open_loop if not r["sustained"]]
+    if require_overload and not overloaded:
+        fail(
+            "--require-overload: every swept rate was sustained, so the High>=Low "
+            "goodput claim was never exercised — add a saturating rate to the sweep"
+        )
+    for row in overloaded:
+        high, low = row["high_goodput_rps"], row["low_goodput_rps"]
+        if high < low:
+            fail(
+                f"open-loop row rate={row['rate']} (overloaded): High-class goodput "
+                f"{high:.1f}/s < Low-class {low:.1f}/s — priority admission is not "
+                "protecting the High class"
+            )
+
+    print(
+        f"check_bench: PASS: knee_rate={knee}, {len(rows)} closed-loop rows, "
+        f"{len(open_loop)} open-loop rows ({len(overloaded)} overloaded)"
+    )
+    for row in overloaded:
+        print(
+            f"  overloaded λ={row['rate']:.0f}: high goodput {row['high_goodput_rps']:.1f}/s "
+            f"(ok={row['high_ok']}) >= low {row['low_goodput_rps']:.1f}/s (ok={row['low_ok']})"
+        )
+
+
+if __name__ == "__main__":
+    main()

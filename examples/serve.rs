@@ -1,16 +1,26 @@
 //! End-to-end validation driver (DESIGN.md §E2E): start the batching
 //! server with an agent-trained placement, replay the synthetic test set
-//! as timed requests (Poisson arrivals), and report latency percentiles,
-//! throughput, accuracy, and simulated power/energy — the serving-paper
-//! deliverable.  The run is recorded in EXPERIMENTS.md.
+//! as timed requests (Poisson arrivals, half High / half Low priority),
+//! and report latency percentiles, throughput, accuracy, and simulated
+//! power/energy — the serving-paper deliverable.  The run is recorded in
+//! EXPERIMENTS.md.
 //!
-//!     cargo run --release --example serve -- [n_images] [rate_per_s] [workers]
+//! The driver is **retry-aware**: admission control answers overload
+//! with `Reply::Rejected { retry_hint, .. }`, and a well-behaved client
+//! backs off for the hint and resubmits instead of giving up.  The
+//! summary prints goodput both ways — first-pass only (a naive client)
+//! and with retries folded in — so the value of honoring the hint is a
+//! number, not an assertion.
+//!
+//!     cargo run --release --example serve -- [n_images] [rate_per_s] [workers] [retries]
 
 use aifa::agent::{CongestionLevel, EnvConfig, LevelPlacements, QAgent, QConfig, SchedulingEnv};
 use aifa::data::TestSet;
 use aifa::platform::{CpuModel, FpgaPlatform};
 use aifa::power::PowerModel;
-use aifa::server::{ArbiterConfig, BatchConfig, FabricArbiter, Reply, Server};
+use aifa::server::{
+    AdmissionConfig, ArbiterConfig, BatchConfig, FabricArbiter, Priority, Reply, Server,
+};
 use aifa::util::rng::Rng;
 use aifa::util::stats::Samples;
 use aifa::util::Stopwatch;
@@ -18,14 +28,61 @@ use anyhow::Result;
 use std::sync::Arc;
 use std::time::Duration;
 
+/// One request the driver still owes a final outcome.
+struct Pending {
+    /// Test-set index (for the accuracy check on `Ok`).
+    idx: usize,
+    priority: Priority,
+    rx: std::sync::mpsc::Receiver<Reply>,
+}
+
+/// Served-reply bookkeeping shared by the first pass and every retry
+/// round, so the two passes can never drift apart in how they tally.
+#[derive(Default)]
+struct Tally {
+    ok: usize,
+    failed: usize,
+    hits: usize,
+    class_ok: [u64; 2],
+    level_seen: [u64; 3],
+    sim_batch: Samples,
+}
+
+/// Collect every pending reply into `t`; rejected requests come back
+/// with their server-suggested backoff for the next retry round.
+fn collect_replies(
+    pending: Vec<Pending>,
+    ts: &TestSet,
+    t: &mut Tally,
+) -> Result<Vec<(Pending, Duration)>> {
+    let mut retry = Vec::new();
+    for p in pending {
+        match p.rx.recv()? {
+            Reply::Ok(resp) => {
+                t.ok += 1;
+                t.class_ok[p.priority.index()] += 1;
+                t.hits += (resp.class == ts.labels[p.idx] as usize) as usize;
+                t.sim_batch.push(resp.sim_batch_s);
+                t.level_seen[resp.congestion.index()] += 1;
+            }
+            Reply::Rejected { retry_hint, .. } => retry.push((p, retry_hint)),
+            Reply::Failed { .. } => t.failed += 1,
+        }
+    }
+    Ok(retry)
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(2000);
     let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(400.0);
     let workers: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(2);
+    let retries: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(3);
     let dir = std::path::PathBuf::from("artifacts");
 
-    println!("== aifa serving driver: {n} requests @ {rate}/s, {workers} workers ==");
+    println!(
+        "== aifa serving driver: {n} requests @ {rate}/s, {workers} workers, {retries} retry rounds =="
+    );
 
     // Train the scheduler up front (placement is frozen into the server;
     // congestion is NOT — the shared arbiter feeds it per batch).
@@ -47,7 +104,11 @@ fn main() -> Result<()> {
     drop(probe); // workers build their own stores (PJRT is thread-local)
 
     let arbiter = FabricArbiter::new(ArbiterConfig::for_workers(workers));
-    let server = Server::start_pool_with(
+    // Shed mode so overload produces retryable `Rejected` replies (the
+    // default defer mode would absorb it in latency and the retry path
+    // would have nothing to do); Low sheds first.
+    let admission = AdmissionConfig::capped(32 * workers.max(1), true);
+    let server = Server::start_pool_admission(
         workers,
         dir,
         move |store| {
@@ -60,60 +121,104 @@ fn main() -> Result<()> {
         },
         Arc::new(policy),
         BatchConfig { max_wait: Duration::from_millis(4), max_batch: 8 },
+        admission,
         arbiter.clone(),
     )?;
 
-    // Replay the test set as Poisson arrivals (gap cap is rate-relative
-    // — 10 mean gaps — so the offered load stays faithful at any λ).
+    // First pass: replay the test set as Poisson arrivals (gap cap is
+    // rate-relative — 10 mean gaps — so the offered load stays faithful
+    // at any λ), alternating High/Low priority.
     let mut rng = Rng::new(7);
     let sw = Stopwatch::start();
     let mut pending = Vec::with_capacity(n);
     for i in 0..n {
         let img = ts.decode_batch(i % ts.n, 1)?;
-        pending.push((i % ts.n, server.handle.submit(img)?));
+        let priority = if i % 2 == 0 { Priority::High } else { Priority::Low };
+        pending.push(Pending {
+            idx: i % ts.n,
+            priority,
+            rx: server.handle.submit_with(img, priority, None)?,
+        });
         std::thread::sleep(Duration::from_secs_f64(rng.exp_capped(rate)));
     }
 
-    // Collect typed replies + accuracy + arbitration telemetry.
-    let mut hits = 0usize;
-    let (mut ok, mut rejected, mut failed) = (0usize, 0usize, 0usize);
-    let mut sim_batch = Samples::new();
-    let mut level_seen = [0u64; 3];
-    for (idx, rx) in pending {
-        match rx.recv()? {
-            Reply::Ok(resp) => {
-                ok += 1;
-                hits += (resp.class == ts.labels[idx] as usize) as usize;
-                sim_batch.push(resp.sim_batch_s);
-                level_seen[resp.congestion.index()] += 1;
-            }
-            Reply::Rejected { .. } => rejected += 1,
-            Reply::Failed { .. } => failed += 1,
+    // Collect typed replies; rejected requests queue up for a retry
+    // round with the server's own backoff hint.
+    let mut tally = Tally::default();
+    let mut retry_q = collect_replies(pending, &ts, &mut tally)?;
+    let first_wall = sw.secs();
+    let first_rejected = retry_q.len();
+    let ok_first = tally.ok;
+
+    // Retry rounds: honor the largest hint in the batch (the hints are
+    // backlog-scaled, so by then the pool has worked off what this
+    // request queued behind), resubmit at the same priority, collect
+    // again.  A request that keeps being shed gives up after `retries`
+    // rounds — `lost` is what a hint-honoring client still could not
+    // place.
+    for round in 1..=retries {
+        if retry_q.is_empty() {
+            break;
         }
+        let backoff = retry_q.iter().map(|(_, h)| *h).max().unwrap_or(Duration::ZERO);
+        println!(
+            "retry round {round}: {} rejected, backing off {:.0} ms",
+            retry_q.len(),
+            backoff.as_secs_f64() * 1e3
+        );
+        std::thread::sleep(backoff);
+        let resubmitted: Vec<Pending> = retry_q
+            .drain(..)
+            .map(|(p, _)| {
+                let img = ts.decode_batch(p.idx, 1)?;
+                Ok(Pending {
+                    idx: p.idx,
+                    priority: p.priority,
+                    rx: server.handle.submit_with(img, p.priority, None)?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        retry_q = collect_replies(resubmitted, &ts, &mut tally)?;
     }
+    let lost = retry_q.len();
+
     let wall = sw.secs();
     let m = &server.metrics;
+    let ok_total = tally.ok;
+    let ok_retried = ok_total - ok_first;
     println!("\n-- results --");
     println!("{}", m.summary());
-    println!("replies: ok={ok} rejected={rejected} failed={failed}");
-    println!("accuracy (mixed int8/fp32 placement): {:.4}", hits as f64 / ok.max(1) as f64);
     println!(
-        "offered rate {rate}/s, goodput {:.1} ok/s of {:.1} replies/s over {wall:.1}s wall",
-        ok as f64 / wall,
-        n as f64 / wall
+        "replies: ok={ok_total} (first-pass {ok_first} + retried {ok_retried}) rejected-first-pass={first_rejected} given-up={lost} failed={}",
+        tally.failed
+    );
+    println!(
+        "classes: high ok={} low ok={} (shed {:?}, Low first by design)",
+        tally.class_ok[0],
+        tally.class_ok[1],
+        m.shed_by_class()
+    );
+    println!(
+        "accuracy (mixed int8/fp32 placement): {:.4}",
+        tally.hits as f64 / ok_total.max(1) as f64
+    );
+    println!(
+        "goodput without retries {:.1} ok/s (over {first_wall:.1}s), with retries {:.1} ok/s (over {wall:.1}s), offered {rate}/s",
+        ok_first as f64 / first_wall,
+        ok_total as f64 / wall
     );
     println!(
         "arbitration: responses free={} shared={} saturated={}, peak in-flight leases={}, plan generation={}",
-        level_seen[0],
-        level_seen[1],
-        level_seen[2],
+        tally.level_seen[0],
+        tally.level_seen[1],
+        tally.level_seen[2],
         arbiter.peak_inflight(),
         m.plan_generation()
     );
 
     // Simulated platform economics (the Table I quantities for this run).
     let fpga_power = PowerModel::fpga_card();
-    let sim_per_img = sim_batch.mean() / 8.0;
+    let sim_per_img = tally.sim_batch.mean() / 8.0;
     println!(
         "simulated device time/img {:.3} ms -> simulated throughput {:.1} img/s, {:.2} img/s/W @ {:.0} W",
         sim_per_img * 1e3,

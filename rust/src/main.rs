@@ -9,10 +9,12 @@
 //!   eda           run the Fig 4 agentic design-flow simulation
 //!   serve         N-worker serving pool over the real artifacts
 //!                 (fabric arbiter knobs: --shared-at / --saturated-at /
-//!                  --dma-budget-mb; admission knobs: --shed / --queue-cap)
+//!                  --dma-budget-mb; admission knobs: --shed / --queue-cap
+//!                  [high,low] / --high-share / --deadline-ms)
 //!   bench serve   simulated-path serving sweeps -> BENCH_serve.json
-//!                 (closed-loop worker sweep + open-loop Poisson λ sweep
-//!                  with an auto-found knee: the max sustainable λ)
+//!                 (closed-loop worker sweep + open-loop Poisson λ sweep,
+//!                  half High / half Low class, with per-class goodput +
+//!                  p99 and an auto-found knee: the max sustainable λ)
 
 use aifa::accel::AccelConfig;
 use aifa::agent::{
@@ -25,8 +27,8 @@ use aifa::llm::LlmSession;
 use aifa::platform::{CpuModel, FpgaPlatform};
 use aifa::runtime::ArtifactStore;
 use aifa::server::{
-    AdmissionConfig, ArbiterConfig, BatchConfig, BatchEngine, EngineFactory, FabricArbiter, Reply,
-    Server, ServingPool, SimEngine,
+    AdmissionConfig, ArbiterConfig, BatchConfig, BatchEngine, EngineFactory, FabricArbiter,
+    Priority, RejectReason, Reply, Server, ServingPool, SimEngine,
 };
 use aifa::util::cli::Cli;
 use aifa::util::json::Json;
@@ -58,11 +60,13 @@ fn main() {
         .opt("work", Some("32"), "bench serve: synthetic host passes per batch")
         .opt("out", Some("BENCH_serve.json"), "bench serve: output JSON path")
         .opt("shared-at", Some("2"), "arbiter: in-flight leases at/above which the fabric is Shared")
-        .opt("saturated-at", Some("auto"), "arbiter: leases at/above which it is Saturated (auto = max(workers, 3))")
+        .opt("saturated-at", Some("auto"), "arbiter: leases at/above which it is Saturated (auto = max(workers, 2))")
         .opt("dma-budget-mb", Some("32"), "arbiter: in-flight DMA MiB before the level escalates")
         .opt("rates", Some("auto"), "bench serve: Poisson arrival λ grid, req/s (auto = 500,2000,8000)")
-        .opt("queue-cap", Some("auto"), "admission: ingress depth before overload handling (auto = 64*workers; bench defer runs stay uncapped)")
-        .flag("shed", "admission: reject (typed Rejected reply) instead of deferring under sustained saturation");
+        .opt("queue-cap", Some("auto"), "admission: per-class ingress depth before overload handling, one value or high,low (auto = 64*workers each; bench defer runs stay uncapped)")
+        .opt("high-share", Some("0.75"), "admission: share of each batch reserved for the High class (0..=1)")
+        .opt("deadline-ms", Some("0"), "admission: per-request completion deadline in ms (0 = none); doomed requests are Rejected instead of executed")
+        .flag("shed", "admission: reject (typed Rejected reply) instead of deferring under sustained saturation, Low class first");
     let args = match cli.parse(&rest) {
         Ok(a) => a,
         Err(msg) => {
@@ -224,19 +228,63 @@ fn arbiter_from_args(args: &aifa::util::cli::Args, workers: usize) -> Result<Arc
     Ok(FabricArbiter::new(cfg))
 }
 
-/// Build the admission config from `--shed` / `--queue-cap`.  The auto
-/// cap scales with the pool (64 requests of headroom per worker).
+/// Build the admission config from `--shed` / `--queue-cap` /
+/// `--high-share`.  The auto cap scales with the pool (64 requests of
+/// headroom per worker, per class); `--queue-cap H,L` caps the classes
+/// separately.
 fn admission_from_args(args: &aifa::util::cli::Args, workers: usize) -> Result<AdmissionConfig> {
-    let mut cfg = AdmissionConfig { queue_cap: 64 * workers.max(1), shed: args.has("shed") };
+    let auto = 64 * workers.max(1);
+    let mut cfg = AdmissionConfig {
+        queue_cap: [auto, auto],
+        shed: args.has("shed"),
+        ..AdmissionConfig::default()
+    };
     match args.get("queue-cap") {
         Some("auto") | None => {}
-        Some(v) => {
-            cfg.queue_cap = v
-                .parse()
-                .map_err(|_| anyhow::anyhow!("--queue-cap wants a request count or 'auto'"))?;
+        Some(_) => {
+            let caps = args.get_usize_list("queue-cap").ok_or_else(|| {
+                anyhow::anyhow!("--queue-cap wants a request count, a high,low pair, or 'auto'")
+            })?;
+            cfg.queue_cap = match caps[..] {
+                [both] => [both, both],
+                [high, low] => [high, low],
+                _ => anyhow::bail!("--queue-cap wants at most two values (high,low)"),
+            };
         }
     }
+    if let Some(v) = args.get("high-share") {
+        let share: f64 = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--high-share wants a fraction in 0..=1"))?;
+        if !(0.0..=1.0).contains(&share) {
+            anyhow::bail!("--high-share must be within 0..=1, got {share}");
+        }
+        cfg.high_share = share;
+    }
     Ok(cfg)
+}
+
+/// `--deadline-ms` as a relative deadline (`None` when 0/absent).
+fn deadline_from_args(args: &aifa::util::cli::Args) -> Result<Option<Duration>> {
+    match args.get("deadline-ms") {
+        None => Ok(None),
+        Some(v) => {
+            let ms: u64 =
+                v.parse().map_err(|_| anyhow::anyhow!("--deadline-ms wants milliseconds"))?;
+            Ok((ms > 0).then_some(Duration::from_millis(ms)))
+        }
+    }
+}
+
+/// The serving drivers split traffic half/half across the two priority
+/// classes: even submissions are High, odd are Low — deterministic, so
+/// per-class counts are exactly reproducible.
+fn class_of(i: usize) -> Priority {
+    if i % 2 == 0 {
+        Priority::High
+    } else {
+        Priority::Low
+    }
 }
 
 /// `aifa serve`: replay the test set through an N-worker pool over the
@@ -279,9 +327,13 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
         acfg.saturation_window.as_millis(),
         arbiter.generation()
     );
+    let deadline = deadline_from_args(args)?;
     println!(
-        "admission: queue_cap={} mode={}",
-        admission.queue_cap,
+        "admission: queue_cap={}/{} (high/low) high_share={:.2} deadline={} mode={}",
+        admission.queue_cap[0],
+        admission.queue_cap[1],
+        admission.high_share,
+        deadline.map_or("none".to_string(), |d| format!("{} ms", d.as_millis())),
         if admission.shed { "shed" } else { "defer" }
     );
     let server = Server::start_pool_admission(
@@ -305,30 +357,39 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
     let mut pending = Vec::with_capacity(n);
     for i in 0..n {
         let img = ts.decode_batch(i % ts.n, 1)?;
-        pending.push((i % ts.n, server.handle.submit(img)?));
+        pending.push((i % ts.n, class_of(i), server.handle.submit_with(img, class_of(i), deadline)?));
     }
     let mut hits = 0usize;
-    let (mut ok, mut rejected, mut failed) = (0usize, 0usize, 0usize);
+    let (mut ok, mut rejected, mut expired, mut failed) = (0usize, 0usize, 0usize, 0usize);
+    let mut class_ok = [0u64; 2];
     let mut level_seen = [0u64; 3];
-    for (idx, rx) in pending {
+    for (idx, class, rx) in pending {
         match rx.recv()? {
             Reply::Ok(resp) => {
                 ok += 1;
+                class_ok[class.index()] += 1;
                 hits += (resp.class == ts.labels[idx] as usize) as usize;
                 level_seen[resp.congestion.index()] += 1;
             }
-            Reply::Rejected { .. } => rejected += 1,
+            Reply::Rejected { reason: RejectReason::Overload, .. } => rejected += 1,
+            Reply::Rejected { reason: RejectReason::Deadline, .. } => expired += 1,
             Reply::Failed { .. } => failed += 1,
         }
     }
     let wall = t0.elapsed().as_secs_f64();
     println!("{}", server.metrics.summary());
+    let shed_c = server.metrics.shed_by_class();
+    let exp_c = server.metrics.expired_by_class();
     println!(
-        "replies: ok={ok} rejected={rejected} failed={failed}  responses by level: free={} shared={} saturated={}  peak in-flight leases={}",
+        "replies: ok={ok} rejected={rejected} expired={expired} failed={failed}  responses by level: free={} shared={} saturated={}  peak in-flight leases={}",
         level_seen[0],
         level_seen[1],
         level_seen[2],
         arbiter.peak_inflight()
+    );
+    println!(
+        "classes: high ok={} shed={} expired={}  low ok={} shed={} expired={}",
+        class_ok[0], shed_c[0], exp_c[0], class_ok[1], shed_c[1], exp_c[1]
     );
     println!(
         "workers={workers} accuracy={:.4} goodput={:.1} ok/s (offered {:.1} req/s) over {wall:.2}s",
@@ -371,11 +432,24 @@ struct OpenLoopRow {
     /// arrival end so the drain tail cannot bias it for small n/λ.
     sustained: bool,
     ok: u64,
+    /// Overload sheds (`RejectReason::Overload`).
     rejected: u64,
+    /// Deadline rejections (`RejectReason::Deadline`).
+    expired: u64,
     failed: u64,
     p50_ms: f64,
     p99_ms: f64,
     queue_p50_ms: f64,
+    /// Per-class reply split, indexed by `Priority::index()` ([high, low]).
+    class_ok: [u64; 2],
+    class_rejected: [u64; 2],
+    class_expired: [u64; 2],
+    /// Per-class goodput (`Ok` replies of that class per second over the
+    /// full run) — the measurable priority claim: under overload the
+    /// High class's goodput degrades markedly less than Low's.
+    class_goodput_rps: [f64; 2],
+    /// Per-class served p99 latency (ms; 0 when the class served nothing).
+    class_p99_ms: [f64; 2],
     /// Fraction of executed batches per congestion level (free/shared/sat).
     level_frac: [f64; 3],
     peak_inflight: usize,
@@ -401,7 +475,7 @@ fn run_sim_serve(workers: usize, n: usize, work: usize, wait: Duration) -> Resul
     let pool = ServingPool::start_full(
         workers,
         BatchConfig { max_wait: wait, max_batch: 8 },
-        AdmissionConfig { queue_cap: usize::MAX, shed: false },
+        AdmissionConfig::uncapped(),
         sim_factory(work),
         FabricArbiter::new(ArbiterConfig::for_workers(workers.max(1))),
     )?;
@@ -438,12 +512,14 @@ fn run_sim_serve(workers: usize, n: usize, work: usize, wait: Duration) -> Resul
 }
 
 /// One open-loop run: Poisson arrivals at `rate` req/s (exponential
-/// inter-arrival gaps, offered load independent of completions), every
-/// typed reply collected afterwards.  Open-loop latency percentiles
-/// expose queueing collapse that closed-loop throughput sweeps hide, the
-/// per-level occupancy shows the arbiter quantizing that load, and with
-/// shedding enabled the ok/rejected split shows admission control
-/// holding goodput at the knee.
+/// inter-arrival gaps, offered load independent of completions), split
+/// half/half across the High/Low priority classes, every typed reply
+/// collected afterwards.  Open-loop latency percentiles expose queueing
+/// collapse that closed-loop throughput sweeps hide, the per-level
+/// occupancy shows the arbiter quantizing that load, and with shedding
+/// enabled the per-class ok/rejected split shows admission control
+/// sacrificing Low-class goodput to hold the High class's.
+#[allow(clippy::too_many_arguments)]
 fn run_open_loop(
     workers: usize,
     n: usize,
@@ -452,6 +528,7 @@ fn run_open_loop(
     rate: f64,
     seed: u64,
     admission: AdmissionConfig,
+    deadline: Option<Duration>,
 ) -> Result<OpenLoopRow> {
     let cfg = BatchConfig { max_wait: wait, max_batch: 8 };
     let pool = ServingPool::start_full(
@@ -472,7 +549,7 @@ fn run_open_loop(
     for i in 0..n {
         let mut img = base.clone();
         img[0] = i as f32;
-        pending.push(handle.submit(img)?);
+        pending.push((class_of(i), handle.submit_with(img, class_of(i), deadline)?));
         // rate-relative cap (10 mean gaps): the old fixed 50 ms cap
         // silently distorted the offered load of every λ below ~20/s
         std::thread::sleep(Duration::from_secs_f64(rng.exp_capped(rate)));
@@ -482,11 +559,24 @@ fn run_open_loop(
     // requests deliberately don't count: admission keeping the queue
     // bounded by rejecting is not the same as sustaining the load
     let served_at_arrival_end = pool.metrics.served();
-    let (mut ok, mut rejected, mut failed) = (0u64, 0u64, 0u64);
-    for rx in pending {
+    let (mut ok, mut rejected, mut expired, mut failed) = (0u64, 0u64, 0u64, 0u64);
+    let mut class_ok = [0u64; 2];
+    let mut class_rejected = [0u64; 2];
+    let mut class_expired = [0u64; 2];
+    for (class, rx) in pending {
         match rx.recv()? {
-            Reply::Ok(_) => ok += 1,
-            Reply::Rejected { .. } => rejected += 1,
+            Reply::Ok(_) => {
+                ok += 1;
+                class_ok[class.index()] += 1;
+            }
+            Reply::Rejected { reason: RejectReason::Overload, .. } => {
+                rejected += 1;
+                class_rejected[class.index()] += 1;
+            }
+            Reply::Rejected { reason: RejectReason::Deadline, .. } => {
+                expired += 1;
+                class_expired[class.index()] += 1;
+            }
             Reply::Failed { .. } => failed += 1,
         }
     }
@@ -495,6 +585,10 @@ fn run_open_loop(
     let merged = pool.metrics.merged();
     let lv = pool.metrics.level_batches();
     let total_batches = lv.iter().sum::<u64>().max(1) as f64;
+    // a percentile over zero served requests is NaN — write 0 instead so
+    // the JSON stays parseable (NaN is not a JSON number); an all-shed
+    // overload row serves nothing pooled, not just per class
+    let ms = |x: f64| if x.is_finite() { x * 1e3 } else { 0.0 };
     // sustained ⇔ everything offered was *served* by the end of the
     // arrival window except what fits inside the bounded worker pipeline
     // (2 batches per worker in flight/buffered, plus the batch the
@@ -512,10 +606,16 @@ fn run_open_loop(
         sustained,
         ok,
         rejected,
+        expired,
         failed,
-        p50_ms: merged.latency.p50() * 1e3,
-        p99_ms: merged.latency.p99() * 1e3,
-        queue_p50_ms: merged.queue_delay.p50() * 1e3,
+        p50_ms: ms(merged.latency.p50()),
+        p99_ms: ms(merged.latency.p99()),
+        queue_p50_ms: ms(merged.queue_delay.p50()),
+        class_ok,
+        class_rejected,
+        class_expired,
+        class_goodput_rps: [class_ok[0] as f64 / wall, class_ok[1] as f64 / wall],
+        class_p99_ms: [ms(merged.latency_class[0].p99()), ms(merged.latency_class[1].p99())],
         level_frac: [
             lv[0] as f64 / total_batches,
             lv[1] as f64 / total_batches,
@@ -564,21 +664,26 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
     let ol_workers = workers_list.iter().copied().max().unwrap_or(1);
     // default (auto, no --shed): pure observation — uncapped defer, the
     // sweep just records where queueing collapses; with --shed the same
-    // sweep shows admission control trading rejections for goodput
+    // sweep shows admission control trading Low-class rejections for
+    // High-class goodput
     let mut admission = admission_from_args(args, ol_workers)?;
     if !admission.shed && matches!(args.get("queue-cap"), Some("auto") | None) {
-        admission.queue_cap = usize::MAX;
+        admission.queue_cap = [usize::MAX, usize::MAX];
     }
+    let deadline = deadline_from_args(args)?;
     println!(
-        "open-loop: inter-arrival cap 10/λ (rate-relative; a fixed 50 ms cap distorted λ < 20/s), admission queue_cap={} mode={}",
-        admission.queue_cap,
+        "open-loop: inter-arrival cap 10/λ (rate-relative; a fixed 50 ms cap distorted λ < 20/s), half High / half Low, admission queue_cap={}/{} high_share={:.2} deadline={} mode={}",
+        admission.queue_cap[0],
+        admission.queue_cap[1],
+        admission.high_share,
+        deadline.map_or("none".to_string(), |d| format!("{} ms", d.as_millis())),
         if admission.shed { "shed" } else { "defer" }
     );
     let mut ol_rows = Vec::new();
     for &rate in &rates {
-        let r = run_open_loop(ol_workers, n, work, wait, rate, seed, admission)?;
+        let r = run_open_loop(ol_workers, n, work, wait, rate, seed, admission, deadline)?;
         println!(
-            "λ={:<8.0} offered={:>9.1}/s workers={} achieved={:>9.1}/s goodput={:>9.1}/s {} ok/rej/fail={}/{}/{} p50={:>8.3}ms p99={:>8.3}ms queue p50={:>8.3}ms levels={:.2}/{:.2}/{:.2} peak-leases={}",
+            "λ={:<8.0} offered={:>9.1}/s workers={} achieved={:>9.1}/s goodput={:>9.1}/s {} ok/rej/exp/fail={}/{}/{}/{} p50={:>8.3}ms p99={:>8.3}ms queue p50={:>8.3}ms levels={:.2}/{:.2}/{:.2} peak-leases={}",
             r.rate,
             r.offered_rps,
             r.workers,
@@ -587,6 +692,7 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
             if r.sustained { "sustained" } else { "COLLAPSED" },
             r.ok,
             r.rejected,
+            r.expired,
             r.failed,
             r.p50_ms,
             r.p99_ms,
@@ -595,6 +701,19 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
             r.level_frac[1],
             r.level_frac[2],
             r.peak_inflight
+        );
+        println!(
+            "  class high: goodput={:>9.1}/s ok/shed/exp={}/{}/{} p99={:>8.3}ms   low: goodput={:>9.1}/s ok/shed/exp={}/{}/{} p99={:>8.3}ms",
+            r.class_goodput_rps[0],
+            r.class_ok[0],
+            r.class_rejected[0],
+            r.class_expired[0],
+            r.class_p99_ms[0],
+            r.class_goodput_rps[1],
+            r.class_ok[1],
+            r.class_rejected[1],
+            r.class_expired[1],
+            r.class_p99_ms[1]
         );
         ol_rows.push(r);
     }
@@ -642,10 +761,21 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
                 ("sustained", Json::Bool(r.sustained)),
                 ("ok", Json::num(r.ok as f64)),
                 ("rejected", Json::num(r.rejected as f64)),
+                ("expired", Json::num(r.expired as f64)),
                 ("failed", Json::num(r.failed as f64)),
                 ("p50_ms", Json::num(r.p50_ms)),
                 ("p99_ms", Json::num(r.p99_ms)),
                 ("queue_p50_ms", Json::num(r.queue_p50_ms)),
+                ("high_ok", Json::num(r.class_ok[0] as f64)),
+                ("low_ok", Json::num(r.class_ok[1] as f64)),
+                ("high_rejected", Json::num(r.class_rejected[0] as f64)),
+                ("low_rejected", Json::num(r.class_rejected[1] as f64)),
+                ("high_expired", Json::num(r.class_expired[0] as f64)),
+                ("low_expired", Json::num(r.class_expired[1] as f64)),
+                ("high_goodput_rps", Json::num(r.class_goodput_rps[0])),
+                ("low_goodput_rps", Json::num(r.class_goodput_rps[1])),
+                ("high_p99_ms", Json::num(r.class_p99_ms[0])),
+                ("low_p99_ms", Json::num(r.class_p99_ms[1])),
                 ("free_frac", Json::num(r.level_frac[0])),
                 ("shared_frac", Json::num(r.level_frac[1])),
                 ("saturated_frac", Json::num(r.level_frac[2])),
@@ -653,29 +783,36 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
             ])
         })
         .collect();
-    let speedup_key;
-    let mut fields = vec![
-        ("bench", Json::str("serve")),
-        ("sim", Json::Bool(true)),
-        ("n", Json::num(n as f64)),
-        ("work_passes", Json::num(work as f64)),
-        ("shed", Json::Bool(admission.shed)),
-        (
-            "knee_rate",
-            if knee_rate.is_nan() { Json::Null } else { Json::num(knee_rate) },
-        ),
-        ("rows", Json::Arr(row_objs)),
-        ("open_loop", Json::Arr(ol_objs)),
-    ];
+    // top-level fields as an owned map: the conditional speedup key is a
+    // computed string, which the borrowing Json::obj helper can't hold
+    let mut fields = std::collections::BTreeMap::new();
+    let mut put = |k: &str, v: Json| {
+        fields.insert(k.to_string(), v);
+    };
+    put("bench", Json::str("serve"));
+    put("sim", Json::Bool(true));
+    put("n", Json::num(n as f64));
+    put("work_passes", Json::num(work as f64));
+    put("shed", Json::Bool(admission.shed));
+    put("high_share", Json::num(admission.high_share));
+    put(
+        "deadline_ms",
+        deadline.map_or(Json::num(0.0), |d| Json::num(d.as_secs_f64() * 1e3)),
+    );
+    put(
+        "knee_rate",
+        if knee_rate.is_nan() { Json::Null } else { Json::num(knee_rate) },
+    );
+    put("rows", Json::Arr(row_objs));
+    put("open_loop", Json::Arr(ol_objs));
     let base = rows.iter().find(|r| r.workers == 1);
     let peak = rows.iter().max_by(|a, b| a.workers.cmp(&b.workers));
     if let (Some(b), Some(p)) = (base, peak) {
         if p.workers > 1 && b.rps > 0.0 {
-            speedup_key = format!("speedup_{}v1", p.workers);
-            fields.push((&speedup_key, Json::num(p.rps / b.rps)));
+            put(&format!("speedup_{}v1", p.workers), Json::num(p.rps / b.rps));
         }
     }
-    let json = Json::obj(fields).to_string();
+    let json = Json::Obj(fields).to_string();
 
     let out = args.get("out").unwrap_or("BENCH_serve.json");
     std::fs::write(out, &json)?;

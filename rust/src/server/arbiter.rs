@@ -70,9 +70,14 @@ impl Default for ArbiterConfig {
 impl ArbiterConfig {
     /// Thresholds scaled to a pool of `workers` engines: a second
     /// concurrent batch means sharing, and saturation means every worker
-    /// (of at least 3 fabric slots) holds a lease at once.
+    /// holds a lease at once.  The floor of 2 keeps a single-worker pool
+    /// from ever lease-saturating (its one in-flight batch is "busy",
+    /// not contention) while letting a 2-worker pool actually reach
+    /// `Saturated` — with the old floor of 3, pools of 1-2 workers could
+    /// never saturate by lease count, so saturation-gated admission
+    /// control silently waited for the runaway backstop instead.
     pub fn for_workers(workers: usize) -> ArbiterConfig {
-        ArbiterConfig { saturated_at: workers.max(3), ..ArbiterConfig::default() }
+        ArbiterConfig { saturated_at: workers.max(2), ..ArbiterConfig::default() }
     }
 }
 

@@ -19,15 +19,16 @@
 
 use super::arbiter::FabricArbiter;
 use super::{
-    fill_batch, split_exec_batches, AdmissionConfig, BatchConfig, Reply, Request, Response,
-    ServerHandle,
+    split_exec_batches, AdmissionConfig, BatchConfig, Priority, RejectReason, Reply, Request,
+    Response, ServerHandle,
 };
-use crate::agent::{FabricState, Policy, SchedulingEnv, State};
+use crate::agent::{CongestionLevel, FabricState, Policy, SchedulingEnv, State};
 use crate::coordinator::{Coordinator, PlanCache};
 use crate::platform::Placement;
 use crate::runtime::{argmax_rows, ArtifactStore};
 use crate::util::stats::Samples;
 use anyhow::Result;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -241,7 +242,7 @@ impl BatchEngine for SimEngine {
         self.plans.sync_generation(fabric.generation);
         self.plans
             .peek(self.policy.as_ref(), batch, fabric.level)
-            .map_or(true, |p| p.offloads())
+            .is_none_or(|p| p.offloads())
     }
 }
 
@@ -252,6 +253,10 @@ pub struct ShardSamples {
     pub queue_delay: Samples,
     pub sim_latency: Samples,
     pub batch_sizes: Samples,
+    /// End-to-end latency split by [`Priority`] (indexed by
+    /// `Priority::index`), so the bench can report per-class p99 — the
+    /// SLO story is per class, not pooled.
+    pub latency_class: [Samples; 2],
 }
 
 impl ShardSamples {
@@ -261,6 +266,9 @@ impl ShardSamples {
         self.queue_delay.merge(&other.queue_delay);
         self.sim_latency.merge(&other.sim_latency);
         self.batch_sizes.merge(&other.batch_sizes);
+        for (mine, theirs) in self.latency_class.iter_mut().zip(&other.latency_class) {
+            mine.merge(theirs);
+        }
     }
 }
 
@@ -283,14 +291,24 @@ pub struct MetricShard {
 }
 
 /// Dispatcher-side admission telemetry.  Per-level arrays are indexed by
-/// [`crate::agent::CongestionLevel::index`]; the dispatcher is the only
-/// writer (plus `queue_peak`, raced benignly by submitters).
+/// [`crate::agent::CongestionLevel::index`], per-class arrays by
+/// [`Priority::index`]; the dispatcher is the only writer (plus
+/// `queue_peak`, raced benignly by submitters).
 #[derive(Debug, Default)]
 pub struct AdmissionStats {
     /// Requests handed to workers, by arbiter level at dispatch time.
     pub admitted: [AtomicU64; 3],
-    /// Requests answered [`Reply::Rejected`], by level at shed time.
+    /// Requests answered [`Reply::Rejected`] for overload, by level at
+    /// shed time.
     pub shed: [AtomicU64; 3],
+    /// Requests handed to workers, by priority class.
+    pub admitted_class: [AtomicU64; 2],
+    /// Overload sheds ([`RejectReason::Overload`]), by priority class —
+    /// the per-class counterpart of `shed`.
+    pub shed_class: [AtomicU64; 2],
+    /// Deadline rejections ([`RejectReason::Deadline`]: already expired
+    /// or predicted to miss), by priority class.
+    pub expired_class: [AtomicU64; 2],
     /// Dispatch throttles taken in defer mode (one per deferred batch).
     pub deferred: AtomicU64,
     /// Deepest the ingress queue has ever been.
@@ -300,12 +318,27 @@ pub struct AdmissionStats {
 /// All shards of the pool; everything here is summary-time aggregation.
 pub struct PoolMetrics {
     shards: Vec<Arc<MetricShard>>,
-    /// Admission-control counters (shed/defer/admitted per level).
+    /// Admission-control counters (shed/defer/admitted per level + class).
     pub admission: AdmissionStats,
     /// Workers whose engine failed to initialize and exited.  When this
     /// reaches the pool size, `submit` refuses new work instead of
     /// queueing requests nobody will ever answer.
     pub dead_workers: AtomicU64,
+    /// EWMA of the simulated per-batch cost, one slot per
+    /// [`CongestionLevel`] (f64 bits; 0 = no batch observed at that
+    /// level yet).  Workers publish each executed batch's plan cost
+    /// here; the dispatcher's deadline predictor reads it — the cached
+    /// plan cost *is* level-keyed, so indexing by the arbiter's current
+    /// level is exactly "per-batch sim cost plus the congestion
+    /// slowdown".  Updates race benignly (load/store, no CAS): the value
+    /// is an estimate, not an accounting total.
+    batch_cost_bits: [AtomicU64; 3],
+    /// Dispatched batches fully processed by a worker (served *or*
+    /// errored — unlike the per-shard `batches` chunk counter, exactly
+    /// one increment per hand-off).  Paired with the dispatcher's
+    /// sent count this measures the invisible pipeline for the deadline
+    /// predictor.
+    batches_done: AtomicU64,
 }
 
 impl PoolMetrics {
@@ -314,7 +347,39 @@ impl PoolMetrics {
             shards: (0..workers.max(1)).map(|_| Arc::new(MetricShard::default())).collect(),
             admission: AdmissionStats::default(),
             dead_workers: AtomicU64::new(0),
+            batch_cost_bits: Default::default(),
+            batches_done: AtomicU64::new(0),
         }
+    }
+
+    /// Record one executed batch's simulated cost under `level`
+    /// (worker-side; light EWMA so a congestion transient doesn't whip
+    /// the deadline predictor around).
+    pub fn observe_batch_cost(&self, level: CongestionLevel, cost_s: f64) {
+        if cost_s.is_nan() || cost_s <= 0.0 {
+            return;
+        }
+        let slot = &self.batch_cost_bits[level.index()];
+        let old = f64::from_bits(slot.load(Ordering::Relaxed));
+        let new = if old > 0.0 { 0.75 * old + 0.25 * cost_s } else { cost_s };
+        slot.store(new.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Per-batch cost estimate under `level` for the deadline predictor:
+    /// the EWMA recorded at that exact level when one exists, otherwise
+    /// the worst cost recorded at any level (congestion only ever slows
+    /// a batch down, so the worst observation is the safe stand-in), and
+    /// 0.0 before any batch has completed — with no data, nothing is
+    /// predicted-shed.
+    pub fn batch_cost_estimate(&self, level: CongestionLevel) -> f64 {
+        let exact = f64::from_bits(self.batch_cost_bits[level.index()].load(Ordering::Relaxed));
+        if exact > 0.0 {
+            return exact;
+        }
+        self.batch_cost_bits
+            .iter()
+            .map(|b| f64::from_bits(b.load(Ordering::Relaxed)))
+            .fold(0.0, f64::max)
     }
 
     pub fn workers(&self) -> usize {
@@ -365,7 +430,7 @@ impl PoolMetrics {
         out
     }
 
-    /// Requests answered `Rejected` across all levels.
+    /// Requests answered `Rejected` for overload across all levels.
     pub fn shed_total(&self) -> u64 {
         self.admission.shed.iter().map(|c| c.load(Ordering::Relaxed)).sum()
     }
@@ -382,6 +447,35 @@ impl PoolMetrics {
             self.admission.shed[1].load(Ordering::Relaxed),
             self.admission.shed[2].load(Ordering::Relaxed),
         ]
+    }
+
+    /// Requests dispatched to workers per priority class ([high, low]).
+    pub fn admitted_by_class(&self) -> [u64; 2] {
+        [
+            self.admission.admitted_class[0].load(Ordering::Relaxed),
+            self.admission.admitted_class[1].load(Ordering::Relaxed),
+        ]
+    }
+
+    /// Overload sheds per priority class ([high, low]).
+    pub fn shed_by_class(&self) -> [u64; 2] {
+        [
+            self.admission.shed_class[0].load(Ordering::Relaxed),
+            self.admission.shed_class[1].load(Ordering::Relaxed),
+        ]
+    }
+
+    /// Deadline rejections per priority class ([high, low]).
+    pub fn expired_by_class(&self) -> [u64; 2] {
+        [
+            self.admission.expired_class[0].load(Ordering::Relaxed),
+            self.admission.expired_class[1].load(Ordering::Relaxed),
+        ]
+    }
+
+    /// Requests answered `Rejected` for a missed/unmeetable deadline.
+    pub fn expired_total(&self) -> u64 {
+        self.admission.expired_class.iter().map(|c| c.load(Ordering::Relaxed)).sum()
     }
 
     /// Dispatch throttles taken in defer mode.
@@ -410,15 +504,25 @@ impl PoolMetrics {
     pub fn summary(&self) -> String {
         let m = self.merged();
         let lv = self.level_batches();
+        let ac = self.admitted_by_class();
+        let sc = self.shed_by_class();
+        let ec = self.expired_by_class();
         format!(
-            "served={} batches={} errors={} shed={} deferred={} dead={} workers={} plan={}h/{}m gen={} levels={}f/{}s/{}x qpeak={} wall p50={:.2}ms p99={:.2}ms queue p50={:.2}ms sim/batch p50={:.2}ms",
+            "served={} batches={} errors={} shed={} expired={} deferred={} dead={} workers={} class hi={}a/{}s/{}e lo={}a/{}s/{}e plan={}h/{}m gen={} levels={}f/{}s/{}x qpeak={} wall p50={:.2}ms p99={:.2}ms queue p50={:.2}ms sim/batch p50={:.2}ms",
             self.served(),
             self.batches(),
             self.errors(),
             self.shed_total(),
+            self.expired_total(),
             self.deferred(),
             self.dead_workers.load(Ordering::Relaxed),
             self.workers(),
+            ac[0],
+            sc[0],
+            ec[0],
+            ac[1],
+            sc[1],
+            ec[1],
             self.plan_hits(),
             self.plan_misses(),
             self.plan_generation(),
@@ -580,9 +684,146 @@ fn retry_hint(queued: usize, cfg: &BatchConfig) -> Duration {
     per_batch.saturating_mul(batches_behind).min(Duration::from_secs(1))
 }
 
-/// The dispatcher: pop the ingress, run admission, coalesce a batch,
-/// hand it to the worker queue.  On exit it drains the ingress with
-/// typed `Failed` replies so shutdown never strands a submitter.
+/// Shared context for the dispatcher's staging/shedding/assembly helpers
+/// — bundled so they don't each take seven arguments.
+struct DispatchCtx {
+    cfg: BatchConfig,
+    admission: AdmissionConfig,
+    workers: usize,
+    depth: Arc<AtomicUsize>,
+    metrics: Arc<PoolMetrics>,
+    arbiter: Arc<FabricArbiter>,
+    /// Batches this dispatcher has handed to the worker queue — against
+    /// the workers' completed-chunk count this measures the *invisible
+    /// pipeline* (bounded hand-off + in-execution batches) the deadline
+    /// predictor must charge for.  Single-threaded dispatcher, so a
+    /// plain `Cell`.
+    batches_sent: std::cell::Cell<u64>,
+}
+
+impl DispatchCtx {
+    /// Answer one request `Rejected` and settle its depth/counter
+    /// bookkeeping.  `queued` scales the retry hint.
+    fn reject(&self, req: Request, level: CongestionLevel, reason: RejectReason, queued: usize) {
+        let cls = req.priority.index();
+        match reason {
+            RejectReason::Overload => {
+                self.metrics.admission.shed[level.index()].fetch_add(1, Ordering::Relaxed);
+                self.metrics.admission.shed_class[cls].fetch_add(1, Ordering::Relaxed);
+            }
+            RejectReason::Deadline => {
+                self.metrics.admission.expired_class[cls].fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.depth.fetch_sub(1, Ordering::Relaxed);
+        let _ = req.respond.send(Reply::Rejected {
+            level,
+            retry_hint: retry_hint(queued, &self.cfg),
+            reason,
+        });
+    }
+
+    /// Batches sitting in the invisible pipeline — handed to the worker
+    /// queue but not yet fully processed (bounded hand-off + in
+    /// execution).  `batches_done` increments exactly once per hand-off
+    /// (served or errored), so this never drifts; the saturating
+    /// subtraction covers the benign done-before-sent read race.
+    fn pipeline_batches(&self) -> u64 {
+        self.batches_sent.get().saturating_sub(self.metrics.batches_done.load(Ordering::Relaxed))
+    }
+
+    /// Predicted completion delay (s) for a request with `ahead` staged
+    /// requests in front of it: staged batches ahead (its own included)
+    /// plus the live invisible-pipeline occupancy, spread over the
+    /// worker pool, each costing the cached per-batch cost under the
+    /// arbiter's current congestion level (the cost is level-keyed, so
+    /// the congestion slowdown is already in it), plus one batching
+    /// window.  On an idle pool this collapses to one batch + one
+    /// window, so feasible deadlines are not over-rejected.  0.0 until a
+    /// first batch cost is observed — no data, no predicted shed.  An
+    /// estimate, not a bound: a request admitted on an optimistic
+    /// prediction runs to completion even if it expires in the pipeline.
+    fn predicted_completion_s(&self, ahead: usize, level: CongestionLevel) -> f64 {
+        let cost = self.metrics.batch_cost_estimate(level);
+        if cost <= 0.0 {
+            return 0.0;
+        }
+        let batches =
+            (ahead / self.cfg.max_batch.max(1) + 1) as f64 + self.pipeline_batches() as f64;
+        (batches / self.workers.max(1) as f64).ceil() * cost + self.cfg.max_wait.as_secs_f64()
+    }
+
+    /// Admit one popped ingress request into its class queue — or answer
+    /// it `Rejected` right now when its deadline has already passed or
+    /// its predicted completion would miss it.  Rejecting doomed work at
+    /// the ingress beats executing it: the client learns immediately and
+    /// no worker (or fabric lease) is spent on a reply nobody wants.
+    ///
+    /// `level` memoizes the arbiter snapshot across one drain round: the
+    /// first deadline-carrying request derives it, the rest reuse it —
+    /// deadline-free traffic never pays the derivation at all.
+    fn stage(
+        &self,
+        req: Request,
+        classq: &mut [VecDeque<Request>; 2],
+        level: &mut Option<CongestionLevel>,
+    ) {
+        if let Some(dl) = req.deadline {
+            let now = Instant::now();
+            // requests that dispatch ahead of this one: its own class's
+            // backlog, plus the whole High queue for a Low request (High
+            // holds the reserved batch share, so Low queues behind it)
+            let ahead = classq[req.priority.index()].len()
+                + if req.priority == Priority::Low { classq[0].len() } else { 0 };
+            // Probe admission: on a fully idle pool (nothing staged,
+            // nothing in the pipeline) the prediction is pure model —
+            // and the cost EWMA can be stale (e.g. a congested warm-up
+            // recorded a cost no batch has corrected since, because
+            // prediction kept rejecting the very batches that would
+            // correct it).  Admitting the probe costs at most one batch
+            // and its completion re-feeds the EWMA, so deadline traffic
+            // can never livelock against a stale estimate.
+            let idle_probe = ahead == 0 && self.pipeline_batches() == 0;
+            let level = *level.get_or_insert_with(|| self.arbiter.state().level);
+            let est = self.predicted_completion_s(ahead, level);
+            if now >= dl || (!idle_probe && Duration::from_secs_f64(est) > dl - now) {
+                let queued = classq[0].len() + classq[1].len();
+                self.reject(req, level, RejectReason::Deadline, queued);
+                return;
+            }
+        }
+        classq[req.priority.index()].push_back(req);
+    }
+
+    /// Move up to `want` live requests from `q` into `batch`, answering
+    /// requests that expired while queued `Rejected` on the way out (the
+    /// stage-time check can only predict; this is the last line before a
+    /// doomed request would burn worker time and a fabric lease).
+    fn pop_live(
+        &self,
+        q: &mut VecDeque<Request>,
+        want: usize,
+        batch: &mut Vec<Request>,
+        queued: usize,
+        level: CongestionLevel,
+    ) {
+        let target = batch.len() + want;
+        while batch.len() < target {
+            let Some(req) = q.pop_front() else { break };
+            if req.deadline.is_some_and(|dl| Instant::now() >= dl) {
+                self.reject(req, level, RejectReason::Deadline, queued);
+                continue;
+            }
+            batch.push(req);
+        }
+    }
+}
+
+/// The dispatcher: drain the ingress into per-class staged queues, run
+/// class- and deadline-aware admission, assemble a batch with the High
+/// class's reserved share, hand it to the worker queue.  On exit it
+/// drains both staged queues and the ingress with typed `Failed` replies
+/// so shutdown never strands a submitter.
 #[allow(clippy::too_many_arguments)]
 fn dispatch_loop(
     rx: Receiver<Request>,
@@ -594,63 +835,144 @@ fn dispatch_loop(
     metrics: Arc<PoolMetrics>,
     arbiter: Arc<FabricArbiter>,
 ) {
+    let workers = metrics.workers();
+    let ctx = DispatchCtx {
+        cfg,
+        admission,
+        workers,
+        depth,
+        metrics,
+        arbiter,
+        batches_sent: std::cell::Cell::new(0),
+    };
+    // Staged ingress, one FIFO per class ([high, low]).  Requests wait
+    // here — not in the channel — so admission and the class scheduler
+    // see the backlog split by class.
+    let mut classq: [VecDeque<Request>; 2] = [VecDeque::new(), VecDeque::new()];
     loop {
         // Poll the stop flag between batches so shutdown terminates even
         // while cloned `ServerHandle`s keep the ingress channel open.
         if stop.load(Ordering::Relaxed) {
             break;
         }
-        let first = match rx.recv_timeout(Duration::from_millis(25)) {
-            Ok(r) => r,
-            Err(RecvTimeoutError::Timeout) => continue,
-            Err(RecvTimeoutError::Disconnected) => break,
-        };
-        depth.fetch_sub(1, Ordering::Relaxed);
-        // Admission: overload = a backlog past the cap while the fabric
-        // has sat at Saturated for the configured window.  The depth
-        // check is first so the underloaded path pays no admission-side
-        // arbiter derivation per request (just the one per-batch
-        // admitted-counter snapshot below); `snap.level == Saturated`
-        // looks redundant next to `sustained_saturated()` (which
-        // re-derives the live level) but is load-bearing: it pins the
-        // level the `Rejected` reply reports to Saturated even if the
-        // fabric moves between the two reads.  Shedding drops the
-        // *oldest* request (queue head): under overload it has already
-        // burned the most latency budget, so freeing its slot for
-        // fresher work — and telling its client to back off — beats
-        // serving a reply that arrives too late.
-        let queued = depth.load(Ordering::Relaxed);
-        if queued >= admission.queue_cap {
-            let snap = arbiter.state();
-            // Backstop: a backlog 8x past the cap is overload even when
-            // the fabric never saturates (CPU-only plans take no lease,
-            // so pure CPU overload is invisible to the arbiter) — in
-            // shed mode the ingress must stay bounded regardless.
-            let runaway = queued >= admission.queue_cap.saturating_mul(8);
-            let saturated = snap.level == crate::agent::CongestionLevel::Saturated
-                && arbiter.sustained_saturated();
-            if saturated || (runaway && admission.shed) {
-                if admission.shed {
-                    metrics.admission.shed[snap.level.index()].fetch_add(1, Ordering::Relaxed);
-                    let _ = first.respond.send(Reply::Rejected {
-                        level: snap.level,
-                        retry_hint: retry_hint(queued, &cfg),
-                    });
-                    continue;
-                }
-                // defer: keep the request, but throttle dispatch one
-                // batching window so the fabric drains instead of piling
-                // deeper
-                metrics.admission.deferred.fetch_add(1, Ordering::Relaxed);
-                std::thread::sleep(cfg.max_wait.max(Duration::from_millis(1)));
+        // One arbiter snapshot per round for the deadline predictor,
+        // derived lazily by the first deadline-carrying request.
+        let mut round_level: Option<CongestionLevel> = None;
+        // Block for work only when nothing is staged.
+        if classq[0].is_empty() && classq[1].is_empty() {
+            match rx.recv_timeout(Duration::from_millis(25)) {
+                Ok(r) => ctx.stage(r, &mut classq, &mut round_level),
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        let batch = fill_batch(first, &rx, &cfg);
-        if batch.len() > 1 {
-            depth.fetch_sub(batch.len() - 1, Ordering::Relaxed);
+        // Drain everything already submitted.  While the bounded batch
+        // hand-off holds the dispatcher back, overload backlog piles up
+        // here — split by class, where the caps can meter it.
+        while let Ok(r) = rx.try_recv() {
+            ctx.stage(r, &mut classq, &mut round_level);
         }
-        metrics.admission.admitted[arbiter.state().level.index()]
+
+        // Overload: cheap depth test first (the underloaded path derives
+        // no extra arbiter state), then the sustained-saturation check.
+        // `snap.level == Saturated` looks redundant next to
+        // `sustained_saturated()` (which re-derives the live level) but
+        // is load-bearing: it pins the level the `Rejected` replies
+        // report to Saturated even if the fabric moves between the two
+        // reads.  The runaway backstop sheds a backlog 8x past the
+        // combined cap even without fabric saturation — CPU-bound
+        // overload (plans that never lease) must not grow the ingress
+        // without bound just because the arbiter never saturates.
+        let (hn, ln) = (classq[0].len(), classq[1].len());
+        let over_depth = hn >= ctx.admission.queue_cap[0]
+            || ln >= ctx.admission.queue_cap[1]
+            || hn + ln >= ctx.admission.total_cap();
+        if over_depth {
+            let snap = ctx.arbiter.state();
+            let runaway = hn + ln >= ctx.admission.total_cap().saturating_mul(8);
+            let saturated =
+                snap.level == CongestionLevel::Saturated && ctx.arbiter.sustained_saturated();
+            if saturated || (runaway && ctx.admission.shed) {
+                if ctx.admission.shed {
+                    // Shedding starts with the Low class (oldest first —
+                    // under overload the queue head has burned the most
+                    // latency budget already): trim Low to its cap, and
+                    // all the way out while the combined backlog still
+                    // exceeds the combined cap.
+                    loop {
+                        let (hn, ln) = (classq[0].len(), classq[1].len());
+                        let low_over = ln >= ctx.admission.queue_cap[1]
+                            || hn + ln >= ctx.admission.total_cap();
+                        if ln == 0 || !low_over {
+                            break;
+                        }
+                        let req = classq[1].pop_front().unwrap();
+                        ctx.reject(req, snap.level, RejectReason::Overload, hn + ln);
+                    }
+                    // Then High against its own cap — after Low has paid
+                    // first, but not gated on Low being empty: a High
+                    // flood must not ride an innocent under-cap Low
+                    // trickle to unbounded depth.  The class the paper
+                    // says to prioritize still sheds last within every
+                    // overload round.
+                    while classq[0].len() >= ctx.admission.queue_cap[0] {
+                        let queued = classq[0].len() + classq[1].len();
+                        let Some(req) = classq[0].pop_front() else { break };
+                        ctx.reject(req, snap.level, RejectReason::Overload, queued);
+                    }
+                } else {
+                    // defer: keep every request, but throttle dispatch one
+                    // batching window so the fabric drains instead of
+                    // piling deeper
+                    ctx.metrics.admission.deferred.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(ctx.cfg.max_wait.max(Duration::from_millis(1)));
+                }
+            }
+        }
+
+        // Batching window: wait for more arrivals only while the staged
+        // backlog is smaller than one full batch (a saturated pool skips
+        // straight to assembly).
+        if classq[0].len() + classq[1].len() < ctx.cfg.max_batch {
+            let window_end = Instant::now() + ctx.cfg.max_wait;
+            while classq[0].len() + classq[1].len() < ctx.cfg.max_batch {
+                let now = Instant::now();
+                if now >= window_end {
+                    break;
+                }
+                match rx.recv_timeout(window_end - now) {
+                    Ok(r) => ctx.stage(r, &mut classq, &mut round_level),
+                    // window idle, or ingress closed (the next round's
+                    // blocking recv observes Disconnected and exits)
+                    Err(_) => break,
+                }
+            }
+        }
+
+        // Class-aware batch assembly: High claims its reserved share
+        // first, Low fills the rest, unclaimed reservations spill back
+        // to High.  With `high_share < 1` a backlogged Low queue is
+        // guaranteed slots in every full batch — priority without
+        // starvation.
+        let level = ctx.arbiter.state().level;
+        let queued = classq[0].len() + classq[1].len();
+        let reserve = ((ctx.admission.high_share * ctx.cfg.max_batch as f64).ceil() as usize)
+            .min(ctx.cfg.max_batch);
+        let mut batch = Vec::with_capacity(ctx.cfg.max_batch);
+        ctx.pop_live(&mut classq[0], reserve, &mut batch, queued, level);
+        ctx.pop_live(&mut classq[1], ctx.cfg.max_batch - batch.len(), &mut batch, queued, level);
+        ctx.pop_live(&mut classq[0], ctx.cfg.max_batch - batch.len(), &mut batch, queued, level);
+        if batch.is_empty() {
+            continue; // everything staged expired in place
+        }
+
+        ctx.depth.fetch_sub(batch.len(), Ordering::Relaxed);
+        ctx.metrics.admission.admitted[level.index()]
             .fetch_add(batch.len() as u64, Ordering::Relaxed);
+        for req in &batch {
+            ctx.metrics.admission.admitted_class[req.priority.index()]
+                .fetch_add(1, Ordering::Relaxed);
+        }
         if let Err(undelivered) = btx.send(batch) {
             // every worker exited: answer the batch instead of dropping
             // it, and raise the stop flag so racing submits self-answer
@@ -664,15 +986,24 @@ fn dispatch_loop(
             }
             break;
         }
+        ctx.batches_sent.set(ctx.batches_sent.get() + 1);
     }
-    // Exit drain: whatever is still queued gets a typed reply rather
-    // than a dropped channel.
-    while let Ok(req) = rx.try_recv() {
-        depth.fetch_sub(1, Ordering::Relaxed);
+    // Exit drain: staged requests first, then whatever is still in the
+    // channel — typed replies, never dropped channels.
+    let stopped = |req: Request| {
+        ctx.depth.fetch_sub(1, Ordering::Relaxed);
         let _ = req.respond.send(Reply::Failed {
             worker: usize::MAX,
             error: "server stopped before the request was dispatched".to_string(),
         });
+    };
+    for q in &mut classq {
+        while let Some(req) = q.pop_front() {
+            stopped(req);
+        }
+    }
+    while let Ok(req) = rx.try_recv() {
+        stopped(req);
     }
 }
 
@@ -716,6 +1047,14 @@ fn worker_loop(
         };
 
         let mut start = 0usize;
+        // Per-dispatched-batch cost for the deadline predictor: chunk
+        // costs accumulate and publish once per hand-off, because the
+        // predictor charges one cost unit per dispatched batch — feeding
+        // it per *chunk* would undercount every batch that splits across
+        // compiled sizes.  The batch reports the worst level any of its
+        // chunks ran under.
+        let mut batch_cost_s = 0.0f64;
+        let mut batch_level = CongestionLevel::Free;
         for exec_b in split_exec_batches(batch.len(), engine.unit_batches()) {
             let end = (start + exec_b).min(batch.len());
             let real = end - start;
@@ -783,6 +1122,17 @@ fn worker_loop(
                     shard.served.fetch_add(real as u64, Ordering::Relaxed);
                     shard.level_batches[fabric.level.index()].fetch_add(1, Ordering::Relaxed);
                     shard.plan_generation.fetch_max(out.plan_generation, Ordering::Relaxed);
+                    // Accumulate toward the dispatcher's deadline
+                    // predictor, which compares against wall-clock
+                    // deadlines: the plan's level-keyed sim cost models
+                    // the device time of an offloaded chunk, but on
+                    // host-dominated paths (the sim bench's synthetic
+                    // work, a slow behavioural model) measured wall time
+                    // is the real cost — take the larger so the estimate
+                    // is wall-safe either way.
+                    let exec_wall = started.elapsed().as_secs_f64();
+                    batch_cost_s += out.sim_latency_s.max(exec_wall);
+                    batch_level = batch_level.max(fabric.level);
                     // one (single-writer, uncontended) lock per chunk
                     let mut s = shard.samples.lock().unwrap();
                     s.batch_sizes.push(real as f64);
@@ -791,6 +1141,7 @@ fn worker_loop(
                         let queue_s = (started - req.enqueued).as_secs_f64();
                         let wall = req.enqueued.elapsed().as_secs_f64();
                         s.latency.push(wall);
+                        s.latency_class[req.priority.index()].push(wall);
                         s.queue_delay.push(queue_s);
                         let _ = req.respond.send(Reply::Ok(Response {
                             class: preds[i],
@@ -820,6 +1171,11 @@ fn worker_loop(
                 break;
             }
         }
+        // one cost observation and exactly one done-increment per
+        // dispatched batch — the dispatcher's pipeline gauge and cost
+        // predictor both depend on the 1:1 pairing with hand-offs
+        metrics.observe_batch_cost(batch_level, batch_cost_s);
+        metrics.batches_done.fetch_add(1, Ordering::Relaxed);
     }
 }
 

@@ -3,9 +3,11 @@
 //! accounting, plan-cache steady-state behaviour, metric-shard merging,
 //! end-to-end fabric arbitration (shared congestion levels + plan
 //! invalidation on reconfiguration), typed-reply invariants (engine
-//! errors, dead workers), and arbiter-driven admission control under
-//! sustained saturation.  (The real-artifact pool path is covered in
-//! server_e2e.rs.)
+//! errors, dead workers), arbiter-driven admission control under
+//! sustained saturation, and class-/deadline-aware admission (Low sheds
+//! before High, past-deadline requests reject without a fabric lease,
+//! every submit resolves exactly once).  (The real-artifact pool path is
+//! covered in server_e2e.rs.)
 
 use aifa::agent::{
     AllCpu, CongestionLevel, EnvConfig, FabricState, GreedyStep, SchedulingEnv, StaticAllFpga,
@@ -15,7 +17,7 @@ use aifa::graph::Network;
 use aifa::platform::{CpuModel, FpgaPlatform};
 use aifa::server::{
     AdmissionConfig, ArbiterConfig, BatchConfig, BatchEngine, BatchOutput, EngineFactory,
-    FabricArbiter, Reply, Response, ServingPool, SimEngine,
+    FabricArbiter, Priority, RejectReason, Reply, Response, ServingPool, SimEngine,
 };
 use anyhow::Result;
 use std::sync::atomic::Ordering;
@@ -487,7 +489,7 @@ fn submit_errors_once_every_worker_is_dead() {
     // start() fails fast when worker 0 dies, so all-dead is only
     // reachable through later death — drive the guard directly
     pool.metrics.dead_workers.fetch_add(1, Ordering::Relaxed);
-    let err = handle.submit(image(ie, 1)).err().expect("dead pool must refuse work");
+    let err = handle.submit(image(ie, 1)).expect_err("dead pool must refuse work");
     assert!(format!("{err:#}").contains("no live workers"), "{err:#}");
     drop(handle);
     pool.shutdown();
@@ -547,7 +549,7 @@ fn sustained_saturation_sheds_with_typed_replies() {
     let pool = ServingPool::start_full(
         WORKERS,
         BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
-        AdmissionConfig { queue_cap: 16, shed: true },
+        AdmissionConfig::capped(16, true),
         fpga_factory(24), // heavy all-FPGA batches: the backlog must build
         arbiter,
     )
@@ -566,7 +568,8 @@ fn sustained_saturation_sheds_with_typed_replies() {
             .expect("a submitter was left waiting forever under overload")
         {
             Reply::Ok(_) => ok_n += 1,
-            Reply::Rejected { level, retry_hint } => {
+            Reply::Rejected { level, retry_hint, reason } => {
+                assert_eq!(reason, RejectReason::Overload, "no deadlines were set");
                 assert!(retry_hint > Duration::ZERO, "a shed must carry a backoff hint");
                 assert!(retry_hint <= Duration::from_secs(1), "hint stays sane");
                 rejected += 1;
@@ -617,7 +620,7 @@ fn defer_mode_answers_every_request_ok() {
     let pool = ServingPool::start_full(
         WORKERS,
         BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
-        AdmissionConfig { queue_cap: 16, shed: false },
+        AdmissionConfig::capped(16, false),
         fpga_factory(8),
         arbiter,
     )
@@ -636,6 +639,186 @@ fn defer_mode_answers_every_request_ok() {
     }
     assert_eq!(pool.metrics.served(), n);
     assert_eq!(pool.metrics.shed_total(), 0, "defer mode never rejects");
+    assert_eq!(pool.metrics.errors(), 0);
+    drop(handle);
+    pool.shutdown();
+}
+
+/// The acceptance scenario for priority-class admission: under sustained
+/// saturation with shedding enabled, the Low class sheds while the High
+/// class — kept under its own (generous) cap — loses nothing.  High
+/// requests interleave with Low on the wire, so the ordering is the
+/// dispatcher's doing, not the submitter's.
+#[test]
+fn low_class_sheds_before_high_under_sustained_saturation() {
+    const WORKERS: usize = 3;
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+
+    let arbiter = FabricArbiter::new(ArbiterConfig {
+        shared_at: 1,
+        saturated_at: 1, // any in-flight lease saturates the fabric
+        saturation_window: Duration::from_millis(1),
+        ..ArbiterConfig::default()
+    });
+    let pool = ServingPool::start_full(
+        WORKERS,
+        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
+        // High's cap (64) exceeds all High traffic in the test; Low's
+        // tiny cap (4) guarantees the Low queue trips overload
+        AdmissionConfig { queue_cap: [64, 4], shed: true, high_share: 0.75 },
+        fpga_factory(24), // heavy all-FPGA batches: the backlog must build
+        arbiter,
+    )
+    .unwrap();
+    let handle = pool.handle();
+
+    // 240 requests, every 6th High (40 High / 200 Low), interleaved
+    let n = 240usize;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let priority = if i % 6 == 0 { Priority::High } else { Priority::Low };
+        rxs.push((priority, handle.submit_with(image(ie, i), priority, None).unwrap()));
+    }
+    let mut class_ok = [0u64; 2];
+    let mut class_rejected = [0u64; 2];
+    for (priority, rx) in rxs {
+        match rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("a submitter was left waiting forever under overload")
+        {
+            Reply::Ok(_) => class_ok[priority.index()] += 1,
+            Reply::Rejected { reason, .. } => {
+                assert_eq!(reason, RejectReason::Overload, "no deadlines were set");
+                class_rejected[priority.index()] += 1;
+            }
+            Reply::Failed { worker, error } => {
+                panic!("no engine failures were injected (worker {worker}: {error})")
+            }
+        }
+    }
+    assert_eq!(class_ok[0], 40, "every High request must be served — High sheds last");
+    assert_eq!(class_rejected[0], 0, "High must not shed while under its own cap");
+    assert!(class_rejected[1] > 0, "sustained saturation past the Low cap must shed Low");
+    assert_eq!(class_ok[1] + class_rejected[1], 200, "every Low request resolved exactly once");
+    assert_eq!(pool.metrics.shed_by_class(), class_rejected, "per-class shed counters match");
+    assert_eq!(pool.metrics.served(), class_ok[0] + class_ok[1]);
+    assert_eq!(pool.metrics.errors(), 0);
+    drop(handle);
+    pool.shutdown();
+}
+
+/// Deadline admission, the no-doomed-work invariant: requests whose
+/// deadline has already passed are answered `Rejected` at the ingress
+/// and never reach a worker — so the fabric grants **zero** leases even
+/// though every plan offloads.
+#[test]
+fn past_deadline_requests_reject_without_a_fabric_lease() {
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+
+    let pool = ServingPool::start_full(
+        1,
+        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
+        AdmissionConfig::default(), // deadline rejection needs no shed mode
+        fpga_factory(1),            // every executed batch WOULD lease
+        FabricArbiter::new(ArbiterConfig::default()),
+    )
+    .unwrap();
+    let handle = pool.handle();
+
+    let n = 20usize;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        // a zero relative deadline is provably in the past by the time
+        // the dispatcher stages the request
+        rxs.push(handle.submit_with(image(ie, i), Priority::High, Some(Duration::ZERO)).unwrap());
+    }
+    for rx in rxs {
+        match rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("an expired submitter was left waiting forever")
+        {
+            Reply::Rejected { reason, retry_hint, .. } => {
+                assert_eq!(reason, RejectReason::Deadline);
+                assert!(retry_hint > Duration::ZERO, "deadline rejects still hint a backoff");
+            }
+            other => panic!("expected Reply::Rejected {{ reason: Deadline }}, got {other:?}"),
+        }
+    }
+    assert_eq!(
+        pool.arbiter().leases_granted(),
+        0,
+        "expired requests must not consume fabric leases"
+    );
+    assert_eq!(pool.metrics.served(), 0);
+    assert_eq!(pool.metrics.expired_by_class(), [n as u64, 0]);
+    assert_eq!(pool.metrics.shed_total(), 0, "deadline rejects are not overload sheds");
+    assert_eq!(pool.metrics.errors(), 0);
+    drop(handle);
+    pool.shutdown();
+}
+
+/// The reply-exactness invariant survives the full admission feature
+/// matrix at once: two classes, a mix of deadline-carrying and
+/// deadline-free requests, shed mode, sustained saturation.  Every
+/// submit resolves to exactly one typed reply, and the admission
+/// counters account for every request.
+#[test]
+fn every_submit_resolves_once_with_classes_and_deadlines() {
+    const WORKERS: usize = 2;
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+
+    let arbiter = FabricArbiter::new(ArbiterConfig {
+        shared_at: 1,
+        saturated_at: 1,
+        saturation_window: Duration::from_millis(1),
+        ..ArbiterConfig::default()
+    });
+    let pool = ServingPool::start_full(
+        WORKERS,
+        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
+        AdmissionConfig::capped(8, true),
+        fpga_factory(8),
+        arbiter,
+    )
+    .unwrap();
+    let handle = pool.handle();
+
+    let n = 150usize;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let priority = if i % 2 == 0 { Priority::High } else { Priority::Low };
+        // every third request carries a tight deadline; under this
+        // overload many provably expire before dispatch
+        let deadline = (i % 3 == 0).then_some(Duration::from_millis(5));
+        rxs.push(handle.submit_with(image(ie, i), priority, deadline).unwrap());
+    }
+    let (mut ok_n, mut shed, mut expired) = (0u64, 0u64, 0u64);
+    for rx in rxs {
+        match rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("a submitter was left waiting forever")
+        {
+            Reply::Ok(_) => ok_n += 1,
+            Reply::Rejected { reason: RejectReason::Overload, .. } => shed += 1,
+            Reply::Rejected { reason: RejectReason::Deadline, .. } => expired += 1,
+            Reply::Failed { worker, error } => {
+                panic!("no engine failures were injected (worker {worker}: {error})")
+            }
+        }
+    }
+    assert_eq!(ok_n + shed + expired, n as u64, "every request resolved exactly once");
+    assert!(ok_n > 0, "admission must not starve the pool completely");
+    assert_eq!(pool.metrics.served(), ok_n);
+    assert_eq!(pool.metrics.shed_total(), shed, "shed counters match Overload replies");
+    assert_eq!(pool.metrics.expired_total(), expired, "expired counters match Deadline replies");
+    assert_eq!(
+        pool.metrics.admitted_total() + pool.metrics.shed_total() + pool.metrics.expired_total(),
+        n as u64,
+        "admitted + shed + expired accounts for every request"
+    );
     assert_eq!(pool.metrics.errors(), 0);
     drop(handle);
     pool.shutdown();

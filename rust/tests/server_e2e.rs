@@ -7,7 +7,7 @@ use aifa::agent::{CongestionLevel, EnvConfig, FixedPlacement, Policy, Scheduling
 use aifa::data::TestSet;
 use aifa::platform::{CpuModel, FpgaPlatform};
 use aifa::runtime::ArtifactStore;
-use aifa::server::{BatchConfig, Reply, Response, Server};
+use aifa::server::{BatchConfig, Priority, Reply, Response, Server};
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
@@ -101,11 +101,15 @@ fn pool_of_two_workers_serves_real_artifacts() {
     )
     .unwrap();
 
+    // mixed-priority traffic through the real-artifact path: with no
+    // overload both classes are served in full, and the per-class
+    // admitted counters see every request (PR 4 class-aware dispatcher)
     let n = 32;
     let mut rxs = Vec::new();
     for i in 0..n {
         let img = ts.decode_batch(i, 1).unwrap();
-        rxs.push((i, server.handle.submit(img).unwrap()));
+        let priority = if i % 2 == 0 { Priority::High } else { Priority::Low };
+        rxs.push((i, server.handle.submit_with(img, priority, None).unwrap()));
     }
     let mut hits = 0;
     for (i, rx) in rxs {
@@ -116,6 +120,12 @@ fn pool_of_two_workers_serves_real_artifacts() {
     assert!(hits >= 24, "only {hits}/{n} correct");
     assert_eq!(server.metrics.served(), n as u64);
     assert_eq!(server.metrics.errors(), 0);
+    assert_eq!(
+        server.metrics.admitted_by_class(),
+        [n as u64 / 2, n as u64 / 2],
+        "both classes fully admitted when the pool is not overloaded"
+    );
+    assert_eq!(server.metrics.shed_total() + server.metrics.expired_total(), 0);
     server.shutdown();
 }
 

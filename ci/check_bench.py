@@ -10,9 +10,20 @@ fails (exit 1) when:
     least its lowest swept rate, otherwise the serving path regressed;
   * any closed-loop row is missing its fields or reports zero rps;
   * any open-loop row is missing the per-class fields (the priority
-    admission contract: per-class ok/rejected/expired/goodput/p99);
+    admission contract: per-class ok/rejected/expired/goodput/p99) or
+    the dedup counters (hits/misses/coalesced);
   * reply accounting doesn't add up (ok + rejected + expired + failed
     != n) for any open-loop row;
+  * dedup accounting doesn't add up: on cached rows every keyed submit
+    is exactly one cache probe (hits + misses == replies) and every
+    coalesced request was a miss first (coalesced <= misses); uncached
+    rows must report all three as zero (the zero-cache config must be
+    byte-identical to the dedup-free pipeline);
+  * `cache_cap` > 0 but the report lacks the cached sweep
+    (`open_loop_cached` rows + `cache_knee_rate`);
+  * `skew` > 0 on a cached sweep yet hits + coalesced == 0 across every
+    cached row — a Zipf-skewed workload that never dedups means the
+    content keys or the cache probe regressed;
   * High-class goodput falls below Low-class goodput on any *overloaded*
     (non-sustained) row — under overload, shedding starts with the Low
     class, so High goodput >= Low goodput is the measurable claim;
@@ -33,12 +44,50 @@ OPEN_FIELDS = [
     "high_ok", "low_ok", "high_rejected", "low_rejected",
     "high_expired", "low_expired", "high_goodput_rps", "low_goodput_rps",
     "high_p99_ms", "low_p99_ms",
+    "hits", "misses", "coalesced",
 ]
 
 
 def fail(msg: str) -> None:
     print(f"check_bench: FAIL: {msg}")
     sys.exit(1)
+
+
+def check_open_rows(rows: list, n: int, tag: str, cached: bool) -> None:
+    """Field presence + reply and dedup accounting for one sweep's rows."""
+    if not rows:
+        fail(f"{tag} rows are empty")
+    for row in rows:
+        for field in OPEN_FIELDS:
+            if field not in row:
+                fail(f"{tag} row (rate={row.get('rate')}) missing field '{field}'")
+        replies = row["ok"] + row["rejected"] + row["expired"] + row["failed"]
+        if replies != n:
+            fail(
+                f"{tag} row rate={row['rate']}: ok+rejected+expired+failed={replies} != n={n} "
+                "(a submit did not resolve to exactly one reply)"
+            )
+        hits, misses, coal = row["hits"], row["misses"], row["coalesced"]
+        if cached:
+            # every keyed submit probes the cache exactly once before any
+            # other admission stage, so probes must cover every reply
+            if hits + misses != replies:
+                fail(
+                    f"{tag} row rate={row['rate']}: hits+misses={hits + misses} != "
+                    f"replies={replies} (a keyed submit skipped or double-counted "
+                    "its cache probe)"
+                )
+            if coal > misses:
+                fail(
+                    f"{tag} row rate={row['rate']}: coalesced={coal} > misses={misses} "
+                    "(a coalesced request must have been a cache miss first)"
+                )
+        elif hits or misses or coal:
+            fail(
+                f"{tag} row rate={row['rate']}: dedup counters nonzero "
+                f"(hits={hits} misses={misses} coalesced={coal}) with the cache off — "
+                "the zero-cache config must not touch the dedup layer"
+            )
 
 
 def main() -> None:
@@ -77,20 +126,30 @@ def main() -> None:
         if not row["rps"] > 0:
             fail(f"closed-loop row workers={row['workers']} reports rps={row['rps']}")
 
-    open_loop = data.get("open_loop") or []
-    if not open_loop:
-        fail("open_loop rows are empty")
     n = data.get("n", 0)
-    for row in open_loop:
-        for field in OPEN_FIELDS:
-            if field not in row:
-                fail(f"open-loop row (rate={row.get('rate')}) missing per-class field '{field}'")
-        replies = row["ok"] + row["rejected"] + row["expired"] + row["failed"]
-        if replies != n:
-            fail(
-                f"open-loop row rate={row['rate']}: ok+rejected+expired+failed={replies} != n={n} "
-                "(a submit did not resolve to exactly one reply)"
-            )
+    open_loop = data.get("open_loop") or []
+    check_open_rows(open_loop, n, "open-loop", cached=False)
+
+    # The dedup sweep: when the bench ran with a cache, the report must
+    # carry the cached rows and their knee so the uncached/cached knee
+    # comparison is reproducible from the artifact alone.
+    cache_cap = data.get("cache_cap", 0) or 0
+    skew = data.get("skew", 0) or 0
+    cached_rows = data.get("open_loop_cached") or []
+    if cache_cap > 0:
+        if "cache_knee_rate" not in data:
+            fail("cache_cap > 0 but cache_knee_rate is missing from the report")
+        check_open_rows(cached_rows, n, "cached open-loop", cached=True)
+        if skew > 0:
+            deduped = sum(r["hits"] + r["coalesced"] for r in cached_rows)
+            if deduped == 0:
+                fail(
+                    f"skew={skew} with cache_cap={cache_cap} produced zero hits and "
+                    "zero coalesced requests across the cached sweep — a Zipf-skewed "
+                    "workload must dedup, so the content keys or cache probe regressed"
+                )
+    elif cached_rows:
+        fail("open_loop_cached present but cache_cap is 0 — report is inconsistent")
 
     overloaded = [r for r in open_loop if not r["sustained"]]
     if require_overload and not overloaded:
@@ -115,6 +174,15 @@ def main() -> None:
         print(
             f"  overloaded λ={row['rate']:.0f}: high goodput {row['high_goodput_rps']:.1f}/s "
             f"(ok={row['high_ok']}) >= low {row['low_goodput_rps']:.1f}/s (ok={row['low_ok']})"
+        )
+    if cache_cap > 0:
+        hits = sum(r["hits"] for r in cached_rows)
+        coal = sum(r["coalesced"] for r in cached_rows)
+        misses = sum(r["misses"] for r in cached_rows)
+        print(
+            f"  dedup (skew={skew}, cap={cache_cap}): {hits} hits + {coal} coalesced "
+            f"/ {hits + misses} probes, cache_knee_rate={data.get('cache_knee_rate')} "
+            f"vs knee_rate={knee}"
         )
 
 

@@ -18,7 +18,11 @@
 //!   (online policy retrain hook) advance a monotone epoch counter.  Every
 //!   worker's `PlanCache` compares the generation on its next lookup and
 //!   drops stale plans, so placement plans never outlive the fabric or the
-//!   policy they were built against.
+//!   policy they were built against.  The same epoch invalidates the
+//!   serving pool's response cache: content keys fold the generation in
+//!   at submit time and the dispatcher clears cached responses on the
+//!   first probe after a bump, so a reconfigure can never answer a new
+//!   request with a result computed on the old fabric.
 //!
 //! The hot path is lock-free: lease grant/release and level derivation
 //! are atomics; the `Mutex<Fabric>` is touched only on reconfiguration,
@@ -238,7 +242,9 @@ impl FabricArbiter {
     }
 
     /// Current fabric epoch.  Monotone; plans stamped with an older value
-    /// are stale.
+    /// are stale, and so are response-cache entries (the dedup layer
+    /// folds this value into content keys and drops its entries when it
+    /// observes a newer epoch).
     pub fn generation(&self) -> u64 {
         self.generation.load(Ordering::SeqCst)
     }

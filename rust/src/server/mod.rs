@@ -8,14 +8,21 @@
 //!
 //! ```text
 //!   clients --(mpsc ingress, depth-tracked)--> dispatcher --(batch queue)--> worker 0..N-1
-//!            [submit_with -> Receiver<Reply>]  [two-class staging:          [own ArtifactStore
-//!             priority High | Low               High q | Low q]              + Coordinator
-//!             optional deadline                [admission:                   + plan cache
-//!                                               per-class caps               + metric shard]
-//!                                               + sustained Saturated
-//!                                               -> shed Low first | defer]
-//!                                              [deadline: expired or
-//!                                               predicted-miss -> Rejected]
+//!            [submit_with -> Receiver<Reply>]  [admission, stage order:     [own ArtifactStore
+//!             priority High | Low               1. cache: content key in     + Coordinator
+//!             optional deadline                    the TTL'd response LRU    + plan cache
+//!             content key when caching:           -> Reply::Ok (Cache)       + metric shard
+//!              (input hash, policy id,         2. coalesce: key already      + response-cache
+//!               class, fabric generation)]        staged/executing ->         insert on Ok]
+//!                                                 attach to its slot,
+//!                                                 fan-out reply later
+//!                                              3. deadline: expired or
+//!                                                 predicted-miss -> Rejected
+//!                                              4. overload: per-class caps
+//!                                                 + sustained Saturated
+//!                                                 -> shed Low first | defer]
+//!                                              [staging: EDF within High,
+//!                                               FIFO within Low]
 //!                                              [batch: high_share slots
 //!                                               to High, rest to Low]
 //! ```
@@ -35,6 +42,23 @@
 //!   class starves a half-empty batch), and overload shedding starts
 //!   with the Low queue — High requests shed only after Low has been
 //!   trimmed in the same round, and only past High's own cap.
+//! * **Deduplication** ([`CacheConfig`], default off) — when a response
+//!   cache is configured (`--cache-cap` > 0) every request is
+//!   content-addressed at submit time ([`content_key`]: input hash,
+//!   policy id, priority class, fabric generation).  Admission consults
+//!   the TTL'd, LRU-bounded response cache *first* — before deadline or
+//!   overload accounting — and answers hits `Reply::Ok` with
+//!   [`Served::Cache`] provenance, no batch slot, no fabric lease.
+//!   Misses that match a key already staged or executing **coalesce**:
+//!   the duplicate attaches to the in-flight request's
+//!   [`CoalesceSlot`] and the single engine result fans out to every
+//!   waiter ([`Served::Coalesced`]), so N duplicate submits consume one
+//!   slot, one lease, one plan lookup.  Cache entries are stamped with
+//!   the plan generation; [`FabricArbiter::reconfigure`] /
+//!   [`FabricArbiter::bump_generation`] invalidates them through the
+//!   same epoch that already drops stale placement plans.  With
+//!   `cap == 0` no key is ever computed and the pipeline is
+//!   byte-identical to the uncached pool.
 //! * **Deadlines** — a request may carry a relative deadline
 //!   ([`ServerHandle::submit_with`]).  The dispatcher rejects
 //!   (`RejectReason::Deadline`) requests whose deadline has already
@@ -46,7 +70,12 @@
 //!   fabric lease.  Predicted-miss rejection is an estimate, not a
 //!   bound: a request admitted on an optimistic prediction runs to
 //!   completion (and replies `Ok`, late) even if it expires in the
-//!   worker pipeline.
+//!   worker pipeline.  Within the High staged queue, deadline-carrying
+//!   requests dispatch **earliest-deadline-first**
+//!   ([`AdmissionConfig::edf`], on by default): a tight deadline jumps
+//!   ahead of looser ones instead of expiring behind them, and
+//!   deadline-free requests keep FIFO order among themselves at the
+//!   back.
 //! * **Admission** ([`AdmissionConfig`]) — per-class staged depths are
 //!   tracked live; when a class passes its `queue_cap` (or the combined
 //!   backlog passes the combined cap) while the shared arbiter reports
@@ -88,7 +117,7 @@ pub mod pool;
 pub use arbiter::{ArbiterConfig, FabricArbiter, FabricLease};
 pub use pool::{
     AdmissionStats, BatchEngine, BatchOutput, CoordEngine, EngineFactory, MetricShard,
-    PoolMetrics, ServingPool, ShardSamples, SimEngine,
+    PoolMetrics, ResponseCache, ServingPool, ShardSamples, SimEngine,
 };
 
 use crate::agent::{CongestionLevel, Policy, SchedulingEnv};
@@ -154,6 +183,97 @@ pub enum RejectReason {
     Deadline,
 }
 
+/// How a request was answered `Ok` — the provenance of the response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Served {
+    /// Executed by an engine (the only provenance when caching is off).
+    Engine,
+    /// Attached to an identical in-flight request and answered by its
+    /// engine result's fan-out — one batch slot served N submits.
+    Coalesced,
+    /// Answered at admission from the TTL'd response cache — no batch
+    /// slot, no fabric lease, no plan lookup.
+    Cache,
+}
+
+impl Served {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Served::Engine => "engine",
+            Served::Coalesced => "coalesced",
+            Served::Cache => "cache",
+        }
+    }
+}
+
+impl std::fmt::Display for Served {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Content-address one request: FNV-1a over the image's f32 bit
+/// patterns, folded with the policy id, the priority class, and the
+/// fabric generation.  Two submits collide exactly when the engine
+/// would produce the same response for both — same input, same policy,
+/// same batch class, same fabric epoch — which is what makes the key
+/// safe to coalesce and cache on.  Computed at submit time so the
+/// dispatcher's lookup is a single map probe.
+pub fn content_key(image: &[f32], policy_id: u64, class: Priority, generation: u64) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |word: u64| {
+        h ^= word;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for &x in image {
+        mix(x.to_bits() as u64);
+    }
+    mix(policy_id);
+    mix(class.index() as u64);
+    mix(generation);
+    h
+}
+
+/// Shared fan-out slot for coalesced duplicates: the primary request
+/// carries it into the batch, duplicates attach their reply senders,
+/// and whichever path resolves the primary (engine Ok/Failed, overload
+/// or deadline rejection, shutdown drain) closes the slot and fans the
+/// reply out.  `attach` after the slot closed fails, telling the
+/// dispatcher to treat the duplicate as a fresh primary instead — no
+/// waiter can ever be stranded on an already-resolved slot.
+pub struct CoalesceSlot {
+    waiters: Mutex<Option<Vec<Sender<Reply>>>>,
+}
+
+impl CoalesceSlot {
+    pub fn new() -> Arc<CoalesceSlot> {
+        Arc::new(CoalesceSlot { waiters: Mutex::new(Some(Vec::new())) })
+    }
+
+    /// Attach one duplicate's reply sender; `false` when the slot has
+    /// already resolved (the duplicate must become its own primary).
+    pub fn attach(&self, tx: Sender<Reply>) -> bool {
+        match &mut *self.waiters.lock().unwrap() {
+            Some(v) => {
+                v.push(tx);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Close the slot and take its waiters (exactly once; later calls
+    /// and attaches see it closed).
+    pub fn take_waiters(&self) -> Vec<Sender<Reply>> {
+        self.waiters.lock().unwrap().take().unwrap_or_default()
+    }
+
+    /// Whether the slot can still accept waiters.
+    pub fn open(&self) -> bool {
+        self.waiters.lock().unwrap().is_some()
+    }
+}
+
 /// One inference request: a single image (flat NHWC f32).
 pub struct Request {
     pub image: Vec<f32>,
@@ -164,7 +284,30 @@ pub struct Request {
     /// Absolute completion deadline; `None` opts out of deadline-aware
     /// shedding entirely.
     pub deadline: Option<Instant>,
+    /// Content-address ([`content_key`]) computed at submit time;
+    /// `None` whenever the response cache is off — the uncached
+    /// pipeline never hashes, probes, or coalesces.
+    pub key: Option<u64>,
+    /// Fan-out slot this request is the *primary* of; set by the
+    /// dispatcher when the request stages with a key.
+    pub coalesce: Option<Arc<CoalesceSlot>>,
     pub respond: Sender<Reply>,
+}
+
+impl Request {
+    /// Fan `reply` out to every coalesced waiter and close the slot.
+    /// Returns how many waiters were answered — every terminal path
+    /// (reject, failure, shutdown drain) must call this so the
+    /// "exactly one reply per submit" invariant covers duplicates too.
+    pub fn fan_out(&self, reply: &Reply) -> usize {
+        let Some(slot) = &self.coalesce else { return 0 };
+        let waiters = slot.take_waiters();
+        let n = waiters.len();
+        for tx in waiters {
+            let _ = tx.send(reply.clone());
+        }
+        n
+    }
 }
 
 /// Terminal outcome of one submitted request.  The pool's contract is
@@ -229,6 +372,13 @@ pub struct Response {
     pub congestion: CongestionLevel,
     /// Fabric epoch of the placement plan that served this request.
     pub plan_generation: u64,
+    /// Provenance: engine execution, coalesced fan-out, or cache hit.
+    /// For `Coalesced`/`Cache` the tracing fields (`worker`,
+    /// `batch_size`, `congestion`, ...) describe the execution that
+    /// produced the shared result, not this submit; `queue_s` is this
+    /// submit's own wait for `Cache` hits and the primary's wait for
+    /// `Coalesced` (waiters park only a reply channel, not a timestamp).
+    pub served: Served,
 }
 
 /// Batching configuration.
@@ -273,11 +423,18 @@ pub struct AdmissionConfig {
     /// a sustained High stream cannot starve Low outright.  Unclaimed
     /// reservations spill to the other class either way.
     pub high_share: f64,
+    /// Earliest-deadline-first ordering within the High staged queue
+    /// (default on): deadline-carrying High requests stage in deadline
+    /// order (deadline-free ones keep FIFO at the back), so a tight
+    /// deadline dispatches before looser ones instead of expiring
+    /// behind them.  `false` restores PR 4's pure-FIFO staging — kept
+    /// as a knob so the EDF-vs-FIFO expiry win is testable A/B.
+    pub edf: bool,
 }
 
 impl Default for AdmissionConfig {
     fn default() -> Self {
-        AdmissionConfig { queue_cap: [1024, 1024], shed: false, high_share: 0.75 }
+        AdmissionConfig { queue_cap: [1024, 1024], shed: false, high_share: 0.75, edf: true }
     }
 }
 
@@ -301,6 +458,53 @@ impl AdmissionConfig {
     }
 }
 
+/// Response-cache + coalescing configuration (`--cache-cap` /
+/// `--cache-ttl-ms`).  `cap == 0` — the default — disables the whole
+/// deduplication layer: no content key is computed at submit, no cache
+/// probe or coalesce map is touched, and the pipeline behaves exactly
+/// as the uncached pool.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheConfig {
+    /// Max cached responses (bounded LRU); 0 = dedup layer off.
+    pub cap: usize,
+    /// Entry lifetime; expired entries answer nothing and are dropped
+    /// on the next probe.
+    pub ttl: Duration,
+    /// Identity of the serving policy, folded into every content key so
+    /// two pools running different policies can never share entries.
+    /// Conventionally a hash of [`Policy::name`].
+    pub policy_id: u64,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig { cap: 0, ttl: Duration::from_millis(1000), policy_id: 0 }
+    }
+}
+
+impl CacheConfig {
+    /// Whether the dedup layer (cache + coalescing) is on at all.
+    pub fn enabled(&self) -> bool {
+        self.cap > 0
+    }
+
+    /// Cache of `cap` entries with `ttl_ms` lifetime under `policy`.
+    pub fn sized(cap: usize, ttl_ms: u64, policy_id: u64) -> CacheConfig {
+        CacheConfig { cap, ttl: Duration::from_millis(ttl_ms), policy_id }
+    }
+}
+
+/// Submit-time content-keying context: present on the handle only when
+/// the response cache is configured, so the uncached submit path pays
+/// neither the hash nor the generation read.
+pub(crate) struct KeyCtx {
+    pub(crate) policy_id: u64,
+    /// Generation source: the key folds in the *current* fabric epoch,
+    /// so a reconfigure/retrain makes every new submit miss old entries
+    /// by construction (the cache also drops them wholesale).
+    pub(crate) arbiter: Arc<FabricArbiter>,
+}
+
 /// Handle for submitting requests.  Cloneable across producer threads;
 /// tracks the live ingress depth the dispatcher's admission check reads.
 #[derive(Clone)]
@@ -309,6 +513,7 @@ pub struct ServerHandle {
     depth: Arc<AtomicUsize>,
     metrics: Arc<PoolMetrics>,
     stop: Arc<AtomicBool>,
+    key_ctx: Option<Arc<KeyCtx>>,
 }
 
 impl ServerHandle {
@@ -340,11 +545,20 @@ impl ServerHandle {
         let (tx, rx) = channel();
         let backstop = tx.clone();
         let enqueued = Instant::now();
+        // Content-address at submit time (caching pools only): the key
+        // folds in the live fabric generation, so entries built under an
+        // older epoch can never answer a post-reconfigure submit.
+        let key = self
+            .key_ctx
+            .as_ref()
+            .map(|k| content_key(&image, k.policy_id, priority, k.arbiter.generation()));
         let req = Request {
             image,
             enqueued,
             priority,
             deadline: deadline.map(|d| enqueued + d),
+            key,
+            coalesce: None,
             respond: tx,
         };
         // count the request in *before* sending so the dispatcher's
@@ -470,8 +684,8 @@ impl Server {
         )
     }
 
-    /// Full constructor: N-worker pool over the real artifact path with
-    /// explicit admission control (`aifa serve --shed/--queue-cap`).
+    /// N-worker pool over the real artifact path with explicit admission
+    /// control (`aifa serve --shed/--queue-cap`) and the dedup layer off.
     pub fn start_pool_admission(
         workers: usize,
         artifact_dir: std::path::PathBuf,
@@ -481,13 +695,46 @@ impl Server {
         admission: AdmissionConfig,
         arbiter: Arc<FabricArbiter>,
     ) -> Result<Server> {
+        Self::start_pool_cached(
+            workers,
+            artifact_dir,
+            make_env,
+            policy,
+            cfg,
+            admission,
+            CacheConfig::default(),
+            arbiter,
+        )
+    }
+
+    /// Full constructor: N-worker pool over the real artifact path with
+    /// explicit admission control *and* the content-addressed dedup
+    /// layer (`aifa serve --cache-cap/--cache-ttl-ms`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_pool_cached(
+        workers: usize,
+        artifact_dir: std::path::PathBuf,
+        make_env: impl Fn(&ArtifactStore) -> SchedulingEnv + Send + Sync + 'static,
+        policy: Arc<dyn Policy + Send + Sync>,
+        cfg: BatchConfig,
+        admission: AdmissionConfig,
+        cache: CacheConfig,
+        arbiter: Arc<FabricArbiter>,
+    ) -> Result<Server> {
         let factory = move |_worker: usize| -> Result<Box<dyn BatchEngine>> {
             let store = ArtifactStore::open(&artifact_dir)?;
             let env = make_env(&store);
             let policy: Box<dyn Policy> = Box::new(pool::SharedPolicy(policy.clone()));
             Ok(Box::new(CoordEngine::new(store, env, policy)?))
         };
-        Self::from_pool(ServingPool::start_full(workers, cfg, admission, Arc::new(factory), arbiter)?)
+        Self::from_pool(ServingPool::start_cached(
+            workers,
+            cfg,
+            admission,
+            cache,
+            Arc::new(factory),
+            arbiter,
+        )?)
     }
 
     fn from_pool(pool: ServingPool) -> Result<Server> {

@@ -19,8 +19,8 @@
 
 use super::arbiter::FabricArbiter;
 use super::{
-    split_exec_batches, AdmissionConfig, BatchConfig, Priority, RejectReason, Reply, Request,
-    Response, ServerHandle,
+    split_exec_batches, AdmissionConfig, BatchConfig, CacheConfig, CoalesceSlot, KeyCtx, Priority,
+    RejectReason, Reply, Request, Response, Served, ServerHandle,
 };
 use crate::agent::{CongestionLevel, FabricState, Policy, SchedulingEnv, State};
 use crate::coordinator::{Coordinator, PlanCache};
@@ -28,7 +28,7 @@ use crate::platform::Placement;
 use crate::runtime::{argmax_rows, ArtifactStore};
 use crate::util::stats::Samples;
 use anyhow::Result;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -246,6 +246,127 @@ impl BatchEngine for SimEngine {
     }
 }
 
+/// One stored response with its eviction bookkeeping.
+struct CacheEntry {
+    resp: Response,
+    expires: Instant,
+    /// LRU tick at the last touch; `order` entries with a stale tick
+    /// are skipped on eviction (lazy LRU).
+    tick: u64,
+}
+
+/// TTL'd, LRU-bounded, generation-invalidated response cache
+/// ([`CacheConfig`]).  Shared between the dispatcher (probe at
+/// admission) and the workers (insert on `Ok`) behind one mutex — one
+/// probe per keyed submit and one insert per executed keyed request,
+/// so the lock is touched far less often than the per-chunk sample
+/// locks the pool already takes.
+///
+/// Invalidation follows the [`crate::coordinator::PlanCache`] idiom
+/// exactly: [`ResponseCache::sync_generation`] drops every entry the
+/// first time it sees a newer fabric epoch, and inserts from a batch
+/// that executed under an older epoch are refused — reconfigure or
+/// retrain, and no stale response can survive or resurrect.
+pub struct ResponseCache {
+    cap: usize,
+    ttl: Duration,
+    generation: u64,
+    map: HashMap<u64, CacheEntry>,
+    /// `(key, tick)` in touch order; stale ticks are skipped on pop.
+    order: VecDeque<(u64, u64)>,
+    tick: u64,
+    /// Lifetime telemetry (survives `sync_generation` clears).
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl ResponseCache {
+    pub fn new(cap: usize, ttl: Duration) -> ResponseCache {
+        ResponseCache {
+            cap,
+            ttl,
+            generation: 0,
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Drop everything the first time a newer fabric epoch is observed
+    /// — same contract as `PlanCache::sync_generation`.
+    pub fn sync_generation(&mut self, generation: u64) {
+        if generation != self.generation {
+            self.map.clear();
+            self.order.clear();
+            self.generation = generation;
+        }
+    }
+
+    /// Probe for `key`: a live (unexpired, current-generation) entry
+    /// counts a hit and returns a clone; expiry drops the entry and
+    /// counts a miss.
+    pub fn get(&mut self, key: u64, now: Instant) -> Option<Response> {
+        match self.map.get_mut(&key) {
+            Some(e) if e.expires > now => {
+                self.tick += 1;
+                e.tick = self.tick;
+                let resp = e.resp.clone();
+                self.order.push_back((key, self.tick));
+                self.compact();
+                self.hits += 1;
+                Some(resp)
+            }
+            Some(_) => {
+                self.map.remove(&key);
+                self.misses += 1;
+                None
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert one executed response.  Entries from a stale fabric epoch
+    /// are refused — a batch that ran under the old generation must not
+    /// repopulate a cache the reconfigure just cleared.
+    pub fn put(&mut self, key: u64, resp: Response, now: Instant) {
+        if self.cap == 0 || resp.plan_generation != self.generation {
+            return;
+        }
+        while self.map.len() >= self.cap {
+            let Some((k, t)) = self.order.pop_front() else { break };
+            if self.map.get(&k).is_some_and(|e| e.tick == t) {
+                self.map.remove(&k);
+            }
+        }
+        self.tick += 1;
+        self.map.insert(key, CacheEntry { resp, expires: now + self.ttl, tick: self.tick });
+        self.order.push_back((key, self.tick));
+        self.compact();
+    }
+
+    /// Keep the lazy-LRU order queue from outgrowing the map: once it
+    /// carries 4x more entries than live keys, drop the stale ticks.
+    fn compact(&mut self) {
+        if self.order.len() > 4 * self.map.len().max(16) {
+            let map = &self.map;
+            self.order.retain(|(k, t)| map.get(k).is_some_and(|e| e.tick == *t));
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
 /// Per-worker sample reservoirs — single writer (the owning worker).
 #[derive(Debug, Default)]
 pub struct ShardSamples {
@@ -313,6 +434,17 @@ pub struct AdmissionStats {
     pub deferred: AtomicU64,
     /// Deepest the ingress queue has ever been.
     pub queue_peak: AtomicU64,
+    /// Keyed requests answered `Ok` straight from the response cache at
+    /// admission (no batch slot, no fabric lease).
+    pub cache_hits: AtomicU64,
+    /// Keyed requests whose cache probe found nothing live — every
+    /// keyed submit is exactly one hit or one miss, so
+    /// `cache_hits + cache_misses` equals the keyed submit count.
+    pub cache_misses: AtomicU64,
+    /// Duplicates attached to an in-flight identical request (answered
+    /// later by that request's fan-out) — each one is a batch slot,
+    /// lease, and plan lookup never spent.
+    pub coalesced: AtomicU64,
 }
 
 /// All shards of the pool; everything here is summary-time aggregation.
@@ -483,6 +615,21 @@ impl PoolMetrics {
         self.admission.deferred.load(Ordering::Relaxed)
     }
 
+    /// Admission-time response-cache hits.
+    pub fn cache_hits(&self) -> u64 {
+        self.admission.cache_hits.load(Ordering::Relaxed)
+    }
+
+    /// Admission-time response-cache misses.
+    pub fn cache_misses(&self) -> u64 {
+        self.admission.cache_misses.load(Ordering::Relaxed)
+    }
+
+    /// Duplicates coalesced onto an in-flight identical request.
+    pub fn coalesced(&self) -> u64 {
+        self.admission.coalesced.load(Ordering::Relaxed)
+    }
+
     /// Highest plan generation any worker has executed under.
     pub fn plan_generation(&self) -> u64 {
         self.shards
@@ -508,13 +655,16 @@ impl PoolMetrics {
         let sc = self.shed_by_class();
         let ec = self.expired_by_class();
         format!(
-            "served={} batches={} errors={} shed={} expired={} deferred={} dead={} workers={} class hi={}a/{}s/{}e lo={}a/{}s/{}e plan={}h/{}m gen={} levels={}f/{}s/{}x qpeak={} wall p50={:.2}ms p99={:.2}ms queue p50={:.2}ms sim/batch p50={:.2}ms",
+            "served={} batches={} errors={} shed={} expired={} deferred={} cache={}h/{}m coalesced={} dead={} workers={} class hi={}a/{}s/{}e lo={}a/{}s/{}e plan={}h/{}m gen={} levels={}f/{}s/{}x qpeak={} wall p50={:.2}ms p99={:.2}ms queue p50={:.2}ms sim/batch p50={:.2}ms",
             self.served(),
             self.batches(),
             self.errors(),
             self.shed_total(),
             self.expired_total(),
             self.deferred(),
+            self.cache_hits(),
+            self.cache_misses(),
+            self.coalesced(),
             self.dead_workers.load(Ordering::Relaxed),
             self.workers(),
             ac[0],
@@ -572,14 +722,28 @@ impl ServingPool {
         ServingPool::start_full(workers, cfg, AdmissionConfig::default(), factory, arbiter)
     }
 
-    /// Full constructor: explicit admission control on top of
-    /// [`ServingPool::start_with`].  Fails fast (after tearing the
-    /// threads down again) when worker 0 cannot build its engine — a
-    /// pool that would serve nothing must not start.
+    /// Explicit admission control on top of [`ServingPool::start_with`],
+    /// with the dedup layer off.  Fails fast (after tearing the threads
+    /// down again) when worker 0 cannot build its engine — a pool that
+    /// would serve nothing must not start.
     pub fn start_full(
         workers: usize,
         cfg: BatchConfig,
         admission: AdmissionConfig,
+        factory: Arc<EngineFactory>,
+        arbiter: Arc<FabricArbiter>,
+    ) -> Result<ServingPool> {
+        ServingPool::start_cached(workers, cfg, admission, CacheConfig::default(), factory, arbiter)
+    }
+
+    /// Full constructor: [`ServingPool::start_full`] plus the
+    /// content-addressed deduplication layer ([`CacheConfig`]; a zero
+    /// cap keeps it entirely out of the pipeline).
+    pub fn start_cached(
+        workers: usize,
+        cfg: BatchConfig,
+        admission: AdmissionConfig,
+        cache: CacheConfig,
         factory: Arc<EngineFactory>,
         arbiter: Arc<FabricArbiter>,
     ) -> Result<ServingPool> {
@@ -596,13 +760,23 @@ impl ServingPool {
         let metrics = Arc::new(PoolMetrics::new(n));
         let depth = Arc::new(AtomicUsize::new(0));
         let stop = Arc::new(AtomicBool::new(false));
+        // The response cache exists only when configured: a zero cap
+        // means no Arc, no mutex, no probe — the uncached hot path is
+        // untouched, not just short-circuited.
+        let rcache = cache
+            .enabled()
+            .then(|| Arc::new(Mutex::new(ResponseCache::new(cache.cap, cache.ttl))));
+        let key_ctx = cache
+            .enabled()
+            .then(|| Arc::new(KeyCtx { policy_id: cache.policy_id, arbiter: arbiter.clone() }));
 
         let stop_d = stop.clone();
         let depth_d = depth.clone();
         let metrics_d = metrics.clone();
         let arb_d = arbiter.clone();
+        let cache_d = rcache.clone();
         let dispatcher = std::thread::spawn(move || {
-            dispatch_loop(rx, btx, cfg, admission, stop_d, depth_d, metrics_d, arb_d)
+            dispatch_loop(rx, btx, cfg, admission, stop_d, depth_d, metrics_d, arb_d, cache_d)
         });
 
         let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
@@ -612,8 +786,10 @@ impl ServingPool {
             let factory = factory.clone();
             let m = metrics.clone();
             let arb = arbiter.clone();
+            let wcache = rcache.clone();
             let ready = if w == 0 { Some(ready_tx.clone()) } else { None };
-            handles.push(std::thread::spawn(move || worker_loop(w, rx, factory, m, arb, ready)));
+            handles
+                .push(std::thread::spawn(move || worker_loop(w, rx, factory, m, arb, wcache, ready)));
         }
         drop(ready_tx);
 
@@ -635,7 +811,7 @@ impl ServingPool {
         }
 
         Ok(ServingPool {
-            ingress: ServerHandle { tx, depth, metrics: metrics.clone(), stop: stop.clone() },
+            ingress: ServerHandle { tx, depth, metrics: metrics.clone(), stop: stop.clone(), key_ctx },
             metrics,
             arbiter,
             stop,
@@ -693,6 +869,9 @@ struct DispatchCtx {
     depth: Arc<AtomicUsize>,
     metrics: Arc<PoolMetrics>,
     arbiter: Arc<FabricArbiter>,
+    /// Response cache shared with the workers (probe here, insert
+    /// there); `None` = dedup layer off, nothing keyed ever arrives.
+    cache: Option<Arc<Mutex<ResponseCache>>>,
     /// Batches this dispatcher has handed to the worker queue — against
     /// the workers' completed-chunk count this measures the *invisible
     /// pipeline* (bounded hand-off + in-execution batches) the deadline
@@ -716,11 +895,13 @@ impl DispatchCtx {
             }
         }
         self.depth.fetch_sub(1, Ordering::Relaxed);
-        let _ = req.respond.send(Reply::Rejected {
-            level,
-            retry_hint: retry_hint(queued, &self.cfg),
-            reason,
-        });
+        let reply =
+            Reply::Rejected { level, retry_hint: retry_hint(queued, &self.cfg), reason };
+        // A rejected primary takes its coalesced waiters down with it —
+        // they attached to *this* execution, and closing the slot here
+        // lets the next duplicate start a fresh one.
+        req.fan_out(&reply);
+        let _ = req.respond.send(reply);
     }
 
     /// Batches sitting in the invisible pipeline — handed to the worker
@@ -754,27 +935,97 @@ impl DispatchCtx {
     }
 
     /// Admit one popped ingress request into its class queue — or answer
-    /// it `Rejected` right now when its deadline has already passed or
-    /// its predicted completion would miss it.  Rejecting doomed work at
-    /// the ingress beats executing it: the client learns immediately and
-    /// no worker (or fabric lease) is spent on a reply nobody wants.
+    /// it right now: served from the response cache, attached to an
+    /// in-flight duplicate, or `Rejected` when its deadline has already
+    /// passed or its predicted completion would miss it.  Rejecting
+    /// doomed work at the ingress beats executing it: the client learns
+    /// immediately and no worker (or fabric lease) is spent on a reply
+    /// nobody wants.
+    ///
+    /// Stage order is cache → coalesce → deadline → queue insert: a hit
+    /// or an attach must not burn deadline/overload accounting on work
+    /// that will never occupy a batch slot.  Keyless requests (cache
+    /// off) skip the whole dedup layer — identical to the pre-cache
+    /// pipeline.
     ///
     /// `level` memoizes the arbiter snapshot across one drain round: the
     /// first deadline-carrying request derives it, the rest reuse it —
     /// deadline-free traffic never pays the derivation at all.
     fn stage(
         &self,
-        req: Request,
+        mut req: Request,
         classq: &mut [VecDeque<Request>; 2],
         level: &mut Option<CongestionLevel>,
+        inflight: &mut HashMap<u64, Arc<CoalesceSlot>>,
     ) {
+        if let Some(key) = req.key {
+            // 1. Response cache.  Generation sync first so a reconfigure
+            // between submits drops every stale entry before the probe
+            // (the same invalidation contract as `PlanCache`).
+            if let Some(cache) = &self.cache {
+                let hit = {
+                    let mut c = cache.lock().unwrap();
+                    c.sync_generation(self.arbiter.generation());
+                    c.get(key, Instant::now())
+                };
+                if let Some(mut resp) = hit {
+                    self.metrics.admission.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    self.depth.fetch_sub(1, Ordering::Relaxed);
+                    resp.served = Served::Cache;
+                    resp.queue_s = req.enqueued.elapsed().as_secs_f64();
+                    let _ = req.respond.send(Reply::Ok(resp));
+                    return;
+                }
+                self.metrics.admission.cache_misses.fetch_add(1, Ordering::Relaxed);
+            }
+            // 2. Coalesce: a duplicate of a staged or executing request
+            // attaches to its slot and consumes no batch capacity; the
+            // primary's terminal reply fans out to every waiter.
+            use std::collections::hash_map::Entry;
+            match inflight.entry(key) {
+                Entry::Occupied(mut e) => {
+                    if e.get().attach(req.respond.clone()) {
+                        self.metrics.admission.coalesced.fetch_add(1, Ordering::Relaxed);
+                        self.depth.fetch_sub(1, Ordering::Relaxed);
+                        return;
+                    }
+                    // The previous primary resolved between its close and
+                    // this probe: this duplicate becomes the new primary.
+                    let slot = CoalesceSlot::new();
+                    req.coalesce = Some(slot.clone());
+                    e.insert(slot);
+                }
+                Entry::Vacant(v) => {
+                    let slot = CoalesceSlot::new();
+                    req.coalesce = Some(slot.clone());
+                    v.insert(slot);
+                }
+            }
+        }
+        let cls = req.priority.index();
+        // EDF within High: deadlined requests sort by deadline at the
+        // queue front, deadline-free ones keep FIFO order behind them.
+        // Low stays pure FIFO — its slots are the leftovers anyway, and
+        // one sorted class is enough to show the expired-count win.
+        let pos = if self.admission.edf && req.priority == Priority::High {
+            match req.deadline {
+                Some(dl) => {
+                    classq[0].partition_point(|r| r.deadline.is_some_and(|d| d <= dl))
+                }
+                None => classq[0].len(),
+            }
+        } else {
+            classq[cls].len()
+        };
         if let Some(dl) = req.deadline {
             let now = Instant::now();
-            // requests that dispatch ahead of this one: its own class's
-            // backlog, plus the whole High queue for a Low request (High
-            // holds the reserved batch share, so Low queues behind it)
-            let ahead = classq[req.priority.index()].len()
-                + if req.priority == Priority::Low { classq[0].len() } else { 0 };
+            // requests that dispatch ahead of this one: its insertion
+            // position in its own class (= the class backlog under FIFO,
+            // fewer when EDF moves it forward), plus the whole High
+            // queue for a Low request (High holds the reserved batch
+            // share, so Low queues behind it)
+            let ahead =
+                pos + if req.priority == Priority::Low { classq[0].len() } else { 0 };
             // Probe admission: on a fully idle pool (nothing staged,
             // nothing in the pipeline) the prediction is pure model —
             // and the cost EWMA can be stale (e.g. a congested warm-up
@@ -792,7 +1043,11 @@ impl DispatchCtx {
                 return;
             }
         }
-        classq[req.priority.index()].push_back(req);
+        if pos >= classq[cls].len() {
+            classq[cls].push_back(req);
+        } else {
+            classq[cls].insert(pos, req);
+        }
     }
 
     /// Move up to `want` live requests from `q` into `batch`, answering
@@ -834,6 +1089,7 @@ fn dispatch_loop(
     depth: Arc<AtomicUsize>,
     metrics: Arc<PoolMetrics>,
     arbiter: Arc<FabricArbiter>,
+    cache: Option<Arc<Mutex<ResponseCache>>>,
 ) {
     let workers = metrics.workers();
     let ctx = DispatchCtx {
@@ -843,12 +1099,19 @@ fn dispatch_loop(
         depth,
         metrics,
         arbiter,
+        cache,
         batches_sent: std::cell::Cell::new(0),
     };
     // Staged ingress, one FIFO per class ([high, low]).  Requests wait
     // here — not in the channel — so admission and the class scheduler
     // see the backlog split by class.
     let mut classq: [VecDeque<Request>; 2] = [VecDeque::new(), VecDeque::new()];
+    // Open coalesce slots by content key (staged or executing
+    // primaries).  Dispatcher-local — workers reach a slot through the
+    // `Arc` riding on the primary request, never through this map.
+    // Resolved slots are swept lazily: probes replace them in place, and
+    // the retain below bounds the leak between probes.
+    let mut inflight: HashMap<u64, Arc<CoalesceSlot>> = HashMap::new();
     loop {
         // Poll the stop flag between batches so shutdown terminates even
         // while cloned `ServerHandle`s keep the ingress channel open.
@@ -861,7 +1124,7 @@ fn dispatch_loop(
         // Block for work only when nothing is staged.
         if classq[0].is_empty() && classq[1].is_empty() {
             match rx.recv_timeout(Duration::from_millis(25)) {
-                Ok(r) => ctx.stage(r, &mut classq, &mut round_level),
+                Ok(r) => ctx.stage(r, &mut classq, &mut round_level, &mut inflight),
                 Err(RecvTimeoutError::Timeout) => continue,
                 Err(RecvTimeoutError::Disconnected) => break,
             }
@@ -870,7 +1133,12 @@ fn dispatch_loop(
         // hand-off holds the dispatcher back, overload backlog piles up
         // here — split by class, where the caps can meter it.
         while let Ok(r) = rx.try_recv() {
-            ctx.stage(r, &mut classq, &mut round_level);
+            ctx.stage(r, &mut classq, &mut round_level, &mut inflight);
+        }
+        // Bound the resolved-slot leak: under a wide key distribution
+        // most slots close without a same-key probe ever replacing them.
+        if inflight.len() > 1024 {
+            inflight.retain(|_, s| s.open());
         }
 
         // Overload: cheap depth test first (the underloaded path derives
@@ -941,7 +1209,7 @@ fn dispatch_loop(
                     break;
                 }
                 match rx.recv_timeout(window_end - now) {
-                    Ok(r) => ctx.stage(r, &mut classq, &mut round_level),
+                    Ok(r) => ctx.stage(r, &mut classq, &mut round_level, &mut inflight),
                     // window idle, or ingress closed (the next round's
                     // blocking recv observes Disconnected and exits)
                     Err(_) => break,
@@ -979,10 +1247,12 @@ fn dispatch_loop(
             // through the same backstop shutdown uses
             stop.store(true, Ordering::SeqCst);
             for req in undelivered.0 {
-                let _ = req.respond.send(Reply::Failed {
+                let reply = Reply::Failed {
                     worker: usize::MAX,
                     error: "serving pool has no live workers".to_string(),
-                });
+                };
+                req.fan_out(&reply);
+                let _ = req.respond.send(reply);
             }
             break;
         }
@@ -992,10 +1262,12 @@ fn dispatch_loop(
     // channel — typed replies, never dropped channels.
     let stopped = |req: Request| {
         ctx.depth.fetch_sub(1, Ordering::Relaxed);
-        let _ = req.respond.send(Reply::Failed {
+        let reply = Reply::Failed {
             worker: usize::MAX,
             error: "server stopped before the request was dispatched".to_string(),
-        });
+        };
+        req.fan_out(&reply);
+        let _ = req.respond.send(reply);
     };
     for q in &mut classq {
         while let Some(req) = q.pop_front() {
@@ -1013,6 +1285,7 @@ fn worker_loop(
     factory: Arc<EngineFactory>,
     metrics: Arc<PoolMetrics>,
     arbiter: Arc<FabricArbiter>,
+    cache: Option<Arc<Mutex<ResponseCache>>>,
     ready: Option<Sender<std::result::Result<(), String>>>,
 ) {
     let shard = metrics.shard_arc(worker);
@@ -1143,7 +1416,7 @@ fn worker_loop(
                         s.latency.push(wall);
                         s.latency_class[req.priority.index()].push(wall);
                         s.queue_delay.push(queue_s);
-                        let _ = req.respond.send(Reply::Ok(Response {
+                        let resp = Response {
                             class: preds[i],
                             batch_size: real,
                             queue_s,
@@ -1151,7 +1424,28 @@ fn worker_loop(
                             worker,
                             congestion: fabric.level,
                             plan_generation: out.plan_generation,
-                        }));
+                            served: Served::Engine,
+                        };
+                        // Coalesced waiters ride this execution: each gets
+                        // the same prediction with `Coalesced` provenance,
+                        // and each counts as served — they are answered
+                        // submits, exactly like the primary.
+                        if let Some(slot) = &req.coalesce {
+                            let waiters = slot.take_waiters();
+                            shard.served.fetch_add(waiters.len() as u64, Ordering::Relaxed);
+                            for tx in waiters {
+                                let mut r = resp.clone();
+                                r.served = Served::Coalesced;
+                                let _ = tx.send(Reply::Ok(r));
+                            }
+                        }
+                        // Populate the response cache for future submits
+                        // of the same key (put refuses entries whose plan
+                        // generation is already stale).
+                        if let (Some(c), Some(key)) = (&cache, req.key) {
+                            c.lock().unwrap().put(key, resp.clone(), Instant::now());
+                        }
+                        let _ = req.respond.send(Reply::Ok(resp));
                     }
                 }
                 Err(e) => {
@@ -1162,7 +1456,12 @@ fn worker_loop(
                     shard.errors.fetch_add(real as u64, Ordering::Relaxed);
                     let error = format!("{e:#}");
                     for req in &batch[start..end] {
-                        let _ = req.respond.send(Reply::Failed { worker, error: error.clone() });
+                        let reply = Reply::Failed { worker, error: error.clone() };
+                        // coalesced waiters share the primary's fate on
+                        // failure too — a dropped waiter channel would
+                        // strand its submitter in recv()
+                        req.fan_out(&reply);
+                        let _ = req.respond.send(reply);
                     }
                 }
             }
@@ -1265,5 +1564,116 @@ mod tests {
         assert_eq!(e.plan_cache_stats(), (0, 3), "stale plan must rebuild, not hit");
         assert_eq!(again.plan_generation, 2);
         assert!((again.sim_latency_s - free.sim_latency_s).abs() < 1e-15);
+    }
+
+    fn resp(class: usize, generation: u64) -> Response {
+        Response {
+            class,
+            batch_size: 1,
+            queue_s: 0.0,
+            sim_batch_s: 0.0,
+            worker: 0,
+            congestion: CongestionLevel::Free,
+            plan_generation: generation,
+            served: Served::Engine,
+        }
+    }
+
+    #[test]
+    fn response_cache_hit_miss_and_ttl() {
+        let mut c = ResponseCache::new(4, Duration::from_millis(50));
+        c.sync_generation(1);
+        let now = Instant::now();
+        assert!(c.get(7, now).is_none(), "empty cache misses");
+        c.put(7, resp(3, 1), now);
+        let hit = c.get(7, now).expect("fresh entry hits");
+        assert_eq!(hit.class, 3);
+        // past the TTL the same key misses and the entry is dropped
+        let later = now + Duration::from_millis(60);
+        assert!(c.get(7, later).is_none(), "expired entry must miss");
+        assert!(c.is_empty());
+        assert_eq!((c.hits, c.misses), (1, 3));
+    }
+
+    #[test]
+    fn response_cache_bounds_and_evicts_lru() {
+        let mut c = ResponseCache::new(2, Duration::from_secs(10));
+        c.sync_generation(1);
+        let now = Instant::now();
+        c.put(1, resp(1, 1), now);
+        c.put(2, resp(2, 1), now);
+        // touch key 1 so key 2 is the least recently used
+        assert!(c.get(1, now).is_some());
+        c.put(3, resp(3, 1), now);
+        assert_eq!(c.len(), 2);
+        assert!(c.get(1, now).is_some(), "recently touched key survives");
+        assert!(c.get(3, now).is_some(), "new key present");
+        assert!(c.get(2, now).is_none(), "LRU key evicted");
+    }
+
+    #[test]
+    fn response_cache_generation_invalidates_and_refuses_stale_puts() {
+        let mut c = ResponseCache::new(8, Duration::from_secs(10));
+        c.sync_generation(1);
+        let now = Instant::now();
+        c.put(9, resp(0, 1), now);
+        assert!(c.get(9, now).is_some());
+        // reconfigure: the epoch moves, every entry drops
+        c.sync_generation(2);
+        assert!(c.get(9, now).is_none(), "stale-generation entry must not survive");
+        // a batch that executed under the old epoch cannot repopulate
+        c.put(9, resp(0, 1), now);
+        assert!(c.is_empty(), "stale-generation put must be refused");
+        c.put(9, resp(0, 2), now);
+        assert!(c.get(9, now).is_some(), "current-generation put lands");
+    }
+
+    #[test]
+    fn response_cache_order_queue_stays_bounded() {
+        // hammer one key: the lazy-LRU order queue must compact instead
+        // of growing once per touch
+        let mut c = ResponseCache::new(4, Duration::from_secs(10));
+        c.sync_generation(1);
+        let now = Instant::now();
+        c.put(1, resp(0, 1), now);
+        for _ in 0..10_000 {
+            assert!(c.get(1, now).is_some());
+        }
+        assert!(c.order.len() <= 4 * c.map.len().max(16) + 1, "order queue leaked");
+    }
+
+    #[test]
+    fn coalesce_slot_attach_take_close() {
+        let slot = CoalesceSlot::new();
+        assert!(slot.open());
+        let (tx, rx) = channel::<Reply>();
+        assert!(slot.attach(tx));
+        let waiters = slot.take_waiters();
+        assert_eq!(waiters.len(), 1);
+        // closed: attaches fail, a second take yields nothing
+        assert!(!slot.open());
+        let (tx2, _rx2) = channel::<Reply>();
+        assert!(!slot.attach(tx2), "attach after close must fail");
+        assert!(slot.take_waiters().is_empty());
+        for tx in waiters {
+            tx.send(Reply::Ok(resp(1, 1))).unwrap();
+        }
+        match rx.try_recv().unwrap() {
+            Reply::Ok(r) => assert_eq!(r.class, 1),
+            other => panic!("expected Ok, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn content_keys_separate_all_dimensions() {
+        use super::super::content_key;
+        let img_a = vec![0.25f32; 8];
+        let img_b = vec![0.50f32; 8];
+        let base = content_key(&img_a, 1, Priority::High, 1);
+        assert_eq!(base, content_key(&img_a, 1, Priority::High, 1), "key is deterministic");
+        assert_ne!(base, content_key(&img_b, 1, Priority::High, 1), "input separates");
+        assert_ne!(base, content_key(&img_a, 2, Priority::High, 1), "policy separates");
+        assert_ne!(base, content_key(&img_a, 1, Priority::Low, 1), "class separates");
+        assert_ne!(base, content_key(&img_a, 1, Priority::High, 2), "generation separates");
     }
 }

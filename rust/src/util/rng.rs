@@ -113,6 +113,52 @@ impl Rng {
     }
 }
 
+/// Zipf(s) sampler over ranks `0..n`: P(rank k) ∝ 1/(k+1)^s.  The
+/// skewed-popularity workload generator for the serving bench — `s = 0`
+/// degenerates to uniform, `s ≈ 1` matches classic web/content
+/// popularity, larger `s` concentrates mass on the head ranks.
+///
+/// The CDF is precomputed once (`O(n)`) and sampled by binary search
+/// (`O(log n)`); for the bench's corpus sizes (hundreds of ranks) both
+/// are negligible.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Sampler over `n` ranks with exponent `s` (clamped at 0; `n` is
+    /// clamped at 1 so sampling is always valid).
+    pub fn new(n: usize, s: f64) -> Zipf {
+        let n = n.max(1);
+        let s = s.max(0.0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 0..n {
+            acc += 1.0 / ((k + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    /// Number of ranks.
+    pub fn ranks(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Draw one rank in `0..ranks()`; rank 0 is the most popular.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        // first rank whose CDF strictly exceeds u (u < 1.0, and the last
+        // entry is exactly 1.0 up to rounding — min() guards the edge)
+        self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,6 +239,51 @@ mod tests {
                 1.0 / rate
             );
         }
+    }
+
+    #[test]
+    fn zipf_zero_skew_is_uniform() {
+        let z = Zipf::new(10, 0.0);
+        let mut r = Rng::new(13);
+        let mut counts = [0usize; 10];
+        let n = 50_000;
+        for _ in 0..n {
+            counts[z.sample(&mut r)] += 1;
+        }
+        for (k, &c) in counts.iter().enumerate() {
+            let p = c as f64 / n as f64;
+            assert!((p - 0.1).abs() < 0.02, "rank {k}: p={p} should be ~0.1");
+        }
+    }
+
+    #[test]
+    fn zipf_skew_concentrates_on_head_ranks() {
+        let z = Zipf::new(128, 1.1);
+        let mut r = Rng::new(17);
+        let mut counts = vec![0usize; 128];
+        let n = 50_000;
+        for _ in 0..n {
+            let k = z.sample(&mut r);
+            assert!(k < 128);
+            counts[k] += 1;
+        }
+        // head dominance: rank 0 beats rank 10 decisively, and the top 8
+        // ranks hold a large share of all draws
+        assert!(counts[0] > 4 * counts[10], "rank 0 {} vs rank 10 {}", counts[0], counts[10]);
+        let head: usize = counts[..8].iter().sum();
+        assert!(head as f64 > 0.4 * n as f64, "top-8 share too small: {head}/{n}");
+        // monotone-ish: the analytic ordering holds for well-separated ranks
+        assert!(counts[0] > counts[3] && counts[3] > counts[31]);
+    }
+
+    #[test]
+    fn zipf_degenerate_sizes_are_safe() {
+        let z = Zipf::new(0, 1.1); // clamped to one rank
+        let mut r = Rng::new(19);
+        for _ in 0..100 {
+            assert_eq!(z.sample(&mut r), 0);
+        }
+        assert_eq!(z.ranks(), 1);
     }
 
     #[test]

@@ -6,8 +6,12 @@
 //! errors, dead workers), arbiter-driven admission control under
 //! sustained saturation, and class-/deadline-aware admission (Low sheds
 //! before High, past-deadline requests reject without a fabric lease,
-//! every submit resolves exactly once).  (The real-artifact pool path is
-//! covered in server_e2e.rs.)
+//! every submit resolves exactly once).  The dedup layer is covered
+//! end-to-end too: duplicate submits coalesce onto one batch slot and
+//! fan the single result out, engine failures fan `Failed` out to every
+//! coalesced waiter, a reconfigure invalidates the response cache, and
+//! EDF staging expires fewer deadline requests than FIFO at equal load.
+//! (The real-artifact pool path is covered in server_e2e.rs.)
 
 use aifa::agent::{
     AllCpu, CongestionLevel, EnvConfig, FabricState, GreedyStep, SchedulingEnv, StaticAllFpga,
@@ -16,8 +20,9 @@ use aifa::fpga::{Bitstream, Resources};
 use aifa::graph::Network;
 use aifa::platform::{CpuModel, FpgaPlatform};
 use aifa::server::{
-    AdmissionConfig, ArbiterConfig, BatchConfig, BatchEngine, BatchOutput, EngineFactory,
-    FabricArbiter, Priority, RejectReason, Reply, Response, ServingPool, SimEngine,
+    AdmissionConfig, ArbiterConfig, BatchConfig, BatchEngine, BatchOutput, CacheConfig,
+    EngineFactory, FabricArbiter, Priority, RejectReason, Reply, Response, Served, ServingPool,
+    SimEngine,
 };
 use anyhow::Result;
 use std::sync::atomic::Ordering;
@@ -666,7 +671,7 @@ fn low_class_sheds_before_high_under_sustained_saturation() {
         BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
         // High's cap (64) exceeds all High traffic in the test; Low's
         // tiny cap (4) guarantees the Low queue trips overload
-        AdmissionConfig { queue_cap: [64, 4], shed: true, high_share: 0.75 },
+        AdmissionConfig { queue_cap: [64, 4], shed: true, ..AdmissionConfig::default() },
         fpga_factory(24), // heavy all-FPGA batches: the backlog must build
         arbiter,
     )
@@ -822,4 +827,340 @@ fn every_submit_resolves_once_with_classes_and_deadlines() {
     assert_eq!(pool.metrics.errors(), 0);
     drop(handle);
     pool.shutdown();
+}
+
+/// Duplicate submits of one content-identical request collapse onto a
+/// single batch slot: the first becomes the primary, the rest attach to
+/// its coalesce slot (or hit the response cache once the result lands),
+/// and every submitter still gets exactly one `Reply::Ok` carrying the
+/// same prediction.  A follow-up submit after the result landed must be
+/// answered straight from the cache.
+#[test]
+fn duplicates_coalesce_onto_one_slot_and_then_hit_the_cache() {
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+
+    let pool = ServingPool::start_cached(
+        1,
+        // generous window: the duplicates must land while the primary is
+        // staged, so they provably coalesce rather than race the batch
+        BatchConfig { max_wait: Duration::from_millis(20), max_batch: 8 },
+        AdmissionConfig::default(),
+        CacheConfig::sized(64, 10_000, 7),
+        sim_factory(8),
+        FabricArbiter::new(ArbiterConfig::default()),
+    )
+    .unwrap();
+    let handle = pool.handle();
+
+    let n = 10usize;
+    let mut rxs = Vec::new();
+    for _ in 0..n {
+        // identical image + class => identical content key
+        rxs.push(handle.submit_with(image(ie, 42), Priority::High, None).unwrap());
+    }
+    let mut served = [0u64; 3]; // engine / coalesced / cache
+    let mut classes = Vec::new();
+    for rx in rxs {
+        let resp = ok(rx.recv_timeout(Duration::from_secs(60)).expect("waiter stranded"));
+        served[match resp.served {
+            Served::Engine => 0,
+            Served::Coalesced => 1,
+            Served::Cache => 2,
+        }] += 1;
+        classes.push(resp.class);
+    }
+    assert!(classes.windows(2).all(|w| w[0] == w[1]), "one result fans out to all");
+    assert!(served[0] >= 1, "someone must have executed");
+    assert_eq!(served[0] + served[1] + served[2], n as u64, "exactly one reply per submit");
+    assert!(
+        served[1] + served[2] > 0,
+        "identical back-to-back submits must coalesce or hit, got engine={}",
+        served[0]
+    );
+    // every keyed submit counted exactly one cache probe
+    let m = &pool.metrics;
+    assert_eq!(m.cache_hits() + m.cache_misses(), n as u64);
+    assert!(m.coalesced() <= m.cache_misses(), "coalesced requests are misses first");
+    assert_eq!(m.coalesced(), served[1], "coalesce counter matches Coalesced provenance");
+    assert_eq!(m.cache_hits(), served[2], "hit counter matches Cache provenance");
+    // engine-served count includes coalesced waiters (they are answered
+    // submits), so served + hits covers every reply
+    assert_eq!(m.served() + m.cache_hits(), n as u64);
+
+    // the executed response is cached now: one more identical submit is
+    // answered at admission, no extra engine work
+    let resp = ok(handle
+        .submit_with(image(ie, 42), Priority::High, None)
+        .unwrap()
+        .recv_timeout(Duration::from_secs(60))
+        .unwrap());
+    assert_eq!(resp.served, Served::Cache, "follow-up must be a cache hit");
+    assert_eq!(resp.class, classes[0], "cached prediction matches the executed one");
+
+    // a different input must not share the entry
+    let other = ok(handle
+        .submit_with(image(ie, 43), Priority::High, None)
+        .unwrap()
+        .recv_timeout(Duration::from_secs(60))
+        .unwrap());
+    assert_ne!(other.served, Served::Cache, "distinct input must not hit");
+    drop(handle);
+    pool.shutdown();
+}
+
+/// Engine failure with coalesced waiters attached: the typed `Failed`
+/// reply fans out to every waiter — nobody is stranded, and the
+/// errors/coalesced counters account for every duplicate exactly once.
+#[test]
+fn engine_failure_fans_out_failed_to_coalesced_waiters() {
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+    let classes = env.net.units.last().unwrap().cout;
+
+    let factory: Arc<EngineFactory> = Arc::new(move |_w: usize| -> Result<Box<dyn BatchEngine>> {
+        Ok(Box::new(FailingEngine { batches: vec![1, 8], ie, classes }))
+    });
+    let pool = ServingPool::start_cached(
+        1,
+        BatchConfig { max_wait: Duration::from_millis(20), max_batch: 8 },
+        AdmissionConfig::default(),
+        CacheConfig::sized(64, 10_000, 7),
+        factory,
+        FabricArbiter::new(ArbiterConfig::default()),
+    )
+    .unwrap();
+    let handle = pool.handle();
+
+    let n = 6usize;
+    let mut rxs = Vec::new();
+    for _ in 0..n {
+        rxs.push(handle.submit_with(image(ie, 9), Priority::High, None).unwrap());
+    }
+    for rx in rxs {
+        match rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("a coalesced waiter was stranded by an engine failure")
+        {
+            Reply::Failed { error, .. } => {
+                assert!(error.contains("injected engine failure"), "{error}")
+            }
+            other => panic!("expected Reply::Failed, got {other:?}"),
+        }
+    }
+    let m = &pool.metrics;
+    // every submit was either a primary that reached the failing engine
+    // (counted in errors) or a coalesced waiter — nothing double-counted,
+    // nothing cached (failures never populate the cache)
+    assert_eq!(m.errors() + m.coalesced(), n as u64);
+    assert_eq!(m.cache_hits(), 0, "a failed execution must not produce hits");
+    assert_eq!(m.served(), 0);
+    drop(handle);
+    pool.shutdown();
+}
+
+/// Epoch invalidation: populate the cache, reconfigure the fabric, and
+/// the next identical submit must be a *miss* that re-executes under the
+/// new generation — no stale hit, no cache immortality.
+#[test]
+fn reconfigure_invalidates_the_response_cache() {
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+
+    let arbiter = FabricArbiter::new(ArbiterConfig::default());
+    let pool = ServingPool::start_cached(
+        1,
+        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
+        AdmissionConfig::default(),
+        // TTL far beyond the test: only the epoch can invalidate here
+        CacheConfig::sized(64, 60_000, 7),
+        sim_factory(1),
+        arbiter.clone(),
+    )
+    .unwrap();
+    let handle = pool.handle();
+    let gen0 = arbiter.generation();
+    let submit = |tag: usize| {
+        ok(handle
+            .submit_with(image(ie, tag), Priority::High, None)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(60))
+            .unwrap())
+    };
+
+    // miss + execute, then a pure cache hit under the same epoch
+    let first = submit(5);
+    assert_eq!(first.served, Served::Engine);
+    assert_eq!(first.plan_generation, gen0);
+    let second = submit(5);
+    assert_eq!(second.served, Served::Cache, "same epoch, same key: must hit");
+    assert_eq!(second.plan_generation, gen0, "the hit carries the cached epoch");
+    assert_eq!(pool.metrics.cache_hits(), 1);
+
+    // partial reconfiguration mid-serve: the epoch moves
+    let region = arbiter
+        .add_region("pr0", Resources { luts: 100_000, dsps: 1024, bram36: 128, uram: 32 })
+        .unwrap();
+    let (_t, gen1) = arbiter
+        .reconfigure(
+            region,
+            Bitstream {
+                name: "retuned_core".into(),
+                usage: Resources { luts: 60_000, dsps: 512, bram36: 64, uram: 16 },
+                fmax_hz: 250e6,
+            },
+        )
+        .unwrap();
+    assert_eq!(gen1, gen0 + 1);
+
+    // the identical request must re-execute under the new generation
+    let third = submit(5);
+    assert_eq!(third.served, Served::Engine, "stale entry must not answer post-reconfig");
+    assert_eq!(third.plan_generation, gen1, "re-execution runs on the new epoch");
+    assert_eq!(pool.metrics.cache_hits(), 1, "no hit crossed the reconfigure");
+
+    // and the rebuilt result is cacheable again under the new epoch
+    let fourth = submit(5);
+    assert_eq!(fourth.served, Served::Cache);
+    assert_eq!(fourth.plan_generation, gen1);
+    assert_eq!(pool.metrics.cache_hits(), 2);
+    assert_eq!(pool.metrics.errors(), 0);
+    drop(handle);
+    pool.shutdown();
+}
+
+/// Engine with a fixed wall-clock cost per chunk — deterministic batch
+/// cost for the deadline predictor, logits favoring class 0, and no
+/// fabric offload (so the congestion level never moves and the cost
+/// EWMA stays on one level key).
+struct SlowEngine {
+    batches: Vec<usize>,
+    ie: usize,
+    classes: usize,
+    delay: Duration,
+}
+
+impl BatchEngine for SlowEngine {
+    fn unit_batches(&self) -> &[usize] {
+        &self.batches
+    }
+    fn image_elems(&self) -> usize {
+        self.ie
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn run(
+        &mut self,
+        _flat: &[f32],
+        batch: usize,
+        fabric: FabricState,
+        logits: &mut Vec<f32>,
+    ) -> Result<BatchOutput> {
+        std::thread::sleep(self.delay);
+        logits.clear();
+        logits.resize(batch * self.classes, 0.0);
+        for row in 0..batch {
+            logits[row * self.classes] = 1.0;
+        }
+        Ok(BatchOutput {
+            sim_latency_s: self.delay.as_secs_f64(),
+            sim_energy_j: 0.0,
+            plan_generation: fabric.generation,
+        })
+    }
+    fn plan_offloads(&mut self, _batch: usize, _fabric: FabricState) -> bool {
+        false
+    }
+}
+
+/// EDF within the High staged queue: at equal load, tight-deadline
+/// requests staged behind a long loose-deadline backlog expire under
+/// FIFO (their predicted completion charges the whole queue ahead) but
+/// are served under EDF (they insert at the front, so the same predictor
+/// charges only the requests actually dispatching before them).
+#[test]
+fn edf_expires_fewer_tight_deadlines_than_fifo_at_equal_load() {
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+    let classes = env.net.units.last().unwrap().cout;
+
+    // one identical load pattern, admission differing only in `edf`
+    let run = |edf: bool| -> (u64, u64) {
+        let factory: Arc<EngineFactory> =
+            Arc::new(move |_w: usize| -> Result<Box<dyn BatchEngine>> {
+                Ok(Box::new(SlowEngine {
+                    batches: vec![1, 8],
+                    ie,
+                    classes,
+                    delay: Duration::from_millis(30),
+                }))
+            });
+        let pool = ServingPool::start_full(
+            1,
+            BatchConfig { max_wait: Duration::from_millis(5), max_batch: 8 },
+            AdmissionConfig { edf, ..AdmissionConfig::default() },
+            factory,
+            FabricArbiter::new(ArbiterConfig::default()),
+        )
+        .unwrap();
+        let handle = pool.handle();
+
+        // warm-up: one served batch feeds the cost EWMA (~30 ms/batch),
+        // so stage-time predicted-completion is live for everything below
+        let _ = ok(handle
+            .submit_with(image(ie, 0), Priority::High, None)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(60))
+            .unwrap());
+
+        let mut rxs = Vec::new();
+        // 16 deadline-free plugs occupy the worker + the buffered batch,
+        // then 40 loose deadlines (10 s — never at risk) form the FIFO
+        // backlog the 8 tight ones (150 ms) would have to wait behind
+        for i in 0..16 {
+            rxs.push(handle.submit_with(image(ie, 100 + i), Priority::High, None).unwrap());
+        }
+        for i in 0..40 {
+            rxs.push(
+                handle
+                    .submit_with(image(ie, 200 + i), Priority::High, Some(Duration::from_secs(10)))
+                    .unwrap(),
+            );
+        }
+        for i in 0..8 {
+            rxs.push(
+                handle
+                    .submit_with(
+                        image(ie, 300 + i),
+                        Priority::High,
+                        Some(Duration::from_millis(150)),
+                    )
+                    .unwrap(),
+            );
+        }
+        let (mut ok_n, mut expired) = (0u64, 0u64);
+        for rx in rxs {
+            match rx
+                .recv_timeout(Duration::from_secs(120))
+                .expect("a submitter was left waiting forever")
+            {
+                Reply::Ok(_) => ok_n += 1,
+                Reply::Rejected { reason: RejectReason::Deadline, .. } => expired += 1,
+                other => panic!("expected Ok or Deadline rejection, got {other:?}"),
+            }
+        }
+        assert_eq!(ok_n + expired, 64, "every request resolved exactly once");
+        drop(handle);
+        pool.shutdown();
+        (ok_n, expired)
+    };
+
+    let (_, expired_fifo) = run(false);
+    let (_, expired_edf) = run(true);
+    assert!(
+        expired_edf < expired_fifo,
+        "EDF must expire fewer tight deadlines than FIFO at equal load \
+         (edf={expired_edf}, fifo={expired_fifo})"
+    );
 }

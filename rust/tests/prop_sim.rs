@@ -80,7 +80,7 @@ fn gemm_cycles_exceed_ideal_and_scale_monotonically() {
     check(
         0x51_0003,
         300,
-        |g| gen_gemm(g),
+        gen_gemm,
         |&g| {
             let c = gemm_cycles(g, &cfg, None).total();
             // ideal: every MAC slot busy every cycle

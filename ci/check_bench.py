@@ -27,11 +27,19 @@ fails (exit 1) when:
   * High-class goodput falls below Low-class goodput on any *overloaded*
     (non-sustained) row — under overload, shedding starts with the Low
     class, so High goodput >= Low goodput is the measurable claim;
+  * fabric accounting doesn't add up on any open-loop row: the per-shard
+    counters (`fabric_leases` / `fabric_occupancy` / `fabric_peak`) must
+    have exactly `fabrics` entries and the lease counters must sum to
+    `leases_total` (a routed lease landing on no shard, or on two, means
+    the route/lease path split);
   * --require-overload is set and no swept rate actually overloaded the
     pool (the CI sweep must include a saturating rate, or the previous
-    check silently checks nothing).
+    check silently checks nothing);
+  * --require-fabrics is set and the sweep lacks a multi-shard run, or
+    knee_rate(max fabrics) < knee_rate(fabrics=1) — adding shards must
+    never cost sustainable throughput (the scale-out claim).
 
-Usage: ci/check_bench.py BENCH_serve.json [--require-overload]
+Usage: ci/check_bench.py BENCH_serve.json [--require-overload] [--require-fabrics]
 """
 
 import json
@@ -45,6 +53,8 @@ OPEN_FIELDS = [
     "high_expired", "low_expired", "high_goodput_rps", "low_goodput_rps",
     "high_p99_ms", "low_p99_ms",
     "hits", "misses", "coalesced",
+    "fabrics", "fabric_leases", "fabric_occupancy", "fabric_peak",
+    "leases_total",
 ]
 
 
@@ -88,14 +98,30 @@ def check_open_rows(rows: list, n: int, tag: str, cached: bool) -> None:
                 f"(hits={hits} misses={misses} coalesced={coal}) with the cache off — "
                 "the zero-cache config must not touch the dedup layer"
             )
+        fabrics = row["fabrics"]
+        if fabrics < 1:
+            fail(f"{tag} row rate={row['rate']}: fabrics={fabrics} < 1")
+        for vec_field in ("fabric_leases", "fabric_occupancy", "fabric_peak"):
+            if len(row[vec_field]) != fabrics:
+                fail(
+                    f"{tag} row rate={row['rate']}: {vec_field} has "
+                    f"{len(row[vec_field])} entries, expected fabrics={fabrics}"
+                )
+        if sum(row["fabric_leases"]) != row["leases_total"]:
+            fail(
+                f"{tag} row rate={row['rate']}: fabric_leases sum to "
+                f"{sum(row['fabric_leases'])} != leases_total={row['leases_total']} "
+                "(the routed shard and the leased shard disagree)"
+            )
 
 
 def main() -> None:
     args = sys.argv[1:]
     require_overload = "--require-overload" in args
+    require_fabrics = "--require-fabrics" in args
     paths = [a for a in args if not a.startswith("--")]
     if len(paths) != 1:
-        fail("usage: check_bench.py BENCH_serve.json [--require-overload]")
+        fail("usage: check_bench.py BENCH_serve.json [--require-overload] [--require-fabrics]")
     path = paths[0]
 
     try:
@@ -151,6 +177,36 @@ def main() -> None:
     elif cached_rows:
         fail("open_loop_cached present but cache_cap is 0 — report is inconsistent")
 
+    # The scale-out gate: the per-shard-count sweep must show that going
+    # from one fabric shard to the widest swept count never *loses*
+    # sustainable throughput.  (Strict gain depends on the λ grid having
+    # a rate between the two knees; >= is the invariant that cannot
+    # flake.)
+    fabric_knees = data.get("fabric_knees") or []
+    if require_fabrics:
+        knees = {}
+        for entry in fabric_knees:
+            if "fabrics" not in entry or "knee_rate" not in entry:
+                fail(f"fabric_knees entry malformed: {entry!r}")
+            knees[int(entry["fabrics"])] = entry["knee_rate"]
+        if 1 not in knees:
+            fail("--require-fabrics: fabric_knees lacks the fabrics=1 baseline")
+        top = max(knees)
+        if top <= 1:
+            fail(
+                "--require-fabrics: the sweep never ran with more than one fabric "
+                "shard — add a multi-shard value to --fabrics"
+            )
+        base_knee, top_knee = knees[1], knees[top]
+        if base_knee is None or base_knee == 0:
+            fail("--require-fabrics: fabrics=1 sustained no swept rate")
+        if top_knee is None or top_knee < base_knee:
+            fail(
+                f"--require-fabrics: knee_rate(fabrics={top})={top_knee} < "
+                f"knee_rate(fabrics=1)={base_knee} — shard scale-out lost "
+                "sustainable throughput"
+            )
+
     overloaded = [r for r in open_loop if not r["sustained"]]
     if require_overload and not overloaded:
         fail(
@@ -184,6 +240,11 @@ def main() -> None:
             f"/ {hits + misses} probes, cache_knee_rate={data.get('cache_knee_rate')} "
             f"vs knee_rate={knee}"
         )
+    if fabric_knees:
+        knee_strs = ", ".join(
+            f"fabrics={e.get('fabrics')}: knee={e.get('knee_rate')}" for e in fabric_knees
+        )
+        print(f"  fabric scale-out: {knee_strs}")
 
 
 if __name__ == "__main__":

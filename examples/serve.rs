@@ -12,7 +12,7 @@
 //! and with retries folded in — so the value of honoring the hint is a
 //! number, not an assertion.
 //!
-//!     cargo run --release --example serve -- [n_images] [rate_per_s] [workers] [retries]
+//!     cargo run --release --example serve -- [n_images] [rate_per_s] [workers] [retries] [fabrics]
 
 use aifa::agent::{CongestionLevel, EnvConfig, LevelPlacements, QAgent, QConfig, SchedulingEnv};
 use aifa::data::TestSet;
@@ -86,10 +86,14 @@ fn main() -> Result<()> {
     let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(400.0);
     let workers: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(2);
     let retries: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(3);
+    // Fabric shards behind the arbiter (default 1 keeps the single-card
+    // shed/retry demo; pass 2+ to watch least-congested routing spread
+    // leases and the federation resist saturation).
+    let fabrics: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
     let dir = std::path::PathBuf::from("artifacts");
 
     println!(
-        "== aifa serving driver: {n} requests @ {rate}/s, {workers} workers, {retries} retry rounds =="
+        "== aifa serving driver: {n} requests @ {rate}/s, {workers} workers, {retries} retry rounds, {fabrics} fabric shard(s) =="
     );
 
     // Train the scheduler up front (placement is frozen into the server;
@@ -111,7 +115,7 @@ fn main() -> Result<()> {
     }
     drop(probe); // workers build their own stores (PJRT is thread-local)
 
-    let arbiter = FabricArbiter::new(ArbiterConfig::for_workers(workers));
+    let arbiter = FabricArbiter::new(ArbiterConfig::for_pool(workers, fabrics));
     // Shed mode so overload produces retryable `Rejected` replies (the
     // default defer mode would absorb it in latency and the retry path
     // would have nothing to do); Low sheds first.
@@ -237,6 +241,15 @@ fn main() -> Result<()> {
         arbiter.peak_inflight(),
         m.plan_generation()
     );
+    if arbiter.fabrics() > 1 {
+        println!(
+            "fabric shards: leases={:?} (total {}) occupancy={:?} peak={:?}",
+            arbiter.leases_by_fabric(),
+            arbiter.leases_granted(),
+            arbiter.occupancies(),
+            arbiter.peak_by_fabric()
+        );
+    }
 
     // Simulated platform economics (the Table I quantities for this run).
     let fpga_power = PowerModel::fpga_card();

@@ -70,20 +70,40 @@ impl fmt::Display for CongestionLevel {
     }
 }
 
-/// Epoch-versioned snapshot of the shared fabric, as observed by one
-/// batch: the quantized contention level plus the reconfiguration
-/// generation.  Plans built under one generation are invalid after a
-/// fabric reconfiguration or an online policy retrain bumps it — the
-/// plan cache compares generations and rebuilds stale entries.
+/// Epoch-versioned snapshot of one fabric shard, as observed by one
+/// batch: the quantized contention level plus two epochs.  `generation`
+/// is the *global* fabric epoch — any shard's reconfiguration or an
+/// online policy retrain bumps it, and response caches / content keys
+/// fold it in.  `fabric_generation` is the epoch of the shard named by
+/// `fabric_id` alone, so plan caches can drop exactly the plans built
+/// against the shard that changed and keep every sibling's.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct FabricState {
     pub level: CongestionLevel,
+    /// Global fabric epoch (monotone across every shard + retrains).
     pub generation: u64,
+    /// Which fabric shard this snapshot describes (0 on single-fabric
+    /// deployments).
+    pub fabric_id: usize,
+    /// The shard's own reconfiguration epoch.
+    pub fabric_generation: u64,
 }
 
 impl FabricState {
+    /// Single-fabric snapshot: shard 0, shard epoch == global epoch —
+    /// exactly the pre-sharding behaviour.
     pub fn new(level: CongestionLevel, generation: u64) -> FabricState {
-        FabricState { level, generation }
+        FabricState { level, generation, fabric_id: 0, fabric_generation: generation }
+    }
+
+    /// Snapshot of a specific shard in a multi-fabric deployment.
+    pub fn on(
+        level: CongestionLevel,
+        generation: u64,
+        fabric_id: usize,
+        fabric_generation: u64,
+    ) -> FabricState {
+        FabricState { level, generation, fabric_id, fabric_generation }
     }
 }
 

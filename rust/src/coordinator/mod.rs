@@ -116,25 +116,32 @@ impl PlacementPlan {
 }
 
 /// Cache of [`PlacementPlan`]s keyed on `(policy name, batch, congestion
-/// level)`, with hit/miss counters so tests can assert the steady state
-/// does no policy walks.  Sound only for deterministic policies — every
-/// serving policy in [`crate::agent`] is.  The policy is identified by
-/// [`Policy::name`]: two *different instances* of the same policy type on
-/// one coordinator would collide, so give each its own coordinator/engine
-/// (the serving pool already does — one frozen policy per worker).
+/// level, fabric shard)`, with hit/miss counters so tests can assert the
+/// steady state does no policy walks.  Sound only for deterministic
+/// policies — every serving policy in [`crate::agent`] is.  The policy is
+/// identified by [`Policy::name`]: two *different instances* of the same
+/// policy type on one coordinator would collide, so give each its own
+/// coordinator/engine (the serving pool already does — one frozen policy
+/// per worker).
 ///
-/// The cache is **epoch-versioned**: [`PlanCache::sync_generation`] (fed
-/// from the arbiter's [`FabricState`]) drops every cached plan the first
-/// time a new generation is observed, closing the cache-immortality gap —
-/// a fabric reconfiguration or online policy retrain invalidates plans
-/// without restarting workers.
+/// The cache is **epoch-versioned per fabric shard**:
+/// [`PlanCache::sync_fabric`] (fed from the arbiter's [`FabricState`])
+/// compares the snapshot's shard epoch against the last one observed for
+/// that shard and drops exactly that shard's plans on a change — a
+/// reconfiguration of shard 0 rebuilds shard 0's plans while shard 1's
+/// survive.  A policy retrain bumps *every* shard's epoch, so all plans
+/// still drop.  [`PlanCache::sync_generation`] remains the single-epoch
+/// hammer (drops everything) for ad-hoc use.
 #[derive(Debug, Default)]
 pub struct PlanCache {
-    plans: HashMap<(&'static str, usize, CongestionLevel), Rc<PlacementPlan>>,
+    plans: HashMap<(&'static str, usize, CongestionLevel, usize), Rc<PlacementPlan>>,
+    /// Newest *global* fabric epoch observed — the stamp on built plans.
     generation: u64,
+    /// Last-seen per-shard epoch, keyed by fabric id.
+    fabric_gens: HashMap<usize, u64>,
     pub hits: u64,
     pub misses: u64,
-    /// Generation bumps observed (each drops the whole plan set).
+    /// Epoch bumps observed (each drops the affected plan set).
     pub invalidations: u64,
 }
 
@@ -148,18 +155,39 @@ impl PlanCache {
         self.generation
     }
 
-    /// Adopt the observed fabric generation; a change drops every cached
-    /// plan (they were built against a fabric that no longer exists).
+    /// Adopt the observed *global* fabric generation; a change drops
+    /// every cached plan regardless of shard.  The serving hot path uses
+    /// the shard-precise [`PlanCache::sync_fabric`] instead.
     pub fn sync_generation(&mut self, generation: u64) {
         if generation != self.generation {
             self.plans.clear();
+            self.fabric_gens.clear();
             self.generation = generation;
             self.invalidations += 1;
         }
     }
 
+    /// Adopt one batch's arbiter snapshot: ratchet the global epoch (the
+    /// stamp on newly built plans) and, if the snapshot's shard epoch
+    /// differs from the last one observed for that shard, drop exactly
+    /// that shard's plans — they were built against a fabric
+    /// configuration that no longer exists.  Sibling shards' plans
+    /// survive untouched.
+    pub fn sync_fabric(&mut self, fabric: FabricState) {
+        if fabric.generation > self.generation {
+            self.generation = fabric.generation;
+        }
+        match self.fabric_gens.insert(fabric.fabric_id, fabric.fabric_generation) {
+            Some(prev) if prev != fabric.fabric_generation => {
+                self.plans.retain(|k, _| k.3 != fabric.fabric_id);
+                self.invalidations += 1;
+            }
+            _ => {}
+        }
+    }
+
     /// Non-counting lookup: the cached plan for the key, if one exists
-    /// under the cache's current generation.  This is the serving pool's
+    /// under the cache's current epochs.  This is the serving pool's
     /// offload peek — it must not distort hit/miss telemetry (the one
     /// counted lookup per executed chunk stays in [`PlanCache::plan`]),
     /// so a missing plan is simply `None`, never a build.
@@ -169,11 +197,23 @@ impl PlanCache {
         batch: usize,
         level: CongestionLevel,
     ) -> Option<&Rc<PlacementPlan>> {
-        self.plans.get(&(policy.name(), batch, level))
+        self.peek_on(policy, batch, level, 0)
+    }
+
+    /// [`PlanCache::peek`] against a specific fabric shard's plan set.
+    pub fn peek_on(
+        &self,
+        policy: &dyn Policy,
+        batch: usize,
+        level: CongestionLevel,
+        fabric_id: usize,
+    ) -> Option<&Rc<PlacementPlan>> {
+        self.plans.get(&(policy.name(), batch, level, fabric_id))
     }
 
     /// Cached plan lookup; builds (one policy walk) on miss.  Plans are
-    /// stamped with the cache's current generation.
+    /// stamped with the cache's current (global) generation.  Shorthand
+    /// for [`PlanCache::plan_on`] fabric shard 0.
     pub fn plan(
         &mut self,
         env: &SchedulingEnv,
@@ -181,7 +221,21 @@ impl PlanCache {
         batch: usize,
         level: CongestionLevel,
     ) -> Rc<PlacementPlan> {
-        let key = (policy.name(), batch, level);
+        self.plan_on(env, policy, batch, level, 0)
+    }
+
+    /// Cached plan lookup for one fabric shard; builds (one policy walk)
+    /// on miss.  Plans for different shards are distinct entries even at
+    /// the same level, so a per-shard epoch bump evicts precisely.
+    pub fn plan_on(
+        &mut self,
+        env: &SchedulingEnv,
+        policy: &dyn Policy,
+        batch: usize,
+        level: CongestionLevel,
+        fabric_id: usize,
+    ) -> Rc<PlacementPlan> {
+        let key = (policy.name(), batch, level, fabric_id);
         if let Some(p) = self.plans.get(&key) {
             self.hits += 1;
             return p.clone();
@@ -260,8 +314,8 @@ impl<S: Borrow<ArtifactStore>> Coordinator<S> {
         fabric: FabricState,
     ) -> Option<bool> {
         let mut plans = self.plans.borrow_mut();
-        plans.sync_generation(fabric.generation);
-        plans.peek(policy, batch, fabric.level).map(|p| p.offloads())
+        plans.sync_fabric(fabric);
+        plans.peek_on(policy, batch, fabric.level, fabric.fabric_id).map(|p| p.offloads())
     }
 
     /// Largest supported per-unit batch <= requested (requests are split).
@@ -307,8 +361,9 @@ impl<S: Borrow<ArtifactStore>> Coordinator<S> {
     /// buffer.  Returns the shared plan and the host wall-clock spent.
     ///
     /// `fabric` is the arbiter's per-batch snapshot: the plan is keyed on
-    /// its congestion level, and a generation change first drops every
-    /// cached plan (stale after a fabric reconfiguration or retrain).
+    /// its congestion level and fabric shard, and a shard-epoch change
+    /// first drops that shard's cached plans (stale after the shard was
+    /// reconfigured; a retrain bumps every shard).
     ///
     /// Plans are cached per [`Policy::name`], so a coordinator on this
     /// path must serve **one** policy instance (the pool gives each
@@ -326,8 +381,8 @@ impl<S: Borrow<ArtifactStore>> Coordinator<S> {
         let t0 = std::time::Instant::now();
         let plan = {
             let mut plans = self.plans.borrow_mut();
-            plans.sync_generation(fabric.generation);
-            plans.plan(&self.env, policy, batch, fabric.level)
+            plans.sync_fabric(fabric);
+            plans.plan_on(&self.env, policy, batch, fabric.level, fabric.fabric_id)
         };
         self.run_plan(images, &plan, logits)?;
         Ok((plan, t0.elapsed().as_secs_f64()))
@@ -490,6 +545,38 @@ mod tests {
         assert_eq!(p2.generation, 8);
         assert!(!Rc::ptr_eq(&p1, &p2), "rebuilt plan is a fresh object");
         assert_eq!(pol.n.get(), 2 * e.n_units() as u64, "rebuild re-walks the policy");
+    }
+
+    #[test]
+    fn shard_epoch_drops_only_that_shards_plans() {
+        use crate::agent::FabricState;
+        let e = env();
+        let mut cache = PlanCache::new();
+
+        // one plan per shard, same policy/batch/level
+        cache.sync_fabric(FabricState::on(CongestionLevel::Free, 1, 0, 1));
+        let _ = cache.plan_on(&e, &GreedyStep, 8, CongestionLevel::Free, 0);
+        cache.sync_fabric(FabricState::on(CongestionLevel::Free, 1, 1, 1));
+        let _ = cache.plan_on(&e, &GreedyStep, 8, CongestionLevel::Free, 1);
+        assert_eq!(cache.len(), 2, "shards are distinct plan keys");
+        assert_eq!(cache.invalidations, 0, "first observations drop nothing");
+
+        // shard 0 reconfigures: its epoch moves, the global epoch folds it
+        cache.sync_fabric(FabricState::on(CongestionLevel::Free, 2, 0, 2));
+        assert_eq!(cache.len(), 1, "only shard 0's plan drops");
+        assert_eq!(cache.invalidations, 1);
+        assert!(cache.peek_on(&GreedyStep, 8, CongestionLevel::Free, 0).is_none());
+        assert!(
+            cache.peek_on(&GreedyStep, 8, CongestionLevel::Free, 1).is_some(),
+            "shard 1's plan survives its sibling's reconfiguration"
+        );
+
+        // shard 1 batches observing the new global epoch do not thrash
+        cache.sync_fabric(FabricState::on(CongestionLevel::Free, 2, 1, 1));
+        assert_eq!(cache.len(), 1, "unchanged shard epoch drops nothing");
+        assert_eq!(cache.generation(), 2, "rebuilt plans stamp the folded epoch");
+        let p = cache.plan_on(&e, &GreedyStep, 8, CongestionLevel::Free, 0);
+        assert_eq!(p.generation, 2);
     }
 
     #[test]

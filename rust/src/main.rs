@@ -8,17 +8,20 @@
 //!   llm           greedy generation through the Fig 3 decoder
 //!   eda           run the Fig 4 agentic design-flow simulation
 //!   serve         N-worker serving pool over the real artifacts
-//!                 (fabric arbiter knobs: --shared-at / --saturated-at /
-//!                  --dma-budget-mb; admission knobs: --shed / --queue-cap
-//!                  [high,low] / --high-share / --deadline-ms; dedup
-//!                  knobs: --cache-cap / --cache-ttl-ms)
+//!                 (fabric arbiter knobs: --fabrics / --shared-at /
+//!                  --saturated-at / --dma-budget-mb; admission knobs:
+//!                  --shed / --queue-cap [high,low] / --high-share /
+//!                  --deadline-ms; dedup knobs: --cache-cap /
+//!                  --cache-ttl-ms / --cache-fail-ttl-ms)
 //!   bench serve   simulated-path serving sweeps -> BENCH_serve.json
 //!                 (closed-loop worker sweep + open-loop Poisson λ sweep,
 //!                  half High / half Low class, with per-class goodput +
 //!                  p99 and an auto-found knee: the max sustainable λ;
-//!                  --skew draws inputs Zipf-skewed and --cache-cap adds
+//!                  --skew draws inputs Zipf-skewed, --cache-cap adds
 //!                  a second cached sweep -> open_loop_cached rows +
-//!                  cache_knee_rate next to the uncached knee_rate)
+//!                  cache_knee_rate next to the uncached knee_rate, and
+//!                  --fabrics M1,M2 repeats the uncached sweep per shard
+//!                  count -> fabric_knees shows what scale-out buys)
 
 use aifa::accel::AccelConfig;
 use aifa::agent::{
@@ -63,6 +66,7 @@ fn main() {
         .opt("wait-ms", Some("2"), "batcher window in ms")
         .opt("work", Some("32"), "bench serve: synthetic host passes per batch")
         .opt("out", Some("BENCH_serve.json"), "bench serve: output JSON path")
+        .opt("fabrics", Some("1"), "arbiter: fabric shards to route offloads across; comma list for `bench serve`")
         .opt("shared-at", Some("2"), "arbiter: in-flight leases at/above which the fabric is Shared")
         .opt("saturated-at", Some("auto"), "arbiter: leases at/above which it is Saturated (auto = max(workers, 2))")
         .opt("dma-budget-mb", Some("32"), "arbiter: in-flight DMA MiB before the level escalates")
@@ -72,6 +76,7 @@ fn main() {
         .opt("deadline-ms", Some("0"), "admission: per-request completion deadline in ms (0 = none); doomed requests are Rejected instead of executed")
         .opt("cache-cap", Some("0"), "dedup: max cached responses (bounded LRU); 0 = cache + coalescing off")
         .opt("cache-ttl-ms", Some("1000"), "dedup: response cache entry lifetime in ms")
+        .opt("cache-fail-ttl-ms", Some("0"), "dedup: negative-cache lifetime for Failed results in ms (0 = off)")
         .opt("skew", Some("0"), "bench serve: Zipf s-parameter for the open-loop input corpus (0 = every request unique)")
         .flag("shed", "admission: reject (typed Rejected reply) instead of deferring under sustained saturation, Low class first");
     let args = match cli.parse(&rest) {
@@ -208,11 +213,32 @@ fn run(cmd: &str, args: &aifa::util::cli::Args) -> Result<()> {
     }
 }
 
-/// Build the fabric arbiter from the `--shared-at` / `--saturated-at` /
-/// `--dma-budget-mb` knobs (defaults scale with the pool size).  Bad
-/// values error instead of silently keeping defaults.
-fn arbiter_from_args(args: &aifa::util::cli::Args, workers: usize) -> Result<Arc<FabricArbiter>> {
-    let mut cfg = ArbiterConfig::for_workers(workers);
+/// `--fabrics` as a single shard count (`aifa serve`; `bench serve`
+/// parses its own comma list).
+fn fabrics_from_args(args: &aifa::util::cli::Args) -> Result<usize> {
+    match args.get("fabrics") {
+        None => Ok(1),
+        Some(v) => {
+            let m: usize =
+                v.parse().map_err(|_| anyhow::anyhow!("--fabrics wants a shard count ≥ 1"))?;
+            if m == 0 {
+                anyhow::bail!("--fabrics must be ≥ 1");
+            }
+            Ok(m)
+        }
+    }
+}
+
+/// Build the fabric arbiter from the `--fabrics` / `--shared-at` /
+/// `--saturated-at` / `--dma-budget-mb` knobs (defaults scale with the
+/// pool size; the lease thresholds apply per shard).  Bad values error
+/// instead of silently keeping defaults.
+fn arbiter_from_args(
+    args: &aifa::util::cli::Args,
+    workers: usize,
+    fabrics: usize,
+) -> Result<Arc<FabricArbiter>> {
+    let mut cfg = ArbiterConfig::for_pool(workers, fabrics);
     if let Some(v) = args.get("shared-at") {
         let s: usize = v.parse().map_err(|_| anyhow::anyhow!("--shared-at wants a lease count"))?;
         cfg.shared_at = s.max(1);
@@ -292,7 +318,13 @@ fn cache_from_args(args: &aifa::util::cli::Args, policy_name: &str) -> Result<Ca
             ms
         }
     };
-    Ok(CacheConfig::sized(cap, ttl_ms, fnv1a(policy_name.as_bytes())))
+    let fail_ttl_ms = match args.get("cache-fail-ttl-ms") {
+        None => 0,
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--cache-fail-ttl-ms wants milliseconds (0 = off)"))?,
+    };
+    Ok(CacheConfig::sized(cap, ttl_ms, fnv1a(policy_name.as_bytes())).with_fail_ttl(fail_ttl_ms))
 }
 
 /// FNV-1a over raw bytes (policy-name → cache policy id).
@@ -372,11 +404,13 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
     }
     drop(probe); // workers build their own stores (PJRT is thread-local)
 
-    let arbiter = arbiter_from_args(args, workers)?;
+    let fabrics = fabrics_from_args(args)?;
+    let arbiter = arbiter_from_args(args, workers, fabrics)?;
     let acfg = arbiter.config();
     let admission = admission_from_args(args, workers)?;
     println!(
-        "arbiter: shared_at={} saturated_at={} dma_budget={} MiB window={} ms generation={}",
+        "arbiter: fabrics={} shared_at={} saturated_at={} dma_budget={} MiB window={} ms generation={}",
+        arbiter.fabrics(),
         acfg.shared_at,
         acfg.saturated_at,
         acfg.dma_budget_bytes >> 20,
@@ -394,9 +428,10 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
     );
     let cache = cache_from_args(args, aifa::agent::Policy::name(&policy))?;
     println!(
-        "dedup: cache_cap={} ttl={} ms ({})",
+        "dedup: cache_cap={} ttl={} ms fail_ttl={} ms ({})",
         cache.cap,
         cache.ttl.as_millis(),
+        cache.fail_ttl.as_millis(),
         if cache.enabled() { "cache + coalescing on" } else { "off" }
     );
     let server = Server::start_pool_cached(
@@ -461,6 +496,14 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
         "served by: engine={} coalesced={} cache={}",
         served_seen[0], served_seen[1], served_seen[2]
     );
+    if arbiter.fabrics() > 1 {
+        println!(
+            "fabrics: leases={:?} occupancy={:?} peak={:?}",
+            arbiter.leases_by_fabric(),
+            arbiter.occupancies(),
+            arbiter.peak_by_fabric()
+        );
+    }
     println!(
         "classes: high ok={} shed={} expired={}  low ok={} shed={} expired={}",
         class_ok[0], shed_c[0], exp_c[0], class_ok[1], shed_c[1], exp_c[1]
@@ -535,6 +578,18 @@ struct OpenLoopRow {
     misses: u64,
     /// Duplicates attached to an in-flight identical request.
     coalesced: u64,
+    /// Fabric shards behind the arbiter for this run.
+    fabrics: usize,
+    /// Leases granted per shard (pool-side counters, indexed by
+    /// `fabric_id`) — under least-congested routing these stay close to
+    /// balanced, and they sum to `leases_total`.
+    fabric_leases: Vec<u64>,
+    /// End-of-run region occupancy per shard (0..=1).
+    fabric_occupancy: Vec<f64>,
+    /// Peak concurrent leases per shard.
+    fabric_peak: Vec<usize>,
+    /// Leases granted across every shard (arbiter-side total).
+    leases_total: u64,
 }
 
 fn sim_factory(work: usize) -> Arc<EngineFactory> {
@@ -613,6 +668,7 @@ fn run_open_loop(
     deadline: Option<Duration>,
     cache: CacheConfig,
     skew: f64,
+    fabrics: usize,
 ) -> Result<OpenLoopRow> {
     let cfg = BatchConfig { max_wait: wait, max_batch: 8 };
     let pool = ServingPool::start_cached(
@@ -621,7 +677,7 @@ fn run_open_loop(
         admission,
         cache,
         sim_factory(work),
-        FabricArbiter::new(ArbiterConfig::for_workers(workers.max(1))),
+        FabricArbiter::new(ArbiterConfig::for_pool(workers.max(1), fabrics)),
     )?;
     let handle = pool.handle();
     let arbiter = pool.arbiter().clone();
@@ -720,6 +776,11 @@ fn run_open_loop(
         hits: pool.metrics.cache_hits(),
         misses: pool.metrics.cache_misses(),
         coalesced: pool.metrics.coalesced(),
+        fabrics: arbiter.fabrics(),
+        fabric_leases: pool.metrics.leases_by_fabric(),
+        fabric_occupancy: arbiter.occupancies(),
+        fabric_peak: arbiter.peak_by_fabric(),
+        leases_total: arbiter.leases_granted(),
     };
     drop(handle);
     pool.shutdown();
@@ -763,6 +824,20 @@ fn open_loop_json(rows: &[OpenLoopRow]) -> Vec<Json> {
                 ("hits", Json::num(r.hits as f64)),
                 ("misses", Json::num(r.misses as f64)),
                 ("coalesced", Json::num(r.coalesced as f64)),
+                ("fabrics", Json::num(r.fabrics as f64)),
+                (
+                    "fabric_leases",
+                    Json::Arr(r.fabric_leases.iter().map(|&x| Json::num(x as f64)).collect()),
+                ),
+                (
+                    "fabric_occupancy",
+                    Json::Arr(r.fabric_occupancy.iter().map(|&x| Json::num(x)).collect()),
+                ),
+                (
+                    "fabric_peak",
+                    Json::Arr(r.fabric_peak.iter().map(|&x| Json::num(x as f64)).collect()),
+                ),
+                ("leases_total", Json::num(r.leases_total as f64)),
             ])
         })
         .collect()
@@ -788,6 +863,18 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
         Some(_) => args
             .get_f64_list("rates")
             .ok_or_else(|| anyhow::anyhow!("--rates wants a comma list, e.g. 500,2000,8000"))?,
+    };
+    let fabrics_list = match args.get("fabrics") {
+        Some("auto") | None => vec![1],
+        Some(_) => {
+            let l = args
+                .get_usize_list("fabrics")
+                .ok_or_else(|| anyhow::anyhow!("--fabrics wants a comma list, e.g. 1,2"))?;
+            if l.iter().any(|&m| m == 0) {
+                anyhow::bail!("--fabrics shard counts must be ≥ 1");
+            }
+            l
+        }
     };
 
     let mut rows = Vec::new();
@@ -822,16 +909,18 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
         if admission.shed { "shed" } else { "defer" },
         skew
     );
-    // One open-loop sweep over the λ grid under a given dedup config.
-    // Run uncached first (all pre-cache fields and the knee gate keep
-    // their meaning), then — when `--cache-cap` > 0 — once more with the
-    // cache on over the *same* skewed workload, so `cache_knee_rate` vs
-    // `knee_rate` isolates exactly what deduplication buys.
-    let sweep = |tag: &str, ccfg: CacheConfig| -> Result<(Vec<OpenLoopRow>, f64)> {
+    // One open-loop sweep over the λ grid under a given dedup config and
+    // shard count.  Run uncached first (all pre-cache fields and the knee
+    // gate keep their meaning), then — when `--cache-cap` > 0 — once more
+    // with the cache on over the *same* skewed workload, so
+    // `cache_knee_rate` vs `knee_rate` isolates exactly what
+    // deduplication buys; extra `--fabrics` values repeat the uncached
+    // sweep so `fabric_knees` isolates what shard scale-out buys.
+    let sweep = |tag: &str, fabrics: usize, ccfg: CacheConfig| -> Result<(Vec<OpenLoopRow>, f64)> {
         let mut ol_rows = Vec::new();
         for &rate in &rates {
             let r = run_open_loop(
-                ol_workers, n, work, wait, rate, seed, admission, deadline, ccfg, skew,
+                ol_workers, n, work, wait, rate, seed, admission, deadline, ccfg, skew, fabrics,
             )?;
             println!(
                 "[{tag}] λ={:<8.0} offered={:>9.1}/s workers={} achieved={:>9.1}/s goodput={:>9.1}/s {} ok/rej/exp/fail={}/{}/{}/{} p50={:>8.3}ms p99={:>8.3}ms queue p50={:>8.3}ms levels={:.2}/{:.2}/{:.2} peak-leases={}",
@@ -875,6 +964,12 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
                     r.hits as f64 / (r.hits + r.misses).max(1) as f64
                 );
             }
+            if r.fabrics > 1 {
+                println!(
+                    "  fabrics: leases={:?} (total {}) occupancy={:?} peak={:?}",
+                    r.fabric_leases, r.leases_total, r.fabric_occupancy, r.fabric_peak
+                );
+            }
             ol_rows.push(r);
         }
         // auto-found knee: the largest swept λ the pool actually
@@ -891,9 +986,33 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
         }
         Ok((ol_rows, knee))
     };
-    let (ol_rows, knee_rate) = sweep("uncached", CacheConfig::default())?;
+    // Uncached sweep per shard count.  The base (first) fabrics value
+    // keeps the historical meaning of `knee_rate` and every other
+    // single-sweep top-level field; further values land their rows in the
+    // same `open_loop` array (each row carries its `fabrics`) and their
+    // knees in `fabric_knees`, so the scale-out claim
+    // knee(M) ≥ knee(1) is machine-checkable.
+    let base_fabrics = fabrics_list[0];
+    let mut ol_rows = Vec::new();
+    let mut fabric_knees: Vec<(usize, f64)> = Vec::new();
+    let mut knee_rate = f64::NAN;
+    for (fi, &m) in fabrics_list.iter().enumerate() {
+        let tag = if fabrics_list.len() == 1 {
+            "uncached".to_string()
+        } else {
+            format!("uncached fabrics={m}")
+        };
+        let (rows_m, knee_m) = sweep(&tag, m, CacheConfig::default())?;
+        if fi == 0 {
+            knee_rate = knee_m;
+        }
+        fabric_knees.push((m, knee_m));
+        ol_rows.extend(rows_m);
+    }
+    // The cached sweep stays at the base shard count: `cache_knee_rate`
+    // vs `knee_rate` must isolate deduplication alone.
     let cached_sweep =
-        if cache.enabled() { Some(sweep("cached", cache)?) } else { None };
+        if cache.enabled() { Some(sweep("cached", base_fabrics, cache)?) } else { None };
 
     let row_objs: Vec<Json> = rows
         .iter()
@@ -934,6 +1053,25 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
     put("skew", Json::num(skew));
     put("cache_cap", Json::num(cache.cap as f64));
     put("cache_ttl_ms", Json::num(cache.ttl.as_secs_f64() * 1e3));
+    put("cache_fail_ttl_ms", Json::num(cache.fail_ttl.as_secs_f64() * 1e3));
+    put(
+        "fabrics",
+        Json::Arr(fabrics_list.iter().map(|&m| Json::num(m as f64)).collect()),
+    );
+    put(
+        "fabric_knees",
+        Json::Arr(
+            fabric_knees
+                .iter()
+                .map(|&(m, k)| {
+                    Json::obj(vec![
+                        ("fabrics", Json::num(m as f64)),
+                        ("knee_rate", if k.is_nan() { Json::Null } else { Json::num(k) }),
+                    ])
+                })
+                .collect(),
+        ),
+    );
     put("rows", Json::Arr(row_objs));
     put("open_loop", Json::Arr(ol_objs));
     if let Some((cached_rows, cache_knee)) = &cached_sweep {

@@ -1,61 +1,70 @@
-//! Shared fabric arbiter: one [`FabricArbiter`] owns the congestion state
-//! for the whole serving pool.
+//! Sharded fabric arbiter: one [`FabricArbiter`] federates the congestion
+//! state of **M fabric shards** for the whole serving pool.
 //!
 //! The seed froze fabric congestion as a `bool` chosen at engine
-//! construction, so N workers time-shared one fabric with no shared view
-//! of load.  The arbiter replaces that scalar with a live, epoch-versioned
-//! [`FabricState`]:
+//! construction; PR 2 replaced that with a live, epoch-versioned
+//! [`FabricState`] over a single fabric.  This generalizes the arbiter to
+//! M independent shards — each with its own [`Fabric`] model, lease
+//! ledger, DMA budget, and congestion level — so adding workers past one
+//! card's saturation point buys real headroom instead of queueing:
 //!
 //! * **Leases** — a worker takes a [`FabricLease`] around each offloaded
-//!   batch; the lease snapshot carries the [`CongestionLevel`] the batch
-//!   runs under and is released (RAII) when the batch completes.  The
-//!   level is derived from the number of in-flight leases against the
-//!   configured slot thresholds, the [`Fabric`]'s binding-resource
-//!   occupancy, and the DMA link budget — all three signals combine with
-//!   `max`, so whichever resource binds first sets the level.
-//! * **Generations** — [`FabricArbiter::reconfigure`] (partial
-//!   reconfiguration of a PR region) and [`FabricArbiter::bump_generation`]
-//!   (online policy retrain hook) advance a monotone epoch counter.  Every
-//!   worker's `PlanCache` compares the generation on its next lookup and
-//!   drops stale plans, so placement plans never outlive the fabric or the
-//!   policy they were built against.  The same epoch invalidates the
-//!   serving pool's response cache: content keys fold the generation in
-//!   at submit time and the dispatcher clears cached responses on the
-//!   first probe after a bump, so a reconfigure can never answer a new
-//!   request with a result computed on the old fabric.
+//!   batch.  [`FabricArbiter::route`] picks the least-congested shard
+//!   (lowest predicted [`CongestionLevel`], then lowest occupancy, then
+//!   fewest in-flight leases) and the lease snapshot carries that shard's
+//!   level, derived from its in-flight leases against the configured slot
+//!   thresholds, its [`Fabric`]'s binding-resource occupancy, and its DMA
+//!   link budget — all three combine with `max`, so whichever resource
+//!   binds first sets the level.  Releases are RAII.
+//! * **Federated admission** — [`FabricArbiter::state`] answers with the
+//!   *minimum* level across shards (the level a routed batch would
+//!   actually get), so [`FabricArbiter::sustained_saturated`] — the
+//!   dispatcher's shed/defer signal — fires only when **every** shard is
+//!   saturated: a pinned shard diverts traffic to its siblings instead of
+//!   shedding it.
+//! * **Generations** — [`FabricArbiter::reconfigure`]`(fabric_id, ..)`
+//!   bumps that shard's own epoch *and* the global epoch;
+//!   [`FabricArbiter::bump_generation`] (online policy retrain) bumps
+//!   every shard and the global epoch.  Plan caches compare the per-shard
+//!   epoch ([`FabricState::fabric_generation`]) and drop only the changed
+//!   shard's plans; response caches and content keys fold the global
+//!   epoch, so a reconfigured shard can never answer a new request with a
+//!   result computed on its old fabric while its siblings' plans survive.
 //!
-//! The hot path is lock-free: lease grant/release and level derivation
-//! are atomics; the `Mutex<Fabric>` is touched only on reconfiguration,
-//! which also refreshes a cached occupancy word the hot path reads.
+//! The hot path is lock-free: routing, lease grant/release, and level
+//! derivation are atomics; each shard's `Mutex<Fabric>` is touched only
+//! on reconfiguration, which also refreshes a cached occupancy word.
 
 use crate::agent::{CongestionLevel, FabricState};
 use crate::fpga::{Bitstream, Fabric, Resources};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// Arbitration thresholds.  Lease counts *include* the lease being
-/// granted, so `shared_at: 2` means "Shared once a second batch is in
-/// flight".
+/// Arbitration thresholds, applied **per shard**.  Lease counts *include*
+/// the lease being granted, so `shared_at: 2` means "Shared once a second
+/// batch is in flight on that shard".
 #[derive(Debug, Clone, Copy)]
 pub struct ArbiterConfig {
-    /// In-flight leases at/above which the fabric counts as time-shared.
+    /// In-flight leases at/above which a shard counts as time-shared.
     pub shared_at: usize,
-    /// In-flight leases at/above which the fabric counts as oversubscribed.
+    /// In-flight leases at/above which a shard counts as oversubscribed.
     pub saturated_at: usize,
-    /// Fabric occupancy (binding resource class) above which the level is
+    /// Shard occupancy (binding resource class) above which the level is
     /// at least `Shared` / `Saturated`.
     pub shared_occupancy: f64,
     pub saturated_occupancy: f64,
-    /// In-flight DMA bytes above which the derived level escalates one
-    /// step (the host link, not the fabric, is the bottleneck).
+    /// In-flight DMA bytes (per shard — each shard has its own host link)
+    /// above which the derived level escalates one step.
     pub dma_budget_bytes: u64,
-    /// Continuous time at `Saturated` before the arbiter reports
-    /// *sustained* saturation — the admission-control signal.  A single
-    /// spiky batch must not shed traffic; a fabric that stays pinned for
-    /// this long should.
+    /// Continuous time at federated `Saturated` (every shard saturated)
+    /// before the arbiter reports *sustained* saturation — the
+    /// admission-control signal.  A single spiky batch must not shed
+    /// traffic; a pool pinned for this long should.
     pub saturation_window: Duration,
+    /// Number of independent fabric shards the arbiter federates.
+    pub fabrics: usize,
 }
 
 impl Default for ArbiterConfig {
@@ -67,6 +76,7 @@ impl Default for ArbiterConfig {
             saturated_occupancy: 0.92,
             dma_budget_bytes: 32 << 20,
             saturation_window: Duration::from_millis(25),
+            fabrics: 1,
         }
     }
 }
@@ -83,51 +93,93 @@ impl ArbiterConfig {
     pub fn for_workers(workers: usize) -> ArbiterConfig {
         ArbiterConfig { saturated_at: workers.max(2), ..ArbiterConfig::default() }
     }
+
+    /// [`ArbiterConfig::for_workers`] thresholds over `fabrics` shards.
+    /// Per-shard thresholds stay worker-scaled: with routing spreading
+    /// leases across shards, each shard sees a fraction of the pool's
+    /// concurrency and the federated level drops accordingly — that is
+    /// the horizontal-scale effect the `--fabrics` sweep measures.
+    pub fn for_pool(workers: usize, fabrics: usize) -> ArbiterConfig {
+        ArbiterConfig { fabrics: fabrics.max(1), ..ArbiterConfig::for_workers(workers) }
+    }
 }
 
-/// The pool-wide fabric owner.  Cheap to share (`Arc`); all hot-path
-/// state is atomic.
-pub struct FabricArbiter {
-    cfg: ArbiterConfig,
+/// One fabric shard's ledger: the modelled fabric plus the atomics the
+/// lease hot path reads.
+struct Shard {
     fabric: Mutex<Fabric>,
     /// Cached `fabric.occupancy()` as f64 bits — refreshed on
-    /// reconfiguration so `lease()` never takes the fabric lock.
+    /// reconfiguration so leasing never takes the fabric lock.
     occupancy_bits: AtomicU64,
     inflight: AtomicUsize,
     inflight_bytes: AtomicU64,
+    /// This shard's own reconfiguration epoch.
     generation: AtomicU64,
-    /// Epoch base for the saturation run-length clock.
-    started: Instant,
-    /// Microsecond offset (from `started`) when the current continuous
-    /// run of `Saturated` observations began; `u64::MAX` when the last
-    /// observed level was below `Saturated`.
-    sat_since_us: AtomicU64,
     // telemetry
     leases_granted: AtomicU64,
     peak_inflight: AtomicUsize,
 }
 
-impl FabricArbiter {
-    /// Arbiter over the default (Table I card class) fabric.
-    pub fn new(cfg: ArbiterConfig) -> Arc<FabricArbiter> {
-        FabricArbiter::with_fabric(cfg, Fabric::new(Resources::alveo_u50_like()))
-    }
-
-    /// Arbiter over an explicitly modelled fabric (regions already carved
-    /// or about to be, via [`FabricArbiter::add_region`]).
-    pub fn with_fabric(cfg: ArbiterConfig, fabric: Fabric) -> Arc<FabricArbiter> {
+impl Shard {
+    fn new(fabric: Fabric) -> Shard {
         let occ = fabric.occupancy();
-        Arc::new(FabricArbiter {
-            cfg,
+        Shard {
             fabric: Mutex::new(fabric),
             occupancy_bits: AtomicU64::new(occ.to_bits()),
             inflight: AtomicUsize::new(0),
             inflight_bytes: AtomicU64::new(0),
             generation: AtomicU64::new(1),
-            started: Instant::now(),
-            sat_since_us: AtomicU64::new(u64::MAX),
             leases_granted: AtomicU64::new(0),
             peak_inflight: AtomicUsize::new(0),
+        }
+    }
+
+    fn occupancy(&self) -> f64 {
+        f64::from_bits(self.occupancy_bits.load(Ordering::Relaxed))
+    }
+}
+
+/// The pool-wide owner of M fabric shards.  Cheap to share (`Arc`); all
+/// hot-path state is atomic.
+pub struct FabricArbiter {
+    cfg: ArbiterConfig,
+    shards: Vec<Shard>,
+    /// Global fabric epoch: any shard's reconfiguration or a policy
+    /// retrain advances it.  Content keys and response caches key on this.
+    generation: AtomicU64,
+    /// Pool-wide in-flight leases (sum over shards) and its peak.
+    inflight_total: AtomicUsize,
+    peak_inflight: AtomicUsize,
+    /// Epoch base for the saturation run-length clock.
+    started: Instant,
+    /// Microsecond offset (from `started`) when the current continuous
+    /// run of federated-`Saturated` observations began; `u64::MAX` when
+    /// the last observed federated level was below `Saturated`.
+    sat_since_us: AtomicU64,
+}
+
+impl FabricArbiter {
+    /// Arbiter over `cfg.fabrics` default (Table I card class) fabrics.
+    pub fn new(cfg: ArbiterConfig) -> Arc<FabricArbiter> {
+        FabricArbiter::with_fabric(cfg, Fabric::new(Resources::alveo_u50_like()))
+    }
+
+    /// Arbiter whose shard 0 is an explicitly modelled fabric (regions
+    /// already carved or about to be, via [`FabricArbiter::add_region`]);
+    /// shards 1.. are default cards.
+    pub fn with_fabric(cfg: ArbiterConfig, fabric: Fabric) -> Arc<FabricArbiter> {
+        let mut shards = vec![Shard::new(fabric)];
+        for _ in 1..cfg.fabrics.max(1) {
+            shards.push(Shard::new(Fabric::new(Resources::alveo_u50_like())));
+        }
+        Arc::new(FabricArbiter {
+            cfg,
+            shards,
+            generation: AtomicU64::new(1),
+            inflight_total: AtomicUsize::new(0),
+            peak_inflight: AtomicUsize::new(0),
+            started: Instant::now(),
+            sat_since_us: AtomicU64::new(u64::MAX),
         })
     }
 
@@ -135,50 +187,140 @@ impl FabricArbiter {
         self.cfg
     }
 
-    /// Take a fabric slot for one offloaded batch moving `dma_bytes`
-    /// across the host link.  The returned lease's [`FabricState`] is the
-    /// contention snapshot this batch runs under (its own lease included)
-    /// and is released when the lease drops.
+    /// Number of fabric shards under arbitration.
+    pub fn fabrics(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard(&self, fabric_id: usize) -> &Shard {
+        &self.shards[fabric_id]
+    }
+
+    /// The least-congested shard for a lease moving `dma_bytes`: lowest
+    /// predicted level (the +1 phantom lease included, so the comparison
+    /// matches what [`FabricArbiter::lease_on`] would grant), then lowest
+    /// occupancy, then fewest in-flight leases, then lowest id.
+    pub fn route(&self, dma_bytes: u64) -> usize {
+        self.shards
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, s)| {
+                let inflight = s.inflight.load(Ordering::SeqCst);
+                let bytes = s.inflight_bytes.load(Ordering::SeqCst);
+                let level = self.level_for(s, inflight + 1, bytes + dma_bytes);
+                // occupancies are non-negative, so their IEEE-754 bit
+                // patterns order the same way the floats do
+                (level.index(), s.occupancy_bits.load(Ordering::Relaxed), inflight)
+            })
+            .map(|(i, _)| i)
+            .expect("arbiter always has >= 1 shard")
+    }
+
+    /// Take a slot on the least-congested shard for one offloaded batch
+    /// moving `dma_bytes` across that shard's host link.
     pub fn lease(self: &Arc<Self>, dma_bytes: u64) -> FabricLease {
-        let inflight = self.inflight.fetch_add(1, Ordering::SeqCst) + 1;
-        let bytes = self.inflight_bytes.fetch_add(dma_bytes, Ordering::SeqCst) + dma_bytes;
-        self.leases_granted.fetch_add(1, Ordering::Relaxed);
-        self.peak_inflight.fetch_max(inflight, Ordering::Relaxed);
-        let level = self.level_for(inflight, bytes);
-        self.observe(level);
-        let state = FabricState::new(level, self.generation.load(Ordering::SeqCst));
-        FabricLease { arbiter: self.clone(), dma_bytes, state }
+        self.lease_on(self.route(dma_bytes), dma_bytes)
     }
 
-    /// Current snapshot without granting a lease (telemetry and the
-    /// dispatcher's admission check).
-    pub fn state(&self) -> FabricState {
-        let level = self.level_for(
-            self.inflight.load(Ordering::SeqCst),
-            self.inflight_bytes.load(Ordering::SeqCst),
+    /// Take a slot on a specific shard.  The returned lease's
+    /// [`FabricState`] is the contention snapshot this batch runs under
+    /// (its own lease included) and is released when the lease drops.
+    pub fn lease_on(self: &Arc<Self>, fabric_id: usize, dma_bytes: u64) -> FabricLease {
+        let s = self.shard(fabric_id);
+        let inflight = s.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+        let bytes = s.inflight_bytes.fetch_add(dma_bytes, Ordering::SeqCst) + dma_bytes;
+        s.leases_granted.fetch_add(1, Ordering::Relaxed);
+        s.peak_inflight.fetch_max(inflight, Ordering::Relaxed);
+        let total = self.inflight_total.fetch_add(1, Ordering::SeqCst) + 1;
+        self.peak_inflight.fetch_max(total, Ordering::Relaxed);
+        let level = self.level_for(s, inflight, bytes);
+        self.observe(self.federated_level());
+        let state = FabricState::on(
+            level,
+            self.generation.load(Ordering::SeqCst),
+            fabric_id,
+            s.generation.load(Ordering::SeqCst),
         );
-        self.observe(level);
-        FabricState::new(level, self.generation.load(Ordering::SeqCst))
+        FabricLease { arbiter: self.clone(), dma_bytes, fabric_id, state }
     }
 
-    /// The [`FabricState`] a lease for `dma_bytes` *would* be granted
-    /// right now, without taking one.  The serving pool peeks placement
-    /// plans under this state so the peek key always matches the key a
-    /// leased run would cache — peeking under the lease-free level would
-    /// diverge whenever the lease itself crosses a threshold (e.g.
-    /// `shared_at: 1`), and the skip would never engage.  Purely
+    /// Live level of one shard from its current ledger (no phantom lease).
+    fn shard_level(&self, s: &Shard) -> CongestionLevel {
+        self.level_for(
+            s,
+            s.inflight.load(Ordering::SeqCst),
+            s.inflight_bytes.load(Ordering::SeqCst),
+        )
+    }
+
+    /// The federated level: the best (minimum) level any shard offers —
+    /// i.e. what a batch routed right now would get.  Saturated only when
+    /// *every* shard is saturated.
+    fn federated_level(&self) -> CongestionLevel {
+        self.shards
+            .iter()
+            .map(|s| self.shard_level(s))
+            .min()
+            .expect("arbiter always has >= 1 shard")
+    }
+
+    /// Current federated snapshot without granting a lease (telemetry and
+    /// the dispatcher's admission check).  The snapshot names the shard a
+    /// batch would be routed to.
+    pub fn state(&self) -> FabricState {
+        let id = self.route(0);
+        let level = self.federated_level();
+        self.observe(level);
+        FabricState::on(
+            level,
+            self.generation.load(Ordering::SeqCst),
+            id,
+            self.shard(id).generation.load(Ordering::SeqCst),
+        )
+    }
+
+    /// Snapshot of one shard (telemetry; does not feed the federated
+    /// saturation tracker).
+    pub fn state_of(&self, fabric_id: usize) -> FabricState {
+        let s = self.shard(fabric_id);
+        FabricState::on(
+            self.shard_level(s),
+            self.generation.load(Ordering::SeqCst),
+            fabric_id,
+            s.generation.load(Ordering::SeqCst),
+        )
+    }
+
+    /// The [`FabricState`] a lease for `dma_bytes` *would* be granted on
+    /// the least-congested shard right now, without taking one.  The
+    /// serving pool peeks placement plans under this state so the peek
+    /// key always matches the key a leased run would cache.  Purely
     /// predictive: it does **not** feed the saturation tracker (the +1
     /// phantom lease is not an observation of real load).
     pub fn peek_lease_state(&self, dma_bytes: u64) -> FabricState {
-        let level = self.level_for(
-            self.inflight.load(Ordering::SeqCst) + 1,
-            self.inflight_bytes.load(Ordering::SeqCst) + dma_bytes,
-        );
-        FabricState::new(level, self.generation.load(Ordering::SeqCst))
+        self.peek_lease_state_on(self.route(dma_bytes), dma_bytes)
     }
 
-    /// Feed the saturation run-length tracker.  Only the *start* of a
-    /// `Saturated` run is stamped; any lower observation resets it.
+    /// Predictive lease snapshot on a specific shard (see
+    /// [`FabricArbiter::peek_lease_state`]).
+    pub fn peek_lease_state_on(&self, fabric_id: usize, dma_bytes: u64) -> FabricState {
+        let s = self.shard(fabric_id);
+        let level = self.level_for(
+            s,
+            s.inflight.load(Ordering::SeqCst) + 1,
+            s.inflight_bytes.load(Ordering::SeqCst) + dma_bytes,
+        );
+        FabricState::on(
+            level,
+            self.generation.load(Ordering::SeqCst),
+            fabric_id,
+            s.generation.load(Ordering::SeqCst),
+        )
+    }
+
+    /// Feed the saturation run-length tracker with a federated
+    /// observation.  Only the *start* of a `Saturated` run is stamped;
+    /// any lower observation resets it.
     fn observe(&self, level: CongestionLevel) {
         if level == CongestionLevel::Saturated {
             let now_us = self.started.elapsed().as_micros() as u64;
@@ -193,11 +335,12 @@ impl FabricArbiter {
         }
     }
 
-    /// True when the fabric has been continuously `Saturated` for at
+    /// True when **every** shard has been continuously `Saturated` for at
     /// least [`ArbiterConfig::saturation_window`] — the dispatcher's
-    /// shed/defer signal.  Re-derives the live level first (and feeds
-    /// the tracker), so a fabric that cooled since the last lease
-    /// reports false immediately.
+    /// shed/defer signal.  Re-derives the live federated level first (and
+    /// feeds the tracker), so a pool that cooled since the last lease —
+    /// or that still has one `Free` shard to divert onto — reports false
+    /// immediately.
     pub fn sustained_saturated(&self) -> bool {
         if self.state().level != CongestionLevel::Saturated {
             return false;
@@ -208,7 +351,7 @@ impl FabricArbiter {
                 >= self.cfg.saturation_window.as_micros() as u64
     }
 
-    fn level_for(&self, inflight: usize, inflight_bytes: u64) -> CongestionLevel {
+    fn level_for(&self, s: &Shard, inflight: usize, inflight_bytes: u64) -> CongestionLevel {
         let by_leases = if inflight >= self.cfg.saturated_at {
             CongestionLevel::Saturated
         } else if inflight >= self.cfg.shared_at {
@@ -216,7 +359,7 @@ impl FabricArbiter {
         } else {
             CongestionLevel::Free
         };
-        let occ = f64::from_bits(self.occupancy_bits.load(Ordering::Relaxed));
+        let occ = s.occupancy();
         let by_occupancy = if occ > self.cfg.saturated_occupancy {
             CongestionLevel::Saturated
         } else if occ > self.cfg.shared_occupancy {
@@ -231,85 +374,137 @@ impl FabricArbiter {
         level
     }
 
-    fn release(&self, dma_bytes: u64) {
-        let inflight = self.inflight.fetch_sub(1, Ordering::SeqCst) - 1;
-        let bytes = self.inflight_bytes.fetch_sub(dma_bytes, Ordering::SeqCst) - dma_bytes;
-        // Re-observe after the release: if this drop cooled the fabric
-        // below Saturated, the run-length stamp must reset *now*, not at
-        // the next lease — otherwise a long-idle fabric would carry a
-        // stale stamp and treat a brand-new spike as already sustained.
-        self.observe(self.level_for(inflight, bytes));
+    fn release(&self, fabric_id: usize, dma_bytes: u64) {
+        let s = self.shard(fabric_id);
+        s.inflight.fetch_sub(1, Ordering::SeqCst);
+        s.inflight_bytes.fetch_sub(dma_bytes, Ordering::SeqCst);
+        self.inflight_total.fetch_sub(1, Ordering::SeqCst);
+        // Re-observe after the release: if this drop cooled the pool
+        // below federated-Saturated, the run-length stamp must reset
+        // *now*, not at the next lease — otherwise a long-idle pool would
+        // carry a stale stamp and treat a brand-new spike as already
+        // sustained.
+        self.observe(self.federated_level());
     }
 
-    /// Current fabric epoch.  Monotone; plans stamped with an older value
-    /// are stale, and so are response-cache entries (the dedup layer
-    /// folds this value into content keys and drops its entries when it
-    /// observes a newer epoch).
+    /// Current global fabric epoch.  Monotone; response-cache entries and
+    /// content keys stamped with an older value are stale.
     pub fn generation(&self) -> u64 {
         self.generation.load(Ordering::SeqCst)
     }
 
-    /// Advance the epoch without touching the fabric — the invalidation
+    /// One shard's own reconfiguration epoch.
+    pub fn fabric_generation(&self, fabric_id: usize) -> u64 {
+        self.shard(fabric_id).generation.load(Ordering::SeqCst)
+    }
+
+    /// Advance every epoch without touching any fabric — the invalidation
     /// hook for policies retrained online (the placement changed, the
-    /// hardware did not).  Returns the new generation.
+    /// hardware did not), so every shard's plans are stale.  Returns the
+    /// new global generation.
     pub fn bump_generation(&self) -> u64 {
+        for s in &self.shards {
+            s.generation.fetch_add(1, Ordering::SeqCst);
+        }
         self.generation.fetch_add(1, Ordering::SeqCst) + 1
     }
 
-    /// Carve a PR region out of the arbiter's fabric (setup-time).
-    pub fn add_region(&self, name: &str, budget: Resources) -> Result<usize> {
-        let mut fabric = self.fabric.lock().unwrap();
+    /// Carve a PR region out of one shard's fabric (setup-time).
+    pub fn add_region(&self, fabric_id: usize, name: &str, budget: Resources) -> Result<usize> {
+        let s = self
+            .shards
+            .get(fabric_id)
+            .ok_or_else(|| anyhow!("no fabric shard {fabric_id} (have {})", self.shards.len()))?;
+        let mut fabric = s.fabric.lock().unwrap();
         let idx = fabric.add_region(name, budget)?;
-        self.occupancy_bits.store(fabric.occupancy().to_bits(), Ordering::Relaxed);
+        s.occupancy_bits.store(fabric.occupancy().to_bits(), Ordering::Relaxed);
         Ok(idx)
     }
 
-    /// Partially reconfigure one region: load the bitstream, refresh the
-    /// cached occupancy, and bump the generation so every worker's plan
-    /// cache rebuilds against the new fabric.  Returns (reconfig time s,
-    /// new generation).
-    pub fn reconfigure(&self, region: usize, bs: Bitstream) -> Result<(f64, u64)> {
-        let mut fabric = self.fabric.lock().unwrap();
+    /// Partially reconfigure one region of one shard: load the bitstream,
+    /// refresh the shard's cached occupancy, and bump the shard's epoch
+    /// *and* the global epoch — the shard's plans rebuild, sibling
+    /// shards' plans survive, and every cached response predating the
+    /// reconfiguration becomes unreachable.  Returns (reconfig time s,
+    /// new global generation).
+    pub fn reconfigure(&self, fabric_id: usize, region: usize, bs: Bitstream) -> Result<(f64, u64)> {
+        let s = self
+            .shards
+            .get(fabric_id)
+            .ok_or_else(|| anyhow!("no fabric shard {fabric_id} (have {})", self.shards.len()))?;
+        let mut fabric = s.fabric.lock().unwrap();
         let t = fabric.load(region, bs)?;
-        self.occupancy_bits.store(fabric.occupancy().to_bits(), Ordering::Relaxed);
+        s.occupancy_bits.store(fabric.occupancy().to_bits(), Ordering::Relaxed);
         drop(fabric);
-        Ok((t, self.bump_generation()))
+        s.generation.fetch_add(1, Ordering::SeqCst);
+        Ok((t, self.generation.fetch_add(1, Ordering::SeqCst) + 1))
     }
 
-    /// Run `f` against the modelled fabric (telemetry, tests).
-    pub fn with_fabric_ref<T>(&self, f: impl FnOnce(&Fabric) -> T) -> T {
-        f(&self.fabric.lock().unwrap())
+    /// Run `f` against one shard's modelled fabric (telemetry, tests).
+    pub fn with_fabric_ref<T>(&self, fabric_id: usize, f: impl FnOnce(&Fabric) -> T) -> T {
+        f(&self.shard(fabric_id).fabric.lock().unwrap())
     }
 
-    /// Cached binding-resource occupancy the hot path sees.
+    /// Worst (highest) cached binding-resource occupancy across shards.
     pub fn occupancy(&self) -> f64 {
-        f64::from_bits(self.occupancy_bits.load(Ordering::Relaxed))
+        self.shards.iter().map(Shard::occupancy).fold(0.0, f64::max)
     }
 
+    /// Cached binding-resource occupancy of one shard.
+    pub fn occupancy_of(&self, fabric_id: usize) -> f64 {
+        self.shard(fabric_id).occupancy()
+    }
+
+    /// Per-shard cached occupancies, indexed by fabric id.
+    pub fn occupancies(&self) -> Vec<f64> {
+        self.shards.iter().map(Shard::occupancy).collect()
+    }
+
+    /// Pool-wide in-flight leases (sum over shards).
     pub fn inflight(&self) -> usize {
-        self.inflight.load(Ordering::SeqCst)
+        self.inflight_total.load(Ordering::SeqCst)
     }
 
+    /// In-flight leases on one shard.
+    pub fn inflight_of(&self, fabric_id: usize) -> usize {
+        self.shard(fabric_id).inflight.load(Ordering::SeqCst)
+    }
+
+    /// Total leases granted across all shards.
     pub fn leases_granted(&self) -> u64 {
-        self.leases_granted.load(Ordering::Relaxed)
+        self.shards.iter().map(|s| s.leases_granted.load(Ordering::Relaxed)).sum()
     }
 
+    /// Leases granted per shard, indexed by fabric id.
+    pub fn leases_by_fabric(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.leases_granted.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Peak pool-wide concurrent leases.
     pub fn peak_inflight(&self) -> usize {
         self.peak_inflight.load(Ordering::Relaxed)
     }
+
+    /// Peak concurrent leases per shard, indexed by fabric id.
+    pub fn peak_by_fabric(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.peak_inflight.load(Ordering::Relaxed)).collect()
+    }
 }
 
-/// RAII fabric slot held for the duration of one offloaded batch.
+/// RAII slot on one fabric shard, held for the duration of one offloaded
+/// batch.
 pub struct FabricLease {
     arbiter: Arc<FabricArbiter>,
     dma_bytes: u64,
+    /// Which shard this lease holds a slot on.
+    pub fabric_id: usize,
     /// Contention snapshot at grant time (this lease included).
     pub state: FabricState,
 }
 
 impl Drop for FabricLease {
     fn drop(&mut self) {
-        self.arbiter.release(self.dma_bytes);
+        self.arbiter.release(self.fabric_id, self.dma_bytes);
     }
 }
 
@@ -365,24 +560,25 @@ mod tests {
         let g0 = a.generation();
         let occ0 = a.occupancy();
         let r = a
-            .add_region("pr0", Resources { luts: 100_000, dsps: 2048, bram36: 256, uram: 64 })
+            .add_region(0, "pr0", Resources { luts: 100_000, dsps: 2048, bram36: 256, uram: 64 })
             .unwrap();
         let bs = Bitstream {
             name: "core".into(),
             usage: Resources { luts: 80_000, dsps: 2000, bram36: 200, uram: 32 },
             fmax_hz: 250e6,
         };
-        let (t, g1) = a.reconfigure(r, bs).unwrap();
+        let (t, g1) = a.reconfigure(0, r, bs).unwrap();
         assert!(t > 0.0);
         assert_eq!(g1, g0 + 1, "reconfiguration is a new epoch");
         assert_eq!(a.generation(), g1);
+        assert_eq!(a.fabric_generation(0), g1, "single shard tracks the global epoch");
         assert!(a.occupancy() > occ0, "loaded core raises occupancy");
-        assert_eq!(a.with_fabric_ref(|f| f.reconfigurations()), 1);
+        assert_eq!(a.with_fabric_ref(0, |f| f.reconfigurations()), 1);
 
         // retrain hook bumps without touching the fabric
         let g2 = a.bump_generation();
         assert_eq!(g2, g1 + 1);
-        assert_eq!(a.with_fabric_ref(|f| f.reconfigurations()), 1);
+        assert_eq!(a.with_fabric_ref(0, |f| f.reconfigurations()), 1);
     }
 
     #[test]
@@ -430,5 +626,101 @@ mod tests {
         a.bump_generation();
         let l = a.lease(0);
         assert_eq!(l.state.generation, a.generation());
+        assert_eq!(l.state.fabric_generation, a.fabric_generation(0));
+    }
+
+    #[test]
+    fn routing_prefers_the_least_congested_shard() {
+        let a = arb(ArbiterConfig { fabrics: 2, shared_at: 2, ..ArbiterConfig::default() });
+        assert_eq!(a.fabrics(), 2);
+        assert_eq!(a.route(0), 0, "idle shards tie-break to the lowest id");
+
+        // shard 0 busy: the next lease must land on shard 1
+        let l0 = a.lease_on(0, 0);
+        assert_eq!(l0.fabric_id, 0);
+        let l1 = a.lease(0);
+        assert_eq!(l1.fabric_id, 1, "routing spreads leases");
+        assert_eq!(l1.state.fabric_id, 1);
+        assert_eq!(l1.state.level, CongestionLevel::Free, "own shard is uncontended");
+        assert_eq!(a.leases_by_fabric(), vec![1, 1]);
+        assert_eq!(a.inflight_of(0), 1);
+        assert_eq!(a.inflight_of(1), 1);
+        assert_eq!(a.inflight(), 2);
+        drop(l0);
+        // shard 1 still holds a lease, so a fresh lease routes back to 0
+        let l2 = a.lease(0);
+        assert_eq!(l2.fabric_id, 0);
+        drop(l1);
+        drop(l2);
+        assert_eq!(a.peak_inflight(), 2);
+        assert_eq!(a.peak_by_fabric(), vec![1, 1]);
+    }
+
+    #[test]
+    fn federated_saturation_needs_every_shard() {
+        let a = arb(ArbiterConfig {
+            fabrics: 2,
+            shared_at: 1,
+            saturated_at: 1,
+            saturation_window: Duration::from_millis(10),
+            ..ArbiterConfig::default()
+        });
+        let l0 = a.lease_on(0, 0);
+        assert_eq!(l0.state.level, CongestionLevel::Saturated, "shard 0 alone is pinned");
+        assert_eq!(a.state_of(0).level, CongestionLevel::Saturated);
+        assert_eq!(a.state().level, CongestionLevel::Free, "shard 1 still has room");
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(!a.sustained_saturated(), "one free sibling blocks the shed signal");
+
+        let l1 = a.lease_on(1, 0);
+        assert_eq!(a.state().level, CongestionLevel::Saturated, "now every shard is pinned");
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(a.sustained_saturated(), "all-shards saturation sustains");
+        drop(l1);
+        assert!(!a.sustained_saturated(), "a released shard cools the federation");
+        drop(l0);
+    }
+
+    #[test]
+    fn per_shard_epochs_fold_into_the_global_generation() {
+        let a = arb(ArbiterConfig { fabrics: 2, ..ArbiterConfig::default() });
+        let g0 = a.generation();
+        let r = a
+            .add_region(0, "pr0", Resources { luts: 100_000, dsps: 2048, bram36: 256, uram: 64 })
+            .unwrap();
+        let bs = Bitstream {
+            name: "core".into(),
+            usage: Resources { luts: 80_000, dsps: 2000, bram36: 200, uram: 32 },
+            fmax_hz: 250e6,
+        };
+        let f0 = a.fabric_generation(0);
+        let f1 = a.fabric_generation(1);
+        let (_, g1) = a.reconfigure(0, r, bs).unwrap();
+        assert_eq!(g1, g0 + 1, "shard reconfigure advances the global epoch");
+        assert_eq!(a.fabric_generation(0), f0 + 1, "the reconfigured shard's epoch moves");
+        assert_eq!(a.fabric_generation(1), f1, "the sibling's epoch must not move");
+        assert_eq!(a.with_fabric_ref(1, |f| f.reconfigurations()), 0);
+
+        // a retrain is a policy change: every shard's plans are stale
+        let g2 = a.bump_generation();
+        assert_eq!(g2, g1 + 1);
+        assert_eq!(a.fabric_generation(0), f0 + 2);
+        assert_eq!(a.fabric_generation(1), f1 + 1);
+
+        // snapshots carry the shard-resolved epochs
+        let s1 = a.state_of(1);
+        assert_eq!((s1.fabric_id, s1.generation, s1.fabric_generation), (1, g2, f1 + 1));
+    }
+
+    #[test]
+    fn reconfigure_rejects_unknown_shards() {
+        let a = arb(ArbiterConfig::default());
+        assert!(a.add_region(3, "pr0", Resources::alveo_u50_like()).is_err());
+        let bs = Bitstream {
+            name: "core".into(),
+            usage: Resources { luts: 1, dsps: 1, bram36: 1, uram: 0 },
+            fmax_hz: 250e6,
+        };
+        assert!(a.reconfigure(1, 0, bs).is_err(), "only shard 0 exists by default");
     }
 }

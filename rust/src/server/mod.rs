@@ -11,20 +11,29 @@
 //!            [submit_with -> Receiver<Reply>]  [admission, stage order:     [own ArtifactStore
 //!             priority High | Low               1. cache: content key in     + Coordinator
 //!             optional deadline                    the TTL'd response LRU    + plan cache
-//!             content key when caching:           -> Reply::Ok (Cache)       + metric shard
-//!              (input hash, policy id,         2. coalesce: key already      + response-cache
-//!               class, fabric generation)]        staged/executing ->         insert on Ok]
-//!                                                 attach to its slot,
-//!                                                 fan-out reply later
-//!                                              3. deadline: expired or
-//!                                                 predicted-miss -> Rejected
-//!                                              4. overload: per-class caps
-//!                                                 + sustained Saturated
-//!                                                 -> shed Low first | defer]
-//!                                              [staging: EDF within High,
-//!                                               FIFO within Low]
-//!                                              [batch: high_share slots
-//!                                               to High, rest to Low]
+//!             content key when caching:           -> Reply::Ok (Cache) |     + metric shard
+//!              (input hash, policy id,              Reply::Failed (negative  + response-cache
+//!               class, fabric generation)]          entry, fail TTL armed)    insert on Ok /
+//!                                              2. coalesce: key already       Failed]
+//!                                                 staged/executing ->            |
+//!                                                 attach slot + own             | per batch
+//!                                                 timestamp, fan-out            v
+//!                                                 reply later               [fabric routing:
+//!                                              3. deadline: expired or       plan peek -> CPU-only
+//!                                                 predicted-miss -> Rejected  skips leasing; else
+//!                                              4. overload: per-class caps    route() picks the
+//!                                                 + sustained Saturated       least-congested of
+//!                                                 -> shed Low first | defer]  M fabric shards
+//!                                              [staging: EDF within High,     (level, occupancy,
+//!                                               FIFO within Low]              in-flight tie-break)
+//!                                              [batch: high_share slots       and leases on it]
+//!                                               to High, rest to Low]            |
+//!                                                                            shard 0..M-1
+//!                                                                            [own Fabric, lease
+//!                                                                             ledger, DMA budget,
+//!                                                                             epoch; federated
+//!                                                                             view: Saturated only
+//!                                                                             when ALL shards are]
 //! ```
 //!
 //! * **Typed replies** — every accepted `submit` terminates in exactly
@@ -99,11 +108,18 @@
 //!   across *compiled* sizes by [`split_exec_batches`] instead of
 //!   silently padding to an uncompiled `max_batch`.
 //! * **Arbitration** ([`arbiter`]) — every worker leases a fabric slot
-//!   around each offloaded batch from one shared [`FabricArbiter`], which
-//!   derives a quantized [`crate::agent::CongestionLevel`] from live
-//!   leases, fabric occupancy, and the DMA budget, and versions the
-//!   fabric with a generation counter so plan caches invalidate on
-//!   reconfiguration or retrain.
+//!   around each offloaded batch from one shared [`FabricArbiter`]
+//!   managing **M fabric shards** (`--fabrics M`), each with its own
+//!   `fpga::Fabric`, lease ledger, DMA budget, and quantized
+//!   [`crate::agent::CongestionLevel`].  The worker routes each
+//!   offloaded batch to the least-congested shard (level first, then
+//!   occupancy, then in-flight leases); admission's
+//!   `sustained_saturated()` reads the *federated* view, which reports
+//!   `Saturated` only when every shard is — a pinned shard diverts
+//!   traffic to its siblings instead of shedding it.  Epochs are
+//!   two-level: `reconfigure(fabric_id, ..)` bumps that shard's own
+//!   generation (dropping only its placement plans) folded into the
+//!   global generation the response cache and content keys ride on.
 //! * **Metrics** — per-worker [`pool::MetricShard`]s (atomic counters,
 //!   single-writer sample reservoirs) merged only in
 //!   [`pool::PoolMetrics::summary`]; no cross-worker lock contention on
@@ -116,8 +132,8 @@ pub mod pool;
 
 pub use arbiter::{ArbiterConfig, FabricArbiter, FabricLease};
 pub use pool::{
-    AdmissionStats, BatchEngine, BatchOutput, CoordEngine, EngineFactory, MetricShard,
-    PoolMetrics, ResponseCache, ServingPool, ShardSamples, SimEngine,
+    AdmissionStats, BatchEngine, BatchOutput, CachedOutcome, CoordEngine, EngineFactory,
+    MetricShard, PoolMetrics, ResponseCache, ServingPool, ShardSamples, SimEngine,
 };
 
 use crate::agent::{CongestionLevel, Policy, SchedulingEnv};
@@ -242,7 +258,7 @@ pub fn content_key(image: &[f32], policy_id: u64, class: Priority, generation: u
 /// dispatcher to treat the duplicate as a fresh primary instead — no
 /// waiter can ever be stranded on an already-resolved slot.
 pub struct CoalesceSlot {
-    waiters: Mutex<Option<Vec<Sender<Reply>>>>,
+    waiters: Mutex<Option<Vec<(Sender<Reply>, Instant)>>>,
 }
 
 impl CoalesceSlot {
@@ -250,12 +266,15 @@ impl CoalesceSlot {
         Arc::new(CoalesceSlot { waiters: Mutex::new(Some(Vec::new())) })
     }
 
-    /// Attach one duplicate's reply sender; `false` when the slot has
-    /// already resolved (the duplicate must become its own primary).
-    pub fn attach(&self, tx: Sender<Reply>) -> bool {
+    /// Attach one duplicate's reply sender together with *its own*
+    /// enqueue timestamp; `false` when the slot has already resolved
+    /// (the duplicate must become its own primary).  The timestamp lets
+    /// the fan-out price each waiter's queueing delay and wall latency
+    /// exactly instead of inheriting the primary's.
+    pub fn attach(&self, tx: Sender<Reply>, enqueued: Instant) -> bool {
         match &mut *self.waiters.lock().unwrap() {
             Some(v) => {
-                v.push(tx);
+                v.push((tx, enqueued));
                 true
             }
             None => false,
@@ -264,7 +283,7 @@ impl CoalesceSlot {
 
     /// Close the slot and take its waiters (exactly once; later calls
     /// and attaches see it closed).
-    pub fn take_waiters(&self) -> Vec<Sender<Reply>> {
+    pub fn take_waiters(&self) -> Vec<(Sender<Reply>, Instant)> {
         self.waiters.lock().unwrap().take().unwrap_or_default()
     }
 
@@ -303,7 +322,7 @@ impl Request {
         let Some(slot) = &self.coalesce else { return 0 };
         let waiters = slot.take_waiters();
         let n = waiters.len();
-        for tx in waiters {
+        for (tx, _enqueued) in waiters {
             let _ = tx.send(reply.clone());
         }
         n
@@ -368,16 +387,19 @@ pub struct Response {
     pub sim_batch_s: f64,
     /// Which pool worker executed the batch.
     pub worker: usize,
+    /// Which fabric shard the batch leased (0 on single-fabric pools
+    /// and for CPU-only batches that never leased).
+    pub fabric: usize,
     /// Fabric contention the batch ran under (from the shared arbiter).
     pub congestion: CongestionLevel,
-    /// Fabric epoch of the placement plan that served this request.
+    /// Global fabric epoch the batch executed under.
     pub plan_generation: u64,
     /// Provenance: engine execution, coalesced fan-out, or cache hit.
     /// For `Coalesced`/`Cache` the tracing fields (`worker`,
-    /// `batch_size`, `congestion`, ...) describe the execution that
-    /// produced the shared result, not this submit; `queue_s` is this
-    /// submit's own wait for `Cache` hits and the primary's wait for
-    /// `Coalesced` (waiters park only a reply channel, not a timestamp).
+    /// `batch_size`, `fabric`, `congestion`, ...) describe the execution
+    /// that produced the shared result, not this submit; `queue_s` is
+    /// always this submit's own wait — coalesced waiters park their own
+    /// enqueue timestamp and the fan-out re-prices each one.
     pub served: Served,
 }
 
@@ -470,6 +492,12 @@ pub struct CacheConfig {
     /// Entry lifetime; expired entries answer nothing and are dropped
     /// on the next probe.
     pub ttl: Duration,
+    /// Negative-caching lifetime (`--cache-fail-ttl-ms`, default 0 =
+    /// off): engine `Failed` results for a key are cached this long so a
+    /// persistently failing hot key stops re-executing at full rate
+    /// during an incident.  Keep it much shorter than `ttl` so recovery
+    /// is observed quickly once the fault clears.
+    pub fail_ttl: Duration,
     /// Identity of the serving policy, folded into every content key so
     /// two pools running different policies can never share entries.
     /// Conventionally a hash of [`Policy::name`].
@@ -478,7 +506,12 @@ pub struct CacheConfig {
 
 impl Default for CacheConfig {
     fn default() -> Self {
-        CacheConfig { cap: 0, ttl: Duration::from_millis(1000), policy_id: 0 }
+        CacheConfig {
+            cap: 0,
+            ttl: Duration::from_millis(1000),
+            fail_ttl: Duration::ZERO,
+            policy_id: 0,
+        }
     }
 }
 
@@ -490,7 +523,13 @@ impl CacheConfig {
 
     /// Cache of `cap` entries with `ttl_ms` lifetime under `policy`.
     pub fn sized(cap: usize, ttl_ms: u64, policy_id: u64) -> CacheConfig {
-        CacheConfig { cap, ttl: Duration::from_millis(ttl_ms), policy_id }
+        CacheConfig { cap, ttl: Duration::from_millis(ttl_ms), policy_id, ..CacheConfig::default() }
+    }
+
+    /// Same cache with negative caching armed for `fail_ttl_ms`.
+    pub fn with_fail_ttl(mut self, fail_ttl_ms: u64) -> CacheConfig {
+        self.fail_ttl = Duration::from_millis(fail_ttl_ms);
+        self
     }
 }
 

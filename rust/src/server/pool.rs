@@ -42,7 +42,9 @@ pub struct BatchOutput {
     pub sim_latency_s: f64,
     /// Simulated energy of the batch (J).
     pub sim_energy_j: f64,
-    /// Fabric epoch the executed plan was built under.
+    /// Global fabric epoch the batch executed under (the arbiter snapshot
+    /// observed at lease time) — the response cache refuses entries whose
+    /// epoch has already passed.
     pub plan_generation: u64,
 }
 
@@ -145,10 +147,14 @@ impl BatchEngine for CoordEngine {
         let (plan, _wall) =
             self.coord
                 .infer_cached(flat, batch, self.policy.as_ref(), fabric, logits)?;
+        // Report the *observed* global epoch, not the plan's build stamp:
+        // a plan that survived a sibling shard's reconfiguration is still
+        // valid, and its responses must stay cacheable under the new
+        // folded generation.
         Ok(BatchOutput {
             sim_latency_s: plan.sim_latency_s,
             sim_energy_j: plan.sim_energy_j,
-            plan_generation: plan.generation,
+            plan_generation: fabric.generation,
         })
     }
     fn plan_cache_stats(&self) -> (u64, u64) {
@@ -208,12 +214,20 @@ impl BatchEngine for SimEngine {
         logits: &mut Vec<f32>,
     ) -> Result<BatchOutput> {
         // the simulated path honors the arbiter exactly like CoordEngine:
-        // plans per congestion level, dropped on a generation bump
-        self.plans.sync_generation(fabric.generation);
-        let plan = self.plans.plan(&self.env, self.policy.as_ref(), batch, fabric.level);
-        // synthetic behavioural cost (serial FMA chain, kept via black_box)
+        // plans per (congestion level, fabric shard), dropped when that
+        // shard's epoch moves
+        self.plans.sync_fabric(fabric);
+        let plan =
+            self.plans
+                .plan_on(&self.env, self.policy.as_ref(), batch, fabric.level, fabric.fabric_id);
+        // Synthetic behavioural cost (serial FMA chain, kept via
+        // black_box).  Contention is wall-clock real here: a time-shared
+        // shard serves each tenant slower, so the passes scale with the
+        // observed level (x1 Free, x2 Shared, x4 Saturated) — this is
+        // what makes the multi-fabric knee measurable, since routing that
+        // keeps shards out of Shared/Saturated buys back real throughput.
         let mut acc = self.sink;
-        for _ in 0..self.work_passes {
+        for _ in 0..(self.work_passes << fabric.level.index()) {
             for &x in flat {
                 acc = acc.mul_add(1.000000119, x as f64);
             }
@@ -232,23 +246,33 @@ impl BatchEngine for SimEngine {
         Ok(BatchOutput {
             sim_latency_s: plan.sim_latency_s,
             sim_energy_j: plan.sim_energy_j,
-            plan_generation: plan.generation,
+            plan_generation: fabric.generation,
         })
     }
     fn plan_cache_stats(&self) -> (u64, u64) {
         (self.plans.hits, self.plans.misses)
     }
     fn plan_offloads(&mut self, batch: usize, fabric: FabricState) -> bool {
-        self.plans.sync_generation(fabric.generation);
+        self.plans.sync_fabric(fabric);
         self.plans
-            .peek(self.policy.as_ref(), batch, fabric.level)
+            .peek_on(self.policy.as_ref(), batch, fabric.level, fabric.fabric_id)
             .is_none_or(|p| p.offloads())
     }
 }
 
-/// One stored response with its eviction bookkeeping.
+/// What a live cache entry answers a probe with: a successful response,
+/// or — when negative caching is armed ([`CacheConfig::fail_ttl`]) — the
+/// failure the same key keeps producing, so a hot failing key stops
+/// re-executing at full rate during an incident.
+#[derive(Debug, Clone)]
+pub enum CachedOutcome {
+    Ok(Response),
+    Failed { worker: usize, error: String },
+}
+
+/// One stored outcome with its eviction bookkeeping.
 struct CacheEntry {
-    resp: Response,
+    outcome: CachedOutcome,
     expires: Instant,
     /// LRU tick at the last touch; `order` entries with a stale tick
     /// are skipped on eviction (lazy LRU).
@@ -270,6 +294,9 @@ struct CacheEntry {
 pub struct ResponseCache {
     cap: usize,
     ttl: Duration,
+    /// TTL for negative (`Failed`) entries; `ZERO` disables negative
+    /// caching entirely — failures are never stored.
+    fail_ttl: Duration,
     generation: u64,
     map: HashMap<u64, CacheEntry>,
     /// `(key, tick)` in touch order; stale ticks are skipped on pop.
@@ -282,9 +309,17 @@ pub struct ResponseCache {
 
 impl ResponseCache {
     pub fn new(cap: usize, ttl: Duration) -> ResponseCache {
+        ResponseCache::with_fail_ttl(cap, ttl, Duration::ZERO)
+    }
+
+    /// Cache with negative caching armed: `Failed` outcomes are stored
+    /// for `fail_ttl` (typically much shorter than `ttl` so recovery is
+    /// observed quickly once the fault clears).
+    pub fn with_fail_ttl(cap: usize, ttl: Duration, fail_ttl: Duration) -> ResponseCache {
         ResponseCache {
             cap,
             ttl,
+            fail_ttl,
             generation: 0,
             map: HashMap::new(),
             order: VecDeque::new(),
@@ -307,16 +342,16 @@ impl ResponseCache {
     /// Probe for `key`: a live (unexpired, current-generation) entry
     /// counts a hit and returns a clone; expiry drops the entry and
     /// counts a miss.
-    pub fn get(&mut self, key: u64, now: Instant) -> Option<Response> {
+    pub fn get(&mut self, key: u64, now: Instant) -> Option<CachedOutcome> {
         match self.map.get_mut(&key) {
             Some(e) if e.expires > now => {
                 self.tick += 1;
                 e.tick = self.tick;
-                let resp = e.resp.clone();
+                let outcome = e.outcome.clone();
                 self.order.push_back((key, self.tick));
                 self.compact();
                 self.hits += 1;
-                Some(resp)
+                Some(outcome)
             }
             Some(_) => {
                 self.map.remove(&key);
@@ -337,6 +372,30 @@ impl ResponseCache {
         if self.cap == 0 || resp.plan_generation != self.generation {
             return;
         }
+        let expires = now + self.ttl;
+        self.insert(key, CachedOutcome::Ok(resp), expires);
+    }
+
+    /// Insert one failure under the (short) failure TTL.  A no-op unless
+    /// negative caching is armed; `generation` is the global epoch the
+    /// failing batch executed under, held to the same staleness contract
+    /// as [`ResponseCache::put`].
+    pub fn put_failed(
+        &mut self,
+        key: u64,
+        worker: usize,
+        error: &str,
+        generation: u64,
+        now: Instant,
+    ) {
+        if self.cap == 0 || self.fail_ttl.is_zero() || generation != self.generation {
+            return;
+        }
+        let expires = now + self.fail_ttl;
+        self.insert(key, CachedOutcome::Failed { worker, error: error.to_string() }, expires);
+    }
+
+    fn insert(&mut self, key: u64, outcome: CachedOutcome, expires: Instant) {
         while self.map.len() >= self.cap {
             let Some((k, t)) = self.order.pop_front() else { break };
             if self.map.get(&k).is_some_and(|e| e.tick == t) {
@@ -344,7 +403,7 @@ impl ResponseCache {
             }
         }
         self.tick += 1;
-        self.map.insert(key, CacheEntry { resp, expires: now + self.ttl, tick: self.tick });
+        self.map.insert(key, CacheEntry { outcome, expires, tick: self.tick });
         self.order.push_back((key, self.tick));
         self.compact();
     }
@@ -441,6 +500,10 @@ pub struct AdmissionStats {
     /// keyed submit is exactly one hit or one miss, so
     /// `cache_hits + cache_misses` equals the keyed submit count.
     pub cache_misses: AtomicU64,
+    /// Subset of `cache_hits` answered `Reply::Failed` from a negative
+    /// entry (failure TTL armed) — the hot failing key the pool did
+    /// *not* re-execute.
+    pub cache_fail_hits: AtomicU64,
     /// Duplicates attached to an in-flight identical request (answered
     /// later by that request's fan-out) — each one is a batch slot,
     /// lease, and plan lookup never spent.
@@ -471,17 +534,39 @@ pub struct PoolMetrics {
     /// sent count this measures the invisible pipeline for the deadline
     /// predictor.
     batches_done: AtomicU64,
+    /// Leases taken per fabric shard (indexed by `fabric_id`) — the
+    /// pool-side view of the arbiter's routing decisions, sized to the
+    /// arbiter's shard count at construction.
+    fabric_leases: Vec<AtomicU64>,
 }
 
 impl PoolMetrics {
     pub fn new(workers: usize) -> PoolMetrics {
+        PoolMetrics::with_fabrics(workers, 1)
+    }
+
+    /// Metrics for a pool leasing from `fabrics` arbiter shards.
+    pub fn with_fabrics(workers: usize, fabrics: usize) -> PoolMetrics {
         PoolMetrics {
             shards: (0..workers.max(1)).map(|_| Arc::new(MetricShard::default())).collect(),
             admission: AdmissionStats::default(),
             dead_workers: AtomicU64::new(0),
             batch_cost_bits: Default::default(),
             batches_done: AtomicU64::new(0),
+            fabric_leases: (0..fabrics.max(1)).map(|_| AtomicU64::new(0)).collect(),
         }
+    }
+
+    /// Record one lease taken on fabric shard `fabric_id` (worker-side).
+    pub fn observe_fabric_lease(&self, fabric_id: usize) {
+        if let Some(c) = self.fabric_leases.get(fabric_id) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Leases taken per fabric shard, indexed by `fabric_id`.
+    pub fn leases_by_fabric(&self) -> Vec<u64> {
+        self.fabric_leases.iter().map(|c| c.load(Ordering::Relaxed)).collect()
     }
 
     /// Record one executed batch's simulated cost under `level`
@@ -625,6 +710,12 @@ impl PoolMetrics {
         self.admission.cache_misses.load(Ordering::Relaxed)
     }
 
+    /// Cache hits answered `Reply::Failed` from a negative entry
+    /// (a subset of [`PoolMetrics::cache_hits`]).
+    pub fn cache_fail_hits(&self) -> u64 {
+        self.admission.cache_fail_hits.load(Ordering::Relaxed)
+    }
+
     /// Duplicates coalesced onto an in-flight identical request.
     pub fn coalesced(&self) -> u64 {
         self.admission.coalesced.load(Ordering::Relaxed)
@@ -654,8 +745,17 @@ impl PoolMetrics {
         let ac = self.admitted_by_class();
         let sc = self.shed_by_class();
         let ec = self.expired_by_class();
+        // Per-fabric lease routing only matters (and only prints) on
+        // multi-shard pools — single-fabric summaries stay byte-stable.
+        let fab = if self.fabric_leases.len() > 1 {
+            let counts: Vec<String> =
+                self.leases_by_fabric().iter().map(|c| c.to_string()).collect();
+            format!(" fab=[{}]", counts.join(","))
+        } else {
+            String::new()
+        };
         format!(
-            "served={} batches={} errors={} shed={} expired={} deferred={} cache={}h/{}m coalesced={} dead={} workers={} class hi={}a/{}s/{}e lo={}a/{}s/{}e plan={}h/{}m gen={} levels={}f/{}s/{}x qpeak={} wall p50={:.2}ms p99={:.2}ms queue p50={:.2}ms sim/batch p50={:.2}ms",
+            "served={} batches={} errors={} shed={} expired={} deferred={} cache={}h/{}m coalesced={} dead={} workers={}{fab} class hi={}a/{}s/{}e lo={}a/{}s/{}e plan={}h/{}m gen={} levels={}f/{}s/{}x qpeak={} wall p50={:.2}ms p99={:.2}ms queue p50={:.2}ms sim/batch p50={:.2}ms",
             self.served(),
             self.batches(),
             self.errors(),
@@ -757,15 +857,15 @@ impl ServingPool {
         // admission control in an invisible middle queue.
         let (btx, brx) = sync_channel::<Vec<Request>>(n);
         let shared_rx = Arc::new(Mutex::new(brx));
-        let metrics = Arc::new(PoolMetrics::new(n));
+        let metrics = Arc::new(PoolMetrics::with_fabrics(n, arbiter.fabrics()));
         let depth = Arc::new(AtomicUsize::new(0));
         let stop = Arc::new(AtomicBool::new(false));
         // The response cache exists only when configured: a zero cap
         // means no Arc, no mutex, no probe — the uncached hot path is
         // untouched, not just short-circuited.
-        let rcache = cache
-            .enabled()
-            .then(|| Arc::new(Mutex::new(ResponseCache::new(cache.cap, cache.ttl))));
+        let rcache = cache.enabled().then(|| {
+            Arc::new(Mutex::new(ResponseCache::with_fail_ttl(cache.cap, cache.ttl, cache.fail_ttl)))
+        });
         let key_ctx = cache
             .enabled()
             .then(|| Arc::new(KeyCtx { policy_id: cache.policy_id, arbiter: arbiter.clone() }));
@@ -968,15 +1068,30 @@ impl DispatchCtx {
                     c.sync_generation(self.arbiter.generation());
                     c.get(key, Instant::now())
                 };
-                if let Some(mut resp) = hit {
-                    self.metrics.admission.cache_hits.fetch_add(1, Ordering::Relaxed);
-                    self.depth.fetch_sub(1, Ordering::Relaxed);
-                    resp.served = Served::Cache;
-                    resp.queue_s = req.enqueued.elapsed().as_secs_f64();
-                    let _ = req.respond.send(Reply::Ok(resp));
-                    return;
+                match hit {
+                    Some(CachedOutcome::Ok(mut resp)) => {
+                        self.metrics.admission.cache_hits.fetch_add(1, Ordering::Relaxed);
+                        self.depth.fetch_sub(1, Ordering::Relaxed);
+                        resp.served = Served::Cache;
+                        resp.queue_s = req.enqueued.elapsed().as_secs_f64();
+                        let _ = req.respond.send(Reply::Ok(resp));
+                        return;
+                    }
+                    // Negative entry: the key kept failing within the
+                    // failure TTL — answer the same typed failure without
+                    // burning a batch slot on it.  Still a cache *hit*
+                    // for the hits+misses == keyed-submits identity.
+                    Some(CachedOutcome::Failed { worker, error }) => {
+                        self.metrics.admission.cache_hits.fetch_add(1, Ordering::Relaxed);
+                        self.metrics.admission.cache_fail_hits.fetch_add(1, Ordering::Relaxed);
+                        self.depth.fetch_sub(1, Ordering::Relaxed);
+                        let _ = req.respond.send(Reply::Failed { worker, error });
+                        return;
+                    }
+                    None => {
+                        self.metrics.admission.cache_misses.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
-                self.metrics.admission.cache_misses.fetch_add(1, Ordering::Relaxed);
             }
             // 2. Coalesce: a duplicate of a staged or executing request
             // attaches to its slot and consumes no batch capacity; the
@@ -984,7 +1099,7 @@ impl DispatchCtx {
             use std::collections::hash_map::Entry;
             match inflight.entry(key) {
                 Entry::Occupied(mut e) => {
-                    if e.get().attach(req.respond.clone()) {
+                    if e.get().attach(req.respond.clone(), req.enqueued) {
                         self.metrics.admission.coalesced.fetch_add(1, Ordering::Relaxed);
                         self.depth.fetch_sub(1, Ordering::Relaxed);
                         return;
@@ -1356,10 +1471,16 @@ fn worker_loop(
             // budget; a taken slot frees (RAII) as soon as execution
             // ends.  A skipped batch still *runs* under the predicted
             // state, keeping the plan key stable across batches.
+            // Least-congested routing: pick the shard once, then peek
+            // and lease on that SAME shard — routing again inside
+            // `lease()` could land the batch somewhere other than the
+            // state the offload decision was made under.
             let dma_bytes = (real * ie * std::mem::size_of::<f32>()) as u64;
-            let predicted = arbiter.peek_lease_state(dma_bytes);
+            let fabric_id = arbiter.route(dma_bytes);
+            let predicted = arbiter.peek_lease_state_on(fabric_id, dma_bytes);
             let lease = if engine.plan_offloads(exec_b, predicted) {
-                Some(arbiter.lease(dma_bytes))
+                metrics.observe_fabric_lease(fabric_id);
+                Some(arbiter.lease_on(fabric_id, dma_bytes))
             } else {
                 None
             };
@@ -1422,6 +1543,7 @@ fn worker_loop(
                             queue_s,
                             sim_batch_s: out.sim_latency_s,
                             worker,
+                            fabric: fabric.fabric_id,
                             congestion: fabric.level,
                             plan_generation: out.plan_generation,
                             served: Served::Engine,
@@ -1429,13 +1551,24 @@ fn worker_loop(
                         // Coalesced waiters ride this execution: each gets
                         // the same prediction with `Coalesced` provenance,
                         // and each counts as served — they are answered
-                        // submits, exactly like the primary.
+                        // submits, exactly like the primary.  Each waiter
+                        // parked its own enqueue timestamp, so its reply
+                        // and the latency reservoirs price *its* wait, not
+                        // the primary's.
                         if let Some(slot) = &req.coalesce {
                             let waiters = slot.take_waiters();
                             shard.served.fetch_add(waiters.len() as u64, Ordering::Relaxed);
-                            for tx in waiters {
+                            for (tx, enq) in waiters {
                                 let mut r = resp.clone();
                                 r.served = Served::Coalesced;
+                                // saturating: a duplicate can attach after
+                                // this batch already launched
+                                r.queue_s =
+                                    started.saturating_duration_since(enq).as_secs_f64();
+                                let wall = enq.elapsed().as_secs_f64();
+                                s.latency.push(wall);
+                                s.latency_class[req.priority.index()].push(wall);
+                                s.queue_delay.push(r.queue_s);
                                 let _ = tx.send(Reply::Ok(r));
                             }
                         }
@@ -1456,6 +1589,19 @@ fn worker_loop(
                     shard.errors.fetch_add(real as u64, Ordering::Relaxed);
                     let error = format!("{e:#}");
                     for req in &batch[start..end] {
+                        // Negative caching (failure TTL armed): remember
+                        // the failure under the epoch it executed in, so
+                        // a hot failing key answers from the cache for a
+                        // short window instead of re-executing.
+                        if let (Some(c), Some(key)) = (&cache, req.key) {
+                            c.lock().unwrap().put_failed(
+                                key,
+                                worker,
+                                &error,
+                                fabric.generation,
+                                Instant::now(),
+                            );
+                        }
                         let reply = Reply::Failed { worker, error: error.clone() };
                         // coalesced waiters share the primary's fate on
                         // failure too — a dropped waiter channel would
@@ -1573,9 +1719,18 @@ mod tests {
             queue_s: 0.0,
             sim_batch_s: 0.0,
             worker: 0,
+            fabric: 0,
             congestion: CongestionLevel::Free,
             plan_generation: generation,
             served: Served::Engine,
+        }
+    }
+
+    /// Unwrap a cache probe down to the successful response's class.
+    fn hit_class(outcome: CachedOutcome) -> usize {
+        match outcome {
+            CachedOutcome::Ok(r) => r.class,
+            CachedOutcome::Failed { error, .. } => panic!("expected Ok entry, got Failed: {error}"),
         }
     }
 
@@ -1587,7 +1742,7 @@ mod tests {
         assert!(c.get(7, now).is_none(), "empty cache misses");
         c.put(7, resp(3, 1), now);
         let hit = c.get(7, now).expect("fresh entry hits");
-        assert_eq!(hit.class, 3);
+        assert_eq!(hit_class(hit), 3);
         // past the TTL the same key misses and the entry is dropped
         let later = now + Duration::from_millis(60);
         assert!(c.get(7, later).is_none(), "expired entry must miss");
@@ -1647,21 +1802,60 @@ mod tests {
         let slot = CoalesceSlot::new();
         assert!(slot.open());
         let (tx, rx) = channel::<Reply>();
-        assert!(slot.attach(tx));
+        let enqueued = Instant::now();
+        assert!(slot.attach(tx, enqueued));
         let waiters = slot.take_waiters();
         assert_eq!(waiters.len(), 1);
         // closed: attaches fail, a second take yields nothing
         assert!(!slot.open());
         let (tx2, _rx2) = channel::<Reply>();
-        assert!(!slot.attach(tx2), "attach after close must fail");
+        assert!(!slot.attach(tx2, Instant::now()), "attach after close must fail");
         assert!(slot.take_waiters().is_empty());
-        for tx in waiters {
+        for (tx, enq) in waiters {
+            // each waiter rides out with its *own* enqueue timestamp
+            assert_eq!(enq, enqueued);
             tx.send(Reply::Ok(resp(1, 1))).unwrap();
         }
         match rx.try_recv().unwrap() {
             Reply::Ok(r) => assert_eq!(r.class, 1),
             other => panic!("expected Ok, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn response_cache_negative_entries_honor_the_fail_ttl() {
+        // fail TTL off (the default): failures are never stored
+        let mut off = ResponseCache::new(4, Duration::from_secs(10));
+        off.sync_generation(1);
+        let now = Instant::now();
+        off.put_failed(5, 0, "boom", 1, now);
+        assert!(off.get(5, now).is_none(), "fail TTL off must not cache failures");
+
+        let mut c = ResponseCache::with_fail_ttl(
+            4,
+            Duration::from_secs(10),
+            Duration::from_millis(50),
+        );
+        c.sync_generation(1);
+        // stale-epoch failures are refused, same contract as `put`
+        c.put_failed(5, 0, "boom", 0, now);
+        assert!(c.get(5, now).is_none(), "stale-generation failure must be refused");
+        c.put_failed(5, 3, "boom", 1, now);
+        match c.get(5, now).expect("fresh negative entry hits") {
+            CachedOutcome::Failed { worker, error } => {
+                assert_eq!(worker, 3);
+                assert_eq!(error, "boom");
+            }
+            CachedOutcome::Ok(_) => panic!("expected a negative entry"),
+        }
+        // negative entries expire on the (short) failure TTL, not the
+        // success TTL — recovery is observed quickly
+        let later = now + Duration::from_millis(60);
+        assert!(c.get(5, later).is_none(), "negative entry must expire on the fail TTL");
+        // an Ok result for the same key overwrites a live negative entry
+        c.put_failed(6, 0, "boom", 1, now);
+        c.put(6, resp(2, 1), now);
+        assert_eq!(hit_class(c.get(6, now).expect("Ok overwrites Failed")), 2);
     }
 
     #[test]

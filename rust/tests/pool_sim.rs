@@ -11,6 +11,11 @@
 //! fan the single result out, engine failures fan `Failed` out to every
 //! coalesced waiter, a reconfigure invalidates the response cache, and
 //! EDF staging expires fewer deadline requests than FIFO at equal load.
+//! Multi-fabric invariants ride the same harness: offloaded batches
+//! route to the least-congested shard, a saturated shard diverts to its
+//! free sibling instead of shedding, a shard reconfigure invalidates the
+//! response cache without touching the sibling's epoch, and `Failed`
+//! results are negatively cached under the (default-off) failure TTL.
 //! (The real-artifact pool path is covered in server_e2e.rs.)
 
 use aifa::agent::{
@@ -246,10 +251,11 @@ fn arbitration_end_to_end() {
 
     // phase 2: partial reconfiguration bumps the generation mid-serve
     let region = arbiter
-        .add_region("pr0", Resources { luts: 100_000, dsps: 1024, bram36: 128, uram: 32 })
+        .add_region(0, "pr0", Resources { luts: 100_000, dsps: 1024, bram36: 128, uram: 32 })
         .unwrap();
     let (_t, gen1) = arbiter
         .reconfigure(
+            0,
             region,
             Bitstream {
                 name: "retuned_core".into(),
@@ -905,6 +911,20 @@ fn duplicates_coalesce_onto_one_slot_and_then_hit_the_cache() {
         .recv_timeout(Duration::from_secs(60))
         .unwrap());
     assert_ne!(other.served, Served::Cache, "distinct input must not hit");
+    // coalesced waiters park their own enqueue timestamps, so every
+    // served submit (primaries AND waiters) prices its own wait in the
+    // latency reservoirs — the reservoir length matches served exactly
+    let merged = pool.metrics.merged();
+    assert_eq!(
+        merged.latency.len() as u64,
+        pool.metrics.served(),
+        "each waiter pushes its own wall-latency sample"
+    );
+    assert_eq!(
+        merged.queue_delay.len() as u64,
+        pool.metrics.served(),
+        "each waiter pushes its own queue-delay sample"
+    );
     drop(handle);
     pool.shutdown();
 }
@@ -999,10 +1019,11 @@ fn reconfigure_invalidates_the_response_cache() {
 
     // partial reconfiguration mid-serve: the epoch moves
     let region = arbiter
-        .add_region("pr0", Resources { luts: 100_000, dsps: 1024, bram36: 128, uram: 32 })
+        .add_region(0, "pr0", Resources { luts: 100_000, dsps: 1024, bram36: 128, uram: 32 })
         .unwrap();
     let (_t, gen1) = arbiter
         .reconfigure(
+            0,
             region,
             Bitstream {
                 name: "retuned_core".into(),
@@ -1163,4 +1184,242 @@ fn edf_expires_fewer_tight_deadlines_than_fifo_at_equal_load() {
         "EDF must expire fewer tight deadlines than FIFO at equal load \
          (edf={expired_edf}, fifo={expired_fifo})"
     );
+}
+
+/// Least-congested routing, the tentpole invariant: with shard 0 pinned
+/// by a held lease, every offloaded batch diverts to shard 1 — visible
+/// in the per-response `fabric` id, the arbiter's per-shard lease
+/// ledger, and the pool's per-fabric lease counters, which must agree.
+#[test]
+fn offloaded_batches_route_to_the_least_congested_shard() {
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+
+    let arbiter = FabricArbiter::new(ArbiterConfig { fabrics: 2, ..ArbiterConfig::default() });
+    // Pin shard 0: its predicted level (phantom lease included) is
+    // Shared while shard 1 stays Free, so routing must pick shard 1.
+    let pin = arbiter.lease_on(0, 0);
+    let pool = ServingPool::start_with(
+        1,
+        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
+        fpga_factory(1), // every plan offloads: every batch leases
+        arbiter.clone(),
+    )
+    .unwrap();
+    let handle = pool.handle();
+
+    let n = 20usize;
+    for i in 0..n {
+        let rx = handle.submit(image(ie, i)).unwrap();
+        let resp = ok(rx.recv_timeout(Duration::from_secs(60)).unwrap());
+        assert_eq!(resp.fabric, 1, "batches must divert off the pinned shard");
+    }
+    drop(pin);
+
+    let by_fabric = arbiter.leases_by_fabric();
+    assert_eq!(by_fabric[0], 1, "shard 0 granted only the pin lease");
+    assert!(by_fabric[1] > 0, "worker leases landed on the free sibling");
+    assert_eq!(arbiter.leases_granted(), by_fabric[0] + by_fabric[1]);
+    // the pool-side per-fabric counters see the same routing (they count
+    // only worker leases, not the test's pin)
+    let pool_leases = pool.metrics.leases_by_fabric();
+    assert_eq!(pool_leases, vec![0, by_fabric[1]]);
+    drop(handle);
+    pool.shutdown();
+}
+
+/// Federated admission: a *saturated* shard diverts its traffic to a
+/// sibling with headroom instead of shedding it.  Shard 0 is pinned past
+/// `saturated_at`; shard 1 can never saturate (one worker, threshold 2),
+/// so the federated level stays below `Saturated`, sustained saturation
+/// never fires, and shed mode rejects nothing — on a single-fabric pool
+/// this exact ledger would be shedding.
+#[test]
+fn saturated_shard_diverts_to_its_free_sibling_instead_of_shedding() {
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+
+    let arbiter = FabricArbiter::new(ArbiterConfig {
+        shared_at: 1,
+        saturated_at: 2,
+        saturation_window: Duration::from_millis(1),
+        fabrics: 2,
+        ..ArbiterConfig::default()
+    });
+    // two held leases saturate shard 0 outright
+    let pin_a = arbiter.lease_on(0, 0);
+    let pin_b = arbiter.lease_on(0, 0);
+    assert_eq!(arbiter.state_of(0).level, CongestionLevel::Saturated);
+    assert!(
+        arbiter.state().level < CongestionLevel::Saturated,
+        "the federated level must reflect the free sibling"
+    );
+
+    let pool = ServingPool::start_full(
+        1,
+        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
+        AdmissionConfig::capped(16, true), // shed mode: rejections WOULD surface
+        fpga_factory(8),
+        arbiter.clone(),
+    )
+    .unwrap();
+    let handle = pool.handle();
+
+    let n = 120usize;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        rxs.push(handle.submit(image(ie, i)).unwrap());
+    }
+    for rx in rxs {
+        let resp = ok(rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("a submitter was left waiting forever"));
+        assert_eq!(resp.fabric, 1, "all traffic diverts to the shard with headroom");
+    }
+    drop(pin_a);
+    drop(pin_b);
+
+    assert_eq!(pool.metrics.served(), n as u64, "nothing shed, nothing lost");
+    assert_eq!(pool.metrics.shed_total(), 0, "a pinned shard must divert, not shed");
+    assert!(!arbiter.sustained_saturated(), "one free shard keeps the pool unsaturated");
+    assert_eq!(arbiter.leases_by_fabric()[0], 2, "shard 0 held only the pins");
+    assert!(pool.metrics.leases_by_fabric()[1] > 0);
+    assert_eq!(pool.metrics.errors(), 0);
+    drop(handle);
+    pool.shutdown();
+}
+
+/// Per-shard epochs end-to-end: reconfiguring shard 0 must invalidate
+/// every cached response (the cache keys on the *global* epoch — a hit
+/// computed on the old fabric is unsafe to serve), while shard 1's own
+/// epoch — the key the plan cache drops plans by — does not move.
+#[test]
+fn shard_reconfigure_invalidates_the_cache_without_touching_the_sibling_epoch() {
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+
+    let arbiter = FabricArbiter::new(ArbiterConfig { fabrics: 2, ..ArbiterConfig::default() });
+    let pool = ServingPool::start_cached(
+        1,
+        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
+        AdmissionConfig::default(),
+        // TTL far beyond the test: only the epoch can invalidate here
+        CacheConfig::sized(64, 60_000, 7),
+        sim_factory(1),
+        arbiter.clone(),
+    )
+    .unwrap();
+    let handle = pool.handle();
+    let submit = |tag: usize| {
+        ok(handle
+            .submit_with(image(ie, tag), Priority::High, None)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(60))
+            .unwrap())
+    };
+
+    let gen0 = arbiter.generation();
+    let first = submit(5);
+    assert_eq!(first.served, Served::Engine);
+    assert_eq!(submit(5).served, Served::Cache, "same epoch, same key: must hit");
+
+    // reconfigure shard 0 only
+    let sibling_gen = arbiter.fabric_generation(1);
+    let shard0_gen = arbiter.fabric_generation(0);
+    let region = arbiter
+        .add_region(0, "pr0", Resources { luts: 100_000, dsps: 1024, bram36: 128, uram: 32 })
+        .unwrap();
+    let (_t, gen1) = arbiter
+        .reconfigure(
+            0,
+            region,
+            Bitstream {
+                name: "retuned_core".into(),
+                usage: Resources { luts: 60_000, dsps: 512, bram36: 64, uram: 16 },
+                fmax_hz: 250e6,
+            },
+        )
+        .unwrap();
+    assert_eq!(gen1, gen0 + 1, "the global epoch folds the shard bump");
+    assert_eq!(arbiter.fabric_generation(0), shard0_gen + 1, "shard 0's own epoch moved");
+    assert_eq!(arbiter.fabric_generation(1), sibling_gen, "the sibling's epoch must not move");
+
+    // the identical request re-executes — no stale hit across the epoch
+    let third = submit(5);
+    assert_eq!(third.served, Served::Engine, "stale entry must not answer post-reconfig");
+    assert_eq!(third.plan_generation, gen1, "re-execution observes the new global epoch");
+    // and the rebuilt result is cacheable again under the new epoch
+    assert_eq!(submit(5).served, Served::Cache);
+    assert_eq!(pool.metrics.errors(), 0);
+    drop(handle);
+    pool.shutdown();
+}
+
+/// Negative caching (`--cache-fail-ttl-ms`): with the failure TTL armed,
+/// a key that failed answers `Reply::Failed` straight from the cache —
+/// the engine runs once, not once per retry.  With the TTL at its
+/// default (off), every retry re-executes.
+#[test]
+fn failed_results_are_negatively_cached_under_the_fail_ttl() {
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+    let classes = env.net.units.last().unwrap().cout;
+
+    let factory = move || -> Arc<EngineFactory> {
+        Arc::new(move |_w: usize| -> Result<Box<dyn BatchEngine>> {
+            Ok(Box::new(FailingEngine { batches: vec![1, 8], ie, classes }))
+        })
+    };
+    let submit_failed = |pool: &ServingPool, tag: usize| {
+        let rx = pool.handle().submit_with(image(ie, tag), Priority::High, None).unwrap();
+        match rx.recv_timeout(Duration::from_secs(60)).expect("submitter stranded") {
+            Reply::Failed { worker, error } => {
+                assert!(error.contains("injected engine failure"), "{error}");
+                worker
+            }
+            other => panic!("expected Reply::Failed, got {other:?}"),
+        }
+    };
+
+    // fail TTL armed: the second identical submit answers from the cache
+    let pool = ServingPool::start_cached(
+        1,
+        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
+        AdmissionConfig::default(),
+        CacheConfig::sized(64, 60_000, 7).with_fail_ttl(60_000),
+        factory(),
+        FabricArbiter::new(ArbiterConfig::default()),
+    )
+    .unwrap();
+    assert!(submit_failed(&pool, 5) < 1_000_000, "first failure comes from the engine");
+    assert_eq!(pool.metrics.errors(), 1);
+    submit_failed(&pool, 5);
+    assert_eq!(pool.metrics.errors(), 1, "the cached failure must not re-execute");
+    assert_eq!(pool.metrics.cache_fail_hits(), 1, "the retry was a negative-cache hit");
+    assert_eq!(pool.metrics.cache_hits(), 1, "fail hits count as hits for the identity");
+    // a different key is untouched by the negative entry
+    submit_failed(&pool, 6);
+    assert_eq!(pool.metrics.errors(), 2);
+    assert_eq!(
+        pool.metrics.cache_hits() + pool.metrics.cache_misses(),
+        3,
+        "every keyed submit is exactly one hit or one miss"
+    );
+    pool.shutdown();
+
+    // fail TTL off (the default): every retry reaches the engine
+    let pool = ServingPool::start_cached(
+        1,
+        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
+        AdmissionConfig::default(),
+        CacheConfig::sized(64, 60_000, 7),
+        factory(),
+        FabricArbiter::new(ArbiterConfig::default()),
+    )
+    .unwrap();
+    submit_failed(&pool, 5);
+    submit_failed(&pool, 5);
+    assert_eq!(pool.metrics.errors(), 2, "failures are not cached by default");
+    assert_eq!(pool.metrics.cache_fail_hits(), 0);
+    pool.shutdown();
 }

@@ -12,8 +12,14 @@ fails (exit 1) when:
   * any open-loop row is missing the per-class fields (the priority
     admission contract: per-class ok/rejected/expired/goodput/p99) or
     the dedup counters (hits/misses/coalesced);
-  * reply accounting doesn't add up (ok + rejected + expired + failed
-    != n) for any open-loop row;
+  * reply accounting doesn't add up (ok + rejected + expired +
+    quota_shed + failed != n) for any open-loop row;
+  * tenant accounting doesn't add up on any open-loop row: the
+    per-tenant vectors (`tenant_n` / `tenant_ok` / `tenant_quota_shed` /
+    `tenant_goodput_rps`) must have exactly `tenants` entries, submits
+    must sum to n, per-tenant Ok replies to `ok`, per-tenant quota
+    rejections to `quota_shed`, and `jain_fairness` must be a valid
+    index in [1/T, 1];
   * dedup accounting doesn't add up: on cached rows every keyed submit
     is exactly one cache probe (hits + misses == replies) and every
     coalesced request was a miss first (coalesced <= misses); uncached
@@ -37,9 +43,16 @@ fails (exit 1) when:
     check silently checks nothing);
   * --require-fabrics is set and the sweep lacks a multi-shard run, or
     knee_rate(max fabrics) < knee_rate(fabrics=1) — adding shards must
-    never cost sustainable throughput (the scale-out claim).
+    never cost sustainable throughput (the scale-out claim);
+  * --require-tenants is set and the sweep ran single-tenant, or the
+    quota stage never fired (zero quota rejections across the sweep
+    means the gate exercised nothing), or an overloaded equal-quota row
+    reports a Jain fairness index below the floor — per-tenant quotas
+    must keep the skewed hot tenant from starving the background
+    tenants.
 
-Usage: ci/check_bench.py BENCH_serve.json [--require-overload] [--require-fabrics]
+Usage: ci/check_bench.py BENCH_serve.json [--require-overload]
+       [--require-fabrics] [--require-tenants]
 """
 
 import json
@@ -48,14 +61,22 @@ import sys
 CLOSED_FIELDS = ["workers", "rps", "p50_ms", "p99_ms", "queue_p50_ms", "batches"]
 OPEN_FIELDS = [
     "rate", "offered_rps", "achieved_rps", "goodput_rps", "sustained",
-    "ok", "rejected", "expired", "failed", "p50_ms", "p99_ms",
+    "ok", "rejected", "expired", "quota_shed", "failed", "p50_ms", "p99_ms",
     "high_ok", "low_ok", "high_rejected", "low_rejected",
     "high_expired", "low_expired", "high_goodput_rps", "low_goodput_rps",
     "high_p99_ms", "low_p99_ms",
     "hits", "misses", "coalesced",
     "fabrics", "fabric_leases", "fabric_occupancy", "fabric_peak",
     "leases_total",
+    "tenants", "tenant_n", "tenant_ok", "tenant_quota_shed",
+    "tenant_goodput_rps", "jain_fairness",
 ]
+
+# Fairness floor for overloaded equal-quota rows under --require-tenants.
+# The CI sweep's skewed hot tenant pushes Jain toward 1/T without quotas
+# (~0.75 at T=4 observed); with the quota stage isolating it the index
+# sits well above 0.9, so 0.8 separates the two regimes with margin.
+JAIN_FLOOR = 0.8
 
 
 def fail(msg: str) -> None:
@@ -71,11 +92,44 @@ def check_open_rows(rows: list, n: int, tag: str, cached: bool) -> None:
         for field in OPEN_FIELDS:
             if field not in row:
                 fail(f"{tag} row (rate={row.get('rate')}) missing field '{field}'")
-        replies = row["ok"] + row["rejected"] + row["expired"] + row["failed"]
+        replies = (
+            row["ok"] + row["rejected"] + row["expired"] + row["quota_shed"] + row["failed"]
+        )
         if replies != n:
             fail(
-                f"{tag} row rate={row['rate']}: ok+rejected+expired+failed={replies} != n={n} "
-                "(a submit did not resolve to exactly one reply)"
+                f"{tag} row rate={row['rate']}: ok+rejected+expired+quota_shed+failed="
+                f"{replies} != n={n} (a submit did not resolve to exactly one reply)"
+            )
+        tenants = row["tenants"]
+        if tenants < 1:
+            fail(f"{tag} row rate={row['rate']}: tenants={tenants} < 1")
+        for vec_field in ("tenant_n", "tenant_ok", "tenant_quota_shed", "tenant_goodput_rps"):
+            if len(row[vec_field]) != tenants:
+                fail(
+                    f"{tag} row rate={row['rate']}: {vec_field} has "
+                    f"{len(row[vec_field])} entries, expected tenants={tenants}"
+                )
+        if sum(row["tenant_n"]) != n:
+            fail(
+                f"{tag} row rate={row['rate']}: tenant_n sums to {sum(row['tenant_n'])} "
+                f"!= n={n} (a submit was charged to no tenant, or to two)"
+            )
+        if sum(row["tenant_ok"]) != row["ok"]:
+            fail(
+                f"{tag} row rate={row['rate']}: tenant_ok sums to {sum(row['tenant_ok'])} "
+                f"!= ok={row['ok']} (per-tenant Ok accounting has a hole)"
+            )
+        if sum(row["tenant_quota_shed"]) != row["quota_shed"]:
+            fail(
+                f"{tag} row rate={row['rate']}: tenant_quota_shed sums to "
+                f"{sum(row['tenant_quota_shed'])} != quota_shed={row['quota_shed']} "
+                "(a quota rejection was charged to no tenant, or to two)"
+            )
+        jain = row["jain_fairness"]
+        if not (1.0 / tenants - 1e-9 <= jain <= 1.0 + 1e-9):
+            fail(
+                f"{tag} row rate={row['rate']}: jain_fairness={jain} outside "
+                f"[1/{tenants}, 1] — not a valid Jain index"
             )
         hits, misses, coal = row["hits"], row["misses"], row["coalesced"]
         if cached:
@@ -119,9 +173,13 @@ def main() -> None:
     args = sys.argv[1:]
     require_overload = "--require-overload" in args
     require_fabrics = "--require-fabrics" in args
+    require_tenants = "--require-tenants" in args
     paths = [a for a in args if not a.startswith("--")]
     if len(paths) != 1:
-        fail("usage: check_bench.py BENCH_serve.json [--require-overload] [--require-fabrics]")
+        fail(
+            "usage: check_bench.py BENCH_serve.json [--require-overload] "
+            "[--require-fabrics] [--require-tenants]"
+        )
     path = paths[0]
 
     try:
@@ -207,6 +265,36 @@ def main() -> None:
                 "sustainable throughput"
             )
 
+    # The multi-tenant gate: the sweep must actually spread load across
+    # tenants, the quota stage must have fired at least once (otherwise
+    # the fairness check below gates nothing), and under overload the
+    # equal-quota tenants must share goodput fairly — the skewed hot
+    # tenant is what the quota stage exists to contain.
+    if require_tenants:
+        multi = [r for r in open_loop if r["tenants"] > 1]
+        if not multi:
+            fail(
+                "--require-tenants: every open-loop row ran single-tenant — "
+                "add --tenants to the CI sweep so the quota stage is exercised"
+            )
+        if sum(r["quota_shed"] for r in multi) == 0:
+            fail(
+                "--require-tenants: zero quota rejections across the multi-tenant "
+                "sweep — the quota stage never fired, so the fairness floor "
+                "below gates nothing (lower the quota or raise the swept rate)"
+            )
+        for row in multi:
+            if row["sustained"]:
+                continue
+            if row["jain_fairness"] < JAIN_FLOOR:
+                fail(
+                    f"open-loop row rate={row['rate']} (overloaded, "
+                    f"tenants={row['tenants']}): jain_fairness="
+                    f"{row['jain_fairness']:.3f} < {JAIN_FLOOR} — the quota stage "
+                    "is not isolating the background tenants from the hot tenant "
+                    f"(per-tenant goodput {row['tenant_goodput_rps']})"
+                )
+
     overloaded = [r for r in open_loop if not r["sustained"]]
     if require_overload and not overloaded:
         fail(
@@ -231,6 +319,13 @@ def main() -> None:
             f"  overloaded λ={row['rate']:.0f}: high goodput {row['high_goodput_rps']:.1f}/s "
             f"(ok={row['high_ok']}) >= low {row['low_goodput_rps']:.1f}/s (ok={row['low_ok']})"
         )
+    for row in open_loop:
+        if row["tenants"] > 1:
+            goodput = ", ".join(f"{g:.1f}" for g in row["tenant_goodput_rps"])
+            print(
+                f"  tenants λ={row['rate']:.0f}: jain={row['jain_fairness']:.3f} "
+                f"goodput=[{goodput}]/s quota_shed={row['quota_shed']}"
+            )
     if cache_cap > 0:
         hits = sum(r["hits"] for r in cached_rows)
         coal = sum(r["coalesced"] for r in cached_rows)

@@ -12,6 +12,14 @@
 //! and with retries folded in — so the value of honoring the hint is a
 //! number, not an assertion.
 //!
+//! Traffic is **multi-tenant**: one hot tenant offers half the load,
+//! three background tenants split the rest, and a per-tenant
+//! sliding-window quota sized below the hot tenant's offered rate
+//! isolates the background tenants from it.  `Quota` rejections carry
+//! the window-free time as their retry hint (the `Retry-After` analog)
+//! and join the same backoff-and-resubmit rounds as overload sheds; the
+//! summary prints per-tenant goodput and quota rejections.
+//!
 //!     cargo run --release --example serve -- [n_images] [rate_per_s] [workers] [retries] [fabrics]
 
 use aifa::agent::{CongestionLevel, EnvConfig, LevelPlacements, QAgent, QConfig, SchedulingEnv};
@@ -19,8 +27,8 @@ use aifa::data::TestSet;
 use aifa::platform::{CpuModel, FpgaPlatform};
 use aifa::power::PowerModel;
 use aifa::server::{
-    AdmissionConfig, ArbiterConfig, BatchConfig, CacheConfig, FabricArbiter, Priority, Reply,
-    Served, Server,
+    AdmissionConfig, ArbiterConfig, BatchConfig, CacheConfig, FabricArbiter, Priority,
+    QuotaConfig, RejectReason, Reply, RequestMeta, Served, Server, TenantId,
 };
 use aifa::util::rng::Rng;
 use aifa::util::stats::Samples;
@@ -34,7 +42,22 @@ struct Pending {
     /// Test-set index (for the accuracy check on `Ok`).
     idx: usize,
     priority: Priority,
+    tenant: TenantId,
     rx: std::sync::mpsc::Receiver<Reply>,
+}
+
+/// Tenant mix: tenant 0 is the hot tenant with half the offered load;
+/// the `BG_TENANTS` background tenants split the other half.  Priority
+/// cycles independently (every even request is High), so class and
+/// tenant stay decorrelated.
+const BG_TENANTS: usize = 3;
+
+fn tenant_of(i: usize) -> TenantId {
+    if i % 4 < 2 {
+        0
+    } else {
+        1 + (i % BG_TENANTS) as TenantId
+    }
 }
 
 /// Served-reply bookkeeping shared by the first pass and every retry
@@ -44,6 +67,8 @@ struct Tally {
     ok: usize,
     failed: usize,
     hits: usize,
+    /// `Rejected { reason: Quota }` replies seen (each also retries).
+    quota_rejected: usize,
     class_ok: [u64; 2],
     level_seen: [u64; 3],
     /// Reply provenance: engine / coalesced / cache (`Served` order).
@@ -73,7 +98,15 @@ fn collect_replies(
                     Served::Cache => 2,
                 }] += 1;
             }
-            Reply::Rejected { retry_hint, .. } => retry.push((p, retry_hint)),
+            // Quota and overload rejections both carry a server-chosen
+            // backoff — the window-free time vs the backlog-drain
+            // estimate — and both are worth honoring the same way.
+            Reply::Rejected { reason, retry_hint, .. } => {
+                if reason == RejectReason::Quota {
+                    t.quota_rejected += 1;
+                }
+                retry.push((p, retry_hint));
+            }
             Reply::Failed { .. } => t.failed += 1,
         }
     }
@@ -118,8 +151,19 @@ fn main() -> Result<()> {
     let arbiter = FabricArbiter::new(ArbiterConfig::for_pool(workers, fabrics));
     // Shed mode so overload produces retryable `Rejected` replies (the
     // default defer mode would absorb it in latency and the retry path
-    // would have nothing to do); Low sheds first.
-    let admission = AdmissionConfig::capped(32 * workers.max(1), true);
+    // would have nothing to do); Low sheds first.  The per-tenant quota
+    // is sized below the hot tenant's offered rate (half of λ) but well
+    // above each background tenant's share, so only the hot tenant
+    // trips it — fairness by admission, not by luck.
+    let quota_window = Duration::from_millis(500);
+    let quota = ((rate * quota_window.as_secs_f64() * 0.3).ceil() as usize).max(8);
+    let admission = AdmissionConfig::capped(32 * workers.max(1), true)
+        .with_quota(QuotaConfig::uniform(quota, quota_window.as_millis() as u64));
+    println!(
+        "tenant quota: {quota} per {} ms window (hot tenant offers ~{:.0}/window)",
+        quota_window.as_millis(),
+        rate * 0.5 * quota_window.as_secs_f64()
+    );
     // Dedup layer on: the replay wraps around the test set (and retries
     // resubmit the same image), so identical inputs recur — the cache
     // and coalescer answer them without burning engine capacity.
@@ -151,10 +195,14 @@ fn main() -> Result<()> {
     for i in 0..n {
         let img = ts.decode_batch(i % ts.n, 1)?;
         let priority = if i % 2 == 0 { Priority::High } else { Priority::Low };
+        let tenant = tenant_of(i);
         pending.push(Pending {
             idx: i % ts.n,
             priority,
-            rx: server.handle.submit_with(img, priority, None)?,
+            tenant,
+            rx: server
+                .handle
+                .submit_meta(img, RequestMeta::from(priority).with_tenant(tenant))?,
         });
         std::thread::sleep(Duration::from_secs_f64(rng.exp_capped(rate)));
     }
@@ -191,7 +239,11 @@ fn main() -> Result<()> {
                 Ok(Pending {
                     idx: p.idx,
                     priority: p.priority,
-                    rx: server.handle.submit_with(img, p.priority, None)?,
+                    tenant: p.tenant,
+                    rx: server.handle.submit_meta(
+                        img,
+                        RequestMeta::from(p.priority).with_tenant(p.tenant),
+                    )?,
                 })
             })
             .collect::<Result<_>>()?;
@@ -206,9 +258,20 @@ fn main() -> Result<()> {
     println!("\n-- results --");
     println!("{}", m.summary());
     println!(
-        "replies: ok={ok_total} (first-pass {ok_first} + retried {ok_retried}) rejected-first-pass={first_rejected} given-up={lost} failed={}",
-        tally.failed
+        "replies: ok={ok_total} (first-pass {ok_first} + retried {ok_retried}) rejected-first-pass={first_rejected} given-up={lost} failed={} quota-rejected={} (retried with the window-free hint)",
+        tally.failed, tally.quota_rejected
     );
+    println!("-- tenants (0 is hot) --");
+    for t in m.by_tenant() {
+        println!(
+            "tenant {}: goodput {:>6.1} ok/s (served {}), admitted {}, quota-rejected {}",
+            t.tenant,
+            t.served as f64 / wall,
+            t.served,
+            t.admitted,
+            t.quota_shed
+        );
+    }
     println!(
         "classes: high ok={} low ok={} (shed {:?}, Low first by design)",
         tally.class_ok[0],

@@ -11,17 +11,22 @@
 //!                 (fabric arbiter knobs: --fabrics / --shared-at /
 //!                  --saturated-at / --dma-budget-mb; admission knobs:
 //!                  --shed / --queue-cap [high,low] / --high-share /
-//!                  --deadline-ms; dedup knobs: --cache-cap /
-//!                  --cache-ttl-ms / --cache-fail-ttl-ms)
+//!                  --deadline-ms / --mix; tenant knobs: --tenants /
+//!                  --tenant-quota / --tenant-window-ms; dedup knobs:
+//!                  --cache-cap / --cache-ttl-ms / --cache-fail-ttl-ms)
 //!   bench serve   simulated-path serving sweeps -> BENCH_serve.json
 //!                 (closed-loop worker sweep + open-loop Poisson λ sweep,
-//!                  half High / half Low class, with per-class goodput +
-//!                  p99 and an auto-found knee: the max sustainable λ;
-//!                  --skew draws inputs Zipf-skewed, --cache-cap adds
-//!                  a second cached sweep -> open_loop_cached rows +
-//!                  cache_knee_rate next to the uncached knee_rate, and
-//!                  --fabrics M1,M2 repeats the uncached sweep per shard
-//!                  count -> fabric_knees shows what scale-out buys)
+//!                  --mix splitting submits across High/Low, with
+//!                  per-class goodput + p99 and an auto-found knee: the
+//!                  max sustainable λ; --tenants T spreads the offered
+//!                  load across a hot tenant + T-1 background tenants
+//!                  and lands per-tenant goodput + a Jain fairness index
+//!                  per row; --skew draws inputs Zipf-skewed,
+//!                  --cache-cap adds a second cached sweep ->
+//!                  open_loop_cached rows + cache_knee_rate next to the
+//!                  uncached knee_rate, and --fabrics M1,M2 repeats the
+//!                  uncached sweep per shard count -> fabric_knees shows
+//!                  what scale-out buys)
 
 use aifa::accel::AccelConfig;
 use aifa::agent::{
@@ -35,7 +40,8 @@ use aifa::platform::{CpuModel, FpgaPlatform};
 use aifa::runtime::ArtifactStore;
 use aifa::server::{
     AdmissionConfig, ArbiterConfig, BatchConfig, BatchEngine, CacheConfig, EngineFactory,
-    FabricArbiter, Priority, RejectReason, Reply, Served, Server, ServingPool, SimEngine,
+    FabricArbiter, Priority, QuotaConfig, RejectReason, Reply, RequestMeta, Served, Server,
+    ServingPool, SimEngine,
 };
 use aifa::util::cli::Cli;
 use aifa::util::json::Json;
@@ -78,7 +84,11 @@ fn main() {
         .opt("cache-ttl-ms", Some("1000"), "dedup: response cache entry lifetime in ms")
         .opt("cache-fail-ttl-ms", Some("0"), "dedup: negative-cache lifetime for Failed results in ms (0 = off)")
         .opt("skew", Some("0"), "bench serve: Zipf s-parameter for the open-loop input corpus (0 = every request unique)")
-        .flag("shed", "admission: reject (typed Rejected reply) instead of deferring under sustained saturation, Low class first");
+        .opt("mix", Some("0.5"), "fraction of submits in the High class (drives the per-class and per-tenant traffic split)")
+        .opt("tenants", Some("1"), "tenant count: 1 hot tenant (--mix of the traffic) + T-1 background tenants")
+        .opt("tenant-quota", Some("auto"), "per-tenant sliding-window budget (requests per window; auto = ceil(n/tenants) when tenants > 1, 0 = quotas off)")
+        .opt("tenant-window-ms", Some("1000"), "tenant quota sliding-window length in ms")
+        .flag("shed", "admission: reject (typed Rejected reply) instead of deferring under sustained saturation, lowest-weight class first");
     let args = match cli.parse(&rest) {
         Ok(a) => a,
         Err(msg) => {
@@ -262,39 +272,87 @@ fn arbiter_from_args(
 }
 
 /// Build the admission config from `--shed` / `--queue-cap` /
-/// `--high-share`.  The auto cap scales with the pool (64 requests of
-/// headroom per worker, per class); `--queue-cap H,L` caps the classes
-/// separately.
+/// `--high-share`: the classic two-class CLI mapped onto the weighted
+/// scheduler ([`AdmissionConfig::two_class`]).  The auto cap scales with
+/// the pool (64 requests of headroom per worker, per class);
+/// `--queue-cap H,L` caps the classes separately.
 fn admission_from_args(args: &aifa::util::cli::Args, workers: usize) -> Result<AdmissionConfig> {
     let auto = 64 * workers.max(1);
-    let mut cfg = AdmissionConfig {
-        queue_cap: [auto, auto],
-        shed: args.has("shed"),
-        ..AdmissionConfig::default()
-    };
+    let mut caps = [auto, auto];
     match args.get("queue-cap") {
         Some("auto") | None => {}
         Some(_) => {
-            let caps = args.get_usize_list("queue-cap").ok_or_else(|| {
+            let parsed = args.get_usize_list("queue-cap").ok_or_else(|| {
                 anyhow::anyhow!("--queue-cap wants a request count, a high,low pair, or 'auto'")
             })?;
-            cfg.queue_cap = match caps[..] {
+            caps = match parsed[..] {
                 [both] => [both, both],
                 [high, low] => [high, low],
                 _ => anyhow::bail!("--queue-cap wants at most two values (high,low)"),
             };
         }
     }
+    let mut share = 0.75;
     if let Some(v) = args.get("high-share") {
-        let share: f64 = v
+        share = v
             .parse()
             .map_err(|_| anyhow::anyhow!("--high-share wants a fraction in 0..=1"))?;
         if !(0.0..=1.0).contains(&share) {
             anyhow::bail!("--high-share must be within 0..=1, got {share}");
         }
-        cfg.high_share = share;
     }
-    Ok(cfg)
+    Ok(AdmissionConfig::two_class(caps, share, args.has("shed")))
+}
+
+/// The High class's effective batch share under the configured weights
+/// (for display/JSON continuity with the old `high_share` knob).
+fn high_share_of(cfg: &AdmissionConfig) -> f64 {
+    let total: u64 = cfg.classes.iter().map(|c| c.weight as u64).sum();
+    if total == 0 {
+        1.0
+    } else {
+        cfg.classes[0].weight as f64 / total as f64
+    }
+}
+
+/// `--tenants`: how many tenants the serving drivers spread traffic over.
+fn tenants_from_args(args: &aifa::util::cli::Args) -> Result<usize> {
+    let t = args.get_usize("tenants").unwrap_or(1);
+    if t == 0 {
+        anyhow::bail!("--tenants must be ≥ 1");
+    }
+    Ok(t)
+}
+
+/// `--mix`: fraction of submits in the High class (and, with multiple
+/// tenants, the hot tenant's share of the offered load).
+fn mix_from_args(args: &aifa::util::cli::Args) -> Result<f64> {
+    let m = args.get_f64("mix").unwrap_or(0.5);
+    if !(0.0..=1.0).contains(&m) || !m.is_finite() {
+        anyhow::bail!("--mix must be a fraction in 0..=1, got {m}");
+    }
+    Ok(m)
+}
+
+/// Build the tenant quota from `--tenant-quota` / `--tenant-window-ms`.
+/// `auto` budgets each tenant its equal share of the run (`ceil(n/T)`
+/// per window) once more than one tenant exists — enough that balanced
+/// traffic never trips it while a hot tenant does; `0` disables quotas.
+fn quota_from_args(args: &aifa::util::cli::Args, n: usize, tenants: usize) -> Result<QuotaConfig> {
+    let window_ms = args.get_u64("tenant-window-ms").unwrap_or(1000).max(1);
+    let quota = match args.get("tenant-quota") {
+        Some("auto") | None => {
+            if tenants > 1 {
+                n.div_ceil(tenants)
+            } else {
+                0
+            }
+        }
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--tenant-quota wants a request count, 0, or 'auto'"))?,
+    };
+    Ok(if quota == 0 { QuotaConfig::off() } else { QuotaConfig::uniform(quota, window_ms) })
 }
 
 /// Build the dedup config from `--cache-cap` / `--cache-ttl-ms`.  The
@@ -364,14 +422,39 @@ fn deadline_from_args(args: &aifa::util::cli::Args) -> Result<Option<Duration>> 
     }
 }
 
-/// The serving drivers split traffic half/half across the two priority
-/// classes: even submissions are High, odd are Low — deterministic, so
-/// per-class counts are exactly reproducible.
-fn class_of(i: usize) -> Priority {
-    if i % 2 == 0 {
+/// Deterministic `--mix` split: submit `i` draws the marked side iff the
+/// integer count of marked submits grows at `i` — every prefix of the
+/// stream holds a marked fraction within one request of `mix`, so
+/// per-class and per-tenant counts are exactly reproducible (and at
+/// `mix = 0.5` the historical even/odd alternation comes back).
+fn mix_on(i: usize, mix: f64) -> bool {
+    ((i + 1) as f64 * mix).floor() > (i as f64 * mix).floor()
+}
+
+/// Class split driven by `--mix`: the marked fraction is High.
+fn class_of(i: usize, mix: f64) -> Priority {
+    if mix_on(i, mix) {
         Priority::High
     } else {
         Priority::Low
+    }
+}
+
+/// Tenant split driven by `--mix`: tenant 0 is the *hot* tenant carrying
+/// `mix` of the offered load, the rest round-robins across the T-1
+/// background tenants.  The hot draw uses a golden-ratio hash of `i`
+/// (not `mix_on`) so tenant and class are decorrelated — the hot tenant
+/// submits both classes, which is what makes per-tenant fairness
+/// orthogonal to per-class priority in the bench rows.
+fn tenant_of(i: usize, mix: f64, tenants: usize) -> u32 {
+    if tenants <= 1 {
+        return 0;
+    }
+    let u = ((i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 40) as f64 / (1u64 << 24) as f64;
+    if u < mix {
+        0
+    } else {
+        1 + (i % (tenants - 1)) as u32
     }
 }
 
@@ -407,7 +490,10 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
     let fabrics = fabrics_from_args(args)?;
     let arbiter = arbiter_from_args(args, workers, fabrics)?;
     let acfg = arbiter.config();
-    let admission = admission_from_args(args, workers)?;
+    let tenants = tenants_from_args(args)?;
+    let mix = mix_from_args(args)?;
+    let quota = quota_from_args(args, n, tenants)?;
+    let admission = admission_from_args(args, workers)?.with_quota(quota.clone());
     println!(
         "arbiter: fabrics={} shared_at={} saturated_at={} dma_budget={} MiB window={} ms generation={}",
         arbiter.fabrics(),
@@ -419,12 +505,19 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
     );
     let deadline = deadline_from_args(args)?;
     println!(
-        "admission: queue_cap={}/{} (high/low) high_share={:.2} deadline={} mode={}",
-        admission.queue_cap[0],
-        admission.queue_cap[1],
-        admission.high_share,
+        "admission: queue_cap={}/{} (high/low) high_share={:.2} mix={:.2} deadline={} mode={}",
+        admission.classes[0].queue_cap,
+        admission.classes[1].queue_cap,
+        high_share_of(&admission),
+        mix,
         deadline.map_or("none".to_string(), |d| format!("{} ms", d.as_millis())),
         if admission.shed { "shed" } else { "defer" }
+    );
+    println!(
+        "tenants: {} quota={} window={} ms",
+        tenants,
+        if quota.enabled() { quota.quota_for(0).to_string() } else { "off".to_string() },
+        quota.window.as_millis()
     );
     let cache = cache_from_args(args, aifa::agent::Policy::name(&policy))?;
     println!(
@@ -456,10 +549,14 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
     let mut pending = Vec::with_capacity(n);
     for i in 0..n {
         let img = ts.decode_batch(i % ts.n, 1)?;
-        pending.push((i % ts.n, class_of(i), server.handle.submit_with(img, class_of(i), deadline)?));
+        let class = class_of(i, mix);
+        let mut meta = RequestMeta::class(class.index()).with_tenant(tenant_of(i, mix, tenants));
+        meta.deadline = deadline;
+        pending.push((i % ts.n, class, server.handle.submit_meta(img, meta)?));
     }
     let mut hits = 0usize;
-    let (mut ok, mut rejected, mut expired, mut failed) = (0usize, 0usize, 0usize, 0usize);
+    let (mut ok, mut rejected, mut expired, mut quota_shed, mut failed) =
+        (0usize, 0usize, 0usize, 0usize, 0usize);
     let mut class_ok = [0u64; 2];
     let mut level_seen = [0u64; 3];
     let mut served_seen = [0u64; 3]; // engine / coalesced / cache
@@ -478,6 +575,7 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
             }
             Reply::Rejected { reason: RejectReason::Overload, .. } => rejected += 1,
             Reply::Rejected { reason: RejectReason::Deadline, .. } => expired += 1,
+            Reply::Rejected { reason: RejectReason::Quota, .. } => quota_shed += 1,
             Reply::Failed { .. } => failed += 1,
         }
     }
@@ -486,7 +584,7 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
     let shed_c = server.metrics.shed_by_class();
     let exp_c = server.metrics.expired_by_class();
     println!(
-        "replies: ok={ok} rejected={rejected} expired={expired} failed={failed}  responses by level: free={} shared={} saturated={}  peak in-flight leases={}",
+        "replies: ok={ok} rejected={rejected} expired={expired} quota_shed={quota_shed} failed={failed}  responses by level: free={} shared={} saturated={}  peak in-flight leases={}",
         level_seen[0],
         level_seen[1],
         level_seen[2],
@@ -508,6 +606,14 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
         "classes: high ok={} shed={} expired={}  low ok={} shed={} expired={}",
         class_ok[0], shed_c[0], exp_c[0], class_ok[1], shed_c[1], exp_c[1]
     );
+    if tenants > 1 {
+        for t in server.metrics.by_tenant() {
+            println!(
+                "tenant {}: admitted={} served={} quota_shed={}",
+                t.tenant, t.admitted, t.served, t.quota_shed
+            );
+        }
+    }
     println!(
         "workers={workers} accuracy={:.4} goodput={:.1} ok/s (offered {:.1} req/s) over {wall:.2}s",
         hits as f64 / ok.max(1) as f64,
@@ -553,6 +659,9 @@ struct OpenLoopRow {
     rejected: u64,
     /// Deadline rejections (`RejectReason::Deadline`).
     expired: u64,
+    /// Quota rejections (`RejectReason::Quota`): the tenant's sliding
+    /// window was out of budget.  Zero whenever quotas are off.
+    quota_shed: u64,
     failed: u64,
     p50_ms: f64,
     p99_ms: f64,
@@ -590,6 +699,34 @@ struct OpenLoopRow {
     fabric_peak: Vec<usize>,
     /// Leases granted across every shard (arbiter-side total).
     leases_total: u64,
+    /// Tenants the offered load was spread across for this run.
+    tenants: usize,
+    /// Submits per tenant (client-side, sums to `n`).
+    tenant_n: Vec<u64>,
+    /// `Ok` replies per tenant (sums to `ok`).
+    tenant_ok: Vec<u64>,
+    /// Quota rejections per tenant (sums to `quota_shed`).
+    tenant_quota_shed: Vec<u64>,
+    /// Per-tenant goodput (`Ok` replies of that tenant per second).
+    tenant_goodput_rps: Vec<f64>,
+    /// Jain fairness index over per-tenant goodput: (Σx)²/(T·Σx²), 1.0
+    /// = perfectly equal shares, 1/T = one tenant took everything.
+    jain_fairness: f64,
+}
+
+/// Jain's fairness index over per-tenant goodput.  1.0 for a single
+/// tenant or an all-zero vector (nothing served is trivially "fair").
+fn jain_index(xs: &[f64]) -> f64 {
+    if xs.len() <= 1 {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq <= 0.0 {
+        1.0
+    } else {
+        sum * sum / (xs.len() as f64 * sq)
+    }
 }
 
 fn sim_factory(work: usize) -> Arc<EngineFactory> {
@@ -650,12 +787,15 @@ fn run_sim_serve(workers: usize, n: usize, work: usize, wait: Duration) -> Resul
 
 /// One open-loop run: Poisson arrivals at `rate` req/s (exponential
 /// inter-arrival gaps, offered load independent of completions), split
-/// half/half across the High/Low priority classes, every typed reply
+/// across the High/Low priority classes by `mix` and across `tenants`
+/// tenants (tenant 0 hot, the rest background), every typed reply
 /// collected afterwards.  Open-loop latency percentiles expose queueing
 /// collapse that closed-loop throughput sweeps hide, the per-level
-/// occupancy shows the arbiter quantizing that load, and with shedding
+/// occupancy shows the arbiter quantizing that load, with shedding
 /// enabled the per-class ok/rejected split shows admission control
-/// sacrificing Low-class goodput to hold the High class's.
+/// sacrificing Low-class goodput to hold the High class's, and with
+/// quotas on the per-tenant split + Jain index show the quota stage
+/// holding fairness against the hot tenant.
 #[allow(clippy::too_many_arguments)]
 fn run_open_loop(
     workers: usize,
@@ -669,6 +809,8 @@ fn run_open_loop(
     cache: CacheConfig,
     skew: f64,
     fabrics: usize,
+    mix: f64,
+    tenants: usize,
 ) -> Result<OpenLoopRow> {
     let cfg = BatchConfig { max_wait: wait, max_batch: 8 };
     let pool = ServingPool::start_cached(
@@ -692,13 +834,19 @@ fn run_open_loop(
     let mut rng = Rng::new(seed);
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(n);
+    let mut tenant_n = vec![0u64; tenants];
     for i in 0..n {
         let mut img = base.clone();
         img[0] = match &zipf {
             Some(z) => z.sample(&mut rng) as f32,
             None => i as f32,
         };
-        pending.push((class_of(i), handle.submit_with(img, class_of(i), deadline)?));
+        let class = class_of(i, mix);
+        let tenant = tenant_of(i, mix, tenants);
+        tenant_n[tenant as usize] += 1;
+        let mut meta = RequestMeta::class(class.index()).with_tenant(tenant);
+        meta.deadline = deadline;
+        pending.push((class, tenant, handle.submit_meta(img, meta)?));
         // rate-relative cap (10 mean gaps): the old fixed 50 ms cap
         // silently distorted the offered load of every λ below ~20/s
         std::thread::sleep(Duration::from_secs_f64(rng.exp_capped(rate)));
@@ -710,15 +858,19 @@ fn run_open_loop(
     // Cache hits count: a hit IS the request served (engine-served
     // coalesced waiters are already folded into `served`).
     let served_at_arrival_end = pool.metrics.served() + pool.metrics.cache_hits();
-    let (mut ok, mut rejected, mut expired, mut failed) = (0u64, 0u64, 0u64, 0u64);
+    let (mut ok, mut rejected, mut expired, mut quota_shed, mut failed) =
+        (0u64, 0u64, 0u64, 0u64, 0u64);
     let mut class_ok = [0u64; 2];
     let mut class_rejected = [0u64; 2];
     let mut class_expired = [0u64; 2];
-    for (class, rx) in pending {
+    let mut tenant_ok = vec![0u64; tenants];
+    let mut tenant_quota_shed = vec![0u64; tenants];
+    for (class, tenant, rx) in pending {
         match rx.recv()? {
             Reply::Ok(_) => {
                 ok += 1;
                 class_ok[class.index()] += 1;
+                tenant_ok[tenant as usize] += 1;
             }
             Reply::Rejected { reason: RejectReason::Overload, .. } => {
                 rejected += 1;
@@ -727,6 +879,10 @@ fn run_open_loop(
             Reply::Rejected { reason: RejectReason::Deadline, .. } => {
                 expired += 1;
                 class_expired[class.index()] += 1;
+            }
+            Reply::Rejected { reason: RejectReason::Quota, .. } => {
+                quota_shed += 1;
+                tenant_quota_shed[tenant as usize] += 1;
             }
             Reply::Failed { .. } => failed += 1,
         }
@@ -748,6 +904,9 @@ fn run_open_loop(
     // λ exceeded serving capacity.
     let pipeline = (2 * workers * cfg.max_batch + cfg.max_batch) as u64;
     let sustained = (n as u64).saturating_sub(served_at_arrival_end) <= pipeline + n as u64 / 20;
+    let tenant_goodput_rps: Vec<f64> =
+        tenant_ok.iter().map(|&x| x as f64 / wall.max(1e-9)).collect();
+    let jain_fairness = jain_index(&tenant_goodput_rps);
     let row = OpenLoopRow {
         rate,
         offered_rps: n as f64 / arrival_wall.max(1e-9),
@@ -758,6 +917,7 @@ fn run_open_loop(
         ok,
         rejected,
         expired,
+        quota_shed,
         failed,
         p50_ms: ms(merged.latency.p50()),
         p99_ms: ms(merged.latency.p99()),
@@ -781,6 +941,12 @@ fn run_open_loop(
         fabric_occupancy: arbiter.occupancies(),
         fabric_peak: arbiter.peak_by_fabric(),
         leases_total: arbiter.leases_granted(),
+        tenants,
+        tenant_n,
+        tenant_ok,
+        tenant_quota_shed,
+        tenant_goodput_rps,
+        jain_fairness,
     };
     drop(handle);
     pool.shutdown();
@@ -803,6 +969,7 @@ fn open_loop_json(rows: &[OpenLoopRow]) -> Vec<Json> {
                 ("ok", Json::num(r.ok as f64)),
                 ("rejected", Json::num(r.rejected as f64)),
                 ("expired", Json::num(r.expired as f64)),
+                ("quota_shed", Json::num(r.quota_shed as f64)),
                 ("failed", Json::num(r.failed as f64)),
                 ("p50_ms", Json::num(r.p50_ms)),
                 ("p99_ms", Json::num(r.p99_ms)),
@@ -838,6 +1005,26 @@ fn open_loop_json(rows: &[OpenLoopRow]) -> Vec<Json> {
                     Json::Arr(r.fabric_peak.iter().map(|&x| Json::num(x as f64)).collect()),
                 ),
                 ("leases_total", Json::num(r.leases_total as f64)),
+                ("tenants", Json::num(r.tenants as f64)),
+                (
+                    "tenant_n",
+                    Json::Arr(r.tenant_n.iter().map(|&x| Json::num(x as f64)).collect()),
+                ),
+                (
+                    "tenant_ok",
+                    Json::Arr(r.tenant_ok.iter().map(|&x| Json::num(x as f64)).collect()),
+                ),
+                (
+                    "tenant_quota_shed",
+                    Json::Arr(
+                        r.tenant_quota_shed.iter().map(|&x| Json::num(x as f64)).collect(),
+                    ),
+                ),
+                (
+                    "tenant_goodput_rps",
+                    Json::Arr(r.tenant_goodput_rps.iter().map(|&x| Json::num(x)).collect()),
+                ),
+                ("jain_fairness", Json::num(r.jain_fairness)),
             ])
         })
         .collect()
@@ -893,21 +1080,30 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
     // sweep just records where queueing collapses; with --shed the same
     // sweep shows admission control trading Low-class rejections for
     // High-class goodput
-    let mut admission = admission_from_args(args, ol_workers)?;
+    let tenants = tenants_from_args(args)?;
+    let mix = mix_from_args(args)?;
+    let quota = quota_from_args(args, n, tenants)?;
+    let mut admission = admission_from_args(args, ol_workers)?.with_quota(quota.clone());
     if !admission.shed && matches!(args.get("queue-cap"), Some("auto") | None) {
-        admission.queue_cap = [usize::MAX, usize::MAX];
+        for c in &mut admission.classes {
+            c.queue_cap = usize::MAX;
+        }
     }
     let deadline = deadline_from_args(args)?;
     let skew = skew_from_args(args)?;
     let cache = cache_from_args(args, aifa::agent::Policy::name(&GreedyStep))?;
     println!(
-        "open-loop: inter-arrival cap 10/λ (rate-relative; a fixed 50 ms cap distorted λ < 20/s), half High / half Low, admission queue_cap={}/{} high_share={:.2} deadline={} mode={} skew={}",
-        admission.queue_cap[0],
-        admission.queue_cap[1],
-        admission.high_share,
+        "open-loop: inter-arrival cap 10/λ (rate-relative; a fixed 50 ms cap distorted λ < 20/s), mix={:.2} High, admission queue_cap={}/{} high_share={:.2} deadline={} mode={} skew={} tenants={} quota={} window={} ms",
+        mix,
+        admission.classes[0].queue_cap,
+        admission.classes[1].queue_cap,
+        high_share_of(&admission),
         deadline.map_or("none".to_string(), |d| format!("{} ms", d.as_millis())),
         if admission.shed { "shed" } else { "defer" },
-        skew
+        skew,
+        tenants,
+        if quota.enabled() { quota.quota_for(0).to_string() } else { "off".to_string() },
+        quota.window.as_millis()
     );
     // One open-loop sweep over the λ grid under a given dedup config and
     // shard count.  Run uncached first (all pre-cache fields and the knee
@@ -920,10 +1116,22 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
         let mut ol_rows = Vec::new();
         for &rate in &rates {
             let r = run_open_loop(
-                ol_workers, n, work, wait, rate, seed, admission, deadline, ccfg, skew, fabrics,
+                ol_workers,
+                n,
+                work,
+                wait,
+                rate,
+                seed,
+                admission.clone(),
+                deadline,
+                ccfg,
+                skew,
+                fabrics,
+                mix,
+                tenants,
             )?;
             println!(
-                "[{tag}] λ={:<8.0} offered={:>9.1}/s workers={} achieved={:>9.1}/s goodput={:>9.1}/s {} ok/rej/exp/fail={}/{}/{}/{} p50={:>8.3}ms p99={:>8.3}ms queue p50={:>8.3}ms levels={:.2}/{:.2}/{:.2} peak-leases={}",
+                "[{tag}] λ={:<8.0} offered={:>9.1}/s workers={} achieved={:>9.1}/s goodput={:>9.1}/s {} ok/rej/exp/quota/fail={}/{}/{}/{}/{} p50={:>8.3}ms p99={:>8.3}ms queue p50={:>8.3}ms levels={:.2}/{:.2}/{:.2} peak-leases={}",
                 r.rate,
                 r.offered_rps,
                 r.workers,
@@ -933,6 +1141,7 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
                 r.ok,
                 r.rejected,
                 r.expired,
+                r.quota_shed,
                 r.failed,
                 r.p50_ms,
                 r.p99_ms,
@@ -955,6 +1164,19 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
                 r.class_expired[1],
                 r.class_p99_ms[1]
             );
+            if r.tenants > 1 {
+                println!(
+                    "  tenants: n={:?} ok={:?} quota_shed={:?} goodput={:?} jain={:.3}",
+                    r.tenant_n,
+                    r.tenant_ok,
+                    r.tenant_quota_shed,
+                    r.tenant_goodput_rps
+                        .iter()
+                        .map(|x| (x * 10.0).round() / 10.0)
+                        .collect::<Vec<f64>>(),
+                    r.jain_fairness
+                );
+            }
             if ccfg.enabled() {
                 println!(
                     "  dedup: hits={} misses={} coalesced={} (hit rate {:.2})",
@@ -1041,7 +1263,14 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
     put("n", Json::num(n as f64));
     put("work_passes", Json::num(work as f64));
     put("shed", Json::Bool(admission.shed));
-    put("high_share", Json::num(admission.high_share));
+    put("high_share", Json::num(high_share_of(&admission)));
+    put("mix", Json::num(mix));
+    put("tenants", Json::num(tenants as f64));
+    put(
+        "tenant_quota",
+        Json::num(if quota.enabled() { quota.quota_for(0) as f64 } else { 0.0 }),
+    );
+    put("tenant_window_ms", Json::num(quota.window.as_secs_f64() * 1e3));
     put(
         "deadline_ms",
         deadline.map_or(Json::num(0.0), |d| Json::num(d.as_secs_f64() * 1e3)),

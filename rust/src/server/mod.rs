@@ -8,9 +8,9 @@
 //!
 //! ```text
 //!   clients --(mpsc ingress, depth-tracked)--> dispatcher --(batch queue)--> worker 0..N-1
-//!            [submit_with -> Receiver<Reply>]  [admission, stage order:     [own ArtifactStore
-//!             priority High | Low               1. cache: content key in     + Coordinator
-//!             optional deadline                    the TTL'd response LRU    + plan cache
+//!            [submit_meta -> Receiver<Reply>]  [admission, stage order:     [own ArtifactStore
+//!             class 0..C-1 (High/Low = 0/1)     1. cache: content key in     + Coordinator
+//!             tenant id, optional deadline         the TTL'd response LRU    + plan cache
 //!             content key when caching:           -> Reply::Ok (Cache) |     + metric shard
 //!              (input hash, policy id,              Reply::Failed (negative  + response-cache
 //!               class, fabric generation)]          entry, fail TTL armed)    insert on Ok /
@@ -19,21 +19,25 @@
 //!                                                 attach slot + own             | per batch
 //!                                                 timestamp, fan-out            v
 //!                                                 reply later               [fabric routing:
-//!                                              3. deadline: expired or       plan peek -> CPU-only
-//!                                                 predicted-miss -> Rejected  skips leasing; else
-//!                                              4. overload: per-class caps    route() picks the
-//!                                                 + sustained Saturated       least-congested of
-//!                                                 -> shed Low first | defer]  M fabric shards
-//!                                              [staging: EDF within High,     (level, occupancy,
-//!                                               FIFO within Low]              in-flight tie-break)
-//!                                              [batch: high_share slots       and leases on it]
-//!                                               to High, rest to Low]            |
-//!                                                                            shard 0..M-1
-//!                                                                            [own Fabric, lease
-//!                                                                             ledger, DMA budget,
-//!                                                                             epoch; federated
-//!                                                                             view: Saturated only
-//!                                                                             when ALL shards are]
+//!                                              3. quota: tenant's sliding-  plan peek -> CPU-only
+//!                                                 window budget full ->      skips leasing; else
+//!                                                 Rejected { Quota,          route() picks the
+//!                                                 retry_hint = window free } least-congested of
+//!                                                 (cache hits + attaches     M fabric shards
+//!                                                 charge the window too)     (level, occupancy,
+//!                                              4. deadline: expired or       in-flight tie-break)
+//!                                                 predicted-miss -> Rejected and leases on it]
+//!                                              5. overload: per-class caps       |
+//!                                                 + sustained Saturated      shard 0..M-1
+//!                                                 -> shed lowest weight      [own Fabric, lease
+//!                                                 first | defer]              ledger, DMA budget,
+//!                                              [staging: EDF within class 0,  epoch; federated
+//!                                               FIFO elsewhere]               view: Saturated only
+//!                                              [batch: deficit-round-robin    when ALL shards are]
+//!                                               fill — weight-proportional
+//!                                               quanta, largest deficit
+//!                                               wins the slot, unused
+//!                                               quantum spills]
 //! ```
 //!
 //! * **Typed replies** — every accepted `submit` terminates in exactly
@@ -42,15 +46,27 @@
 //!   when an engine errors or the pool has no live worker.  Response
 //!   channels are never silently dropped, so a submitter blocked on
 //!   `recv` always wakes with an answer.
-//! * **Priority classes** ([`Priority`]) — every request carries a
-//!   High/Low class (the paper's "prioritize certain inference
-//!   requests", §III.C).  The dispatcher stages the ingress into one
-//!   queue per class; each dispatched batch reserves
-//!   [`AdmissionConfig::high_share`] of its slots for the High class
-//!   (spilling unused reservations to Low and vice versa, so neither
-//!   class starves a half-empty batch), and overload shedding starts
-//!   with the Low queue — High requests shed only after Low has been
-//!   trimmed in the same round, and only past High's own cap.
+//! * **Scheduling classes** ([`sched::ClassConfig`]) — every request
+//!   carries a class index (the paper's "prioritize certain inference
+//!   requests", §III.C; [`Priority`] maps the classic High/Low pair to
+//!   indexes 0/1).  The dispatcher stages the ingress into one queue
+//!   per class and fills each batch **deficit-round-robin**
+//!   ([`sched::Scheduler`]): every round refills each backlogged
+//!   class's deficit with its weight-proportional quantum, the largest
+//!   deficit wins each slot, and unused quantum spills — so served
+//!   ratios converge to the configured weights under sustained backlog
+//!   and no class starves a half-empty batch.  Overload shedding runs
+//!   lowest-weight-first; the premium class sheds only after its
+//!   siblings have been trimmed in the same round, and only past its
+//!   own cap.
+//! * **Tenant quotas** ([`sched::QuotaConfig`], default off) — every
+//!   request is accounted against its [`sched::TenantId`]'s sliding
+//!   window; when the window is full the quota stage (after coalesce,
+//!   before deadline) answers `Rejected { reason: Quota, retry_hint }`
+//!   where the hint is the time until the window frees (the
+//!   `Retry-After` analog).  Cache hits and coalesced attaches charge
+//!   the window too — served work is served work — and per-tenant
+//!   admitted/quota-shed/served counters land in [`pool::PoolMetrics`].
 //! * **Deduplication** ([`CacheConfig`], default off) — when a response
 //!   cache is configured (`--cache-cap` > 0) every request is
 //!   content-addressed at submit time ([`content_key`]: input hash,
@@ -79,21 +95,22 @@
 //!   fabric lease.  Predicted-miss rejection is an estimate, not a
 //!   bound: a request admitted on an optimistic prediction runs to
 //!   completion (and replies `Ok`, late) even if it expires in the
-//!   worker pipeline.  Within the High staged queue, deadline-carrying
-//!   requests dispatch **earliest-deadline-first**
-//!   ([`AdmissionConfig::edf`], on by default): a tight deadline jumps
-//!   ahead of looser ones instead of expiring behind them, and
+//!   worker pipeline.  Within the class-0 staged queue, deadline-
+//!   carrying requests dispatch **earliest-deadline-first**
+//!   ([`sched::AdmissionConfig::edf`], on by default): a tight deadline
+//!   jumps ahead of looser ones instead of expiring behind them, and
 //!   deadline-free requests keep FIFO order among themselves at the
 //!   back.
-//! * **Admission** ([`AdmissionConfig`]) — per-class staged depths are
-//!   tracked live; when a class passes its `queue_cap` (or the combined
-//!   backlog passes the combined cap) while the shared arbiter reports
-//!   `Saturated` over a sustained window, the dispatcher either **sheds**
-//!   overflow requests Low-first (immediate `Reply::Rejected` with a
-//!   retry hint) or **defers** (keeps queueing but throttles dispatch so
-//!   the fabric drains).  CPU-only batches take no fabric lease (plan
-//!   peek), so they neither exert slot pressure nor trigger the
-//!   saturation they would then be shed for.
+//! * **Admission** ([`sched::AdmissionConfig`]) — per-class staged
+//!   depths are tracked live; when a class passes its `queue_cap` (or
+//!   the combined backlog passes the combined cap) while the shared
+//!   arbiter reports `Saturated` over a sustained window, the
+//!   dispatcher either **sheds** overflow requests lowest-weight-first
+//!   (immediate `Reply::Rejected` with a retry hint) or **defers**
+//!   (keeps queueing but throttles dispatch so the fabric drains).
+//!   CPU-only batches take no fabric lease (plan peek), so they neither
+//!   exert slot pressure nor trigger the saturation they would then be
+//!   shed for.
 //! * **Dispatcher** — one thread coalesces requests up to the largest
 //!   compiled batch within the latency window ([`BatchConfig`]), then
 //!   hands whole batches to a shared work queue; idle workers pick up the
@@ -129,12 +146,15 @@
 
 pub mod arbiter;
 pub mod pool;
+pub mod sched;
 
 pub use arbiter::{ArbiterConfig, FabricArbiter, FabricLease};
 pub use pool::{
     AdmissionStats, BatchEngine, BatchOutput, CachedOutcome, CoordEngine, EngineFactory,
-    MetricShard, PoolMetrics, ResponseCache, ServingPool, ShardSamples, SimEngine,
+    MetricShard, PoolMetrics, ResponseCache, ServingPool, ShardSamples, SimEngine, TenantCounters,
+    TenantTotals,
 };
+pub use sched::{AdmissionConfig, ClassConfig, QuotaConfig, Scheduler, TenantId, TenantLedger};
 
 use crate::agent::{CongestionLevel, Policy, SchedulingEnv};
 use crate::runtime::ArtifactStore;
@@ -197,6 +217,10 @@ pub enum RejectReason {
     /// current congestion level) would miss it — executing it would
     /// burn capacity on a reply the client no longer wants.
     Deadline,
+    /// The tenant's sliding-window budget ([`sched::QuotaConfig`]) was
+    /// already spent; `retry_hint` is the time until the window frees
+    /// (the `Retry-After` analog).
+    Quota,
 }
 
 /// How a request was answered `Ok` — the provenance of the response.
@@ -229,13 +253,16 @@ impl std::fmt::Display for Served {
 }
 
 /// Content-address one request: FNV-1a over the image's f32 bit
-/// patterns, folded with the policy id, the priority class, and the
+/// patterns, folded with the policy id, the scheduling class, and the
 /// fabric generation.  Two submits collide exactly when the engine
 /// would produce the same response for both — same input, same policy,
 /// same batch class, same fabric epoch — which is what makes the key
 /// safe to coalesce and cache on.  Computed at submit time so the
-/// dispatcher's lookup is a single map probe.
-pub fn content_key(image: &[f32], policy_id: u64, class: Priority, generation: u64) -> u64 {
+/// dispatcher's lookup is a single map probe.  The tenant is
+/// deliberately *not* folded in: identical work is identical work, and
+/// cross-tenant dedup is the point of content addressing (each tenant's
+/// window is still charged for its own submits).
+pub fn content_key(image: &[f32], policy_id: u64, class: usize, generation: u64) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     let mut mix = |word: u64| {
         h ^= word;
@@ -245,7 +272,7 @@ pub fn content_key(image: &[f32], policy_id: u64, class: Priority, generation: u
         mix(x.to_bits() as u64);
     }
     mix(policy_id);
-    mix(class.index() as u64);
+    mix(class as u64);
     mix(generation);
     h
 }
@@ -258,7 +285,7 @@ pub fn content_key(image: &[f32], policy_id: u64, class: Priority, generation: u
 /// dispatcher to treat the duplicate as a fresh primary instead — no
 /// waiter can ever be stranded on an already-resolved slot.
 pub struct CoalesceSlot {
-    waiters: Mutex<Option<Vec<(Sender<Reply>, Instant)>>>,
+    waiters: Mutex<Option<Vec<(Sender<Reply>, Instant, sched::TenantId)>>>,
 }
 
 impl CoalesceSlot {
@@ -267,14 +294,15 @@ impl CoalesceSlot {
     }
 
     /// Attach one duplicate's reply sender together with *its own*
-    /// enqueue timestamp; `false` when the slot has already resolved
-    /// (the duplicate must become its own primary).  The timestamp lets
-    /// the fan-out price each waiter's queueing delay and wall latency
-    /// exactly instead of inheriting the primary's.
-    pub fn attach(&self, tx: Sender<Reply>, enqueued: Instant) -> bool {
+    /// enqueue timestamp and tenant; `false` when the slot has already
+    /// resolved (the duplicate must become its own primary).  The
+    /// timestamp lets the fan-out price each waiter's queueing delay
+    /// and wall latency exactly instead of inheriting the primary's;
+    /// the tenant lets it credit the right per-tenant served counter.
+    pub fn attach(&self, tx: Sender<Reply>, enqueued: Instant, tenant: sched::TenantId) -> bool {
         match &mut *self.waiters.lock().unwrap() {
             Some(v) => {
-                v.push((tx, enqueued));
+                v.push((tx, enqueued, tenant));
                 true
             }
             None => false,
@@ -283,7 +311,7 @@ impl CoalesceSlot {
 
     /// Close the slot and take its waiters (exactly once; later calls
     /// and attaches see it closed).
-    pub fn take_waiters(&self) -> Vec<(Sender<Reply>, Instant)> {
+    pub fn take_waiters(&self) -> Vec<(Sender<Reply>, Instant, sched::TenantId)> {
         self.waiters.lock().unwrap().take().unwrap_or_default()
     }
 
@@ -297,9 +325,13 @@ impl CoalesceSlot {
 pub struct Request {
     pub image: Vec<f32>,
     pub enqueued: Instant,
-    /// Scheduling class: which staged queue it waits in, which batch
-    /// slots it may claim, and how early it sheds.
-    pub priority: Priority,
+    /// Scheduling class index ([`sched::ClassConfig`]): which staged
+    /// queue it waits in, how big its DRR slot share is, and how early
+    /// it sheds.  [`Priority::index`] maps the High/Low API onto 0/1;
+    /// out-of-range indexes clamp to the last configured class.
+    pub class: usize,
+    /// Tenant the request is accounted (and quota-metered) against.
+    pub tenant: sched::TenantId,
     /// Absolute completion deadline; `None` opts out of deadline-aware
     /// shedding entirely.
     pub deadline: Option<Instant>,
@@ -322,7 +354,7 @@ impl Request {
         let Some(slot) = &self.coalesce else { return 0 };
         let waiters = slot.take_waiters();
         let n = waiters.len();
-        for (tx, _enqueued) in waiters {
+        for (tx, _enqueued, _tenant) in waiters {
             let _ = tx.send(reply.clone());
         }
         n
@@ -362,6 +394,7 @@ impl Reply {
                 match reason {
                     RejectReason::Overload => "overload shed",
                     RejectReason::Deadline => "deadline unmeetable",
+                    RejectReason::Quota => "tenant quota exhausted",
                 },
                 retry_hint.as_secs_f64() * 1e3
             )),
@@ -415,68 +448,6 @@ pub struct BatchConfig {
 impl Default for BatchConfig {
     fn default() -> Self {
         BatchConfig { max_wait: Duration::from_millis(2), max_batch: 8 }
-    }
-}
-
-/// Overload handling: what the dispatcher does when a class's staged
-/// queue is past its cap while the arbiter reports sustained saturation
-/// (see [`arbiter::FabricArbiter::sustained_saturated`]).
-#[derive(Debug, Clone, Copy)]
-pub struct AdmissionConfig {
-    /// Per-class staged depth (submitted, not yet dispatched) at/above
-    /// which overload handling engages, indexed by [`Priority::index`]
-    /// (`[high, low]`).  In shed mode a combined backlog past **8x** the
-    /// combined cap is shed even without fabric saturation — CPU-bound
-    /// overload (plans that never lease) must not grow the ingress
-    /// without bound just because the arbiter never saturates.
-    pub queue_cap: [usize; 2],
-    /// `true`: shed — answer overflow requests `Reply::Rejected`
-    /// immediately so clients can back off; each overload round sheds
-    /// the Low class first, then High against its own cap only.
-    /// `false` (default): defer — keep every request queued but throttle
-    /// dispatch so the fabric drains; latency absorbs the overload
-    /// instead of rejections.  Deadline-aware rejection applies in both
-    /// modes: a request that cannot make its deadline is answered
-    /// `Rejected` rather than queued or executed.
-    pub shed: bool,
-    /// Share of each dispatched batch's slots reserved for the High
-    /// class (0.0..=1.0).  `1.0` is strict priority; the default 0.75
-    /// leaves at least a quarter of every full batch to the Low class so
-    /// a sustained High stream cannot starve Low outright.  Unclaimed
-    /// reservations spill to the other class either way.
-    pub high_share: f64,
-    /// Earliest-deadline-first ordering within the High staged queue
-    /// (default on): deadline-carrying High requests stage in deadline
-    /// order (deadline-free ones keep FIFO at the back), so a tight
-    /// deadline dispatches before looser ones instead of expiring
-    /// behind them.  `false` restores PR 4's pure-FIFO staging — kept
-    /// as a knob so the EDF-vs-FIFO expiry win is testable A/B.
-    pub edf: bool,
-}
-
-impl Default for AdmissionConfig {
-    fn default() -> Self {
-        AdmissionConfig { queue_cap: [1024, 1024], shed: false, high_share: 0.75, edf: true }
-    }
-}
-
-impl AdmissionConfig {
-    /// Both classes capped at `cap` — the single-knob constructor the
-    /// CLI's `--queue-cap N` and most tests use.
-    pub fn capped(cap: usize, shed: bool) -> AdmissionConfig {
-        AdmissionConfig { queue_cap: [cap, cap], shed, ..AdmissionConfig::default() }
-    }
-
-    /// No caps at all: pure observation (the closed-loop bench and the
-    /// default open-loop defer sweep, where admission must never
-    /// throttle the capacity being measured).
-    pub fn uncapped() -> AdmissionConfig {
-        AdmissionConfig::capped(usize::MAX, false)
-    }
-
-    /// Combined backlog cap across both classes (saturating).
-    pub fn total_cap(&self) -> usize {
-        self.queue_cap[0].saturating_add(self.queue_cap[1])
     }
 }
 
@@ -544,6 +515,43 @@ pub(crate) struct KeyCtx {
     pub(crate) arbiter: Arc<FabricArbiter>,
 }
 
+/// Per-request scheduling metadata for [`ServerHandle::submit_meta`]:
+/// the class index, an optional relative deadline, and the tenant the
+/// request is quota-metered against.  `Default` is the classic
+/// anonymous premium submit (class 0, no deadline, tenant 0).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RequestMeta {
+    /// Scheduling class index ([`Priority::index`] maps High/Low to
+    /// 0/1); out-of-range indexes clamp to the last configured class.
+    pub class: usize,
+    /// Relative completion deadline, measured from submit time.
+    pub deadline: Option<Duration>,
+    /// Tenant charged for this request by the quota stage.
+    pub tenant: sched::TenantId,
+}
+
+impl RequestMeta {
+    pub fn class(class: usize) -> RequestMeta {
+        RequestMeta { class, ..RequestMeta::default() }
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> RequestMeta {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn with_tenant(mut self, tenant: sched::TenantId) -> RequestMeta {
+        self.tenant = tenant;
+        self
+    }
+}
+
+impl From<Priority> for RequestMeta {
+    fn from(p: Priority) -> RequestMeta {
+        RequestMeta::class(p.index())
+    }
+}
+
 /// Handle for submitting requests.  Cloneable across producer threads;
 /// tracks the live ingress depth the dispatcher's admission check reads.
 #[derive(Clone)]
@@ -563,21 +571,32 @@ impl ServerHandle {
         self.submit_with(image, Priority::High, None)
     }
 
-    /// Submit one image with an explicit priority class and an optional
-    /// relative deadline (measured from now; the dispatcher rejects the
-    /// request once it has provably expired or its predicted completion
-    /// would miss it).  Returns a receiver that resolves to at least one
-    /// typed [`Reply`] (exactly one except in a benign shutdown race, when
-    /// a backstop `Failed` may accompany the real reply — one `recv` only
-    /// ever sees one).  Errors immediately when the pool has stopped or
-    /// every worker's engine failed to initialize — the only two cases
-    /// where no reply could ever arrive.
+    /// Submit one image with an explicit [`Priority`] class and an
+    /// optional relative deadline — the classic two-class API, kept for
+    /// every pre-tenant caller; equivalent to [`ServerHandle::submit_meta`]
+    /// with the default tenant.
     pub fn submit_with(
         &self,
         image: Vec<f32>,
         priority: Priority,
         deadline: Option<Duration>,
     ) -> Result<Receiver<Reply>> {
+        let mut meta = RequestMeta::from(priority);
+        meta.deadline = deadline;
+        self.submit_meta(image, meta)
+    }
+
+    /// Submit one image with full scheduling metadata (class, deadline,
+    /// tenant).  The deadline is measured from now; the dispatcher
+    /// rejects the request once it has provably expired or its
+    /// predicted completion would miss it.  Returns a receiver that
+    /// resolves to at least one typed [`Reply`] (exactly one except in
+    /// a benign shutdown race, when a backstop `Failed` may accompany
+    /// the real reply — one `recv` only ever sees one).  Errors
+    /// immediately when the pool has stopped or every worker's engine
+    /// failed to initialize — the only two cases where no reply could
+    /// ever arrive.
+    pub fn submit_meta(&self, image: Vec<f32>, meta: RequestMeta) -> Result<Receiver<Reply>> {
         if self.metrics.dead_workers.load(Ordering::Relaxed) >= self.metrics.workers() as u64 {
             anyhow::bail!("serving pool has no live workers (every engine failed to initialize)");
         }
@@ -590,12 +609,13 @@ impl ServerHandle {
         let key = self
             .key_ctx
             .as_ref()
-            .map(|k| content_key(&image, k.policy_id, priority, k.arbiter.generation()));
+            .map(|k| content_key(&image, k.policy_id, meta.class, k.arbiter.generation()));
         let req = Request {
             image,
             enqueued,
-            priority,
-            deadline: deadline.map(|d| enqueued + d),
+            class: meta.class,
+            tenant: meta.tenant,
+            deadline: meta.deadline.map(|d| enqueued + d),
             key,
             coalesce: None,
             respond: tx,

@@ -18,9 +18,10 @@
 //! shards together only when a summary is asked for.
 
 use super::arbiter::FabricArbiter;
+use super::sched::{AdmissionConfig, Scheduler, TenantId, TenantLedger};
 use super::{
-    split_exec_batches, AdmissionConfig, BatchConfig, CacheConfig, CoalesceSlot, KeyCtx, Priority,
-    RejectReason, Reply, Request, Response, Served, ServerHandle,
+    split_exec_batches, BatchConfig, CacheConfig, CoalesceSlot, KeyCtx, RejectReason, Reply,
+    Request, Response, Served, ServerHandle,
 };
 use crate::agent::{CongestionLevel, FabricState, Policy, SchedulingEnv, State};
 use crate::coordinator::{Coordinator, PlanCache};
@@ -433,19 +434,31 @@ pub struct ShardSamples {
     pub queue_delay: Samples,
     pub sim_latency: Samples,
     pub batch_sizes: Samples,
-    /// End-to-end latency split by [`Priority`] (indexed by
-    /// `Priority::index`), so the bench can report per-class p99 — the
-    /// SLO story is per class, not pooled.
-    pub latency_class: [Samples; 2],
+    /// End-to-end latency split by scheduling class (indexed by
+    /// `Request::class`, sized to the admission config's class count),
+    /// so the bench can report per-class p99 — the SLO story is per
+    /// class, not pooled.
+    pub latency_class: Vec<Samples>,
 }
 
 impl ShardSamples {
+    /// Empty reservoirs with `classes` per-class latency slots.
+    pub fn sized(classes: usize) -> ShardSamples {
+        ShardSamples {
+            latency_class: (0..classes.max(1)).map(|_| Samples::default()).collect(),
+            ..ShardSamples::default()
+        }
+    }
+
     /// Fold `other`'s reservoirs into this one (summary-time merge).
     pub fn merge(&mut self, other: &ShardSamples) {
         self.latency.merge(&other.latency);
         self.queue_delay.merge(&other.queue_delay);
         self.sim_latency.merge(&other.sim_latency);
         self.batch_sizes.merge(&other.batch_sizes);
+        if self.latency_class.len() < other.latency_class.len() {
+            self.latency_class.resize_with(other.latency_class.len(), Samples::default);
+        }
         for (mine, theirs) in self.latency_class.iter_mut().zip(&other.latency_class) {
             mine.merge(theirs);
         }
@@ -470,25 +483,40 @@ pub struct MetricShard {
     pub samples: Mutex<ShardSamples>,
 }
 
+impl MetricShard {
+    /// A fresh shard whose per-class reservoirs hold `classes` slots.
+    fn sized(classes: usize) -> MetricShard {
+        MetricShard {
+            samples: Mutex::new(ShardSamples::sized(classes)),
+            ..MetricShard::default()
+        }
+    }
+}
+
 /// Dispatcher-side admission telemetry.  Per-level arrays are indexed by
-/// [`crate::agent::CongestionLevel::index`], per-class arrays by
-/// [`Priority::index`]; the dispatcher is the only writer (plus
-/// `queue_peak`, raced benignly by submitters).
-#[derive(Debug, Default)]
+/// [`crate::agent::CongestionLevel::index`], per-class vectors by
+/// `Request::class` (sized to the admission config's class count); the
+/// dispatcher is the only writer (plus `queue_peak`, raced benignly by
+/// submitters).
+#[derive(Debug)]
 pub struct AdmissionStats {
     /// Requests handed to workers, by arbiter level at dispatch time.
     pub admitted: [AtomicU64; 3],
     /// Requests answered [`Reply::Rejected`] for overload, by level at
     /// shed time.
     pub shed: [AtomicU64; 3],
-    /// Requests handed to workers, by priority class.
-    pub admitted_class: [AtomicU64; 2],
-    /// Overload sheds ([`RejectReason::Overload`]), by priority class —
+    /// Requests handed to workers, by scheduling class.
+    pub admitted_class: Vec<AtomicU64>,
+    /// Overload sheds ([`RejectReason::Overload`]), by scheduling class —
     /// the per-class counterpart of `shed`.
-    pub shed_class: [AtomicU64; 2],
+    pub shed_class: Vec<AtomicU64>,
     /// Deadline rejections ([`RejectReason::Deadline`]: already expired
-    /// or predicted to miss), by priority class.
-    pub expired_class: [AtomicU64; 2],
+    /// or predicted to miss), by scheduling class.
+    pub expired_class: Vec<AtomicU64>,
+    /// Requests answered [`Reply::Rejected`] with
+    /// [`RejectReason::Quota`] — the tenant's sliding window was out of
+    /// budget at the quota stage.
+    pub quota_shed: AtomicU64,
     /// Dispatch throttles taken in defer mode (one per deferred batch).
     pub deferred: AtomicU64,
     /// Deepest the ingress queue has ever been.
@@ -508,6 +536,63 @@ pub struct AdmissionStats {
     /// later by that request's fan-out) — each one is a batch slot,
     /// lease, and plan lookup never spent.
     pub coalesced: AtomicU64,
+}
+
+impl AdmissionStats {
+    /// Zeroed counters with `classes` per-class slots.
+    fn sized(classes: usize) -> AdmissionStats {
+        let zeroed = |n: usize| (0..n.max(1)).map(|_| AtomicU64::new(0)).collect();
+        AdmissionStats {
+            admitted: Default::default(),
+            shed: Default::default(),
+            admitted_class: zeroed(classes),
+            shed_class: zeroed(classes),
+            expired_class: zeroed(classes),
+            quota_shed: AtomicU64::new(0),
+            deferred: AtomicU64::new(0),
+            queue_peak: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            cache_fail_hits: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Default for AdmissionStats {
+    fn default() -> AdmissionStats {
+        AdmissionStats::sized(2)
+    }
+}
+
+/// Lock-free per-tenant counters, shared between the dispatcher (which
+/// debits quotas and admits) and workers (which serve).
+#[derive(Debug, Default)]
+pub struct TenantCounters {
+    /// Requests from this tenant handed to workers.
+    pub admitted: AtomicU64,
+    /// Requests from this tenant rejected at the quota stage.
+    pub quota_shed: AtomicU64,
+    /// Replies answered `Ok`/`Failed` by execution, cache hit, or
+    /// coalesced fan-out — the tenant's share of served work.
+    pub served: AtomicU64,
+}
+
+/// Snapshot of one tenant's counters (see [`PoolMetrics::by_tenant`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TenantTotals {
+    pub tenant: TenantId,
+    pub admitted: u64,
+    pub quota_shed: u64,
+    pub served: u64,
+}
+
+/// Tenant registry: counters are created on first touch and live for
+/// the pool's lifetime, so hot paths hold the map lock only long enough
+/// to clone an `Arc`.
+#[derive(Debug, Default)]
+struct TenantStats {
+    map: Mutex<HashMap<TenantId, Arc<TenantCounters>>>,
 }
 
 /// All shards of the pool; everything here is summary-time aggregation.
@@ -538,6 +623,9 @@ pub struct PoolMetrics {
     /// pool-side view of the arbiter's routing decisions, sized to the
     /// arbiter's shard count at construction.
     fabric_leases: Vec<AtomicU64>,
+    /// Per-tenant admitted/quota-shed/served counters, keyed by
+    /// [`TenantId`] and created on first touch.
+    tenants: TenantStats,
 }
 
 impl PoolMetrics {
@@ -545,16 +633,52 @@ impl PoolMetrics {
         PoolMetrics::with_fabrics(workers, 1)
     }
 
-    /// Metrics for a pool leasing from `fabrics` arbiter shards.
+    /// Metrics for a pool leasing from `fabrics` arbiter shards, with
+    /// the default two per-class slots.
     pub fn with_fabrics(workers: usize, fabrics: usize) -> PoolMetrics {
+        PoolMetrics::sized(workers, fabrics, 2)
+    }
+
+    /// Metrics sized for `classes` scheduling classes (per-class counter
+    /// and latency vectors are fixed at construction).
+    pub fn sized(workers: usize, fabrics: usize, classes: usize) -> PoolMetrics {
+        let classes = classes.max(1);
         PoolMetrics {
-            shards: (0..workers.max(1)).map(|_| Arc::new(MetricShard::default())).collect(),
-            admission: AdmissionStats::default(),
+            shards: (0..workers.max(1)).map(|_| Arc::new(MetricShard::sized(classes))).collect(),
+            admission: AdmissionStats::sized(classes),
             dead_workers: AtomicU64::new(0),
             batch_cost_bits: Default::default(),
             batches_done: AtomicU64::new(0),
             fabric_leases: (0..fabrics.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            tenants: TenantStats::default(),
         }
+    }
+
+    /// This tenant's counters, created on first touch.
+    pub fn tenant(&self, tenant: TenantId) -> Arc<TenantCounters> {
+        let mut map = self.tenants.map.lock().unwrap();
+        map.entry(tenant).or_insert_with(|| Arc::new(TenantCounters::default())).clone()
+    }
+
+    /// Snapshot of every tenant seen so far, sorted by tenant id.
+    pub fn by_tenant(&self) -> Vec<TenantTotals> {
+        let map = self.tenants.map.lock().unwrap();
+        let mut out: Vec<TenantTotals> = map
+            .iter()
+            .map(|(&tenant, c)| TenantTotals {
+                tenant,
+                admitted: c.admitted.load(Ordering::Relaxed),
+                quota_shed: c.quota_shed.load(Ordering::Relaxed),
+                served: c.served.load(Ordering::Relaxed),
+            })
+            .collect();
+        out.sort_by_key(|t| t.tenant);
+        out
+    }
+
+    /// Requests rejected at the quota stage across all tenants.
+    pub fn quota_shed_total(&self) -> u64 {
+        self.admission.quota_shed.load(Ordering::Relaxed)
     }
 
     /// Record one lease taken on fabric shard `fabric_id` (worker-side).
@@ -666,28 +790,20 @@ impl PoolMetrics {
         ]
     }
 
-    /// Requests dispatched to workers per priority class ([high, low]).
-    pub fn admitted_by_class(&self) -> [u64; 2] {
-        [
-            self.admission.admitted_class[0].load(Ordering::Relaxed),
-            self.admission.admitted_class[1].load(Ordering::Relaxed),
-        ]
+    /// Requests dispatched to workers per scheduling class (index 0 is
+    /// the premium class; the default two-class config is [high, low]).
+    pub fn admitted_by_class(&self) -> Vec<u64> {
+        self.admission.admitted_class.iter().map(|c| c.load(Ordering::Relaxed)).collect()
     }
 
-    /// Overload sheds per priority class ([high, low]).
-    pub fn shed_by_class(&self) -> [u64; 2] {
-        [
-            self.admission.shed_class[0].load(Ordering::Relaxed),
-            self.admission.shed_class[1].load(Ordering::Relaxed),
-        ]
+    /// Overload sheds per scheduling class.
+    pub fn shed_by_class(&self) -> Vec<u64> {
+        self.admission.shed_class.iter().map(|c| c.load(Ordering::Relaxed)).collect()
     }
 
-    /// Deadline rejections per priority class ([high, low]).
-    pub fn expired_by_class(&self) -> [u64; 2] {
-        [
-            self.admission.expired_class[0].load(Ordering::Relaxed),
-            self.admission.expired_class[1].load(Ordering::Relaxed),
-        ]
+    /// Deadline rejections per scheduling class.
+    pub fn expired_by_class(&self) -> Vec<u64> {
+        self.admission.expired_class.iter().map(|c| c.load(Ordering::Relaxed)).collect()
     }
 
     /// Requests answered `Rejected` for a missed/unmeetable deadline.
@@ -754,25 +870,33 @@ impl PoolMetrics {
         } else {
             String::new()
         };
+        // Two classes keep the historical hi/lo labels; wider configs
+        // label by class index.
+        let classes: Vec<String> = (0..ac.len())
+            .map(|i| {
+                let label = match (ac.len(), i) {
+                    (2, 0) => "hi".to_string(),
+                    (2, 1) => "lo".to_string(),
+                    _ => format!("c{i}"),
+                };
+                format!("{label}={}a/{}s/{}e", ac[i], sc[i], ec[i])
+            })
+            .collect();
         format!(
-            "served={} batches={} errors={} shed={} expired={} deferred={} cache={}h/{}m coalesced={} dead={} workers={}{fab} class hi={}a/{}s/{}e lo={}a/{}s/{}e plan={}h/{}m gen={} levels={}f/{}s/{}x qpeak={} wall p50={:.2}ms p99={:.2}ms queue p50={:.2}ms sim/batch p50={:.2}ms",
+            "served={} batches={} errors={} shed={} expired={} quota_shed={} deferred={} cache={}h/{}m coalesced={} dead={} workers={}{fab} class {} plan={}h/{}m gen={} levels={}f/{}s/{}x qpeak={} wall p50={:.2}ms p99={:.2}ms queue p50={:.2}ms sim/batch p50={:.2}ms",
             self.served(),
             self.batches(),
             self.errors(),
             self.shed_total(),
             self.expired_total(),
+            self.quota_shed_total(),
             self.deferred(),
             self.cache_hits(),
             self.cache_misses(),
             self.coalesced(),
             self.dead_workers.load(Ordering::Relaxed),
             self.workers(),
-            ac[0],
-            sc[0],
-            ec[0],
-            ac[1],
-            sc[1],
-            ec[1],
+            classes.join(" "),
             self.plan_hits(),
             self.plan_misses(),
             self.plan_generation(),
@@ -857,7 +981,8 @@ impl ServingPool {
         // admission control in an invisible middle queue.
         let (btx, brx) = sync_channel::<Vec<Request>>(n);
         let shared_rx = Arc::new(Mutex::new(brx));
-        let metrics = Arc::new(PoolMetrics::with_fabrics(n, arbiter.fabrics()));
+        let metrics =
+            Arc::new(PoolMetrics::sized(n, arbiter.fabrics(), admission.class_count()));
         let depth = Arc::new(AtomicUsize::new(0));
         let stop = Arc::new(AtomicBool::new(false));
         // The response cache exists only when configured: a zero cap
@@ -978,13 +1103,16 @@ struct DispatchCtx {
     /// predictor must charge for.  Single-threaded dispatcher, so a
     /// plain `Cell`.
     batches_sent: std::cell::Cell<u64>,
+    /// Per-tenant sliding-window quota ledger (empty config = every
+    /// debit succeeds).  Single-threaded dispatcher, so a `RefCell`.
+    ledger: std::cell::RefCell<TenantLedger>,
 }
 
 impl DispatchCtx {
     /// Answer one request `Rejected` and settle its depth/counter
     /// bookkeeping.  `queued` scales the retry hint.
     fn reject(&self, req: Request, level: CongestionLevel, reason: RejectReason, queued: usize) {
-        let cls = req.priority.index();
+        let cls = req.class.min(self.metrics.admission.shed_class.len() - 1);
         match reason {
             RejectReason::Overload => {
                 self.metrics.admission.shed[level.index()].fetch_add(1, Ordering::Relaxed);
@@ -993,6 +1121,10 @@ impl DispatchCtx {
             RejectReason::Deadline => {
                 self.metrics.admission.expired_class[cls].fetch_add(1, Ordering::Relaxed);
             }
+            RejectReason::Quota => {
+                self.metrics.admission.quota_shed.fetch_add(1, Ordering::Relaxed);
+                self.metrics.tenant(req.tenant).quota_shed.fetch_add(1, Ordering::Relaxed);
+            }
         }
         self.depth.fetch_sub(1, Ordering::Relaxed);
         let reply =
@@ -1000,6 +1132,19 @@ impl DispatchCtx {
         // A rejected primary takes its coalesced waiters down with it —
         // they attached to *this* execution, and closing the slot here
         // lets the next duplicate start a fresh one.
+        req.fan_out(&reply);
+        let _ = req.respond.send(reply);
+    }
+
+    /// Quota rejection: same bookkeeping as [`DispatchCtx::reject`], but
+    /// the retry hint is the ledger's window-free time (the
+    /// `Retry-After` analog) instead of the backlog-drain estimate.
+    fn reject_quota(&self, req: Request, level: CongestionLevel, retry_in: Duration) {
+        self.metrics.admission.quota_shed.fetch_add(1, Ordering::Relaxed);
+        self.metrics.tenant(req.tenant).quota_shed.fetch_add(1, Ordering::Relaxed);
+        self.depth.fetch_sub(1, Ordering::Relaxed);
+        let reply =
+            Reply::Rejected { level, retry_hint: retry_in, reason: RejectReason::Quota };
         req.fan_out(&reply);
         let _ = req.respond.send(reply);
     }
@@ -1042,22 +1187,26 @@ impl DispatchCtx {
     /// immediately and no worker (or fabric lease) is spent on a reply
     /// nobody wants.
     ///
-    /// Stage order is cache → coalesce → deadline → queue insert: a hit
-    /// or an attach must not burn deadline/overload accounting on work
-    /// that will never occupy a batch slot.  Keyless requests (cache
-    /// off) skip the whole dedup layer — identical to the pre-cache
-    /// pipeline.
+    /// Stage order is cache → coalesce → quota → deadline → queue
+    /// insert: a hit or an attach must not burn deadline/overload
+    /// accounting on work that will never occupy a batch slot — but it
+    /// *does* charge the tenant's quota window (served work is served
+    /// work, however cheaply).  Keyless requests (cache off) skip the
+    /// whole dedup layer — identical to the pre-cache pipeline.
     ///
     /// `level` memoizes the arbiter snapshot across one drain round: the
-    /// first deadline-carrying request derives it, the rest reuse it —
-    /// deadline-free traffic never pays the derivation at all.
+    /// first request that needs it derives it, the rest reuse it —
+    /// deadline-free under-quota traffic never pays the derivation.
     fn stage(
         &self,
         mut req: Request,
-        classq: &mut [VecDeque<Request>; 2],
+        sched: &mut Scheduler,
         level: &mut Option<CongestionLevel>,
         inflight: &mut HashMap<u64, Arc<CoalesceSlot>>,
     ) {
+        // Out-of-range classes land in the last (cheapest) class, and
+        // every per-class counter downstream indexes safely.
+        req.class = sched.clamp_class(req.class);
         if let Some(key) = req.key {
             // 1. Response cache.  Generation sync first so a reconfigure
             // between submits drops every stale entry before the probe
@@ -1072,6 +1221,8 @@ impl DispatchCtx {
                     Some(CachedOutcome::Ok(mut resp)) => {
                         self.metrics.admission.cache_hits.fetch_add(1, Ordering::Relaxed);
                         self.depth.fetch_sub(1, Ordering::Relaxed);
+                        self.ledger.borrow_mut().charge(req.tenant, Instant::now());
+                        self.metrics.tenant(req.tenant).served.fetch_add(1, Ordering::Relaxed);
                         resp.served = Served::Cache;
                         resp.queue_s = req.enqueued.elapsed().as_secs_f64();
                         let _ = req.respond.send(Reply::Ok(resp));
@@ -1085,6 +1236,7 @@ impl DispatchCtx {
                         self.metrics.admission.cache_hits.fetch_add(1, Ordering::Relaxed);
                         self.metrics.admission.cache_fail_hits.fetch_add(1, Ordering::Relaxed);
                         self.depth.fetch_sub(1, Ordering::Relaxed);
+                        self.ledger.borrow_mut().charge(req.tenant, Instant::now());
                         let _ = req.respond.send(Reply::Failed { worker, error });
                         return;
                     }
@@ -1095,13 +1247,15 @@ impl DispatchCtx {
             }
             // 2. Coalesce: a duplicate of a staged or executing request
             // attaches to its slot and consumes no batch capacity; the
-            // primary's terminal reply fans out to every waiter.
+            // primary's terminal reply fans out to every waiter.  The
+            // attach still charges the duplicate's tenant window.
             use std::collections::hash_map::Entry;
             match inflight.entry(key) {
                 Entry::Occupied(mut e) => {
-                    if e.get().attach(req.respond.clone(), req.enqueued) {
+                    if e.get().attach(req.respond.clone(), req.enqueued, req.tenant) {
                         self.metrics.admission.coalesced.fetch_add(1, Ordering::Relaxed);
                         self.depth.fetch_sub(1, Ordering::Relaxed);
+                        self.ledger.borrow_mut().charge(req.tenant, Instant::now());
                         return;
                     }
                     // The previous primary resolved between its close and
@@ -1117,30 +1271,30 @@ impl DispatchCtx {
                 }
             }
         }
-        let cls = req.priority.index();
-        // EDF within High: deadlined requests sort by deadline at the
-        // queue front, deadline-free ones keep FIFO order behind them.
-        // Low stays pure FIFO — its slots are the leftovers anyway, and
-        // one sorted class is enough to show the expired-count win.
-        let pos = if self.admission.edf && req.priority == Priority::High {
-            match req.deadline {
-                Some(dl) => {
-                    classq[0].partition_point(|r| r.deadline.is_some_and(|d| d <= dl))
-                }
-                None => classq[0].len(),
+        // 3. Quota: debit the tenant's sliding window.  Over budget
+        // answers `Rejected { Quota }` with the time until the window
+        // frees as the retry hint — the `Retry-After` analog.
+        if self.ledger.borrow().enabled() {
+            if let Err(retry_in) = self.ledger.borrow_mut().debit(req.tenant, Instant::now()) {
+                let lvl = *level.get_or_insert_with(|| self.arbiter.state().level);
+                self.reject_quota(req, lvl, retry_in);
+                return;
             }
-        } else {
-            classq[cls].len()
-        };
+        }
+        // 4. Deadline + queue insert.  EDF within class 0: deadlined
+        // requests sort by deadline at the queue front, deadline-free
+        // ones keep FIFO order behind them.  Other classes stay pure
+        // FIFO — their slots are DRR leftovers anyway, and one sorted
+        // class is enough to show the expired-count win.
+        let cls = req.class;
+        let pos = sched.insert_pos(cls, req.deadline);
         if let Some(dl) = req.deadline {
             let now = Instant::now();
-            // requests that dispatch ahead of this one: its insertion
-            // position in its own class (= the class backlog under FIFO,
-            // fewer when EDF moves it forward), plus the whole High
-            // queue for a Low request (High holds the reserved batch
-            // share, so Low queues behind it)
-            let ahead =
-                pos + if req.priority == Priority::Low { classq[0].len() } else { 0 };
+            // Requests that dispatch ahead of this one: its insertion
+            // position in its own class plus every higher class's
+            // backlog — a worst-case FIFO bound; DRR interleaving can
+            // only dispatch it sooner.
+            let ahead = sched.ahead_of(cls, pos);
             // Probe admission: on a fully idle pool (nothing staged,
             // nothing in the pipeline) the prediction is pure model —
             // and the cost EWMA can be stale (e.g. a congested warm-up
@@ -1153,47 +1307,20 @@ impl DispatchCtx {
             let level = *level.get_or_insert_with(|| self.arbiter.state().level);
             let est = self.predicted_completion_s(ahead, level);
             if now >= dl || (!idle_probe && Duration::from_secs_f64(est) > dl - now) {
-                let queued = classq[0].len() + classq[1].len();
+                let queued = sched.total_len();
                 self.reject(req, level, RejectReason::Deadline, queued);
                 return;
             }
         }
-        if pos >= classq[cls].len() {
-            classq[cls].push_back(req);
-        } else {
-            classq[cls].insert(pos, req);
-        }
-    }
-
-    /// Move up to `want` live requests from `q` into `batch`, answering
-    /// requests that expired while queued `Rejected` on the way out (the
-    /// stage-time check can only predict; this is the last line before a
-    /// doomed request would burn worker time and a fabric lease).
-    fn pop_live(
-        &self,
-        q: &mut VecDeque<Request>,
-        want: usize,
-        batch: &mut Vec<Request>,
-        queued: usize,
-        level: CongestionLevel,
-    ) {
-        let target = batch.len() + want;
-        while batch.len() < target {
-            let Some(req) = q.pop_front() else { break };
-            if req.deadline.is_some_and(|dl| Instant::now() >= dl) {
-                self.reject(req, level, RejectReason::Deadline, queued);
-                continue;
-            }
-            batch.push(req);
-        }
+        sched.insert_at(cls, pos, req);
     }
 }
 
-/// The dispatcher: drain the ingress into per-class staged queues, run
-/// class- and deadline-aware admission, assemble a batch with the High
-/// class's reserved share, hand it to the worker queue.  On exit it
-/// drains both staged queues and the ingress with typed `Failed` replies
-/// so shutdown never strands a submitter.
+/// The dispatcher: drain the ingress into the scheduler's per-class
+/// staged queues, run class-, quota- and deadline-aware admission,
+/// assemble a batch by deficit-round-robin, hand it to the worker
+/// queue.  On exit it drains the staged queues and the ingress with
+/// typed `Failed` replies so shutdown never strands a submitter.
 #[allow(clippy::too_many_arguments)]
 fn dispatch_loop(
     rx: Receiver<Request>,
@@ -1207,6 +1334,11 @@ fn dispatch_loop(
     cache: Option<Arc<Mutex<ResponseCache>>>,
 ) {
     let workers = metrics.workers();
+    // Staged ingress, one queue per scheduling class.  Requests wait
+    // here — not in the channel — so admission and the DRR scheduler
+    // see the backlog split by class.
+    let mut sched = Scheduler::new(&admission);
+    let ledger = TenantLedger::new(admission.quota.clone());
     let ctx = DispatchCtx {
         cfg,
         admission,
@@ -1216,11 +1348,8 @@ fn dispatch_loop(
         arbiter,
         cache,
         batches_sent: std::cell::Cell::new(0),
+        ledger: std::cell::RefCell::new(ledger),
     };
-    // Staged ingress, one FIFO per class ([high, low]).  Requests wait
-    // here — not in the channel — so admission and the class scheduler
-    // see the backlog split by class.
-    let mut classq: [VecDeque<Request>; 2] = [VecDeque::new(), VecDeque::new()];
     // Open coalesce slots by content key (staged or executing
     // primaries).  Dispatcher-local — workers reach a slot through the
     // `Arc` riding on the primary request, never through this map.
@@ -1237,9 +1366,9 @@ fn dispatch_loop(
         // derived lazily by the first deadline-carrying request.
         let mut round_level: Option<CongestionLevel> = None;
         // Block for work only when nothing is staged.
-        if classq[0].is_empty() && classq[1].is_empty() {
+        if sched.is_empty() {
             match rx.recv_timeout(Duration::from_millis(25)) {
-                Ok(r) => ctx.stage(r, &mut classq, &mut round_level, &mut inflight),
+                Ok(r) => ctx.stage(r, &mut sched, &mut round_level, &mut inflight),
                 Err(RecvTimeoutError::Timeout) => continue,
                 Err(RecvTimeoutError::Disconnected) => break,
             }
@@ -1248,7 +1377,7 @@ fn dispatch_loop(
         // hand-off holds the dispatcher back, overload backlog piles up
         // here — split by class, where the caps can meter it.
         while let Ok(r) = rx.try_recv() {
-            ctx.stage(r, &mut classq, &mut round_level, &mut inflight);
+            ctx.stage(r, &mut sched, &mut round_level, &mut inflight);
         }
         // Bound the resolved-slot leak: under a wide key distribution
         // most slots close without a same-key probe ever replacing them.
@@ -1266,43 +1395,26 @@ fn dispatch_loop(
         // combined cap even without fabric saturation — CPU-bound
         // overload (plans that never lease) must not grow the ingress
         // without bound just because the arbiter never saturates.
-        let (hn, ln) = (classq[0].len(), classq[1].len());
-        let over_depth = hn >= ctx.admission.queue_cap[0]
-            || ln >= ctx.admission.queue_cap[1]
-            || hn + ln >= ctx.admission.total_cap();
-        if over_depth {
+        if sched.over_caps(&ctx.admission) {
             let snap = ctx.arbiter.state();
-            let runaway = hn + ln >= ctx.admission.total_cap().saturating_mul(8);
+            let runaway =
+                sched.total_len() >= ctx.admission.total_cap().saturating_mul(8);
             let saturated =
                 snap.level == CongestionLevel::Saturated && ctx.arbiter.sustained_saturated();
             if saturated || (runaway && ctx.admission.shed) {
                 if ctx.admission.shed {
-                    // Shedding starts with the Low class (oldest first —
-                    // under overload the queue head has burned the most
-                    // latency budget already): trim Low to its cap, and
-                    // all the way out while the combined backlog still
-                    // exceeds the combined cap.
-                    loop {
-                        let (hn, ln) = (classq[0].len(), classq[1].len());
-                        let low_over = ln >= ctx.admission.queue_cap[1]
-                            || hn + ln >= ctx.admission.total_cap();
-                        if ln == 0 || !low_over {
-                            break;
-                        }
-                        let req = classq[1].pop_front().unwrap();
-                        ctx.reject(req, snap.level, RejectReason::Overload, hn + ln);
-                    }
-                    // Then High against its own cap — after Low has paid
-                    // first, but not gated on Low being empty: a High
-                    // flood must not ride an innocent under-cap Low
-                    // trickle to unbounded depth.  The class the paper
-                    // says to prioritize still sheds last within every
-                    // overload round.
-                    while classq[0].len() >= ctx.admission.queue_cap[0] {
-                        let queued = classq[0].len() + classq[1].len();
-                        let Some(req) = classq[0].pop_front() else { break };
-                        ctx.reject(req, snap.level, RejectReason::Overload, queued);
-                    }
+                    // Shed lowest weight first (oldest first within a
+                    // class — under overload the queue head has burned
+                    // the most latency budget already): each cheaper
+                    // class is trimmed to its cap and all the way out
+                    // while the combined backlog still exceeds the
+                    // combined cap; the highest-weight class sheds last
+                    // and only against its own cap — a premium flood
+                    // must not ride an innocent under-cap trickle
+                    // elsewhere to unbounded depth.
+                    sched.shed_overflow(&ctx.admission, |req, queued| {
+                        ctx.reject(req, snap.level, RejectReason::Overload, queued)
+                    });
                 } else {
                     // defer: keep every request, but throttle dispatch one
                     // batching window so the fabric drains instead of
@@ -1316,15 +1428,15 @@ fn dispatch_loop(
         // Batching window: wait for more arrivals only while the staged
         // backlog is smaller than one full batch (a saturated pool skips
         // straight to assembly).
-        if classq[0].len() + classq[1].len() < ctx.cfg.max_batch {
+        if sched.total_len() < ctx.cfg.max_batch {
             let window_end = Instant::now() + ctx.cfg.max_wait;
-            while classq[0].len() + classq[1].len() < ctx.cfg.max_batch {
+            while sched.total_len() < ctx.cfg.max_batch {
                 let now = Instant::now();
                 if now >= window_end {
                     break;
                 }
                 match rx.recv_timeout(window_end - now) {
-                    Ok(r) => ctx.stage(r, &mut classq, &mut round_level, &mut inflight),
+                    Ok(r) => ctx.stage(r, &mut sched, &mut round_level, &mut inflight),
                     // window idle, or ingress closed (the next round's
                     // blocking recv observes Disconnected and exits)
                     Err(_) => break,
@@ -1332,19 +1444,27 @@ fn dispatch_loop(
             }
         }
 
-        // Class-aware batch assembly: High claims its reserved share
-        // first, Low fills the rest, unclaimed reservations spill back
-        // to High.  With `high_share < 1` a backlogged Low queue is
-        // guaranteed slots in every full batch — priority without
-        // starvation.
+        // DRR batch assembly: every class's deficit is refilled in
+        // weight proportion, slots go to the deepest deficit first, and
+        // unused quantum spills — a backlogged class is guaranteed its
+        // weight share of every full batch (priority without
+        // starvation), while a half-empty batch is never held back for
+        // a class with nothing staged.  Requests that expired while
+        // queued are answered `Rejected` on the way out (the stage-time
+        // check can only predict; this is the last line before a doomed
+        // request would burn worker time and a fabric lease).
         let level = ctx.arbiter.state().level;
-        let queued = classq[0].len() + classq[1].len();
-        let reserve = ((ctx.admission.high_share * ctx.cfg.max_batch as f64).ceil() as usize)
-            .min(ctx.cfg.max_batch);
+        let queued = sched.total_len();
         let mut batch = Vec::with_capacity(ctx.cfg.max_batch);
-        ctx.pop_live(&mut classq[0], reserve, &mut batch, queued, level);
-        ctx.pop_live(&mut classq[1], ctx.cfg.max_batch - batch.len(), &mut batch, queued, level);
-        ctx.pop_live(&mut classq[0], ctx.cfg.max_batch - batch.len(), &mut batch, queued, level);
+        sched.begin_round(ctx.cfg.max_batch);
+        while batch.len() < ctx.cfg.max_batch {
+            let Some((_cls, req)) = sched.pop_next() else { break };
+            if req.deadline.is_some_and(|dl| Instant::now() >= dl) {
+                ctx.reject(req, level, RejectReason::Deadline, queued);
+                continue;
+            }
+            batch.push(req);
+        }
         if batch.is_empty() {
             continue; // everything staged expired in place
         }
@@ -1353,8 +1473,8 @@ fn dispatch_loop(
         ctx.metrics.admission.admitted[level.index()]
             .fetch_add(batch.len() as u64, Ordering::Relaxed);
         for req in &batch {
-            ctx.metrics.admission.admitted_class[req.priority.index()]
-                .fetch_add(1, Ordering::Relaxed);
+            ctx.metrics.admission.admitted_class[req.class].fetch_add(1, Ordering::Relaxed);
+            ctx.metrics.tenant(req.tenant).admitted.fetch_add(1, Ordering::Relaxed);
         }
         if let Err(undelivered) = btx.send(batch) {
             // every worker exited: answer the batch instead of dropping
@@ -1384,10 +1504,8 @@ fn dispatch_loop(
         req.fan_out(&reply);
         let _ = req.respond.send(reply);
     };
-    for q in &mut classq {
-        while let Some(req) = q.pop_front() {
-            stopped(req);
-        }
+    for req in sched.drain_all() {
+        stopped(req);
     }
     while let Ok(req) = rx.try_recv() {
         stopped(req);
@@ -1535,8 +1653,9 @@ fn worker_loop(
                         let queue_s = (started - req.enqueued).as_secs_f64();
                         let wall = req.enqueued.elapsed().as_secs_f64();
                         s.latency.push(wall);
-                        s.latency_class[req.priority.index()].push(wall);
+                        s.latency_class[req.class].push(wall);
                         s.queue_delay.push(queue_s);
+                        metrics.tenant(req.tenant).served.fetch_add(1, Ordering::Relaxed);
                         let resp = Response {
                             class: preds[i],
                             batch_size: real,
@@ -1558,7 +1677,7 @@ fn worker_loop(
                         if let Some(slot) = &req.coalesce {
                             let waiters = slot.take_waiters();
                             shard.served.fetch_add(waiters.len() as u64, Ordering::Relaxed);
-                            for (tx, enq) in waiters {
+                            for (tx, enq, tenant) in waiters {
                                 let mut r = resp.clone();
                                 r.served = Served::Coalesced;
                                 // saturating: a duplicate can attach after
@@ -1567,8 +1686,9 @@ fn worker_loop(
                                     started.saturating_duration_since(enq).as_secs_f64();
                                 let wall = enq.elapsed().as_secs_f64();
                                 s.latency.push(wall);
-                                s.latency_class[req.priority.index()].push(wall);
+                                s.latency_class[req.class].push(wall);
                                 s.queue_delay.push(r.queue_s);
+                                metrics.tenant(tenant).served.fetch_add(1, Ordering::Relaxed);
                                 let _ = tx.send(Reply::Ok(r));
                             }
                         }
@@ -1803,17 +1923,19 @@ mod tests {
         assert!(slot.open());
         let (tx, rx) = channel::<Reply>();
         let enqueued = Instant::now();
-        assert!(slot.attach(tx, enqueued));
+        assert!(slot.attach(tx, enqueued, 7));
         let waiters = slot.take_waiters();
         assert_eq!(waiters.len(), 1);
         // closed: attaches fail, a second take yields nothing
         assert!(!slot.open());
         let (tx2, _rx2) = channel::<Reply>();
-        assert!(!slot.attach(tx2, Instant::now()), "attach after close must fail");
+        assert!(!slot.attach(tx2, Instant::now(), 7), "attach after close must fail");
         assert!(slot.take_waiters().is_empty());
-        for (tx, enq) in waiters {
+        for (tx, enq, tenant) in waiters {
             // each waiter rides out with its *own* enqueue timestamp
+            // and tenant id
             assert_eq!(enq, enqueued);
+            assert_eq!(tenant, 7);
             tx.send(Reply::Ok(resp(1, 1))).unwrap();
         }
         match rx.try_recv().unwrap() {
@@ -1863,11 +1985,11 @@ mod tests {
         use super::super::content_key;
         let img_a = vec![0.25f32; 8];
         let img_b = vec![0.50f32; 8];
-        let base = content_key(&img_a, 1, Priority::High, 1);
-        assert_eq!(base, content_key(&img_a, 1, Priority::High, 1), "key is deterministic");
-        assert_ne!(base, content_key(&img_b, 1, Priority::High, 1), "input separates");
-        assert_ne!(base, content_key(&img_a, 2, Priority::High, 1), "policy separates");
-        assert_ne!(base, content_key(&img_a, 1, Priority::Low, 1), "class separates");
-        assert_ne!(base, content_key(&img_a, 1, Priority::High, 2), "generation separates");
+        let base = content_key(&img_a, 1, 0, 1);
+        assert_eq!(base, content_key(&img_a, 1, 0, 1), "key is deterministic");
+        assert_ne!(base, content_key(&img_b, 1, 0, 1), "input separates");
+        assert_ne!(base, content_key(&img_a, 2, 0, 1), "policy separates");
+        assert_ne!(base, content_key(&img_a, 1, 1, 1), "class separates");
+        assert_ne!(base, content_key(&img_a, 1, 0, 2), "generation separates");
     }
 }

@@ -1,0 +1,639 @@
+//! Scheduler subsystem: N-class deficit-round-robin staging plus
+//! per-tenant sliding-window quotas.
+//!
+//! PR 8 lifts the scheduling policy out of the dispatcher loop
+//! (`pool::dispatch_loop`) into this module, and generalizes it in two
+//! directions at once:
+//!
+//! * **N scheduling classes** ([`AdmissionConfig::classes`]) — the old
+//!   hard-coded High/Low pair (`queue_cap: [usize; 2]`, `high_share`
+//!   batch reservation, `classq[0]`/`classq[1]` index arithmetic) is now
+//!   a `Vec<ClassConfig>` of `(weight, queue_cap)` entries.  Batch slots
+//!   are granted **deficit-round-robin**: every assembly round refills
+//!   each backlogged class's deficit counter with its weight-proportional
+//!   quantum, slots go to the class with the largest deficit, and
+//!   unused quantum spills to whoever still has work — so no class can
+//!   starve a half-empty batch, and under sustained backlog the served
+//!   ratio converges to the weight ratio.  Class index 0 is the premium
+//!   class by convention: EDF ordering applies inside it, ties in the
+//!   fill order favor it, and overload shedding reaches it last.
+//! * **Per-tenant quotas** ([`QuotaConfig`], [`TenantLedger`]) — every
+//!   request carries a [`TenantId`]; the dispatcher's quota stage (between
+//!   coalesce and deadline) debits that tenant's sliding window and
+//!   answers over-budget requests `Rejected { reason: Quota, retry_hint }`
+//!   where the hint is the time until the window frees (the
+//!   `Retry-After` / `RateLimit-Reset` analog).  Cache hits and
+//!   coalesced attaches charge the window too — served work is served
+//!   work, whichever layer answered it.
+//!
+//! The two-class High/Low CLI maps onto [`AdmissionConfig::two_class`]
+//! (weights derived from the old `--high-share` fraction), so every
+//! existing `aifa serve` flag keeps its meaning byte-for-byte.
+
+use super::Request;
+use std::collections::{HashMap, VecDeque};
+use std::time::{Duration, Instant};
+
+/// Tenant identity a request is accounted against.  Plain integer —
+/// the serving layer has no authn; the id is whatever the ingress says
+/// it is (a partition key, in barbacane's rate-limit vocabulary).
+pub type TenantId = u32;
+
+/// One scheduling class: its DRR weight and its staged-depth cap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClassConfig {
+    /// Relative share of batch slots under contention.  Under sustained
+    /// backlog in every class, served ratios converge to the weight
+    /// ratios; `0` means the class is served only from spilled slots
+    /// (strict-priority victim).
+    pub weight: u32,
+    /// Staged depth (submitted, not yet dispatched) at/above which
+    /// overload handling engages for this class.
+    pub queue_cap: usize,
+}
+
+/// Per-tenant sliding-window quota configuration (`--tenant-quota` /
+/// `--tenant-window-ms`).  Empty `quotas` — the default — disables the
+/// quota stage entirely: no ledger is consulted and the pipeline is
+/// byte-identical to the quota-free pool.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QuotaConfig {
+    /// Admission budgets per window: entry `i` applies to tenant `i`,
+    /// and the **last** entry applies to every higher tenant id (so a
+    /// single entry is a uniform quota).  A budget of 0 refuses that
+    /// tenant outright.
+    pub quotas: Vec<usize>,
+    /// Sliding-window length the budgets are measured over.
+    pub window: Duration,
+}
+
+impl Default for QuotaConfig {
+    fn default() -> Self {
+        QuotaConfig { quotas: Vec::new(), window: Duration::from_millis(1000) }
+    }
+}
+
+impl QuotaConfig {
+    /// Quotas off (no ledger, no quota stage).
+    pub fn off() -> QuotaConfig {
+        QuotaConfig::default()
+    }
+
+    /// One uniform budget for every tenant.
+    pub fn uniform(quota: usize, window_ms: u64) -> QuotaConfig {
+        QuotaConfig { quotas: vec![quota], window: Duration::from_millis(window_ms) }
+    }
+
+    /// Whether the quota stage runs at all.
+    pub fn enabled(&self) -> bool {
+        !self.quotas.is_empty()
+    }
+
+    /// The budget governing `tenant` (last entry is the catch-all).
+    pub fn quota_for(&self, tenant: TenantId) -> usize {
+        self.quotas
+            .get(tenant as usize)
+            .or(self.quotas.last())
+            .copied()
+            .unwrap_or(usize::MAX)
+    }
+}
+
+/// Admission policy: the scheduling classes, overload mode, EDF toggle,
+/// and the per-tenant quota layer.  Replaces the old two-class struct
+/// (`queue_cap: [usize; 2]` + `high_share`) — [`AdmissionConfig::two_class`]
+/// reproduces that shape exactly for the High/Low CLI.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Scheduling classes in priority order: index 0 is the premium
+    /// class (EDF inside it, shed last), higher indexes are
+    /// progressively more best-effort.  [`super::Priority::index`] maps
+    /// the two-class API onto indexes 0/1.
+    pub classes: Vec<ClassConfig>,
+    /// `true`: shed — answer overflow requests `Reply::Rejected`
+    /// immediately so clients can back off; each overload round sheds
+    /// lowest-weight classes first, each against its own cap.
+    /// `false` (default): defer — keep every request queued but throttle
+    /// dispatch so the fabric drains; latency absorbs the overload
+    /// instead of rejections.  Deadline-aware rejection applies in both
+    /// modes.
+    pub shed: bool,
+    /// Earliest-deadline-first ordering within class 0 (default on):
+    /// deadline-carrying requests stage in deadline order (deadline-free
+    /// ones keep FIFO at the back).  Other classes stay pure FIFO —
+    /// their slots are the leftovers anyway, and one sorted class is
+    /// enough to show the expired-count win.
+    pub edf: bool,
+    /// Per-tenant sliding-window quotas (default off).
+    pub quota: QuotaConfig,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig::two_class([1024, 1024], 0.75, false)
+    }
+}
+
+impl AdmissionConfig {
+    /// The High/Low CLI shape: two classes with the given caps, weights
+    /// derived from the old `high_share` fraction (0.75 → 3:1), shed or
+    /// defer.  This is the byte-compatible successor of the old
+    /// `{ queue_cap, shed, high_share, edf }` struct — `high_share = 1.0`
+    /// degenerates to strict priority (Low weight 0, served from spill
+    /// only), exactly as the full-batch reservation used to.
+    pub fn two_class(queue_cap: [usize; 2], high_share: f64, shed: bool) -> AdmissionConfig {
+        let share = high_share.clamp(0.0, 1.0);
+        // Integer weights at 1/1000 resolution — plenty for a CLI
+        // fraction, and keeps the config hashable/eq-comparable.
+        let hi = (share * 1000.0).round() as u32;
+        AdmissionConfig::weighted(
+            vec![
+                ClassConfig { weight: hi, queue_cap: queue_cap[0] },
+                ClassConfig { weight: 1000 - hi.min(1000), queue_cap: queue_cap[1] },
+            ],
+            shed,
+        )
+    }
+
+    /// Arbitrary class list (priority order: index 0 sheds last).
+    pub fn weighted(classes: Vec<ClassConfig>, shed: bool) -> AdmissionConfig {
+        AdmissionConfig { classes, shed, edf: true, quota: QuotaConfig::off() }
+    }
+
+    /// Both classes capped at `cap` — the single-knob constructor the
+    /// CLI's `--queue-cap N` and most tests use.
+    pub fn capped(cap: usize, shed: bool) -> AdmissionConfig {
+        AdmissionConfig::two_class([cap, cap], 0.75, shed)
+    }
+
+    /// No caps at all: pure observation (the closed-loop bench and the
+    /// default open-loop defer sweep, where admission must never
+    /// throttle the capacity being measured).
+    pub fn uncapped() -> AdmissionConfig {
+        AdmissionConfig::capped(usize::MAX, false)
+    }
+
+    /// Same admission policy with the quota layer armed.
+    pub fn with_quota(mut self, quota: QuotaConfig) -> AdmissionConfig {
+        self.quota = quota;
+        self
+    }
+
+    pub fn class_count(&self) -> usize {
+        self.classes.len().max(1)
+    }
+
+    /// Combined backlog cap across every class (saturating).
+    pub fn total_cap(&self) -> usize {
+        self.classes.iter().fold(0usize, |a, c| a.saturating_add(c.queue_cap))
+    }
+}
+
+/// Per-tenant sliding-window ledger: one timestamp deque per tenant,
+/// holding the debits still inside the window.  Single-owner (the
+/// dispatcher thread), so no interior locking.
+pub struct TenantLedger {
+    cfg: QuotaConfig,
+    windows: HashMap<TenantId, VecDeque<Instant>>,
+}
+
+impl TenantLedger {
+    pub fn new(cfg: QuotaConfig) -> TenantLedger {
+        TenantLedger { cfg, windows: HashMap::new() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    fn evict(q: &mut VecDeque<Instant>, window: Duration, now: Instant) {
+        while q.front().is_some_and(|&t| now.duration_since(t) >= window) {
+            q.pop_front();
+        }
+    }
+
+    /// Debit one admission against `tenant`'s window.  `Ok` when the
+    /// budget has room (the debit is recorded); `Err(retry_in)` when the
+    /// window is full — the hint is the time until the oldest debit
+    /// slides out, i.e. the earliest instant a resubmit can succeed
+    /// (the `Retry-After` analog).
+    pub fn debit(&mut self, tenant: TenantId, now: Instant) -> Result<(), Duration> {
+        if !self.enabled() {
+            return Ok(());
+        }
+        let quota = self.cfg.quota_for(tenant);
+        let q = self.windows.entry(tenant).or_default();
+        Self::evict(q, self.cfg.window, now);
+        if q.len() < quota {
+            q.push_back(now);
+            return Ok(());
+        }
+        // Zero-budget tenants have no oldest debit to wait out; the
+        // honest hint is one full window (it will still be refused, but
+        // the backoff is sane instead of zero).
+        let retry = match q.front() {
+            Some(&oldest) => self.cfg.window.saturating_sub(now.duration_since(oldest)),
+            None => self.cfg.window,
+        };
+        Err(retry.max(Duration::from_millis(1)))
+    }
+
+    /// Record served work that bypassed the quota stage — cache hits and
+    /// coalesced attaches are answered before the stage runs, but they
+    /// still consume the tenant's budget (served work is served work).
+    /// Bounded at 2x the budget so a hit flood cannot grow the deque
+    /// without limit; past that the window is saturated and further
+    /// charges add no admission signal.
+    pub fn charge(&mut self, tenant: TenantId, now: Instant) {
+        if !self.enabled() {
+            return;
+        }
+        let quota = self.cfg.quota_for(tenant);
+        let q = self.windows.entry(tenant).or_default();
+        Self::evict(q, self.cfg.window, now);
+        if q.len() < quota.saturating_mul(2).max(1) {
+            q.push_back(now);
+        }
+    }
+}
+
+/// The staged ingress: one FIFO (EDF-sorted for class 0) per scheduling
+/// class, plus the DRR deficit counters batch assembly runs on.
+/// Requests wait here — not in the channel — so admission and the class
+/// scheduler see the backlog split by class.
+pub struct Scheduler {
+    classes: Vec<ClassConfig>,
+    queues: Vec<VecDeque<Request>>,
+    /// DRR deficit per class: refilled with the weight-proportional
+    /// quantum each assembly round, spent one slot per pop, floored at
+    /// zero (spilled slots are free — a class that lends its quantum to
+    /// an idle sibling is not repaid later, matching the old
+    /// reservation-spill semantics).
+    deficit: Vec<f64>,
+    edf: bool,
+    total_weight: u64,
+}
+
+impl Scheduler {
+    pub fn new(cfg: &AdmissionConfig) -> Scheduler {
+        let classes: Vec<ClassConfig> = if cfg.classes.is_empty() {
+            vec![ClassConfig { weight: 1, queue_cap: usize::MAX }]
+        } else {
+            cfg.classes.clone()
+        };
+        let n = classes.len();
+        let total_weight = classes.iter().map(|c| c.weight as u64).sum::<u64>().max(1);
+        Scheduler {
+            classes,
+            queues: (0..n).map(|_| VecDeque::new()).collect(),
+            deficit: vec![0.0; n],
+            edf: cfg.edf,
+            total_weight,
+        }
+    }
+
+    pub fn class_count(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Clamp an out-of-range class index to the last (most best-effort)
+    /// class — a submit naming a class the pool was not configured with
+    /// degrades instead of panicking.
+    pub fn clamp_class(&self, class: usize) -> usize {
+        class.min(self.classes.len() - 1)
+    }
+
+    pub fn len(&self, class: usize) -> usize {
+        self.queues[class].len()
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queues.iter().all(|q| q.is_empty())
+    }
+
+    /// Staged requests that would dispatch ahead of a request inserted
+    /// at `pos` in `class`: its own insertion position plus the whole
+    /// backlog of every higher-priority class (they hold the larger
+    /// weight share, so lower classes queue behind them — the same
+    /// pessimistic estimate the two-class predictor used).
+    pub fn ahead_of(&self, class: usize, pos: usize) -> usize {
+        pos + self.queues[..class].iter().map(|q| q.len()).sum::<usize>()
+    }
+
+    /// Where a request with `deadline` would stage in `class`: EDF
+    /// position inside class 0 when enabled (deadline-carrying requests
+    /// sort by deadline, deadline-free ones keep FIFO at the back),
+    /// plain FIFO tail everywhere else.
+    pub fn insert_pos(&self, class: usize, deadline: Option<Instant>) -> usize {
+        if self.edf && class == 0 {
+            if let Some(dl) = deadline {
+                return self.queues[0].partition_point(|r| r.deadline.is_some_and(|d| d <= dl));
+            }
+        }
+        self.queues[class].len()
+    }
+
+    /// Stage one admitted request at the position [`Scheduler::insert_pos`]
+    /// chose for it.
+    pub fn insert_at(&mut self, class: usize, pos: usize, req: Request) {
+        let q = &mut self.queues[class];
+        if pos >= q.len() {
+            q.push_back(req);
+        } else {
+            q.insert(pos, req);
+        }
+    }
+
+    /// Whether any class (or the combined backlog) is past its cap —
+    /// the cheap depth test that gates the overload block.
+    pub fn over_caps(&self, cfg: &AdmissionConfig) -> bool {
+        let total: usize = self.total_len();
+        total >= cfg.total_cap()
+            || self
+                .classes
+                .iter()
+                .zip(&self.queues)
+                .any(|(c, q)| q.len() >= c.queue_cap)
+    }
+
+    /// Class indexes in shed order: lowest weight first (ties broken
+    /// toward the higher index, i.e. the more best-effort class), so
+    /// the premium class is always reached last.
+    pub fn shed_order(&self) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.classes.len()).collect();
+        order.sort_by_key(|&i| (self.classes[i].weight, std::cmp::Reverse(i)));
+        order
+    }
+
+    /// One overload round: trim each class in shed order (oldest first —
+    /// under overload the queue head has burned the most latency budget
+    /// already) while it is past its own cap or the combined backlog is
+    /// past the combined cap; the final (highest-weight) class is
+    /// trimmed against its own cap only — a flood in the premium class
+    /// must not ride an innocent under-cap sibling to unbounded depth,
+    /// but it still sheds last within every round.
+    pub fn shed_overflow(
+        &mut self,
+        cfg: &AdmissionConfig,
+        mut reject: impl FnMut(Request, usize),
+    ) {
+        let order = self.shed_order();
+        let Some((&last, rest)) = order.split_last() else { return };
+        for &cls in rest {
+            loop {
+                let total = self.total_len();
+                let over =
+                    self.queues[cls].len() >= self.classes[cls].queue_cap || total >= cfg.total_cap();
+                if !over {
+                    break;
+                }
+                let Some(req) = self.queues[cls].pop_front() else { break };
+                reject(req, total);
+            }
+        }
+        while self.queues[last].len() >= self.classes[last].queue_cap {
+            let total = self.total_len();
+            let Some(req) = self.queues[last].pop_front() else { break };
+            reject(req, total);
+        }
+    }
+
+    /// Open one DRR assembly round for a batch of `slots`: every
+    /// backlogged class's deficit is refilled with its weight-
+    /// proportional quantum; idle classes reset to zero (no credit
+    /// accrues while there is nothing to spend it on).
+    pub fn begin_round(&mut self, slots: usize) {
+        for (i, q) in self.queues.iter().enumerate() {
+            if q.is_empty() {
+                self.deficit[i] = 0.0;
+            } else {
+                let quantum =
+                    slots as f64 * self.classes[i].weight as f64 / self.total_weight as f64;
+                // Cap the carried credit at two full batches: enough to
+                // round fractional quanta to exact long-run ratios,
+                // bounded so a transient cannot bank unbounded slots.
+                self.deficit[i] = (self.deficit[i] + quantum).min(2.0 * slots as f64);
+            }
+        }
+    }
+
+    /// Pop the next request of the round: the backlogged class with the
+    /// largest deficit wins the slot (ties toward the lower index — the
+    /// premium class), and a spent or negative deficit still yields when
+    /// nobody else has work — the unused quantum spills, so no class
+    /// starves a half-empty batch.
+    pub fn pop_next(&mut self) -> Option<(usize, Request)> {
+        let mut best: Option<usize> = None;
+        for i in 0..self.queues.len() {
+            if self.queues[i].is_empty() {
+                continue;
+            }
+            best = match best {
+                None => Some(i),
+                Some(b) if self.deficit[i] > self.deficit[b] => Some(i),
+                Some(b) => Some(b),
+            };
+        }
+        let cls = best?;
+        self.deficit[cls] = (self.deficit[cls] - 1.0).max(0.0);
+        let req = self.queues[cls].pop_front()?;
+        Some((cls, req))
+    }
+
+    /// Pull every staged request out (shutdown drain).
+    pub fn drain_all(&mut self) -> Vec<Request> {
+        let mut out = Vec::with_capacity(self.total_len());
+        for q in &mut self.queues {
+            out.extend(q.drain(..));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::Reply;
+    use std::sync::mpsc::channel;
+
+    fn req(class: usize) -> Request {
+        let (tx, _rx) = channel::<Reply>();
+        // the receiver is dropped on purpose: these tests only exercise
+        // queueing order, never reply delivery
+        Request {
+            image: Vec::new(),
+            enqueued: Instant::now(),
+            class,
+            tenant: 0,
+            deadline: None,
+            key: None,
+            coalesce: None,
+            respond: tx,
+        }
+    }
+
+    fn cfg(classes: Vec<ClassConfig>) -> AdmissionConfig {
+        AdmissionConfig::weighted(classes, true)
+    }
+
+    #[test]
+    fn drr_ratio_converges_to_weights() {
+        let admission = cfg(vec![
+            ClassConfig { weight: 2, queue_cap: usize::MAX },
+            ClassConfig { weight: 1, queue_cap: usize::MAX },
+        ]);
+        let mut s = Scheduler::new(&admission);
+        for _ in 0..900 {
+            s.insert_at(0, usize::MAX, req(0));
+            s.insert_at(1, usize::MAX, req(1));
+        }
+        let mut popped = [0usize; 2];
+        // 150 rounds of 8 slots = 1200 pops over a 1800-deep backlog:
+        // both classes stay backlogged until near the end
+        for _ in 0..150 {
+            s.begin_round(8);
+            for _ in 0..8 {
+                let Some((cls, _)) = s.pop_next() else { break };
+                popped[cls] += 1;
+            }
+        }
+        let ratio = popped[0] as f64 / popped[1] as f64;
+        assert!(
+            (ratio - 2.0).abs() < 0.1,
+            "2:1 weights must yield ~2:1 slots under sustained backlog, got {popped:?}"
+        );
+    }
+
+    #[test]
+    fn drr_spills_unused_quantum() {
+        let admission = cfg(vec![
+            ClassConfig { weight: 3, queue_cap: usize::MAX },
+            ClassConfig { weight: 1, queue_cap: usize::MAX },
+        ]);
+        let mut s = Scheduler::new(&admission);
+        // only the low class has work: it must fill the whole batch
+        for _ in 0..8 {
+            s.insert_at(1, usize::MAX, req(1));
+        }
+        s.begin_round(8);
+        let mut got = 0;
+        while let Some((cls, _)) = s.pop_next() {
+            assert_eq!(cls, 1);
+            got += 1;
+        }
+        assert_eq!(got, 8, "idle premium quantum must spill to the backlogged class");
+    }
+
+    #[test]
+    fn strict_priority_weight_zero_serves_spill_only() {
+        // high_share = 1.0 maps to weight 0 for the low class: it gets
+        // slots only when the premium class cannot fill the batch
+        let admission = AdmissionConfig::two_class([64, 64], 1.0, true);
+        let mut s = Scheduler::new(&admission);
+        for _ in 0..8 {
+            s.insert_at(0, usize::MAX, req(0));
+            s.insert_at(1, usize::MAX, req(1));
+        }
+        s.begin_round(8);
+        let mut order = Vec::new();
+        for _ in 0..8 {
+            order.push(s.pop_next().unwrap().0);
+        }
+        assert_eq!(order, vec![0; 8], "strict priority fills from class 0 while it has work");
+        // premium drained: the next round is all spill to class 1
+        s.begin_round(8);
+        for _ in 0..8 {
+            assert_eq!(s.pop_next().unwrap().0, 1);
+        }
+    }
+
+    #[test]
+    fn shed_order_is_lowest_weight_first() {
+        let admission = cfg(vec![
+            ClassConfig { weight: 5, queue_cap: 1 },
+            ClassConfig { weight: 1, queue_cap: 1 },
+            ClassConfig { weight: 3, queue_cap: 1 },
+        ]);
+        let s = Scheduler::new(&admission);
+        assert_eq!(s.shed_order(), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn shed_overflow_trims_low_then_high_to_own_cap() {
+        let admission = cfg(vec![
+            ClassConfig { weight: 3, queue_cap: 4 },
+            ClassConfig { weight: 1, queue_cap: 2 },
+        ]);
+        let mut s = Scheduler::new(&admission);
+        for _ in 0..6 {
+            s.insert_at(0, usize::MAX, req(0));
+        }
+        for _ in 0..5 {
+            s.insert_at(1, usize::MAX, req(1));
+        }
+        let mut shed = [0usize; 2];
+        s.shed_overflow(&admission, |r, _| shed[r.class] += 1);
+        // low trims to under its cap (2 -> 1 left), high to under its own
+        assert_eq!(s.len(1), 1, "low class trimmed below its cap");
+        assert_eq!(s.len(0), 3, "high class trimmed below its own cap");
+        assert_eq!(shed, [3, 4]);
+    }
+
+    #[test]
+    fn ledger_debits_refuse_and_refill() {
+        let mut l = TenantLedger::new(QuotaConfig::uniform(2, 100));
+        let t0 = Instant::now();
+        assert!(l.debit(7, t0).is_ok());
+        assert!(l.debit(7, t0).is_ok());
+        let retry = l.debit(7, t0).expect_err("third debit in the window must refuse");
+        assert!(retry <= Duration::from_millis(100), "hint bounded by the window, got {retry:?}");
+        // another tenant is untouched
+        assert!(l.debit(8, t0).is_ok());
+        // past the window the budget refills
+        let later = t0 + Duration::from_millis(120);
+        assert!(l.debit(7, later).is_ok(), "window elapsed: budget must refill");
+    }
+
+    #[test]
+    fn ledger_charges_consume_the_budget() {
+        // a cache-hit flood charges the window, so the next engine-bound
+        // debit is refused — served work is served work
+        let mut l = TenantLedger::new(QuotaConfig::uniform(2, 1000));
+        let t0 = Instant::now();
+        l.charge(3, t0);
+        l.charge(3, t0);
+        assert!(l.debit(3, t0).is_err(), "charges must count against the budget");
+        // zero-budget tenants refuse with a full-window hint
+        let mut z = TenantLedger::new(QuotaConfig { quotas: vec![0], window: Duration::from_millis(250) });
+        let retry = z.debit(0, t0).expect_err("zero budget refuses outright");
+        assert_eq!(retry, Duration::from_millis(250));
+    }
+
+    #[test]
+    fn quota_config_last_entry_is_catch_all() {
+        let q = QuotaConfig { quotas: vec![10, 5, 2], window: Duration::from_secs(1) };
+        assert_eq!(q.quota_for(0), 10);
+        assert_eq!(q.quota_for(1), 5);
+        assert_eq!(q.quota_for(2), 2);
+        assert_eq!(q.quota_for(99), 2, "ids past the list inherit the last entry");
+        assert!(!QuotaConfig::off().enabled());
+    }
+
+    #[test]
+    fn two_class_config_matches_the_old_cli_shape() {
+        let a = AdmissionConfig::two_class([64, 4], 0.75, true);
+        assert_eq!(a.classes[0], ClassConfig { weight: 750, queue_cap: 64 });
+        assert_eq!(a.classes[1], ClassConfig { weight: 250, queue_cap: 4 });
+        assert!(a.shed && a.edf && !a.quota.enabled());
+        assert_eq!(a.total_cap(), 68);
+        let d = AdmissionConfig::default();
+        assert_eq!(d.classes.len(), 2);
+        assert_eq!(d.total_cap(), 2048);
+        assert!(!d.shed && d.edf);
+        assert_eq!(AdmissionConfig::uncapped().total_cap(), usize::MAX);
+    }
+}

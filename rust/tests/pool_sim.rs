@@ -26,8 +26,8 @@ use aifa::graph::Network;
 use aifa::platform::{CpuModel, FpgaPlatform};
 use aifa::server::{
     AdmissionConfig, ArbiterConfig, BatchConfig, BatchEngine, BatchOutput, CacheConfig,
-    EngineFactory, FabricArbiter, Priority, RejectReason, Reply, Response, Served, ServingPool,
-    SimEngine,
+    ClassConfig, EngineFactory, FabricArbiter, Priority, QuotaConfig, RejectReason, Reply,
+    RequestMeta, Response, Served, ServingPool, SimEngine,
 };
 use anyhow::Result;
 use std::sync::atomic::Ordering;
@@ -677,7 +677,7 @@ fn low_class_sheds_before_high_under_sustained_saturation() {
         BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
         // High's cap (64) exceeds all High traffic in the test; Low's
         // tiny cap (4) guarantees the Low queue trips overload
-        AdmissionConfig { queue_cap: [64, 4], shed: true, ..AdmissionConfig::default() },
+        AdmissionConfig::two_class([64, 4], 0.75, true),
         fpga_factory(24), // heavy all-FPGA batches: the backlog must build
         arbiter,
     )
@@ -1421,5 +1421,239 @@ fn failed_results_are_negatively_cached_under_the_fail_ttl() {
     submit_failed(&pool, 5);
     assert_eq!(pool.metrics.errors(), 2, "failures are not cached by default");
     assert_eq!(pool.metrics.cache_fail_hits(), 0);
+    pool.shutdown();
+}
+
+/// Backward-compat check for the scheduler extraction: the old strict
+/// High/Low behaviour is reproduced by an explicit 2-class *weight*
+/// config (no `Priority` index arithmetic anywhere).  Under sustained
+/// saturation the heavy class — kept under its own cap — loses nothing
+/// while the light class sheds, exactly as the strict-priority test
+/// above observes through the legacy constructor.
+#[test]
+fn high_low_reproduced_as_a_two_class_weight_config() {
+    const WORKERS: usize = 3;
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+
+    let arbiter = FabricArbiter::new(ArbiterConfig {
+        shared_at: 1,
+        saturated_at: 1,
+        saturation_window: Duration::from_millis(1),
+        ..ArbiterConfig::default()
+    });
+    let pool = ServingPool::start_full(
+        WORKERS,
+        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
+        // the same 64/4 cap split as the legacy test, expressed as
+        // weights (750/250 is what `two_class(_, 0.75, _)` produces)
+        AdmissionConfig::weighted(
+            vec![
+                ClassConfig { weight: 750, queue_cap: 64 },
+                ClassConfig { weight: 250, queue_cap: 4 },
+            ],
+            true,
+        ),
+        fpga_factory(24),
+        arbiter,
+    )
+    .unwrap();
+    let handle = pool.handle();
+
+    let n = 240usize;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let class = if i % 6 == 0 { 0 } else { 1 };
+        rxs.push((class, handle.submit_meta(image(ie, i), RequestMeta::class(class)).unwrap()));
+    }
+    let mut class_ok = [0u64; 2];
+    let mut class_rejected = [0u64; 2];
+    for (class, rx) in rxs {
+        match rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("a submitter was left waiting forever under overload")
+        {
+            Reply::Ok(_) => class_ok[class] += 1,
+            Reply::Rejected { reason, .. } => {
+                assert_eq!(reason, RejectReason::Overload, "no deadlines or quotas were set");
+                class_rejected[class] += 1;
+            }
+            Reply::Failed { worker, error } => {
+                panic!("no engine failures were injected (worker {worker}: {error})")
+            }
+        }
+    }
+    assert_eq!(class_ok[0], 40, "the heavy class under its cap must be fully served");
+    assert_eq!(class_rejected[0], 0, "the heavy class must not shed while under its cap");
+    assert!(class_rejected[1] > 0, "sustained saturation past the light cap must shed");
+    assert_eq!(class_ok[1] + class_rejected[1], 200, "every light request resolved once");
+    assert_eq!(pool.metrics.shed_by_class(), class_rejected, "per-class shed counters match");
+    assert_eq!(pool.metrics.served(), class_ok[0] + class_ok[1]);
+    assert_eq!(pool.metrics.errors(), 0);
+    drop(handle);
+    pool.shutdown();
+}
+
+/// DRR weight shaping end-to-end: both classes fully backlogged in
+/// defer mode, weights 2:1 — the heavy class gets ~2/3 of every batch,
+/// so it drains roughly twice as fast and its mean completion latency
+/// is decisively lower (the fluid-limit ratio for equal backlogs is
+/// 5:3; we assert a generous band around it).  Exact per-round slot
+/// arithmetic is covered by the sched.rs unit tests.
+#[test]
+fn drr_two_to_one_weights_drain_the_heavy_class_about_twice_as_fast() {
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+
+    let pool = ServingPool::start_full(
+        1, // a single worker serializes batches, keeping the DRR split crisp
+        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
+        AdmissionConfig::weighted(
+            vec![
+                ClassConfig { weight: 2, queue_cap: usize::MAX },
+                ClassConfig { weight: 1, queue_cap: usize::MAX },
+            ],
+            false, // defer mode: nothing sheds, both queues stay backlogged
+        ),
+        sim_factory(8),
+        FabricArbiter::new(ArbiterConfig::default()),
+    )
+    .unwrap();
+    let handle = pool.handle();
+
+    const PER_CLASS: usize = 120;
+    let mut rxs = Vec::new();
+    for i in 0..2 * PER_CLASS {
+        let class = i % 2; // interleaved on the wire: the split is the scheduler's doing
+        rxs.push(handle.submit_meta(image(ie, i), RequestMeta::class(class)).unwrap());
+    }
+    for rx in rxs {
+        let _ = ok(rx.recv_timeout(Duration::from_secs(120)).expect("defer mode answers all"));
+    }
+    assert_eq!(pool.metrics.served(), 2 * PER_CLASS as u64);
+
+    let merged = pool.metrics.merged();
+    assert_eq!(merged.latency_class.len(), 2);
+    assert_eq!(merged.latency_class[0].len(), PER_CLASS);
+    assert_eq!(merged.latency_class[1].len(), PER_CLASS);
+    let ratio = merged.latency_class[1].mean() / merged.latency_class[0].mean();
+    assert!(
+        (1.2..=2.8).contains(&ratio),
+        "2:1 DRR weights should drain the heavy class ~2x faster \
+         (light/heavy mean-latency ratio {ratio:.2} outside [1.2, 2.8])"
+    );
+    drop(handle);
+    pool.shutdown();
+}
+
+/// The sliding window refills: with a budget of 2 per window, the third
+/// back-to-back submit is quota-rejected with a retry hint, and a
+/// resubmit after the hinted backoff is admitted again.  Per-tenant
+/// counters account for all four requests.
+#[test]
+fn quota_window_refills_after_the_window_elapses() {
+    const TENANT: u32 = 7;
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+
+    let window = Duration::from_millis(400);
+    let pool = ServingPool::start_full(
+        1,
+        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
+        AdmissionConfig::uncapped()
+            .with_quota(QuotaConfig::uniform(2, window.as_millis() as u64)),
+        sim_factory(1),
+        FabricArbiter::new(ArbiterConfig::default()),
+    )
+    .unwrap();
+    let handle = pool.handle();
+    let submit = |tag: usize| {
+        handle.submit_meta(image(ie, tag), RequestMeta::class(0).with_tenant(TENANT)).unwrap()
+    };
+
+    // distinct images: nothing coalesces, every submit hits the quota stage
+    let rx1 = submit(1);
+    let rx2 = submit(2);
+    let rx3 = submit(3);
+    let _ = ok(rx1.recv_timeout(Duration::from_secs(60)).expect("stranded"));
+    let _ = ok(rx2.recv_timeout(Duration::from_secs(60)).expect("stranded"));
+    let hint = match rx3.recv_timeout(Duration::from_secs(60)).expect("stranded") {
+        Reply::Rejected { reason, retry_hint, .. } => {
+            assert_eq!(reason, RejectReason::Quota, "the window held only 2");
+            assert!(retry_hint > Duration::ZERO, "quota rejects hint the window-free time");
+            assert!(retry_hint <= window, "the hint never exceeds one full window");
+            retry_hint
+        }
+        other => panic!("expected Reply::Rejected {{ reason: Quota }}, got {other:?}"),
+    };
+
+    // honor the hint (plus slack for the dispatcher's staging clock)
+    std::thread::sleep(hint + Duration::from_millis(100));
+    let _ = ok(submit(4).recv_timeout(Duration::from_secs(60)).expect("stranded after refill"));
+
+    assert_eq!(pool.metrics.quota_shed_total(), 1);
+    assert_eq!(pool.metrics.served(), 3);
+    let tenants = pool.metrics.by_tenant();
+    assert_eq!(tenants.len(), 1, "only one tenant ever touched the pool");
+    assert_eq!(tenants[0].tenant, TENANT);
+    assert_eq!(tenants[0].admitted, 3, "requests 1, 2, and 4 were admitted");
+    assert_eq!(tenants[0].quota_shed, 1, "request 3 hit the exhausted window");
+    assert_eq!(tenants[0].served, 3);
+    assert_eq!(pool.metrics.shed_total(), 0, "quota rejects are not overload sheds");
+    assert_eq!(pool.metrics.errors(), 0);
+    drop(handle);
+    pool.shutdown();
+}
+
+/// Quota rejection is an ingress decision: a zero-budget tenant's
+/// requests are refused at the quota stage and never reach a worker —
+/// the fabric grants **zero** leases even though every plan offloads
+/// (the quota analog of the past-deadline no-doomed-work test).
+#[test]
+fn quota_rejected_requests_never_take_a_fabric_lease() {
+    const TENANT: u32 = 3;
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+
+    let pool = ServingPool::start_full(
+        1,
+        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
+        AdmissionConfig::uncapped().with_quota(QuotaConfig::uniform(0, 1000)),
+        fpga_factory(1), // every executed batch WOULD lease
+        FabricArbiter::new(ArbiterConfig::default()),
+    )
+    .unwrap();
+    let handle = pool.handle();
+
+    let n = 20usize;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        rxs.push(
+            handle.submit_meta(image(ie, i), RequestMeta::class(0).with_tenant(TENANT)).unwrap(),
+        );
+    }
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(60)).expect("a quota reject was never sent") {
+            Reply::Rejected { reason, retry_hint, .. } => {
+                assert_eq!(reason, RejectReason::Quota);
+                assert!(retry_hint > Duration::ZERO, "zero-budget tenants get a sane backoff");
+            }
+            other => panic!("expected Reply::Rejected {{ reason: Quota }}, got {other:?}"),
+        }
+    }
+    assert_eq!(
+        pool.arbiter().leases_granted(),
+        0,
+        "quota-rejected requests must not consume fabric leases"
+    );
+    assert_eq!(pool.metrics.served(), 0);
+    assert_eq!(pool.metrics.quota_shed_total(), n as u64);
+    let tenants = pool.metrics.by_tenant();
+    assert_eq!(tenants.len(), 1);
+    assert_eq!(tenants[0].quota_shed, n as u64);
+    assert_eq!(tenants[0].admitted, 0);
+    assert_eq!(pool.metrics.shed_total(), 0, "quota rejects are not overload sheds");
+    assert_eq!(pool.metrics.errors(), 0);
+    drop(handle);
     pool.shutdown();
 }

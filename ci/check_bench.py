@@ -49,10 +49,23 @@ fails (exit 1) when:
     means the gate exercised nothing), or an overloaded equal-quota row
     reports a Jain fairness index below the floor — per-tenant quotas
     must keep the skewed hot tenant from starving the background
-    tenants.
+    tenants;
+  * control accounting doesn't add up on any open-loop row: `generation`
+    counts the global-generation bumps applied mid-run, so a row that
+    fired the mid-sweep reconfigure must report > 0 and a row that
+    didn't must report 0, and the cached sweep must never reconfigure
+    (a generation bump wipes the response cache, polluting the dedup
+    signal the cached rows exist to isolate);
+  * --require-control is set and no open-loop run fired a mid-sweep
+    reconfigure, or a reconfigured row reports any `failed` replies
+    (the generation bump must not drop or error in-flight work — the
+    exactly-one-reply invariant under live reconfiguration), or
+    `control.ctl_knee_rate` is null/zero — no reconfigured run
+    sustained its rate, i.e. the knee did not survive the mid-traffic
+    generation bump.
 
 Usage: ci/check_bench.py BENCH_serve.json [--require-overload]
-       [--require-fabrics] [--require-tenants]
+       [--require-fabrics] [--require-tenants] [--require-control]
 """
 
 import json
@@ -70,6 +83,7 @@ OPEN_FIELDS = [
     "leases_total",
     "tenants", "tenant_n", "tenant_ok", "tenant_quota_shed",
     "tenant_goodput_rps", "jain_fairness",
+    "ctl_reconfigured", "generation",
 ]
 
 # Fairness floor for overloaded equal-quota rows under --require-tenants.
@@ -167,6 +181,28 @@ def check_open_rows(rows: list, n: int, tag: str, cached: bool) -> None:
                 f"{sum(row['fabric_leases'])} != leases_total={row['leases_total']} "
                 "(the routed shard and the leased shard disagree)"
             )
+        # Control accounting: `generation` is the count of global
+        # generation bumps applied mid-run, and the mid-sweep
+        # reconfigure is the only thing that bumps — so reconfigured
+        # rows must report > 0 and plain rows exactly 0.
+        if row["ctl_reconfigured"]:
+            if cached:
+                fail(
+                    f"{tag} row rate={row['rate']}: the cached sweep fired a "
+                    "reconfigure — the generation bump wipes the response cache, "
+                    "so the dedup signal this sweep isolates is polluted"
+                )
+            if row["generation"] < 1:
+                fail(
+                    f"{tag} row rate={row['rate']}: ctl_reconfigured but "
+                    f"generation={row['generation']} — the reconfigure did not "
+                    "bump the fabric generation"
+                )
+        elif row["generation"] != 0:
+            fail(
+                f"{tag} row rate={row['rate']}: generation={row['generation']} "
+                "without a reconfigure — something else bumped the epoch mid-run"
+            )
 
 
 def main() -> None:
@@ -174,11 +210,12 @@ def main() -> None:
     require_overload = "--require-overload" in args
     require_fabrics = "--require-fabrics" in args
     require_tenants = "--require-tenants" in args
+    require_control = "--require-control" in args
     paths = [a for a in args if not a.startswith("--")]
     if len(paths) != 1:
         fail(
             "usage: check_bench.py BENCH_serve.json [--require-overload] "
-            "[--require-fabrics] [--require-tenants]"
+            "[--require-fabrics] [--require-tenants] [--require-control]"
         )
     path = paths[0]
 
@@ -295,6 +332,50 @@ def main() -> None:
                     f"(per-tenant goodput {row['tenant_goodput_rps']})"
                 )
 
+    # The live-control gate: the sweep must have fired at least one
+    # mid-sweep reconfigure, every reconfigured row must keep the
+    # exactly-one-reply invariant with zero Failed replies, and the knee
+    # over the reconfigured runs alone must be nonzero — the pool kept
+    # sustaining load *across* a live generation bump.
+    if require_control:
+        ctl = data.get("control")
+        if not isinstance(ctl, dict):
+            fail("--require-control: top-level 'control' object missing from the report")
+        reconfigures = ctl.get("reconfigures", 0) or 0
+        ctl_rows = [r for r in open_loop if r["ctl_reconfigured"]]
+        if reconfigures < 1 or not ctl_rows:
+            fail(
+                "--require-control: no open-loop run fired a mid-sweep "
+                "reconfigure — add --ctl-reconfigure to the CI sweep"
+            )
+        if reconfigures != len(ctl_rows):
+            fail(
+                f"--require-control: control.reconfigures={reconfigures} but "
+                f"{len(ctl_rows)} open-loop rows report ctl_reconfigured — "
+                "the summary and the rows disagree"
+            )
+        for row in ctl_rows:
+            if row["failed"]:
+                fail(
+                    f"open-loop row rate={row['rate']} (reconfigured): "
+                    f"failed={row['failed']} — the generation bump dropped or "
+                    "errored in-flight work"
+                )
+        ctl_knee = ctl.get("ctl_knee_rate")
+        if ctl_knee is None or ctl_knee == 0:
+            fail(
+                "--require-control: ctl_knee_rate is null/zero — no reconfigured "
+                "run sustained its rate, so the knee did not survive the "
+                "mid-traffic generation bump"
+            )
+        sustained_max = max((r["rate"] for r in ctl_rows if r["sustained"]), default=None)
+        if sustained_max != ctl_knee:
+            fail(
+                f"--require-control: ctl_knee_rate={ctl_knee} but the reconfigured "
+                f"rows' own max sustained rate is {sustained_max} — the control "
+                "summary and the rows disagree"
+            )
+
     overloaded = [r for r in open_loop if not r["sustained"]]
     if require_overload and not overloaded:
         fail(
@@ -340,6 +421,13 @@ def main() -> None:
             f"fabrics={e.get('fabrics')}: knee={e.get('knee_rate')}" for e in fabric_knees
         )
         print(f"  fabric scale-out: {knee_strs}")
+    ctl = data.get("control")
+    if isinstance(ctl, dict) and (ctl.get("reconfigures") or 0) > 0:
+        print(
+            f"  control: {ctl['reconfigures']} mid-sweep reconfigures, "
+            f"ctl_knee_rate={ctl.get('ctl_knee_rate')} (knee across the "
+            "generation bump), zero failed replies on reconfigured rows"
+        )
 
 
 if __name__ == "__main__":

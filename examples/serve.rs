@@ -168,8 +168,7 @@ fn main() -> Result<()> {
     // resubmit the same image), so identical inputs recur — the cache
     // and coalescer answer them without burning engine capacity.
     let cache = CacheConfig::sized(256, 2000, 0x5e72e);
-    let server = Server::start_pool_cached(
-        workers,
+    let server = Server::builder(
         dir,
         move |store| {
             SchedulingEnv::new(
@@ -180,11 +179,13 @@ fn main() -> Result<()> {
             )
         },
         Arc::new(policy),
-        BatchConfig { max_wait: Duration::from_millis(4), max_batch: 8 },
-        admission,
-        cache,
-        arbiter.clone(),
-    )?;
+    )
+    .workers(workers)
+    .batch(BatchConfig { max_wait: Duration::from_millis(4), max_batch: 8 })
+    .admission(admission)
+    .cache(cache)
+    .arbiter(arbiter.clone())
+    .build()?;
 
     // First pass: replay the test set as Poisson arrivals (gap cap is
     // rate-relative — 10 mean gaps — so the offered load stays faithful
@@ -202,7 +203,7 @@ fn main() -> Result<()> {
             tenant,
             rx: server
                 .handle
-                .submit_meta(img, RequestMeta::from(priority).with_tenant(tenant))?,
+                .submit_meta(img, RequestMeta::from(priority).tenant(tenant))?,
         });
         std::thread::sleep(Duration::from_secs_f64(rng.exp_capped(rate)));
     }
@@ -240,10 +241,9 @@ fn main() -> Result<()> {
                     idx: p.idx,
                     priority: p.priority,
                     tenant: p.tenant,
-                    rx: server.handle.submit_meta(
-                        img,
-                        RequestMeta::from(p.priority).with_tenant(p.tenant),
-                    )?,
+                    rx: server
+                        .handle
+                        .submit_meta(img, RequestMeta::from(p.priority).tenant(p.tenant))?,
                 })
             })
             .collect::<Result<_>>()?;

@@ -13,7 +13,14 @@
 //!                  --shed / --queue-cap [high,low] / --high-share /
 //!                  --deadline-ms / --mix; tenant knobs: --tenants /
 //!                  --tenant-quota / --tenant-window-ms; dedup knobs:
-//!                  --cache-cap / --cache-ttl-ms / --cache-fail-ttl-ms)
+//!                  --cache-cap / --cache-ttl-ms / --cache-fail-ttl-ms;
+//!                  --ctl swap|retrain|reconfigure fires that
+//!                  control-plane command mid-replay, logging one JSON
+//!                  event line)
+//!   ctl           control-plane demo on an in-process sim pool: fire a
+//!                 swap, telemetry retrain, or single-shard reconfigure
+//!                 mid-traffic and prove zero replies are lost across
+//!                 the generation bump (aifa ctl <swap|retrain|reconfigure>)
 //!   bench serve   simulated-path serving sweeps -> BENCH_serve.json
 //!                 (closed-loop worker sweep + open-loop Poisson λ sweep,
 //!                  --mix splitting submits across High/Low, with
@@ -38,10 +45,11 @@ use aifa::graph::Network;
 use aifa::llm::LlmSession;
 use aifa::platform::{CpuModel, FpgaPlatform};
 use aifa::runtime::ArtifactStore;
+use aifa::fpga::{Bitstream, Resources};
 use aifa::server::{
-    AdmissionConfig, ArbiterConfig, BatchConfig, BatchEngine, CacheConfig, EngineFactory,
-    FabricArbiter, Priority, QuotaConfig, RejectReason, Reply, RequestMeta, Served, Server,
-    ServingPool, SimEngine,
+    AdmissionConfig, ArbiterConfig, BatchConfig, BatchEngine, CacheConfig, ControlPlane,
+    EngineFactory, FabricArbiter, Priority, QuotaConfig, RejectReason, Reply, RequestMeta,
+    RetrainConfig, Served, Server, ServingPool, SharedPolicy, SimEngine, SwappablePolicy,
 };
 use aifa::util::cli::Cli;
 use aifa::util::json::Json;
@@ -88,6 +96,8 @@ fn main() {
         .opt("tenants", Some("1"), "tenant count: 1 hot tenant (--mix of the traffic) + T-1 background tenants")
         .opt("tenant-quota", Some("auto"), "per-tenant sliding-window budget (requests per window; auto = ceil(n/tenants) when tenants > 1, 0 = quotas off)")
         .opt("tenant-window-ms", Some("1000"), "tenant quota sliding-window length in ms")
+        .opt("ctl", None, "serve: control-plane command to fire mid-replay (swap|retrain|reconfigure)")
+        .flag("ctl-reconfigure", "bench serve: fire a single-shard reconfigure mid-sweep on every uncached open-loop run")
         .flag("shed", "admission: reject (typed Rejected reply) instead of deferring under sustained saturation, lowest-weight class first");
     let args = match cli.parse(&rest) {
         Ok(a) => a,
@@ -107,7 +117,7 @@ fn main() {
 }
 
 fn usage() -> String {
-    "aifa <info|verify|train-agent|accuracy|llm|eda|serve|bench> [--help]".to_string()
+    "aifa <info|verify|train-agent|accuracy|llm|eda|serve|ctl|bench> [--help]".to_string()
 }
 
 fn run(cmd: &str, args: &aifa::util::cli::Args) -> Result<()> {
@@ -215,6 +225,7 @@ fn run(cmd: &str, args: &aifa::util::cli::Args) -> Result<()> {
             Ok(())
         }
         "serve" => cmd_serve(args),
+        "ctl" => cmd_ctl(args),
         "bench" => match args.positional.first().map(String::as_str) {
             Some("serve") | None => bench_serve(args),
             Some(other) => anyhow::bail!("unknown bench target '{other}' (have: serve)"),
@@ -527,8 +538,15 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
         cache.fail_ttl.as_millis(),
         if cache.enabled() { "cache + coalescing on" } else { "off" }
     );
-    let server = Server::start_pool_cached(
-        workers,
+    let ctl_cmd = match args.get("ctl") {
+        None => None,
+        Some(c @ ("swap" | "retrain" | "reconfigure")) => Some(c.to_string()),
+        Some(other) => anyhow::bail!("--ctl wants swap|retrain|reconfigure, got '{other}'"),
+    };
+    // Hot-swappable policy: engines decide through it, the control plane
+    // replaces it mid-traffic (`--ctl`, or programmatically).
+    let policy = SwappablePolicy::new(policy);
+    let server = Server::builder(
         dir,
         |store| {
             SchedulingEnv::new(
@@ -538,19 +556,56 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
                 EnvConfig { batch: 8, ..EnvConfig::default() },
             )
         },
-        Arc::new(policy),
-        BatchConfig { max_wait: wait, max_batch: 8 },
-        admission,
-        cache,
-        arbiter.clone(),
-    )?;
+        policy.clone(),
+    )
+    .workers(workers)
+    .batch(BatchConfig { max_wait: wait, max_batch: 8 })
+    .admission(admission)
+    .cache(cache)
+    .arbiter(arbiter.clone())
+    .build()?;
+    let plane = ControlPlane::new(arbiter.clone(), server.metrics.clone())
+        .with_policy(policy.clone())
+        .with_retrain(RetrainConfig { env, qcfg: QConfig::default(), seed, episodes });
+    // `--ctl reconfigure` needs a PR region to retarget; carve it before
+    // traffic starts so the mid-replay command is just the reconfigure.
+    let ctl_region = match ctl_cmd.as_deref() {
+        Some("reconfigure") => Some(arbiter.add_region(
+            0,
+            "ctl-pr0",
+            Resources { luts: 100_000, dsps: 1024, bram36: 128, uram: 32 },
+        )?),
+        _ => None,
+    };
 
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(n);
     for i in 0..n {
+        if i == n / 2 {
+            let ev = match ctl_cmd.as_deref() {
+                None => None,
+                Some("swap") => {
+                    let cur = policy.current();
+                    Some(plane.swap(LevelPlacements { by_level: cur.by_level.clone() })?)
+                }
+                Some("retrain") => Some(plane.retrain()?),
+                Some(_) => Some(plane.reconfigure(
+                    0,
+                    ctl_region.expect("region carved at startup"),
+                    Bitstream {
+                        name: "ctl-retuned".into(),
+                        usage: Resources { luts: 60_000, dsps: 512, bram36: 64, uram: 16 },
+                        fmax_hz: 250e6,
+                    },
+                )?),
+            };
+            if let Some(ev) = ev {
+                println!("{}", ev.json_line());
+            }
+        }
         let img = ts.decode_batch(i % ts.n, 1)?;
         let class = class_of(i, mix);
-        let mut meta = RequestMeta::class(class.index()).with_tenant(tenant_of(i, mix, tenants));
+        let mut meta = RequestMeta::new().class(class.index()).tenant(tenant_of(i, mix, tenants));
         meta.deadline = deadline;
         pending.push((i % ts.n, class, server.handle.submit_meta(img, meta)?));
     }
@@ -621,6 +676,125 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
         n as f64 / wall
     );
     server.shutdown();
+    Ok(())
+}
+
+/// `aifa ctl`: control-plane demo on an in-process sim pool.  Spins up
+/// an N-worker [`SimEngine`] pool behind a hot-swappable policy, fires
+/// the requested command (`swap` | `retrain` | `reconfigure`) halfway
+/// through the replay, and proves the exactly-one-reply invariant held
+/// across the generation bump: every submit resolves, zero `Failed`.
+/// The applied command is printed as one machine-readable JSON event
+/// line (the same line `aifa serve --ctl` logs).
+fn cmd_ctl(args: &aifa::util::cli::Args) -> Result<()> {
+    use aifa::agent::Policy as _;
+    use aifa::platform::Placement;
+
+    let cmd = match args.positional.first().map(String::as_str) {
+        Some(c @ ("swap" | "retrain" | "reconfigure")) => c.to_string(),
+        Some(other) => anyhow::bail!("unknown ctl command '{other}' (have: swap, retrain, reconfigure)"),
+        None => anyhow::bail!("usage: aifa ctl <swap|retrain|reconfigure> [--n N] [--workers W]"),
+    };
+    let n = args.get_usize("n").unwrap_or(200);
+    let workers = match args.get("workers") {
+        Some("auto") | None => 2,
+        Some(_) => args.get_usize("workers").unwrap_or(2),
+    };
+    let work = args.get_usize("work").unwrap_or(8);
+    let episodes = args.get_usize("episodes").unwrap_or(200);
+    let seed = args.get_u64("seed").unwrap_or(42);
+
+    let make_env = || {
+        SchedulingEnv::new(
+            Network::paper_scale(),
+            FpgaPlatform::table1_card(),
+            CpuModel::default(),
+            EnvConfig { batch: 8, congestion_p: 0.5, ..EnvConfig::default() },
+        )
+    };
+    let env = make_env();
+    let units = env.n_units();
+    // Serve a greedy-derived placement first; the control plane replaces
+    // it mid-traffic.
+    let policy = SwappablePolicy::new(LevelPlacements::extract(|level| GreedyStep.placement(&env, level)));
+    let engine_policy = policy.clone();
+    let factory: Arc<EngineFactory> = Arc::new(move |_w: usize| -> Result<Box<dyn BatchEngine>> {
+        let shared: Arc<dyn aifa::agent::Policy + Send + Sync> = engine_policy.clone();
+        Ok(Box::new(SimEngine::new(make_env(), Box::new(SharedPolicy(shared)), vec![1, 8], work)))
+    });
+    let pool = ServingPool::builder(factory).workers(workers).build()?;
+    let arbiter = pool.arbiter().clone();
+    let plane = ControlPlane::new(arbiter.clone(), pool.metrics.clone())
+        .with_policy(policy.clone())
+        .with_retrain(RetrainConfig { env, qcfg: QConfig::default(), seed, episodes });
+    let ctl_region = match cmd.as_str() {
+        "reconfigure" => Some(arbiter.add_region(
+            0,
+            "ctl-pr0",
+            Resources { luts: 100_000, dsps: 1024, bram36: 128, uram: 32 },
+        )?),
+        _ => None,
+    };
+    let gen0 = arbiter.generation();
+    println!("ctl: {cmd} over {n} requests, {workers} workers, generation {gen0}");
+
+    let handle = pool.handle();
+    let ie = Network::paper_scale().units[0].in_elems(1);
+    let base: Vec<f32> = (0..ie).map(|i| (i % 13) as f32 * 0.07).collect();
+    let mut pending = Vec::with_capacity(n);
+    for i in 0..n {
+        if i == n / 2 {
+            let ev = match cmd.as_str() {
+                "swap" => plane.swap(LevelPlacements {
+                    by_level: [
+                        vec![Placement::Cpu; units],
+                        vec![Placement::Cpu; units],
+                        vec![Placement::Cpu; units],
+                    ],
+                })?,
+                "retrain" => plane.retrain()?,
+                _ => plane.reconfigure(
+                    0,
+                    ctl_region.expect("region carved at startup"),
+                    Bitstream {
+                        name: "ctl-retuned".into(),
+                        usage: Resources { luts: 60_000, dsps: 512, bram36: 64, uram: 16 },
+                        fmax_hz: 250e6,
+                    },
+                )?,
+            };
+            println!("{}", ev.json_line());
+        }
+        let mut img = base.clone();
+        img[0] = i as f32;
+        pending.push(handle.submit(img)?);
+    }
+    let (mut ok, mut rejected, mut failed) = (0u64, 0u64, 0u64);
+    let mut post_gen_ok = 0u64;
+    let gen1 = arbiter.generation();
+    for rx in pending {
+        match rx.recv()? {
+            Reply::Ok(resp) => {
+                ok += 1;
+                post_gen_ok += (resp.plan_generation == gen1) as u64;
+            }
+            Reply::Rejected { .. } => rejected += 1,
+            Reply::Failed { .. } => failed += 1,
+        }
+    }
+    println!("{}", pool.metrics.summary());
+    println!(
+        "replies: ok={ok} rejected={rejected} failed={failed} (of {n}) — generation {gen0} -> {gen1}, {post_gen_ok} served under the new epoch"
+    );
+    drop(handle);
+    pool.shutdown();
+    if ok + rejected + failed != n as u64 || failed > 0 {
+        anyhow::bail!(
+            "control-plane invariant violated: {} replies for {n} submits, {failed} Failed",
+            ok + rejected + failed
+        );
+    }
+    println!("zero replies lost across the {cmd}: every submit resolved, none Failed");
     Ok(())
 }
 
@@ -712,6 +886,14 @@ struct OpenLoopRow {
     /// Jain fairness index over per-tenant goodput: (Σx)²/(T·Σx²), 1.0
     /// = perfectly equal shares, 1/T = one tenant took everything.
     jain_fairness: f64,
+    /// Whether a control-plane reconfigure of shard 0 fired mid-run
+    /// (`--ctl-reconfigure`): the reply identity and knee on this row
+    /// were measured *across* a live generation bump.
+    ctl_reconfigured: bool,
+    /// Global-generation bumps applied during the run (> 0 exactly when
+    /// a reconfigure fired; the arbiter's absolute epoch starts at 1, so
+    /// the delta is the portable signal).
+    generation: u64,
 }
 
 /// Jain's fairness index over per-tenant goodput.  1.0 for a single
@@ -746,13 +928,11 @@ fn sim_factory(work: usize) -> Arc<EngineFactory> {
 /// Admission is uncapped: the closed loop measures raw pool capacity, so
 /// deferral must never throttle it.
 fn run_sim_serve(workers: usize, n: usize, work: usize, wait: Duration) -> Result<ServeBenchRow> {
-    let pool = ServingPool::start_full(
-        workers,
-        BatchConfig { max_wait: wait, max_batch: 8 },
-        AdmissionConfig::uncapped(),
-        sim_factory(work),
-        FabricArbiter::new(ArbiterConfig::for_workers(workers.max(1))),
-    )?;
+    let pool = ServingPool::builder(sim_factory(work))
+        .workers(workers)
+        .batch(BatchConfig { max_wait: wait, max_batch: 8 })
+        .admission(AdmissionConfig::uncapped())
+        .build()?;
     let handle = pool.handle();
 
     let ie = Network::paper_scale().units[0].in_elems(1);
@@ -811,18 +991,33 @@ fn run_open_loop(
     fabrics: usize,
     mix: f64,
     tenants: usize,
+    ctl_reconfigure: bool,
 ) -> Result<OpenLoopRow> {
     let cfg = BatchConfig { max_wait: wait, max_batch: 8 };
-    let pool = ServingPool::start_cached(
-        workers,
-        cfg,
-        admission,
-        cache,
-        sim_factory(work),
-        FabricArbiter::new(ArbiterConfig::for_pool(workers.max(1), fabrics)),
-    )?;
+    let pool = ServingPool::builder(sim_factory(work))
+        .workers(workers)
+        .batch(cfg)
+        .admission(admission)
+        .cache(cache)
+        .arbiter(FabricArbiter::new(ArbiterConfig::for_pool(workers.max(1), fabrics)))
+        .build()?;
     let handle = pool.handle();
     let arbiter = pool.arbiter().clone();
+    let gen_start = arbiter.generation();
+    // Mid-sweep control-plane reconfigure (`--ctl-reconfigure`): carve a
+    // PR region on shard 0 up front; the command itself fires halfway
+    // through the arrivals, so the row's knee and reply identity are
+    // measured across a live generation bump.
+    let plane = ControlPlane::new(arbiter.clone(), pool.metrics.clone());
+    let ctl_region = if ctl_reconfigure {
+        Some(arbiter.add_region(
+            0,
+            "bench-pr0",
+            Resources { luts: 100_000, dsps: 1024, bram36: 128, uram: 32 },
+        )?)
+    } else {
+        None
+    };
 
     let ie = Network::paper_scale().units[0].in_elems(1);
     let base: Vec<f32> = (0..ie).map(|i| (i % 13) as f32 * 0.07).collect();
@@ -836,6 +1031,18 @@ fn run_open_loop(
     let mut pending = Vec::with_capacity(n);
     let mut tenant_n = vec![0u64; tenants];
     for i in 0..n {
+        if let (Some(region), true) = (ctl_region, i == n / 2) {
+            let ev = plane.reconfigure(
+                0,
+                region,
+                Bitstream {
+                    name: "bench-retuned".into(),
+                    usage: Resources { luts: 60_000, dsps: 512, bram36: 64, uram: 16 },
+                    fmax_hz: 250e6,
+                },
+            )?;
+            println!("{}", ev.json_line());
+        }
         let mut img = base.clone();
         img[0] = match &zipf {
             Some(z) => z.sample(&mut rng) as f32,
@@ -844,7 +1051,7 @@ fn run_open_loop(
         let class = class_of(i, mix);
         let tenant = tenant_of(i, mix, tenants);
         tenant_n[tenant as usize] += 1;
-        let mut meta = RequestMeta::class(class.index()).with_tenant(tenant);
+        let mut meta = RequestMeta::new().class(class.index()).tenant(tenant);
         meta.deadline = deadline;
         pending.push((class, tenant, handle.submit_meta(img, meta)?));
         // rate-relative cap (10 mean gaps): the old fixed 50 ms cap
@@ -947,6 +1154,8 @@ fn run_open_loop(
         tenant_quota_shed,
         tenant_goodput_rps,
         jain_fairness,
+        ctl_reconfigured: ctl_region.is_some(),
+        generation: arbiter.generation() - gen_start,
     };
     drop(handle);
     pool.shutdown();
@@ -1025,6 +1234,8 @@ fn open_loop_json(rows: &[OpenLoopRow]) -> Vec<Json> {
                     Json::Arr(r.tenant_goodput_rps.iter().map(|&x| Json::num(x)).collect()),
                 ),
                 ("jain_fairness", Json::num(r.jain_fairness)),
+                ("ctl_reconfigured", Json::Bool(r.ctl_reconfigured)),
+                ("generation", Json::num(r.generation as f64)),
             ])
         })
         .collect()
@@ -1112,7 +1323,12 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
     // `cache_knee_rate` vs `knee_rate` isolates exactly what
     // deduplication buys; extra `--fabrics` values repeat the uncached
     // sweep so `fabric_knees` isolates what shard scale-out buys.
-    let sweep = |tag: &str, fabrics: usize, ccfg: CacheConfig| -> Result<(Vec<OpenLoopRow>, f64)> {
+    let ctl_reconfigure = args.has("ctl-reconfigure");
+    let sweep = |tag: &str,
+                 fabrics: usize,
+                 ccfg: CacheConfig,
+                 ctl: bool|
+     -> Result<(Vec<OpenLoopRow>, f64)> {
         let mut ol_rows = Vec::new();
         for &rate in &rates {
             let r = run_open_loop(
@@ -1129,6 +1345,7 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
                 fabrics,
                 mix,
                 tenants,
+                ctl,
             )?;
             println!(
                 "[{tag}] λ={:<8.0} offered={:>9.1}/s workers={} achieved={:>9.1}/s goodput={:>9.1}/s {} ok/rej/exp/quota/fail={}/{}/{}/{}/{} p50={:>8.3}ms p99={:>8.3}ms queue p50={:>8.3}ms levels={:.2}/{:.2}/{:.2} peak-leases={}",
@@ -1224,17 +1441,19 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
         } else {
             format!("uncached fabrics={m}")
         };
-        let (rows_m, knee_m) = sweep(&tag, m, CacheConfig::default())?;
+        let (rows_m, knee_m) = sweep(&tag, m, CacheConfig::default(), ctl_reconfigure)?;
         if fi == 0 {
             knee_rate = knee_m;
         }
         fabric_knees.push((m, knee_m));
         ol_rows.extend(rows_m);
     }
-    // The cached sweep stays at the base shard count: `cache_knee_rate`
-    // vs `knee_rate` must isolate deduplication alone.
+    // The cached sweep stays at the base shard count and never fires the
+    // mid-sweep reconfigure: `cache_knee_rate` vs `knee_rate` must
+    // isolate deduplication alone (a generation bump would wipe the
+    // cache mid-run and pollute the dedup signal).
     let cached_sweep =
-        if cache.enabled() { Some(sweep("cached", base_fabrics, cache)?) } else { None };
+        if cache.enabled() { Some(sweep("cached", base_fabrics, cache, false)?) } else { None };
 
     let row_objs: Vec<Json> = rows
         .iter()
@@ -1278,6 +1497,25 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
     put(
         "knee_rate",
         if knee_rate.is_nan() { Json::Null } else { Json::num(knee_rate) },
+    );
+    // Control-plane summary: how many open-loop runs fired a mid-sweep
+    // reconfigure, and the knee over those runs alone — nonzero proves
+    // the pool sustained load *across* a live generation bump.
+    let ctl_rows = ol_rows.iter().filter(|r| r.ctl_reconfigured).count();
+    let ctl_knee = ol_rows
+        .iter()
+        .filter(|r| r.ctl_reconfigured && r.sustained)
+        .map(|r| r.rate)
+        .fold(f64::NAN, f64::max);
+    put(
+        "control",
+        Json::obj(vec![
+            ("reconfigures", Json::num(ctl_rows as f64)),
+            (
+                "ctl_knee_rate",
+                if ctl_knee.is_nan() { Json::Null } else { Json::num(ctl_knee) },
+            ),
+        ]),
     );
     put("skew", Json::num(skew));
     put("cache_cap", Json::num(cache.cap as f64));

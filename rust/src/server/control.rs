@@ -1,0 +1,442 @@
+//! Live control plane over a running serving pool.
+//!
+//! The paper's agent adapts the CPU/FPGA partition *at runtime* (§III);
+//! until this module the machinery for that — the arbiter's two-level
+//! epochs, the level-keyed plan caches, the generation-stamped response
+//! cache — was only driven by tests.  [`ControlPlane`] is the admin
+//! handle that drives it in production, over three commands:
+//!
+//! * **swap** — atomically replace the pool's [`LevelPlacements`] and
+//!   bump the global fabric generation.  Workers pick the new placement
+//!   up on their next plan lookup (the epoch bump made every cached plan
+//!   stale), the response cache drops its entries wholesale, and new
+//!   submits content-key under the new generation — all lazily, without
+//!   touching a channel, so the exactly-one-reply invariant is
+//!   untouched: no request in flight is dropped or re-answered.
+//! * **retrain** — rebuild the placement from **live telemetry**: the
+//!   per-level batch-cost EWMAs the workers publish into
+//!   [`PoolMetrics`] re-derive the environment's congestion slowdowns,
+//!   a fresh [`QAgent`] trains against that observed environment (not
+//!   the offline sim's assumed 1.5×/3×), and the result swaps in as
+//!   above.  If the observed level ordering inverts, so does the
+//!   derived environment — the placement follows the fabric that is,
+//!   not the fabric that was assumed.
+//! * **reconfigure** — partial reconfiguration of a *single* fabric
+//!   shard mid-traffic ([`FabricArbiter::reconfigure`]): that shard's
+//!   own epoch bumps (dropping only its plans), folded into the global
+//!   generation; sibling shards keep serving from their intact caches.
+//!
+//! Every applied command lands as a counter in [`PoolMetrics`]
+//! ([`PoolMetrics::observe_control`]) and as one machine-readable JSON
+//! line ([`ControlEvent::json_line`]) in the serve log, so `bench
+//! serve` can fire a mid-sweep reconfigure and prove the knee survives
+//! it.  The CLI front-end is `aifa ctl` (see `main.rs`).
+
+use super::arbiter::FabricArbiter;
+use super::pool::PoolMetrics;
+use crate::agent::{CongestionLevel, LevelPlacements, Policy, QAgent, QConfig, SchedulingEnv, State};
+use crate::fpga::Bitstream;
+use crate::platform::Placement;
+use crate::util::json::Json;
+use anyhow::Result;
+use std::sync::{Arc, RwLock};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// The three admin commands a [`ControlPlane`] applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CtlAction {
+    /// Atomic [`LevelPlacements`] replacement + global generation bump.
+    Swap,
+    /// Telemetry-driven retrain, then swap.
+    Retrain,
+    /// Partial reconfiguration of one fabric shard.
+    Reconfigure,
+}
+
+impl CtlAction {
+    /// Dense index for the [`PoolMetrics`] control counters.
+    pub fn index(self) -> usize {
+        match self {
+            CtlAction::Swap => 0,
+            CtlAction::Retrain => 1,
+            CtlAction::Reconfigure => 2,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CtlAction::Swap => "swap",
+            CtlAction::Retrain => "retrain",
+            CtlAction::Reconfigure => "reconfigure",
+        }
+    }
+}
+
+impl std::fmt::Display for CtlAction {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One applied control-plane command: what ran, the epoch it produced,
+/// and when.  Serializes to a single JSON log line so serving logs stay
+/// machine-readable event streams.
+#[derive(Debug, Clone)]
+pub struct ControlEvent {
+    pub action: CtlAction,
+    /// Global fabric generation *after* the command applied — the epoch
+    /// every post-command submit keys and every post-command plan
+    /// rebuilds under.
+    pub generation: u64,
+    /// Shard the command targeted (`Reconfigure` only; swaps and
+    /// retrains are pool-wide).
+    pub fabric: Option<usize>,
+    /// That shard's own epoch after the command (`Reconfigure` only).
+    pub fabric_generation: Option<u64>,
+    /// Modelled partial-reconfiguration wall time in seconds
+    /// (`Reconfigure` only).
+    pub reconfig_s: Option<f64>,
+    /// Congestion slowdowns the retrain derived from live telemetry as
+    /// `(shared, saturated)` multiples of the observed Free-level cost
+    /// (`Retrain` only, and only when telemetry existed).
+    pub slowdowns: Option<(f64, f64)>,
+    /// Wall-clock timestamp (Unix milliseconds) the command applied.
+    pub unix_ms: u64,
+}
+
+impl ControlEvent {
+    fn new(action: CtlAction, generation: u64) -> ControlEvent {
+        let unix_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        ControlEvent {
+            action,
+            generation,
+            fabric: None,
+            fabric_generation: None,
+            reconfig_s: None,
+            slowdowns: None,
+            unix_ms,
+        }
+    }
+
+    /// The event as one JSON log line (no trailing newline).
+    pub fn json_line(&self) -> String {
+        Json::obj(vec![
+            ("event", Json::str("ctl")),
+            ("action", Json::str(self.action.as_str())),
+            ("generation", Json::num(self.generation as f64)),
+            ("fabric", self.fabric.map_or(Json::Null, |f| Json::num(f as f64))),
+            (
+                "fabric_generation",
+                self.fabric_generation.map_or(Json::Null, |g| Json::num(g as f64)),
+            ),
+            ("reconfig_s", self.reconfig_s.map_or(Json::Null, Json::num)),
+            (
+                "shared_slowdown",
+                self.slowdowns.map_or(Json::Null, |(s, _)| Json::num(s)),
+            ),
+            (
+                "saturated_slowdown",
+                self.slowdowns.map_or(Json::Null, |(_, x)| Json::num(x)),
+            ),
+            ("unix_ms", Json::num(self.unix_ms as f64)),
+        ])
+        .to_string()
+    }
+}
+
+/// A [`LevelPlacements`] the control plane can replace while engines
+/// keep reading it: engines hold this (via
+/// [`super::pool::SharedPolicy`]) and take the read lock per decision;
+/// [`SwappablePolicy::swap`] replaces the inner `Arc` atomically.  The
+/// swap alone changes nothing cached — pairing it with the arbiter's
+/// generation bump is what invalidates plans and cached responses, and
+/// [`ControlPlane::swap`] always does both.
+pub struct SwappablePolicy {
+    inner: RwLock<Arc<LevelPlacements>>,
+}
+
+impl SwappablePolicy {
+    pub fn new(initial: LevelPlacements) -> Arc<SwappablePolicy> {
+        Arc::new(SwappablePolicy { inner: RwLock::new(Arc::new(initial)) })
+    }
+
+    /// The placement currently being served.
+    pub fn current(&self) -> Arc<LevelPlacements> {
+        self.inner.read().unwrap().clone()
+    }
+
+    /// Replace the placement, returning the one it displaced.
+    pub fn swap(&self, next: LevelPlacements) -> Arc<LevelPlacements> {
+        std::mem::replace(&mut *self.inner.write().unwrap(), Arc::new(next))
+    }
+}
+
+impl Policy for SwappablePolicy {
+    fn name(&self) -> &'static str {
+        self.inner.read().unwrap().name()
+    }
+
+    fn decide(&self, env: &SchedulingEnv, s: &State) -> Placement {
+        self.inner.read().unwrap().decide(env, s)
+    }
+}
+
+/// What [`ControlPlane::retrain`] trains against: the template
+/// environment supplies the topology (network, platform, batch) while
+/// the congestion slowdowns are re-derived from live telemetry at each
+/// retrain.
+pub struct RetrainConfig {
+    /// Template environment; its `shared_slowdown`/`saturated_slowdown`
+    /// are overridden from the observed per-level EWMAs whenever
+    /// telemetry exists.
+    pub env: SchedulingEnv,
+    pub qcfg: QConfig,
+    pub seed: u64,
+    /// Training episodes per retrain.
+    pub episodes: usize,
+}
+
+/// Admin handle over a running pool: shares the pool's arbiter and
+/// metrics, optionally the swappable policy its engines decide through
+/// ([`ControlPlane::with_policy`]) and a retrain recipe
+/// ([`ControlPlane::with_retrain`]).  `reconfigure` needs neither; swap
+/// needs the policy; retrain needs both.
+pub struct ControlPlane {
+    arbiter: Arc<FabricArbiter>,
+    metrics: Arc<PoolMetrics>,
+    policy: Option<Arc<SwappablePolicy>>,
+    retrain: Option<RetrainConfig>,
+}
+
+impl ControlPlane {
+    pub fn new(arbiter: Arc<FabricArbiter>, metrics: Arc<PoolMetrics>) -> ControlPlane {
+        ControlPlane { arbiter, metrics, policy: None, retrain: None }
+    }
+
+    /// Attach the swappable policy the pool's engines decide through.
+    pub fn with_policy(mut self, policy: Arc<SwappablePolicy>) -> ControlPlane {
+        self.policy = Some(policy);
+        self
+    }
+
+    /// Attach the retrain recipe (template env, Q-config, seed).
+    pub fn with_retrain(mut self, retrain: RetrainConfig) -> ControlPlane {
+        self.retrain = Some(retrain);
+        self
+    }
+
+    fn policy(&self) -> Result<&Arc<SwappablePolicy>> {
+        self.policy
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("control plane has no swappable policy attached"))
+    }
+
+    /// Atomically swap the serving placement and bump the global
+    /// generation: in-flight batches finish under the plan they started
+    /// with (their replies are untouched), every later plan lookup
+    /// rebuilds under the new placement, and the response cache +
+    /// content keys roll to the new epoch.
+    pub fn swap(&self, next: LevelPlacements) -> Result<ControlEvent> {
+        self.policy()?.swap(next);
+        let generation = self.arbiter.bump_generation();
+        self.metrics.observe_control(CtlAction::Swap);
+        Ok(ControlEvent::new(CtlAction::Swap, generation))
+    }
+
+    /// Environment the next retrain would train against: the template
+    /// with congestion slowdowns re-derived from the live per-level
+    /// batch-cost EWMAs ([`PoolMetrics::batch_cost_observed`]).  Ratios
+    /// are taken over the observed Free-level cost; levels without
+    /// telemetry keep the template's value, and with no Free-level
+    /// observation at all the template is returned unchanged.  The
+    /// observed ordering is deliberately *not* re-sorted — if the
+    /// fabric's Saturated level measures faster than Free, the trainer
+    /// should learn for the fabric that was measured.
+    pub fn telemetry_env(&self) -> Result<(SchedulingEnv, Option<(f64, f64)>)> {
+        let t = &self
+            .retrain
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("control plane has no retrain config attached"))?
+            .env;
+        let mut cfg = t.cfg;
+        // train with contention in the mix so every level gets a policy
+        cfg.congestion_p = cfg.congestion_p.max(0.5);
+        let free = self.metrics.batch_cost_observed(CongestionLevel::Free);
+        let slowdowns = if free > 0.0 {
+            let ratio = |level: CongestionLevel, fallback: f64| {
+                let c = self.metrics.batch_cost_observed(level);
+                if c > 0.0 {
+                    (c / free).max(1e-3)
+                } else {
+                    fallback
+                }
+            };
+            cfg.shared_slowdown = ratio(CongestionLevel::Shared, cfg.shared_slowdown);
+            cfg.saturated_slowdown = ratio(CongestionLevel::Saturated, cfg.saturated_slowdown);
+            Some((cfg.shared_slowdown, cfg.saturated_slowdown))
+        } else {
+            None
+        };
+        Ok((SchedulingEnv::new(t.net.clone(), t.fpga, t.cpu, cfg), slowdowns))
+    }
+
+    /// Retrain the Q-agent against the telemetry-derived environment and
+    /// swap the result in (placement change + generation bump, same
+    /// zero-loss contract as [`ControlPlane::swap`]).
+    pub fn retrain(&self) -> Result<ControlEvent> {
+        let (env, slowdowns) = self.telemetry_env()?;
+        let rc = self.retrain.as_ref().expect("checked by telemetry_env");
+        let policy = self.policy()?;
+        let mut agent = QAgent::new(rc.qcfg, rc.seed);
+        agent.train(&env, rc.episodes);
+        policy.swap(LevelPlacements::extract(|level| agent.policy(&env, level)));
+        let generation = self.arbiter.bump_generation();
+        self.metrics.observe_control(CtlAction::Retrain);
+        let mut ev = ControlEvent::new(CtlAction::Retrain, generation);
+        ev.slowdowns = slowdowns;
+        Ok(ev)
+    }
+
+    /// Partially reconfigure one fabric shard mid-traffic: that shard's
+    /// epoch bumps (only its plans drop), folded into the global
+    /// generation; sibling shards keep their plans and keep serving.
+    pub fn reconfigure(
+        &self,
+        fabric_id: usize,
+        region: usize,
+        bs: Bitstream,
+    ) -> Result<ControlEvent> {
+        let (reconfig_s, generation) = self.arbiter.reconfigure(fabric_id, region, bs)?;
+        self.metrics.observe_control(CtlAction::Reconfigure);
+        let mut ev = ControlEvent::new(CtlAction::Reconfigure, generation);
+        ev.fabric = Some(fabric_id);
+        ev.fabric_generation = Some(self.arbiter.fabric_generation(fabric_id));
+        ev.reconfig_s = Some(reconfig_s);
+        Ok(ev)
+    }
+
+    /// The arbiter this control plane drives (shared with the pool).
+    pub fn arbiter(&self) -> &Arc<FabricArbiter> {
+        &self.arbiter
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::EnvConfig;
+    use crate::graph::Network;
+    use crate::platform::{CpuModel, FpgaPlatform};
+    use crate::server::ArbiterConfig;
+
+    fn env() -> SchedulingEnv {
+        SchedulingEnv::new(
+            Network::paper_scale(),
+            FpgaPlatform::table1_card(),
+            CpuModel::default(),
+            EnvConfig { batch: 8, congestion_p: 0.5, ..EnvConfig::default() },
+        )
+    }
+
+    fn plane_with_policy() -> (ControlPlane, Arc<SwappablePolicy>, Arc<PoolMetrics>) {
+        let n = env().n_units();
+        let policy = SwappablePolicy::new(LevelPlacements {
+            by_level: [
+                vec![Placement::Fpga; n],
+                vec![Placement::Fpga; n],
+                vec![Placement::Cpu; n],
+            ],
+        });
+        let metrics = Arc::new(PoolMetrics::new(1));
+        let arbiter = FabricArbiter::new(ArbiterConfig::for_workers(1));
+        let plane = ControlPlane::new(arbiter, metrics.clone()).with_policy(policy.clone());
+        (plane, policy, metrics)
+    }
+
+    #[test]
+    fn swap_replaces_placement_and_bumps_generation() {
+        let (plane, policy, metrics) = plane_with_policy();
+        let n = policy.current().by_level[0].len();
+        let gen0 = plane.arbiter().generation();
+        let ev = plane
+            .swap(LevelPlacements {
+                by_level: [
+                    vec![Placement::Cpu; n],
+                    vec![Placement::Cpu; n],
+                    vec![Placement::Cpu; n],
+                ],
+            })
+            .unwrap();
+        assert_eq!(ev.action, CtlAction::Swap);
+        assert_eq!(ev.generation, gen0 + 1);
+        assert_eq!(plane.arbiter().generation(), gen0 + 1);
+        assert_eq!(policy.current().by_level[0], vec![Placement::Cpu; n]);
+        assert_eq!(metrics.control_counts(), [1, 0, 0]);
+    }
+
+    #[test]
+    fn swap_without_policy_errors_without_side_effects() {
+        let metrics = Arc::new(PoolMetrics::new(1));
+        let arbiter = FabricArbiter::new(ArbiterConfig::for_workers(1));
+        let gen0 = arbiter.generation();
+        let plane = ControlPlane::new(arbiter.clone(), metrics.clone());
+        let n = env().n_units();
+        assert!(plane
+            .swap(LevelPlacements { by_level: [vec![Placement::Cpu; n], vec![], vec![]] })
+            .is_err());
+        assert!(plane.retrain().is_err());
+        assert_eq!(arbiter.generation(), gen0);
+        assert_eq!(metrics.control_counts(), [0, 0, 0]);
+    }
+
+    #[test]
+    fn telemetry_env_derives_slowdowns_from_ewmas() {
+        let (plane, _policy, metrics) = plane_with_policy();
+        let plane = plane.with_retrain(RetrainConfig {
+            env: env(),
+            qcfg: QConfig::default(),
+            seed: 7,
+            episodes: 50,
+        });
+        // no telemetry yet: template slowdowns survive
+        let (e, sl) = plane.telemetry_env().unwrap();
+        assert!(sl.is_none());
+        assert_eq!(e.cfg.shared_slowdown, env().cfg.shared_slowdown);
+        // observed: Shared costs 2x Free, Saturated 4x
+        metrics.observe_batch_cost(CongestionLevel::Free, 0.002);
+        metrics.observe_batch_cost(CongestionLevel::Shared, 0.004);
+        metrics.observe_batch_cost(CongestionLevel::Saturated, 0.008);
+        let (e, sl) = plane.telemetry_env().unwrap();
+        let (sh, sa) = sl.unwrap();
+        assert!((sh - 2.0).abs() < 1e-9, "shared {sh}");
+        assert!((sa - 4.0).abs() < 1e-9, "saturated {sa}");
+        assert_eq!(e.cfg.shared_slowdown, sh);
+        assert_eq!(e.cfg.saturated_slowdown, sa);
+    }
+
+    #[test]
+    fn event_json_line_is_parseable_and_typed() {
+        let (plane, _policy, _metrics) = plane_with_policy();
+        let n = _policy.current().by_level[0].len();
+        let ev = plane
+            .swap(LevelPlacements {
+                by_level: [
+                    vec![Placement::Cpu; n],
+                    vec![Placement::Cpu; n],
+                    vec![Placement::Cpu; n],
+                ],
+            })
+            .unwrap();
+        let parsed = Json::parse(&ev.json_line()).unwrap();
+        assert_eq!(parsed.get("event").and_then(|j| j.as_str()), Some("ctl"));
+        assert_eq!(parsed.get("action").and_then(|j| j.as_str()), Some("swap"));
+        assert_eq!(
+            parsed.get("generation").and_then(|j| j.as_f64()),
+            Some(ev.generation as f64)
+        );
+        assert!(matches!(parsed.get("fabric"), Some(Json::Null)));
+    }
+}

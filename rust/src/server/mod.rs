@@ -34,10 +34,18 @@
 //!                                              [staging: EDF within class 0,  epoch; federated
 //!                                               FIFO elsewhere]               view: Saturated only
 //!                                              [batch: deficit-round-robin    when ALL shards are]
-//!                                               fill — weight-proportional
-//!                                               quanta, largest deficit
-//!                                               wins the slot, unused
-//!                                               quantum spills]
+//!                                               fill — weight-proportional        ^
+//!                                               quanta, largest deficit          |
+//!                                               wins the slot, unused            |
+//!                                               quantum spills]                  |
+//!                                                                                |
+//!   admin ---(aifa ctl / programmatic)----> [control plane: swap placement / ----+
+//!            [ControlPlane::swap|retrain|     retrain from live telemetry /
+//!             reconfigure -> ControlEvent     reconfigure one fabric shard —
+//!             JSON log line + PoolMetrics     all through the arbiter's epoch
+//!             counter]                        bump: plan caches + response
+//!                                             cache + content keys roll over
+//!                                             lazily, no reply is dropped]
 //! ```
 //!
 //! * **Typed replies** — every accepted `submit` terminates in exactly
@@ -141,18 +149,39 @@
 //!   single-writer sample reservoirs) merged only in
 //!   [`pool::PoolMetrics::summary`]; no cross-worker lock contention on
 //!   the push path.
+//! * **Control plane** ([`control`]) — a [`control::ControlPlane`]
+//!   handle over the running pool (`aifa ctl`, or programmatic) applies
+//!   admin commands mid-traffic: **swap** atomically replaces the
+//!   served [`crate::agent::LevelPlacements`] and bumps the global
+//!   generation (plan caches, response cache, and content keys roll
+//!   over lazily — no channel is touched, so the exactly-one-reply
+//!   invariant holds through the cutover), **retrain** rebuilds the
+//!   placement from the live per-level batch-cost EWMAs in
+//!   [`pool::PoolMetrics`] before swapping it in, and **reconfigure**
+//!   partially reconfigures a single fabric shard while its siblings
+//!   keep serving.  Every applied command lands as a counter in
+//!   [`pool::PoolMetrics`] and a JSON [`control::ControlEvent`] log
+//!   line.
+//!
+//! Construction goes through one surface: [`ServingPool::builder`]
+//! (engine pools) and [`Server::builder`] (real-artifact pools), each
+//! with every knob — workers, batching, admission, cache, arbiter — an
+//! independent setter; [`ServingPool::start`] survives as the single
+//! thin compat shim.
 //!
 //! Threading is std-only (no tokio in the offline build).
 
 pub mod arbiter;
+pub mod control;
 pub mod pool;
 pub mod sched;
 
 pub use arbiter::{ArbiterConfig, FabricArbiter, FabricLease};
+pub use control::{ControlEvent, ControlPlane, CtlAction, RetrainConfig, SwappablePolicy};
 pub use pool::{
     AdmissionStats, BatchEngine, BatchOutput, CachedOutcome, CoordEngine, EngineFactory,
-    MetricShard, PoolMetrics, ResponseCache, ServingPool, ShardSamples, SimEngine, TenantCounters,
-    TenantTotals,
+    MetricShard, PoolBuilder, PoolMetrics, ResponseCache, ServingPool, SharedPolicy, ShardSamples,
+    SimEngine, TenantCounters, TenantTotals,
 };
 pub use sched::{AdmissionConfig, ClassConfig, QuotaConfig, Scheduler, TenantId, TenantLedger};
 
@@ -531,16 +560,26 @@ pub struct RequestMeta {
 }
 
 impl RequestMeta {
-    pub fn class(class: usize) -> RequestMeta {
-        RequestMeta { class, ..RequestMeta::default() }
+    /// The default anonymous premium submit; chain
+    /// `.class(..)/.deadline(..)/.tenant(..)` for anything else.
+    pub fn new() -> RequestMeta {
+        RequestMeta::default()
     }
 
-    pub fn with_deadline(mut self, deadline: Duration) -> RequestMeta {
+    /// Scheduling class index (shares its name with the field; both work).
+    pub fn class(mut self, class: usize) -> RequestMeta {
+        self.class = class;
+        self
+    }
+
+    /// Relative completion deadline, measured from submit time.
+    pub fn deadline(mut self, deadline: Duration) -> RequestMeta {
         self.deadline = Some(deadline);
         self
     }
 
-    pub fn with_tenant(mut self, tenant: sched::TenantId) -> RequestMeta {
+    /// Tenant charged for this request by the quota stage.
+    pub fn tenant(mut self, tenant: sched::TenantId) -> RequestMeta {
         self.tenant = tenant;
         self
     }
@@ -548,7 +587,7 @@ impl RequestMeta {
 
 impl From<Priority> for RequestMeta {
     fn from(p: Priority) -> RequestMeta {
-        RequestMeta::class(p.index())
+        RequestMeta::new().class(p.index())
     }
 }
 
@@ -707,93 +746,29 @@ impl Server {
         Self::from_pool(ServingPool::start(1, cfg, Arc::new(factory))?)
     }
 
-    /// N-worker pool over the real artifact path with a default arbiter
-    /// sized to the pool.
-    pub fn start_pool(
-        workers: usize,
+    /// The one way to configure an N-worker pool over the real artifact
+    /// path — the [`ServerBuilder`] analog of [`ServingPool::builder`].
+    /// `make_env` runs once per worker (inside the worker thread,
+    /// against that worker's own store); the policy is shared — serving
+    /// policies are stateless.  Replaces the
+    /// `start_pool{,_with,_admission,_cached}` variant family, whose
+    /// `_admission` rung silently dropped any cache config: here every
+    /// knob is an independent setter, composable in any order.
+    pub fn builder(
         artifact_dir: std::path::PathBuf,
         make_env: impl Fn(&ArtifactStore) -> SchedulingEnv + Send + Sync + 'static,
         policy: Arc<dyn Policy + Send + Sync>,
-        cfg: BatchConfig,
-    ) -> Result<Server> {
-        let arbiter = FabricArbiter::new(ArbiterConfig::for_workers(workers.max(1)));
-        Self::start_pool_with(workers, artifact_dir, make_env, policy, cfg, arbiter)
-    }
-
-    /// N-worker pool over the real artifact path, arbitrated by the given
-    /// [`FabricArbiter`].  `make_env` runs once per worker (inside the
-    /// worker thread, against that worker's own store); the policy is
-    /// shared — serving policies are stateless.
-    pub fn start_pool_with(
-        workers: usize,
-        artifact_dir: std::path::PathBuf,
-        make_env: impl Fn(&ArtifactStore) -> SchedulingEnv + Send + Sync + 'static,
-        policy: Arc<dyn Policy + Send + Sync>,
-        cfg: BatchConfig,
-        arbiter: Arc<FabricArbiter>,
-    ) -> Result<Server> {
-        Self::start_pool_admission(
-            workers,
+    ) -> ServerBuilder {
+        ServerBuilder {
             artifact_dir,
-            make_env,
+            make_env: Arc::new(make_env),
             policy,
-            cfg,
-            AdmissionConfig::default(),
-            arbiter,
-        )
-    }
-
-    /// N-worker pool over the real artifact path with explicit admission
-    /// control (`aifa serve --shed/--queue-cap`) and the dedup layer off.
-    pub fn start_pool_admission(
-        workers: usize,
-        artifact_dir: std::path::PathBuf,
-        make_env: impl Fn(&ArtifactStore) -> SchedulingEnv + Send + Sync + 'static,
-        policy: Arc<dyn Policy + Send + Sync>,
-        cfg: BatchConfig,
-        admission: AdmissionConfig,
-        arbiter: Arc<FabricArbiter>,
-    ) -> Result<Server> {
-        Self::start_pool_cached(
-            workers,
-            artifact_dir,
-            make_env,
-            policy,
-            cfg,
-            admission,
-            CacheConfig::default(),
-            arbiter,
-        )
-    }
-
-    /// Full constructor: N-worker pool over the real artifact path with
-    /// explicit admission control *and* the content-addressed dedup
-    /// layer (`aifa serve --cache-cap/--cache-ttl-ms`).
-    #[allow(clippy::too_many_arguments)]
-    pub fn start_pool_cached(
-        workers: usize,
-        artifact_dir: std::path::PathBuf,
-        make_env: impl Fn(&ArtifactStore) -> SchedulingEnv + Send + Sync + 'static,
-        policy: Arc<dyn Policy + Send + Sync>,
-        cfg: BatchConfig,
-        admission: AdmissionConfig,
-        cache: CacheConfig,
-        arbiter: Arc<FabricArbiter>,
-    ) -> Result<Server> {
-        let factory = move |_worker: usize| -> Result<Box<dyn BatchEngine>> {
-            let store = ArtifactStore::open(&artifact_dir)?;
-            let env = make_env(&store);
-            let policy: Box<dyn Policy> = Box::new(pool::SharedPolicy(policy.clone()));
-            Ok(Box::new(CoordEngine::new(store, env, policy)?))
-        };
-        Self::from_pool(ServingPool::start_cached(
-            workers,
-            cfg,
-            admission,
-            cache,
-            Arc::new(factory),
-            arbiter,
-        )?)
+            workers: 1,
+            cfg: BatchConfig::default(),
+            admission: AdmissionConfig::default(),
+            cache: CacheConfig::default(),
+            arbiter: None,
+        }
     }
 
     fn from_pool(pool: ServingPool) -> Result<Server> {
@@ -810,6 +785,74 @@ impl Server {
         let Server { handle, metrics: _, pool } = self;
         drop(handle); // the pool holds the last sender; drop ours first
         pool.shutdown();
+    }
+}
+
+/// Builder for a real-artifact [`Server`] ([`Server::builder`]): the
+/// same knobs as [`pool::PoolBuilder`], composable in any order, over a
+/// per-worker [`CoordEngine`] factory derived from the artifact path +
+/// environment constructor + shared policy.
+pub struct ServerBuilder {
+    artifact_dir: std::path::PathBuf,
+    make_env: Arc<dyn Fn(&ArtifactStore) -> SchedulingEnv + Send + Sync>,
+    policy: Arc<dyn Policy + Send + Sync>,
+    workers: usize,
+    cfg: BatchConfig,
+    admission: AdmissionConfig,
+    cache: CacheConfig,
+    arbiter: Option<Arc<FabricArbiter>>,
+}
+
+impl ServerBuilder {
+    /// Worker thread count (clamped to ≥ 1 at `build`).
+    pub fn workers(mut self, workers: usize) -> ServerBuilder {
+        self.workers = workers;
+        self
+    }
+
+    /// Batching window + preferred batch size.
+    pub fn batch(mut self, cfg: BatchConfig) -> ServerBuilder {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Admission control (`aifa serve --shed/--queue-cap/...`).
+    pub fn admission(mut self, admission: AdmissionConfig) -> ServerBuilder {
+        self.admission = admission;
+        self
+    }
+
+    /// Content-addressed dedup layer (`aifa serve --cache-cap/...`).
+    pub fn cache(mut self, cache: CacheConfig) -> ServerBuilder {
+        self.cache = cache;
+        self
+    }
+
+    /// Share an explicit fabric arbiter; unset, `build` sizes a
+    /// single-fabric arbiter to the pool.
+    pub fn arbiter(mut self, arbiter: Arc<FabricArbiter>) -> ServerBuilder {
+        self.arbiter = Some(arbiter);
+        self
+    }
+
+    pub fn build(self) -> Result<Server> {
+        let ServerBuilder { artifact_dir, make_env, policy, workers, cfg, admission, cache, arbiter } =
+            self;
+        let factory = move |_worker: usize| -> Result<Box<dyn BatchEngine>> {
+            let store = ArtifactStore::open(&artifact_dir)?;
+            let env = make_env(&store);
+            let policy: Box<dyn Policy> = Box::new(pool::SharedPolicy(policy.clone()));
+            Ok(Box::new(CoordEngine::new(store, env, policy)?))
+        };
+        let mut pool = ServingPool::builder(Arc::new(factory))
+            .workers(workers)
+            .batch(cfg)
+            .admission(admission)
+            .cache(cache);
+        if let Some(arbiter) = arbiter {
+            pool = pool.arbiter(arbiter);
+        }
+        Server::from_pool(pool.build()?)
     }
 }
 

@@ -626,6 +626,12 @@ pub struct PoolMetrics {
     /// Per-tenant admitted/quota-shed/served counters, keyed by
     /// [`TenantId`] and created on first touch.
     tenants: TenantStats,
+    /// Control-plane commands applied to the running pool (placement
+    /// swaps / telemetry retrains / single-shard reconfigures), indexed
+    /// by [`super::control::CtlAction::index`].  Written only by
+    /// [`super::control::ControlPlane`]; summaries print them only when
+    /// any fired, so command-free pools keep their historical lines.
+    ctl: [AtomicU64; 3],
 }
 
 impl PoolMetrics {
@@ -651,7 +657,23 @@ impl PoolMetrics {
             batches_done: AtomicU64::new(0),
             fabric_leases: (0..fabrics.max(1)).map(|_| AtomicU64::new(0)).collect(),
             tenants: TenantStats::default(),
+            ctl: Default::default(),
         }
+    }
+
+    /// Count one applied control-plane command.
+    pub fn observe_control(&self, action: super::control::CtlAction) {
+        self.ctl[action.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Control-plane commands applied so far: `[swaps, retrains,
+    /// reconfigures]` (indexed by [`super::control::CtlAction::index`]).
+    pub fn control_counts(&self) -> [u64; 3] {
+        [
+            self.ctl[0].load(Ordering::Relaxed),
+            self.ctl[1].load(Ordering::Relaxed),
+            self.ctl[2].load(Ordering::Relaxed),
+        ]
     }
 
     /// This tenant's counters, created on first touch.
@@ -713,7 +735,7 @@ impl PoolMetrics {
     /// 0.0 before any batch has completed — with no data, nothing is
     /// predicted-shed.
     pub fn batch_cost_estimate(&self, level: CongestionLevel) -> f64 {
-        let exact = f64::from_bits(self.batch_cost_bits[level.index()].load(Ordering::Relaxed));
+        let exact = self.batch_cost_observed(level);
         if exact > 0.0 {
             return exact;
         }
@@ -721,6 +743,14 @@ impl PoolMetrics {
             .iter()
             .map(|b| f64::from_bits(b.load(Ordering::Relaxed)))
             .fold(0.0, f64::max)
+    }
+
+    /// The raw per-level cost EWMA, 0.0 when that level has never been
+    /// observed.  The control plane's telemetry retrain reads this —
+    /// per-level truth, without [`PoolMetrics::batch_cost_estimate`]'s
+    /// worst-observation stand-in for unobserved levels.
+    pub fn batch_cost_observed(&self, level: CongestionLevel) -> f64 {
+        f64::from_bits(self.batch_cost_bits[level.index()].load(Ordering::Relaxed))
     }
 
     pub fn workers(&self) -> usize {
@@ -870,6 +900,16 @@ impl PoolMetrics {
         } else {
             String::new()
         };
+        // Control-plane commands print only when any fired, so pools
+        // that never saw one keep their historical summary lines.
+        let ctl = {
+            let [sw, rt, rc] = self.control_counts();
+            if sw + rt + rc > 0 {
+                format!(" ctl={sw}sw/{rt}rt/{rc}rc")
+            } else {
+                String::new()
+            }
+        };
         // Two classes keep the historical hi/lo labels; wider configs
         // label by class index.
         let classes: Vec<String> = (0..ac.len())
@@ -883,7 +923,7 @@ impl PoolMetrics {
             })
             .collect();
         format!(
-            "served={} batches={} errors={} shed={} expired={} quota_shed={} deferred={} cache={}h/{}m coalesced={} dead={} workers={}{fab} class {} plan={}h/{}m gen={} levels={}f/{}s/{}x qpeak={} wall p50={:.2}ms p99={:.2}ms queue p50={:.2}ms sim/batch p50={:.2}ms",
+            "served={} batches={} errors={} shed={} expired={} quota_shed={} deferred={} cache={}h/{}m coalesced={} dead={} workers={}{fab}{ctl} class {} plan={}h/{}m gen={} levels={}f/{}s/{}x qpeak={} wall p50={:.2}ms p99={:.2}ms queue p50={:.2}ms sim/batch p50={:.2}ms",
             self.served(),
             self.batches(),
             self.errors(),
@@ -923,55 +963,89 @@ pub struct ServingPool {
     workers: Vec<JoinHandle<()>>,
 }
 
-impl ServingPool {
-    /// Spawn `workers` engine threads behind one batching dispatcher,
-    /// arbitrated by a default arbiter sized to the pool (see
-    /// [`super::arbiter::ArbiterConfig::for_workers`]).
-    pub fn start(workers: usize, cfg: BatchConfig, factory: Arc<EngineFactory>) -> Result<ServingPool> {
-        let arbiter =
-            FabricArbiter::new(super::arbiter::ArbiterConfig::for_workers(workers.max(1)));
-        ServingPool::start_with(workers, cfg, factory, arbiter)
+/// The one way to configure a [`ServingPool`]: every knob — worker
+/// count, batching window, admission control, dedup cache, fabric
+/// arbiter — is an independent setter, composable in any order, with the
+/// same defaults the old constructor lattice gave its shortest form.
+/// Replaces the `start/start_with/start_full/start_cached` variant
+/// family (which minted a new constructor per knob and, on the `Server`
+/// side, silently dropped the cache config on one path).
+///
+/// ```ignore
+/// let pool = ServingPool::builder(factory)
+///     .workers(4)
+///     .batch(BatchConfig::default())
+///     .admission(AdmissionConfig::two_class([64, 64], 0.75, true))
+///     .cache(CacheConfig::sized(512, 1000, policy_id))
+///     .arbiter(FabricArbiter::new(ArbiterConfig::for_pool(4, 2)))
+///     .build()?;
+/// ```
+pub struct PoolBuilder {
+    factory: Arc<EngineFactory>,
+    workers: usize,
+    cfg: BatchConfig,
+    admission: AdmissionConfig,
+    cache: CacheConfig,
+    arbiter: Option<Arc<FabricArbiter>>,
+}
+
+impl PoolBuilder {
+    /// Start from an engine factory; every other knob has a default
+    /// (1 worker, default batch window, default admission, dedup off,
+    /// arbiter auto-sized to the pool at `build`).
+    pub fn new(factory: Arc<EngineFactory>) -> PoolBuilder {
+        PoolBuilder {
+            factory,
+            workers: 1,
+            cfg: BatchConfig::default(),
+            admission: AdmissionConfig::default(),
+            cache: CacheConfig::default(),
+            arbiter: None,
+        }
     }
 
-    /// Spawn `workers` engine threads (each builds its engine via
-    /// `factory`) behind one batching dispatcher, sharing `arbiter` for
-    /// per-batch congestion and plan-generation state.  Admission is the
-    /// default (deep queue cap, defer mode).
-    pub fn start_with(
-        workers: usize,
-        cfg: BatchConfig,
-        factory: Arc<EngineFactory>,
-        arbiter: Arc<FabricArbiter>,
-    ) -> Result<ServingPool> {
-        ServingPool::start_full(workers, cfg, AdmissionConfig::default(), factory, arbiter)
+    /// Worker thread count (clamped to ≥ 1 at `build`).
+    pub fn workers(mut self, workers: usize) -> PoolBuilder {
+        self.workers = workers;
+        self
     }
 
-    /// Explicit admission control on top of [`ServingPool::start_with`],
-    /// with the dedup layer off.  Fails fast (after tearing the threads
-    /// down again) when worker 0 cannot build its engine — a pool that
-    /// would serve nothing must not start.
-    pub fn start_full(
-        workers: usize,
-        cfg: BatchConfig,
-        admission: AdmissionConfig,
-        factory: Arc<EngineFactory>,
-        arbiter: Arc<FabricArbiter>,
-    ) -> Result<ServingPool> {
-        ServingPool::start_cached(workers, cfg, admission, CacheConfig::default(), factory, arbiter)
+    /// Batching window + preferred batch size.
+    pub fn batch(mut self, cfg: BatchConfig) -> PoolBuilder {
+        self.cfg = cfg;
+        self
     }
 
-    /// Full constructor: [`ServingPool::start_full`] plus the
-    /// content-addressed deduplication layer ([`CacheConfig`]; a zero
-    /// cap keeps it entirely out of the pipeline).
-    pub fn start_cached(
-        workers: usize,
-        cfg: BatchConfig,
-        admission: AdmissionConfig,
-        cache: CacheConfig,
-        factory: Arc<EngineFactory>,
-        arbiter: Arc<FabricArbiter>,
-    ) -> Result<ServingPool> {
+    /// Admission control (classes, caps, shed/defer, quotas, EDF).
+    pub fn admission(mut self, admission: AdmissionConfig) -> PoolBuilder {
+        self.admission = admission;
+        self
+    }
+
+    /// Content-addressed dedup layer (response cache + coalescing); a
+    /// zero cap keeps it entirely out of the pipeline.
+    pub fn cache(mut self, cache: CacheConfig) -> PoolBuilder {
+        self.cache = cache;
+        self
+    }
+
+    /// Share an explicit fabric arbiter (multi-shard routing, custom
+    /// lease thresholds).  Unset, `build` sizes a single-fabric arbiter
+    /// to the pool ([`super::arbiter::ArbiterConfig::for_workers`]).
+    pub fn arbiter(mut self, arbiter: Arc<FabricArbiter>) -> PoolBuilder {
+        self.arbiter = Some(arbiter);
+        self
+    }
+
+    /// Spawn the dispatcher + worker threads.  Fails fast (after tearing
+    /// the threads down again) when worker 0 cannot build its engine — a
+    /// pool that would serve nothing must not start.
+    pub fn build(self) -> Result<ServingPool> {
+        let PoolBuilder { factory, workers, cfg, admission, cache, arbiter } = self;
         let n = workers.max(1);
+        let arbiter = arbiter.unwrap_or_else(|| {
+            FabricArbiter::new(super::arbiter::ArbiterConfig::for_workers(n))
+        });
         let (tx, rx) = channel::<Request>();
         // The batch hand-off is *bounded* (one buffered batch per worker):
         // when every worker is busy the dispatcher blocks here instead of
@@ -1043,6 +1117,25 @@ impl ServingPool {
             dispatcher,
             workers: handles,
         })
+    }
+}
+
+impl ServingPool {
+    /// The one constructor surface: a [`PoolBuilder`] over `factory`.
+    pub fn builder(factory: Arc<EngineFactory>) -> PoolBuilder {
+        PoolBuilder::new(factory)
+    }
+
+    /// Thin compat shim for the classic three-argument form: `workers`
+    /// engine threads behind one batching dispatcher with every other
+    /// knob at its default.  Everything else goes through
+    /// [`ServingPool::builder`].
+    pub fn start(
+        workers: usize,
+        cfg: BatchConfig,
+        factory: Arc<EngineFactory>,
+    ) -> Result<ServingPool> {
+        ServingPool::builder(factory).workers(workers).batch(cfg).build()
     }
 
     /// A submit handle (cloneable across producer threads).

@@ -16,18 +16,25 @@
 //! free sibling instead of shedding, a shard reconfigure invalidates the
 //! response cache without touching the sibling's epoch, and `Failed`
 //! results are negatively cached under the (default-off) failure TTL.
+//! The live control plane is proven here too: a mid-traffic placement
+//! swap loses zero replies and stamps post-swap responses with the new
+//! generation, a single-shard reconfigure under load leaves the sibling
+//! shard's epoch untouched, and a telemetry-driven retrain changes the
+//! served placement when the observed level-latency ordering inverts.
 //! (The real-artifact pool path is covered in server_e2e.rs.)
 
 use aifa::agent::{
-    AllCpu, CongestionLevel, EnvConfig, FabricState, GreedyStep, SchedulingEnv, StaticAllFpga,
+    AllCpu, CongestionLevel, EnvConfig, FabricState, GreedyStep, LevelPlacements, Policy, QConfig,
+    SchedulingEnv, StaticAllFpga,
 };
 use aifa::fpga::{Bitstream, Resources};
 use aifa::graph::Network;
-use aifa::platform::{CpuModel, FpgaPlatform};
+use aifa::platform::{CpuModel, FpgaPlatform, Placement};
 use aifa::server::{
     AdmissionConfig, ArbiterConfig, BatchConfig, BatchEngine, BatchOutput, CacheConfig,
-    ClassConfig, EngineFactory, FabricArbiter, Priority, QuotaConfig, RejectReason, Reply,
-    RequestMeta, Response, Served, ServingPool, SimEngine,
+    ClassConfig, ControlPlane, CtlAction, EngineFactory, FabricArbiter, Priority, QuotaConfig,
+    RejectReason, Reply, RequestMeta, Response, RetrainConfig, Served, ServingPool, SharedPolicy,
+    SimEngine, SwappablePolicy,
 };
 use anyhow::Result;
 use std::sync::atomic::Ordering;
@@ -202,17 +209,16 @@ fn arbitration_end_to_end() {
         saturated_at: 3,
         ..ArbiterConfig::default()
     });
-    let pool = ServingPool::start_with(
-        WORKERS,
+    let pool = ServingPool::builder(fpga_factory(24))
+        .workers(WORKERS)
         // tiny window so bursts split into many batches that overlap;
         // all-FPGA plans so every batch leases (the offload-aware peek
         // skips leases for CPU-only plans, which would starve this test
         // of the very contention it asserts)
-        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
-        fpga_factory(24),
-        arbiter.clone(),
-    )
-    .unwrap();
+        .batch(BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 })
+        .arbiter(arbiter.clone())
+        .build()
+        .unwrap();
     let handle = pool.handle();
     let gen0 = arbiter.generation();
 
@@ -557,14 +563,13 @@ fn sustained_saturation_sheds_with_typed_replies() {
         saturation_window: Duration::from_millis(1),
         ..ArbiterConfig::default()
     });
-    let pool = ServingPool::start_full(
-        WORKERS,
-        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
-        AdmissionConfig::capped(16, true),
-        fpga_factory(24), // heavy all-FPGA batches: the backlog must build
-        arbiter,
-    )
-    .unwrap();
+    let pool = ServingPool::builder(fpga_factory(24)) // heavy all-FPGA batches: the backlog must build
+        .workers(WORKERS)
+        .batch(BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 })
+        .admission(AdmissionConfig::capped(16, true))
+        .arbiter(arbiter)
+        .build()
+        .unwrap();
     let handle = pool.handle();
 
     let n = 300u64;
@@ -628,14 +633,13 @@ fn defer_mode_answers_every_request_ok() {
         saturation_window: Duration::from_millis(1),
         ..ArbiterConfig::default()
     });
-    let pool = ServingPool::start_full(
-        WORKERS,
-        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
-        AdmissionConfig::capped(16, false),
-        fpga_factory(8),
-        arbiter,
-    )
-    .unwrap();
+    let pool = ServingPool::builder(fpga_factory(8))
+        .workers(WORKERS)
+        .batch(BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 })
+        .admission(AdmissionConfig::capped(16, false))
+        .arbiter(arbiter)
+        .build()
+        .unwrap();
     let handle = pool.handle();
 
     let n = 120u64;
@@ -672,16 +676,15 @@ fn low_class_sheds_before_high_under_sustained_saturation() {
         saturation_window: Duration::from_millis(1),
         ..ArbiterConfig::default()
     });
-    let pool = ServingPool::start_full(
-        WORKERS,
-        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
+    let pool = ServingPool::builder(fpga_factory(24)) // heavy all-FPGA batches: the backlog must build
+        .workers(WORKERS)
+        .batch(BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 })
         // High's cap (64) exceeds all High traffic in the test; Low's
         // tiny cap (4) guarantees the Low queue trips overload
-        AdmissionConfig::two_class([64, 4], 0.75, true),
-        fpga_factory(24), // heavy all-FPGA batches: the backlog must build
-        arbiter,
-    )
-    .unwrap();
+        .admission(AdmissionConfig::two_class([64, 4], 0.75, true))
+        .arbiter(arbiter)
+        .build()
+        .unwrap();
     let handle = pool.handle();
 
     // 240 requests, every 6th High (40 High / 200 Low), interleaved
@@ -728,14 +731,11 @@ fn past_deadline_requests_reject_without_a_fabric_lease() {
     let env = sim_env();
     let ie = env.net.units[0].in_elems(1);
 
-    let pool = ServingPool::start_full(
-        1,
-        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
-        AdmissionConfig::default(), // deadline rejection needs no shed mode
-        fpga_factory(1),            // every executed batch WOULD lease
-        FabricArbiter::new(ArbiterConfig::default()),
-    )
-    .unwrap();
+    let pool = ServingPool::builder(fpga_factory(1)) // every executed batch WOULD lease
+        .batch(BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 })
+        // deadline rejection needs no shed mode, so admission stays default
+        .build()
+        .unwrap();
     let handle = pool.handle();
 
     let n = 20usize;
@@ -787,14 +787,13 @@ fn every_submit_resolves_once_with_classes_and_deadlines() {
         saturation_window: Duration::from_millis(1),
         ..ArbiterConfig::default()
     });
-    let pool = ServingPool::start_full(
-        WORKERS,
-        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
-        AdmissionConfig::capped(8, true),
-        fpga_factory(8),
-        arbiter,
-    )
-    .unwrap();
+    let pool = ServingPool::builder(fpga_factory(8))
+        .workers(WORKERS)
+        .batch(BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 })
+        .admission(AdmissionConfig::capped(8, true))
+        .arbiter(arbiter)
+        .build()
+        .unwrap();
     let handle = pool.handle();
 
     let n = 150usize;
@@ -846,17 +845,13 @@ fn duplicates_coalesce_onto_one_slot_and_then_hit_the_cache() {
     let env = sim_env();
     let ie = env.net.units[0].in_elems(1);
 
-    let pool = ServingPool::start_cached(
-        1,
+    let pool = ServingPool::builder(sim_factory(8))
         // generous window: the duplicates must land while the primary is
         // staged, so they provably coalesce rather than race the batch
-        BatchConfig { max_wait: Duration::from_millis(20), max_batch: 8 },
-        AdmissionConfig::default(),
-        CacheConfig::sized(64, 10_000, 7),
-        sim_factory(8),
-        FabricArbiter::new(ArbiterConfig::default()),
-    )
-    .unwrap();
+        .batch(BatchConfig { max_wait: Duration::from_millis(20), max_batch: 8 })
+        .cache(CacheConfig::sized(64, 10_000, 7))
+        .build()
+        .unwrap();
     let handle = pool.handle();
 
     let n = 10usize;
@@ -941,15 +936,11 @@ fn engine_failure_fans_out_failed_to_coalesced_waiters() {
     let factory: Arc<EngineFactory> = Arc::new(move |_w: usize| -> Result<Box<dyn BatchEngine>> {
         Ok(Box::new(FailingEngine { batches: vec![1, 8], ie, classes }))
     });
-    let pool = ServingPool::start_cached(
-        1,
-        BatchConfig { max_wait: Duration::from_millis(20), max_batch: 8 },
-        AdmissionConfig::default(),
-        CacheConfig::sized(64, 10_000, 7),
-        factory,
-        FabricArbiter::new(ArbiterConfig::default()),
-    )
-    .unwrap();
+    let pool = ServingPool::builder(factory)
+        .batch(BatchConfig { max_wait: Duration::from_millis(20), max_batch: 8 })
+        .cache(CacheConfig::sized(64, 10_000, 7))
+        .build()
+        .unwrap();
     let handle = pool.handle();
 
     let n = 6usize;
@@ -988,16 +979,13 @@ fn reconfigure_invalidates_the_response_cache() {
     let ie = env.net.units[0].in_elems(1);
 
     let arbiter = FabricArbiter::new(ArbiterConfig::default());
-    let pool = ServingPool::start_cached(
-        1,
-        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
-        AdmissionConfig::default(),
+    let pool = ServingPool::builder(sim_factory(1))
+        .batch(BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 })
         // TTL far beyond the test: only the epoch can invalidate here
-        CacheConfig::sized(64, 60_000, 7),
-        sim_factory(1),
-        arbiter.clone(),
-    )
-    .unwrap();
+        .cache(CacheConfig::sized(64, 60_000, 7))
+        .arbiter(arbiter.clone())
+        .build()
+        .unwrap();
     let handle = pool.handle();
     let gen0 = arbiter.generation();
     let submit = |tag: usize| {
@@ -1117,14 +1105,11 @@ fn edf_expires_fewer_tight_deadlines_than_fifo_at_equal_load() {
                     delay: Duration::from_millis(30),
                 }))
             });
-        let pool = ServingPool::start_full(
-            1,
-            BatchConfig { max_wait: Duration::from_millis(5), max_batch: 8 },
-            AdmissionConfig { edf, ..AdmissionConfig::default() },
-            factory,
-            FabricArbiter::new(ArbiterConfig::default()),
-        )
-        .unwrap();
+        let pool = ServingPool::builder(factory)
+            .batch(BatchConfig { max_wait: Duration::from_millis(5), max_batch: 8 })
+            .admission(AdmissionConfig { edf, ..AdmissionConfig::default() })
+            .build()
+            .unwrap();
         let handle = pool.handle();
 
         // warm-up: one served batch feeds the cost EWMA (~30 ms/batch),
@@ -1199,13 +1184,11 @@ fn offloaded_batches_route_to_the_least_congested_shard() {
     // Pin shard 0: its predicted level (phantom lease included) is
     // Shared while shard 1 stays Free, so routing must pick shard 1.
     let pin = arbiter.lease_on(0, 0);
-    let pool = ServingPool::start_with(
-        1,
-        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
-        fpga_factory(1), // every plan offloads: every batch leases
-        arbiter.clone(),
-    )
-    .unwrap();
+    let pool = ServingPool::builder(fpga_factory(1)) // every plan offloads: every batch leases
+        .batch(BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 })
+        .arbiter(arbiter.clone())
+        .build()
+        .unwrap();
     let handle = pool.handle();
 
     let n = 20usize;
@@ -1255,14 +1238,12 @@ fn saturated_shard_diverts_to_its_free_sibling_instead_of_shedding() {
         "the federated level must reflect the free sibling"
     );
 
-    let pool = ServingPool::start_full(
-        1,
-        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
-        AdmissionConfig::capped(16, true), // shed mode: rejections WOULD surface
-        fpga_factory(8),
-        arbiter.clone(),
-    )
-    .unwrap();
+    let pool = ServingPool::builder(fpga_factory(8))
+        .batch(BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 })
+        .admission(AdmissionConfig::capped(16, true)) // shed mode: rejections WOULD surface
+        .arbiter(arbiter.clone())
+        .build()
+        .unwrap();
     let handle = pool.handle();
 
     let n = 120usize;
@@ -1299,16 +1280,13 @@ fn shard_reconfigure_invalidates_the_cache_without_touching_the_sibling_epoch() 
     let ie = env.net.units[0].in_elems(1);
 
     let arbiter = FabricArbiter::new(ArbiterConfig { fabrics: 2, ..ArbiterConfig::default() });
-    let pool = ServingPool::start_cached(
-        1,
-        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
-        AdmissionConfig::default(),
+    let pool = ServingPool::builder(sim_factory(1))
+        .batch(BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 })
         // TTL far beyond the test: only the epoch can invalidate here
-        CacheConfig::sized(64, 60_000, 7),
-        sim_factory(1),
-        arbiter.clone(),
-    )
-    .unwrap();
+        .cache(CacheConfig::sized(64, 60_000, 7))
+        .arbiter(arbiter.clone())
+        .build()
+        .unwrap();
     let handle = pool.handle();
     let submit = |tag: usize| {
         ok(handle
@@ -1382,15 +1360,11 @@ fn failed_results_are_negatively_cached_under_the_fail_ttl() {
     };
 
     // fail TTL armed: the second identical submit answers from the cache
-    let pool = ServingPool::start_cached(
-        1,
-        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
-        AdmissionConfig::default(),
-        CacheConfig::sized(64, 60_000, 7).with_fail_ttl(60_000),
-        factory(),
-        FabricArbiter::new(ArbiterConfig::default()),
-    )
-    .unwrap();
+    let pool = ServingPool::builder(factory())
+        .batch(BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 })
+        .cache(CacheConfig::sized(64, 60_000, 7).with_fail_ttl(60_000))
+        .build()
+        .unwrap();
     assert!(submit_failed(&pool, 5) < 1_000_000, "first failure comes from the engine");
     assert_eq!(pool.metrics.errors(), 1);
     submit_failed(&pool, 5);
@@ -1408,15 +1382,11 @@ fn failed_results_are_negatively_cached_under_the_fail_ttl() {
     pool.shutdown();
 
     // fail TTL off (the default): every retry reaches the engine
-    let pool = ServingPool::start_cached(
-        1,
-        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
-        AdmissionConfig::default(),
-        CacheConfig::sized(64, 60_000, 7),
-        factory(),
-        FabricArbiter::new(ArbiterConfig::default()),
-    )
-    .unwrap();
+    let pool = ServingPool::builder(factory())
+        .batch(BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 })
+        .cache(CacheConfig::sized(64, 60_000, 7))
+        .build()
+        .unwrap();
     submit_failed(&pool, 5);
     submit_failed(&pool, 5);
     assert_eq!(pool.metrics.errors(), 2, "failures are not cached by default");
@@ -1442,29 +1412,28 @@ fn high_low_reproduced_as_a_two_class_weight_config() {
         saturation_window: Duration::from_millis(1),
         ..ArbiterConfig::default()
     });
-    let pool = ServingPool::start_full(
-        WORKERS,
-        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
+    let pool = ServingPool::builder(fpga_factory(24))
+        .workers(WORKERS)
+        .batch(BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 })
         // the same 64/4 cap split as the legacy test, expressed as
         // weights (750/250 is what `two_class(_, 0.75, _)` produces)
-        AdmissionConfig::weighted(
+        .admission(AdmissionConfig::weighted(
             vec![
                 ClassConfig { weight: 750, queue_cap: 64 },
                 ClassConfig { weight: 250, queue_cap: 4 },
             ],
             true,
-        ),
-        fpga_factory(24),
-        arbiter,
-    )
-    .unwrap();
+        ))
+        .arbiter(arbiter)
+        .build()
+        .unwrap();
     let handle = pool.handle();
 
     let n = 240usize;
     let mut rxs = Vec::new();
     for i in 0..n {
         let class = if i % 6 == 0 { 0 } else { 1 };
-        rxs.push((class, handle.submit_meta(image(ie, i), RequestMeta::class(class)).unwrap()));
+        rxs.push((class, handle.submit_meta(image(ie, i), RequestMeta::new().class(class)).unwrap()));
     }
     let mut class_ok = [0u64; 2];
     let mut class_rejected = [0u64; 2];
@@ -1505,27 +1474,25 @@ fn drr_two_to_one_weights_drain_the_heavy_class_about_twice_as_fast() {
     let env = sim_env();
     let ie = env.net.units[0].in_elems(1);
 
-    let pool = ServingPool::start_full(
-        1, // a single worker serializes batches, keeping the DRR split crisp
-        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
-        AdmissionConfig::weighted(
+    let pool = ServingPool::builder(sim_factory(8))
+        // a single worker (the default) serializes batches, keeping the DRR split crisp
+        .batch(BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 })
+        .admission(AdmissionConfig::weighted(
             vec![
                 ClassConfig { weight: 2, queue_cap: usize::MAX },
                 ClassConfig { weight: 1, queue_cap: usize::MAX },
             ],
             false, // defer mode: nothing sheds, both queues stay backlogged
-        ),
-        sim_factory(8),
-        FabricArbiter::new(ArbiterConfig::default()),
-    )
-    .unwrap();
+        ))
+        .build()
+        .unwrap();
     let handle = pool.handle();
 
     const PER_CLASS: usize = 120;
     let mut rxs = Vec::new();
     for i in 0..2 * PER_CLASS {
         let class = i % 2; // interleaved on the wire: the split is the scheduler's doing
-        rxs.push(handle.submit_meta(image(ie, i), RequestMeta::class(class)).unwrap());
+        rxs.push(handle.submit_meta(image(ie, i), RequestMeta::new().class(class)).unwrap());
     }
     for rx in rxs {
         let _ = ok(rx.recv_timeout(Duration::from_secs(120)).expect("defer mode answers all"));
@@ -1557,18 +1524,17 @@ fn quota_window_refills_after_the_window_elapses() {
     let ie = env.net.units[0].in_elems(1);
 
     let window = Duration::from_millis(400);
-    let pool = ServingPool::start_full(
-        1,
-        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
-        AdmissionConfig::uncapped()
-            .with_quota(QuotaConfig::uniform(2, window.as_millis() as u64)),
-        sim_factory(1),
-        FabricArbiter::new(ArbiterConfig::default()),
-    )
-    .unwrap();
+    let pool = ServingPool::builder(sim_factory(1))
+        .batch(BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 })
+        .admission(
+            AdmissionConfig::uncapped()
+                .with_quota(QuotaConfig::uniform(2, window.as_millis() as u64)),
+        )
+        .build()
+        .unwrap();
     let handle = pool.handle();
     let submit = |tag: usize| {
-        handle.submit_meta(image(ie, tag), RequestMeta::class(0).with_tenant(TENANT)).unwrap()
+        handle.submit_meta(image(ie, tag), RequestMeta::new().tenant(TENANT)).unwrap()
     };
 
     // distinct images: nothing coalesces, every submit hits the quota stage
@@ -1615,22 +1581,17 @@ fn quota_rejected_requests_never_take_a_fabric_lease() {
     let env = sim_env();
     let ie = env.net.units[0].in_elems(1);
 
-    let pool = ServingPool::start_full(
-        1,
-        BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 },
-        AdmissionConfig::uncapped().with_quota(QuotaConfig::uniform(0, 1000)),
-        fpga_factory(1), // every executed batch WOULD lease
-        FabricArbiter::new(ArbiterConfig::default()),
-    )
-    .unwrap();
+    let pool = ServingPool::builder(fpga_factory(1)) // every executed batch WOULD lease
+        .batch(BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 })
+        .admission(AdmissionConfig::uncapped().with_quota(QuotaConfig::uniform(0, 1000)))
+        .build()
+        .unwrap();
     let handle = pool.handle();
 
     let n = 20usize;
     let mut rxs = Vec::new();
     for i in 0..n {
-        rxs.push(
-            handle.submit_meta(image(ie, i), RequestMeta::class(0).with_tenant(TENANT)).unwrap(),
-        );
+        rxs.push(handle.submit_meta(image(ie, i), RequestMeta::new().tenant(TENANT)).unwrap());
     }
     for rx in rxs {
         match rx.recv_timeout(Duration::from_secs(60)).expect("a quota reject was never sent") {
@@ -1656,4 +1617,267 @@ fn quota_rejected_requests_never_take_a_fabric_lease() {
     assert_eq!(pool.metrics.errors(), 0);
     drop(handle);
     pool.shutdown();
+}
+
+/// A hot-swappable policy pool: engines decide through a
+/// [`SwappablePolicy`] (via [`SharedPolicy`]) so the control plane can
+/// replace the served placement mid-traffic.
+fn swappable_pool(workers: usize, work: usize) -> (ServingPool, Arc<SwappablePolicy>) {
+    let policy = SwappablePolicy::new(LevelPlacements::extract(|level| {
+        GreedyStep.placement(&sim_env(), level)
+    }));
+    let engine_policy = policy.clone();
+    let factory: Arc<EngineFactory> = Arc::new(move |_w: usize| -> Result<Box<dyn BatchEngine>> {
+        let shared: Arc<dyn Policy + Send + Sync> = engine_policy.clone();
+        Ok(Box::new(SimEngine::new(sim_env(), Box::new(SharedPolicy(shared)), vec![1, 8], work)))
+    });
+    let pool = ServingPool::builder(factory)
+        .workers(workers)
+        .batch(BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 })
+        .build()
+        .unwrap();
+    (pool, policy)
+}
+
+/// Control-plane tentpole invariant: a mid-traffic placement swap loses
+/// zero replies — every submit resolves `Ok` — and every request
+/// submitted after the swap is served under the new global generation.
+#[test]
+fn mid_traffic_swap_loses_no_replies_and_stamps_the_new_generation() {
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+    let units = env.n_units();
+
+    let (pool, policy) = swappable_pool(2, 4);
+    let arbiter = pool.arbiter().clone();
+    let plane =
+        ControlPlane::new(arbiter.clone(), pool.metrics.clone()).with_policy(policy.clone());
+    let handle = pool.handle();
+
+    let n = 120usize;
+    let gen0 = arbiter.generation();
+    let mut swapped_gen = 0u64;
+    let mut rxs = Vec::with_capacity(n);
+    for i in 0..n {
+        if i == n / 2 {
+            // the swap runs with half the traffic still in flight
+            let ev = plane
+                .swap(LevelPlacements {
+                    by_level: [
+                        vec![Placement::Cpu; units],
+                        vec![Placement::Cpu; units],
+                        vec![Placement::Cpu; units],
+                    ],
+                })
+                .unwrap();
+            assert_eq!(ev.action, CtlAction::Swap);
+            assert_eq!(ev.generation, gen0 + 1);
+            swapped_gen = ev.generation;
+        }
+        rxs.push((i, handle.submit(image(ie, i)).unwrap()));
+    }
+    for (i, rx) in rxs {
+        let resp = ok(rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("a submitter was stranded by the mid-traffic swap"));
+        if i >= n / 2 {
+            assert_eq!(
+                resp.plan_generation, swapped_gen,
+                "post-swap submits must serve under the new epoch"
+            );
+        }
+    }
+    assert_eq!(pool.metrics.served(), n as u64, "zero replies lost across the swap");
+    assert_eq!(pool.metrics.errors(), 0);
+    assert_eq!(pool.metrics.control_counts(), [1, 0, 0]);
+    assert_eq!(
+        policy.current().by_level[0],
+        vec![Placement::Cpu; units],
+        "the pool serves the swapped-in placement"
+    );
+    assert_eq!(arbiter.generation(), swapped_gen);
+    drop(handle);
+    pool.shutdown();
+}
+
+/// Single-shard partial reconfiguration under load through the control
+/// plane: every in-flight and later submit still resolves `Ok`, the
+/// reconfigured shard's own epoch bumps, and the sibling shard's epoch
+/// — the key its plans cache under — does not move.
+#[test]
+fn ctl_reconfigure_under_load_leaves_the_sibling_shard_untouched() {
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+
+    let arbiter = FabricArbiter::new(ArbiterConfig { fabrics: 2, ..ArbiterConfig::default() });
+    let region = arbiter
+        .add_region(0, "pr0", Resources { luts: 100_000, dsps: 1024, bram36: 128, uram: 32 })
+        .unwrap();
+    let pool = ServingPool::builder(sim_factory(4))
+        .workers(2)
+        .batch(BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 })
+        .arbiter(arbiter.clone())
+        .build()
+        .unwrap();
+    let plane = ControlPlane::new(arbiter.clone(), pool.metrics.clone());
+    let handle = pool.handle();
+
+    let gen0 = arbiter.generation();
+    let shard0_gen = arbiter.fabric_generation(0);
+    let sibling_gen = arbiter.fabric_generation(1);
+
+    let n = 100usize;
+    let mut rxs = Vec::with_capacity(n);
+    for i in 0..n {
+        if i == n / 2 {
+            let ev = plane
+                .reconfigure(
+                    0,
+                    region,
+                    Bitstream {
+                        name: "retuned_core".into(),
+                        usage: Resources { luts: 60_000, dsps: 512, bram36: 64, uram: 16 },
+                        fmax_hz: 250e6,
+                    },
+                )
+                .unwrap();
+            assert_eq!(ev.action, CtlAction::Reconfigure);
+            assert_eq!(ev.generation, gen0 + 1);
+            assert_eq!(ev.fabric, Some(0));
+            assert_eq!(ev.fabric_generation, Some(shard0_gen + 1));
+            assert!(ev.reconfig_s.unwrap() > 0.0, "PR wall time is modelled, not zero");
+        }
+        rxs.push(handle.submit(image(ie, i)).unwrap());
+    }
+    for rx in rxs {
+        let _ = ok(rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("a submitter was stranded by the mid-traffic reconfigure"));
+    }
+    assert_eq!(pool.metrics.served(), n as u64, "zero replies lost across the reconfigure");
+    assert_eq!(pool.metrics.errors(), 0);
+    assert_eq!(pool.metrics.control_counts(), [0, 0, 1]);
+    assert_eq!(arbiter.fabric_generation(0), shard0_gen + 1, "target shard's epoch moved");
+    assert_eq!(
+        arbiter.fabric_generation(1),
+        sibling_gen,
+        "the sibling shard's plans (keyed on its own epoch) survive"
+    );
+    drop(handle);
+    pool.shutdown();
+}
+
+/// Telemetry-driven retrain end-to-end: the placement the pool serves
+/// follows what the fabric *measures*.  Train once against telemetry
+/// where Saturated batches cost 1000x Free — the agent must avoid the
+/// fabric under saturation — then invert the observed ordering (a
+/// Saturated batch now measures far cheaper than Free) and retrain: the
+/// served placement changes, and each retrain bumps the generation.
+#[test]
+fn telemetry_retrain_changes_placement_when_level_ordering_inverts() {
+    let (pool, policy) = swappable_pool(1, 1);
+    let arbiter = pool.arbiter().clone();
+    let metrics = pool.metrics.clone();
+    let plane = ControlPlane::new(arbiter.clone(), metrics.clone())
+        .with_policy(policy.clone())
+        .with_retrain(RetrainConfig {
+            env: sim_env(),
+            qcfg: QConfig::default(),
+            seed: 42,
+            episodes: 600,
+        });
+    // no traffic is submitted: the per-level cost EWMAs below are the
+    // test's controlled "live" telemetry, unpolluted by real batches
+
+    // observed: contention is catastrophic (Saturated costs 1000x Free)
+    metrics.observe_batch_cost(CongestionLevel::Free, 0.002);
+    metrics.observe_batch_cost(CongestionLevel::Shared, 0.004);
+    metrics.observe_batch_cost(CongestionLevel::Saturated, 2.0);
+    let gen0 = arbiter.generation();
+    let ev1 = plane.retrain().unwrap();
+    assert_eq!(ev1.action, CtlAction::Retrain);
+    assert_eq!(ev1.generation, gen0 + 1);
+    let (_, sat1) = ev1.slowdowns.expect("telemetry existed");
+    assert!(sat1 > 100.0, "observed saturation penalty feeds the trainer (got {sat1})");
+    let avoid = policy.current();
+    assert!(
+        avoid.by_level[2].contains(&Placement::Cpu),
+        "a 1000x saturation penalty must push work off the fabric"
+    );
+
+    // the ordering inverts: Saturated batches now measure far cheaper
+    // than Free (the EWMA converges over repeated observations)
+    for _ in 0..400 {
+        metrics.observe_batch_cost(CongestionLevel::Saturated, 1e-6);
+    }
+    let ev2 = plane.retrain().unwrap();
+    assert_eq!(ev2.generation, gen0 + 2, "each retrain bumps the epoch");
+    let (_, sat2) = ev2.slowdowns.expect("telemetry existed");
+    assert!(sat2 < 0.01, "the inverted ordering survives into the trained env (got {sat2})");
+    let embrace = policy.current();
+    assert_ne!(
+        avoid.by_level[2], embrace.by_level[2],
+        "an inverted level-latency ordering must change the Saturated placement"
+    );
+    assert!(
+        embrace.by_level[2].iter().filter(|p| **p == Placement::Fpga).count()
+            > avoid.by_level[2].iter().filter(|p| **p == Placement::Fpga).count(),
+        "a near-free saturated fabric must attract more offload than a 1000x one"
+    );
+    assert_eq!(metrics.control_counts(), [0, 2, 0]);
+    pool.shutdown();
+}
+
+/// Regression for the variant-lattice bug: `Server::start_pool_admission`
+/// silently dropped its cache config.  The builder must compose
+/// admission + cache + fabrics in ANY setter order: a per-tenant quota
+/// rejects over-budget distinct submits (admission honored) while an
+/// identical resubmit answers from the response cache (cache honored).
+#[test]
+fn builder_composes_cache_and_admission_in_any_setter_order() {
+    let env = sim_env();
+    let ie = env.net.units[0].in_elems(1);
+
+    let run = |admission_first: bool| {
+        let admission =
+            AdmissionConfig::uncapped().with_quota(QuotaConfig::uniform(1, 60_000));
+        let cache = CacheConfig::sized(64, 60_000, 7);
+        let b = ServingPool::builder(sim_factory(1))
+            .batch(BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 })
+            .arbiter(FabricArbiter::new(ArbiterConfig { fabrics: 2, ..ArbiterConfig::default() }));
+        let b = if admission_first {
+            b.admission(admission).cache(cache)
+        } else {
+            b.cache(cache).admission(admission)
+        };
+        let pool = b.build().unwrap();
+        let handle = pool.handle();
+        let submit = |tag: usize| {
+            handle
+                .submit_meta(image(ie, tag), RequestMeta::new().tenant(9))
+                .unwrap()
+                .recv_timeout(Duration::from_secs(60))
+                .expect("stranded")
+        };
+
+        // quota budget 1: the first distinct submit is served...
+        let first = ok(submit(1));
+        assert_eq!(first.served, Served::Engine);
+        // ...a second DISTINCT submit trips the quota (admission active)
+        match submit(2) {
+            Reply::Rejected { reason, .. } => assert_eq!(reason, RejectReason::Quota),
+            other => panic!("quota config was dropped by the builder: {other:?}"),
+        }
+        // ...and the identical resubmit answers from the cache, before
+        // the exhausted quota stage (cache active)
+        let again = ok(submit(1));
+        assert_eq!(again.served, Served::Cache, "cache config was dropped by the builder");
+        assert_eq!(pool.metrics.cache_hits(), 1);
+        assert_eq!(pool.metrics.quota_shed_total(), 1);
+        assert_eq!(pool.arbiter().fabrics(), 2, "arbiter config was dropped by the builder");
+        drop(handle);
+        pool.shutdown();
+    };
+    run(true);
+    run(false);
 }

@@ -92,14 +92,11 @@ fn pool_of_two_workers_serves_real_artifacts() {
     let placement = StaticAllFpga.placement(&env, CongestionLevel::Free);
     drop(probe);
 
-    let server = Server::start_pool(
-        2,
-        artifact_dir(),
-        make_env,
-        Arc::new(FixedPlacement { placement }),
-        BatchConfig { max_wait: Duration::from_millis(5), max_batch: 8 },
-    )
-    .unwrap();
+    let server = Server::builder(artifact_dir(), make_env, Arc::new(FixedPlacement { placement }))
+        .workers(2)
+        .batch(BatchConfig { max_wait: Duration::from_millis(5), max_batch: 8 })
+        .build()
+        .unwrap();
 
     // mixed-priority traffic through the real-artifact path: with no
     // overload both classes are served in full, and the per-class

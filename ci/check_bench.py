@@ -62,10 +62,23 @@ fails (exit 1) when:
     exactly-one-reply invariant under live reconfiguration), or
     `control.ctl_knee_rate` is null/zero — no reconfigured run
     sustained its rate, i.e. the knee did not survive the mid-traffic
-    generation bump.
+    generation bump;
+  * device accounting doesn't add up on any `--gpu` device-mix row: the
+    per-device batch counters must have exactly three entries
+    (cpu/fpga/gpu) and sum to `batches_total`, per-device served must
+    sum to `ok`, a mix without the FPGA ("cg") must report zero fabric
+    leases and zero FPGA batches (GPU-placed work provably bypasses the
+    fabric), and a mix without the GPU ("cf") must report zero GPU
+    batches and zero granted GPU slots;
+  * --require-devices is set and the report lacks the `--gpu` device
+    sweep (`open_loop_devices` rows + `device_knees`), or no swept mix
+    actually carried a GPU, or the best GPU-bearing mix's knee is
+    null/zero or collapses below the GPU-off baseline `knee_rate` —
+    widening the device axis must never cost sustainable throughput.
 
 Usage: ci/check_bench.py BENCH_serve.json [--require-overload]
        [--require-fabrics] [--require-tenants] [--require-control]
+       [--require-devices]
 """
 
 import json
@@ -84,6 +97,10 @@ OPEN_FIELDS = [
     "tenants", "tenant_n", "tenant_ok", "tenant_quota_shed",
     "tenant_goodput_rps", "jain_fairness",
     "ctl_reconfigured", "generation",
+]
+DEVICE_FIELDS = [
+    "devices", "gpu", "device_batches", "device_served", "batches_total",
+    "gpu_granted", "gpu_peak",
 ]
 
 # Fairness floor for overloaded equal-quota rows under --require-tenants.
@@ -205,17 +222,69 @@ def check_open_rows(rows: list, n: int, tag: str, cached: bool) -> None:
             )
 
 
+def check_device_rows(rows: list) -> None:
+    """Per-device accounting for the `--gpu` device-mix rows: counters
+    partition the work, and a mix lacking a device never touches it."""
+    for row in rows:
+        for field in DEVICE_FIELDS:
+            if field not in row:
+                fail(f"device row (rate={row.get('rate')}) missing field '{field}'")
+        mix = row["devices"]
+        batches, served = row["device_batches"], row["device_served"]
+        if len(batches) != 3 or len(served) != 3:
+            fail(
+                f"device row rate={row['rate']} (devices={mix}): device counters "
+                "must have exactly three entries (cpu/fpga/gpu)"
+            )
+        if sum(batches) != row["batches_total"]:
+            fail(
+                f"device row rate={row['rate']} (devices={mix}): device_batches "
+                f"sum to {sum(batches)} != batches_total={row['batches_total']} "
+                "(a batch executed on no device, or on two)"
+            )
+        if sum(served) != row["ok"]:
+            fail(
+                f"device row rate={row['rate']} (devices={mix}): device_served "
+                f"sums to {sum(served)} != ok={row['ok']} (per-device served "
+                "accounting has a hole)"
+            )
+        if mix == "cg":
+            # no FPGA in the mix: GPU routing provably bypasses the
+            # fabric — zero leases, zero FPGA batches
+            if row["leases_total"] != 0:
+                fail(
+                    f"device row rate={row['rate']} (devices=cg): leases_total="
+                    f"{row['leases_total']} != 0 — a GPU/CPU-only mix took a "
+                    "fabric lease, so GPU routing is not bypassing the fabric"
+                )
+            if batches[1] != 0:
+                fail(
+                    f"device row rate={row['rate']} (devices=cg): {batches[1]} "
+                    "FPGA batches executed with no FPGA in the mix"
+                )
+        if not row["gpu"]:
+            # no GPU in the mix: nothing may run on it or hold its slots
+            if batches[2] != 0 or row["gpu_granted"] != 0:
+                fail(
+                    f"device row rate={row['rate']} (devices={mix}): gpu_batches="
+                    f"{batches[2]} gpu_granted={row['gpu_granted']} with no GPU "
+                    "in the mix"
+                )
+
+
 def main() -> None:
     args = sys.argv[1:]
     require_overload = "--require-overload" in args
     require_fabrics = "--require-fabrics" in args
     require_tenants = "--require-tenants" in args
     require_control = "--require-control" in args
+    require_devices = "--require-devices" in args
     paths = [a for a in args if not a.startswith("--")]
     if len(paths) != 1:
         fail(
             "usage: check_bench.py BENCH_serve.json [--require-overload] "
-            "[--require-fabrics] [--require-tenants] [--require-control]"
+            "[--require-fabrics] [--require-tenants] [--require-control] "
+            "[--require-devices]"
         )
     path = paths[0]
 
@@ -299,6 +368,45 @@ def main() -> None:
             fail(
                 f"--require-fabrics: knee_rate(fabrics={top})={top_knee} < "
                 f"knee_rate(fabrics=1)={base_knee} — shard scale-out lost "
+                "sustainable throughput"
+            )
+
+    # The device-axis gate: `--gpu` repeats the uncached sweep per device
+    # mix with the GPU budget armed.  The rows must keep every standard
+    # invariant plus the per-device accounting, and the best GPU-bearing
+    # mix's knee must not collapse below the GPU-off baseline — the
+    # third device adds capacity off the fabric, it must never cost
+    # sustainable throughput.
+    device_rows = data.get("open_loop_devices") or []
+    device_knees = data.get("device_knees") or []
+    if device_rows:
+        check_open_rows(device_rows, n, "device open-loop", cached=False)
+        check_device_rows(device_rows)
+    if require_devices:
+        if not device_rows or not device_knees:
+            fail(
+                "--require-devices: the report lacks the device sweep "
+                "(open_loop_devices + device_knees) — run the bench with --gpu"
+            )
+        for entry in device_knees:
+            if "devices" not in entry or "gpu" not in entry or "knee_rate" not in entry:
+                fail(f"device_knees entry malformed: {entry!r}")
+        gpu_knees = [e["knee_rate"] for e in device_knees if e["gpu"]]
+        if not gpu_knees:
+            fail(
+                "--require-devices: no swept device mix carried a GPU — "
+                "add cg or cgf to --devices"
+            )
+        best = max((k for k in gpu_knees if k is not None), default=None)
+        if best is None or best == 0:
+            fail(
+                "--require-devices: every GPU-bearing mix's knee is null/zero — "
+                "no GPU-enabled run sustained any swept rate"
+            )
+        if best < knee:
+            fail(
+                f"--require-devices: best GPU-bearing knee {best} < GPU-off "
+                f"baseline knee_rate={knee} — arming the GPU collapsed "
                 "sustainable throughput"
             )
 
@@ -421,6 +529,11 @@ def main() -> None:
             f"fabrics={e.get('fabrics')}: knee={e.get('knee_rate')}" for e in fabric_knees
         )
         print(f"  fabric scale-out: {knee_strs}")
+    if device_knees:
+        knee_strs = ", ".join(
+            f"{e.get('devices')}: knee={e.get('knee_rate')}" for e in device_knees
+        )
+        print(f"  device axis: {knee_strs} (gpu-off baseline knee={knee})")
     ctl = data.get("control")
     if isinstance(ctl, dict) and (ctl.get("reconfigures") or 0) > 0:
         print(

@@ -20,14 +20,21 @@
 //! and join the same backoff-and-resubmit rounds as overload sheds; the
 //! summary prints per-tenant goodput and quota rejections.
 //!
-//!     cargo run --release --example serve -- [n_images] [rate_per_s] [workers] [retries] [fabrics]
+//!     cargo run --release --example serve -- [n_images] [rate_per_s] [workers] [retries] [fabrics] [gpu]
+//!
+//! Passing `gpu` as the sixth argument arms the pool's GPU in-flight
+//! budget and trains the agent over the full CPU/GPU/FPGA device axis;
+//! GPU-placed batches then bypass the fabric arbiter entirely and the
+//! summary gains a per-device reply split.
 
-use aifa::agent::{CongestionLevel, EnvConfig, LevelPlacements, QAgent, QConfig, SchedulingEnv};
+use aifa::agent::{
+    CongestionLevel, DeviceSet, EnvConfig, LevelPlacements, QAgent, QConfig, SchedulingEnv,
+};
 use aifa::data::TestSet;
 use aifa::platform::{CpuModel, FpgaPlatform};
 use aifa::power::PowerModel;
 use aifa::server::{
-    AdmissionConfig, ArbiterConfig, BatchConfig, CacheConfig, FabricArbiter, Priority,
+    AdmissionConfig, ArbiterConfig, BatchConfig, CacheConfig, FabricArbiter, GpuConfig, Priority,
     QuotaConfig, RejectReason, Reply, RequestMeta, Served, Server, TenantId,
 };
 use aifa::util::rng::Rng;
@@ -71,6 +78,8 @@ struct Tally {
     quota_rejected: usize,
     class_ok: [u64; 2],
     level_seen: [u64; 3],
+    /// Executing device per `Ok` reply: cpu / fpga / gpu.
+    device_seen: [u64; 3],
     /// Reply provenance: engine / coalesced / cache (`Served` order).
     served_by: [u64; 3],
     sim_batch: Samples,
@@ -92,6 +101,7 @@ fn collect_replies(
                 t.hits += (resp.class == ts.labels[p.idx] as usize) as usize;
                 t.sim_batch.push(resp.sim_batch_s);
                 t.level_seen[resp.congestion.index()] += 1;
+                t.device_seen[resp.device.index()] += 1;
                 t.served_by[match resp.served {
                     Served::Engine => 0,
                     Served::Coalesced => 1,
@@ -123,10 +133,15 @@ fn main() -> Result<()> {
     // shed/retry demo; pass 2+ to watch least-congested routing spread
     // leases and the federation resist saturation).
     let fabrics: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
+    // `gpu` as the sixth argument widens placement to the three-device
+    // axis; absent, the run is the classic two-device driver, unchanged.
+    let gpu_on = args.get(5).is_some_and(|s| s == "gpu");
+    let devices = if gpu_on { DeviceSet::CpuGpuFpga } else { DeviceSet::CpuFpga };
     let dir = std::path::PathBuf::from("artifacts");
 
     println!(
-        "== aifa serving driver: {n} requests @ {rate}/s, {workers} workers, {retries} retry rounds, {fabrics} fabric shard(s) =="
+        "== aifa serving driver: {n} requests @ {rate}/s, {workers} workers, {retries} retry rounds, {fabrics} fabric shard(s){} ==",
+        if gpu_on { ", gpu budget armed" } else { "" }
     );
 
     // Train the scheduler up front (placement is frozen into the server;
@@ -138,7 +153,7 @@ fn main() -> Result<()> {
         FpgaPlatform::table1_card(),
         CpuModel::default(),
         // contention in the training mix so every level's policy is learned
-        EnvConfig { batch: 8, congestion_p: 0.5, ..EnvConfig::default() },
+        EnvConfig { batch: 8, congestion_p: 0.5, devices, ..EnvConfig::default() },
     );
     let mut agent = QAgent::new(QConfig::default(), 42);
     agent.train(&env, 600);
@@ -168,14 +183,14 @@ fn main() -> Result<()> {
     // resubmit the same image), so identical inputs recur — the cache
     // and coalescer answer them without burning engine capacity.
     let cache = CacheConfig::sized(256, 2000, 0x5e72e);
-    let server = Server::builder(
+    let mut builder = Server::builder(
         dir,
         move |store| {
             SchedulingEnv::new(
                 store.network.clone(),
                 FpgaPlatform::table1_card(),
                 CpuModel::default(),
-                EnvConfig { batch: 8, ..EnvConfig::default() },
+                EnvConfig { batch: 8, devices, ..EnvConfig::default() },
             )
         },
         Arc::new(policy),
@@ -184,8 +199,11 @@ fn main() -> Result<()> {
     .batch(BatchConfig { max_wait: Duration::from_millis(4), max_batch: 8 })
     .admission(admission)
     .cache(cache)
-    .arbiter(arbiter.clone())
-    .build()?;
+    .arbiter(arbiter.clone());
+    if gpu_on {
+        builder = builder.gpu(GpuConfig::for_workers(workers));
+    }
+    let server = builder.build()?;
 
     // First pass: replay the test set as Poisson arrivals (gap cap is
     // rate-relative — 10 mean gaps — so the offered load stays faithful
@@ -311,6 +329,16 @@ fn main() -> Result<()> {
             arbiter.leases_granted(),
             arbiter.occupancies(),
             arbiter.peak_by_fabric()
+        );
+    }
+    if gpu_on {
+        println!(
+            "devices: cpu={} fpga={} gpu={} (gpu slots granted={} peak={})",
+            tally.device_seen[0],
+            tally.device_seen[1],
+            tally.device_seen[2],
+            m.gpu().map_or(0, |g| g.granted()),
+            m.gpu().map_or(0, |g| g.peak())
         );
     }
 

@@ -1,7 +1,8 @@
 //! The scheduling environment the Q-learning agent interacts with (Fig 1
 //! "Environment"): a walk over the network's units where each step picks
-//! CPU or FPGA for one unit and the reward is the negative cost (latency
-//! + λ·energy) that decision incurs under the platform timing models.
+//! a device (CPU/FPGA, optionally GPU via [`DeviceSet`]) for one unit and
+//! the reward is the negative cost (latency + λ·energy) that decision
+//! incurs under the platform timing models.
 //!
 //! The state the paper's agent observes is "the runtime performance
 //! characteristics of both the AI model and hardware platform"; we encode
@@ -12,7 +13,7 @@
 //! fabric arbiter publishes at runtime.
 
 use crate::graph::Network;
-use crate::platform::{CpuModel, FpgaPlatform, Placement};
+use crate::platform::{CpuModel, FpgaPlatform, GpuModel, Placement};
 use std::fmt;
 
 /// Quantized fabric contention, shared by every layer of the stack: the
@@ -119,8 +120,72 @@ pub struct State {
     pub congestion: CongestionLevel,
 }
 
-/// Agent actions, one per unit (Fig 1: "action a = offload decision").
+/// The classic two-device action set (Fig 1: "action a = offload
+/// decision").  Kept for API compatibility — the live action set is
+/// [`SchedulingEnv::actions`], which widens with [`EnvConfig::devices`].
 pub const ACTIONS: [Placement; 2] = [Placement::Cpu, Placement::Fpga];
+
+/// Which devices the agent may place units on.  The default two-device
+/// axis reproduces the pre-GPU behaviour bit-for-bit (same action
+/// indices, same RNG draws); the GPU-bearing sets widen the action space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum DeviceSet {
+    /// CPU + FPGA — the classic axis (byte-compatible default).
+    #[default]
+    CpuFpga,
+    /// CPU + GPU — no fabric involvement at all.
+    CpuGpu,
+    /// The full Table I trio.
+    CpuGpuFpga,
+}
+
+impl DeviceSet {
+    pub const ALL: [DeviceSet; 3] = [DeviceSet::CpuFpga, DeviceSet::CpuGpu, DeviceSet::CpuGpuFpga];
+
+    /// The ordered action list.  CPU is always index 0, so the agent's
+    /// tie-break-to-0 rule stays "fall back to the host".
+    pub fn actions(self) -> &'static [Placement] {
+        match self {
+            DeviceSet::CpuFpga => &[Placement::Cpu, Placement::Fpga],
+            DeviceSet::CpuGpu => &[Placement::Cpu, Placement::Gpu],
+            DeviceSet::CpuGpuFpga => &[Placement::Cpu, Placement::Fpga, Placement::Gpu],
+        }
+    }
+
+    /// Parse a bench/CLI tag: `cf`, `cg`, or `cgf`.
+    pub fn parse(s: &str) -> Option<DeviceSet> {
+        match s {
+            "cf" => Some(DeviceSet::CpuFpga),
+            "cg" => Some(DeviceSet::CpuGpu),
+            "cgf" => Some(DeviceSet::CpuGpuFpga),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DeviceSet::CpuFpga => "cf",
+            DeviceSet::CpuGpu => "cg",
+            DeviceSet::CpuGpuFpga => "cgf",
+        }
+    }
+
+    /// Whether the set can place work on the GPU.
+    pub fn gpu(self) -> bool {
+        !matches!(self, DeviceSet::CpuFpga)
+    }
+
+    /// Whether the set can place work on the FPGA fabric.
+    pub fn fpga(self) -> bool {
+        !matches!(self, DeviceSet::CpuGpu)
+    }
+}
+
+impl fmt::Display for DeviceSet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
 
 /// Environment configuration.
 #[derive(Debug, Clone, Copy)]
@@ -137,6 +202,14 @@ pub struct EnvConfig {
     pub saturated_slowdown: f64,
     /// Reward scale: rewards are -cost_s * scale (keeps Q magnitudes O(1)).
     pub reward_scale: f64,
+    /// Devices the agent may place on (default: the classic CPU/FPGA pair).
+    pub devices: DeviceSet,
+    /// GPU on-device latency multiplier while the node is time-shared.
+    /// Much flatter than the fabric's: GPU contention costs queueing, not
+    /// reconfiguration, so congestion pushes work *toward* the GPU.
+    pub gpu_shared_slowdown: f64,
+    /// GPU on-device latency multiplier under oversubscription.
+    pub gpu_saturated_slowdown: f64,
 }
 
 impl Default for EnvConfig {
@@ -148,6 +221,9 @@ impl Default for EnvConfig {
             shared_slowdown: 1.5,
             saturated_slowdown: 3.0,
             reward_scale: 100.0,
+            devices: DeviceSet::CpuFpga,
+            gpu_shared_slowdown: 1.15,
+            gpu_saturated_slowdown: 1.4,
         }
     }
 }
@@ -161,6 +237,15 @@ impl EnvConfig {
             CongestionLevel::Saturated => self.saturated_slowdown,
         }
     }
+
+    /// Effective-latency multiplier for GPU work under `level`.
+    pub fn gpu_slowdown(&self, level: CongestionLevel) -> f64 {
+        match level {
+            CongestionLevel::Free => 1.0,
+            CongestionLevel::Shared => self.gpu_shared_slowdown,
+            CongestionLevel::Saturated => self.gpu_saturated_slowdown,
+        }
+    }
 }
 
 /// The scheduling MDP over one network + platform pair.
@@ -168,16 +253,23 @@ pub struct SchedulingEnv {
     pub net: Network,
     pub fpga: FpgaPlatform,
     pub cpu: CpuModel,
+    /// GPU baseline device — only reachable when `cfg.devices` allows it.
+    pub gpu: GpuModel,
     pub cfg: EnvConfig,
 }
 
 impl SchedulingEnv {
     pub fn new(net: Network, fpga: FpgaPlatform, cpu: CpuModel, cfg: EnvConfig) -> Self {
-        SchedulingEnv { net, fpga, cpu, cfg }
+        SchedulingEnv { net, fpga, cpu, gpu: GpuModel::default(), cfg }
     }
 
     pub fn initial_state(&self, level: CongestionLevel) -> State {
         State { unit: 0, prev: Placement::Cpu, congestion: level }
+    }
+
+    /// The action set the configured [`DeviceSet`] allows.
+    pub fn actions(&self) -> &'static [Placement] {
+        self.cfg.devices.actions()
     }
 
     pub fn n_units(&self) -> usize {
@@ -189,8 +281,8 @@ impl SchedulingEnv {
     }
 
     /// Cost (s) of running unit `s.unit` at `p`, given data residency.
-    /// Matches `FpgaPlatform::network_timeline` decomposition exactly, so
-    /// the sum of step costs equals the timeline total (tested below).
+    /// Matches `FpgaPlatform::network_timeline_with` decomposition exactly,
+    /// so the sum of step costs equals the timeline total (tested below).
     pub fn step_cost_s(&self, s: &State, p: Placement) -> f64 {
         let u = &self.net.units[s.unit];
         let b = self.cfg.batch;
@@ -199,19 +291,39 @@ impl SchedulingEnv {
             Placement::Cpu => {
                 if s.prev == Placement::Fpga {
                     t += self.fpga.link.transfer_s(u.in_bytes(b));
+                } else if s.prev == Placement::Gpu {
+                    t += self.gpu.pcie_transfer_s(u.in_bytes(b));
                 }
                 t += self.cpu.unit_latency_s(u, b);
             }
             Placement::Fpga => {
                 if s.prev != Placement::Fpga {
+                    if s.prev == Placement::Gpu {
+                        t += self.gpu.pcie_transfer_s(u.in_bytes(b));
+                    }
                     t += self.fpga.invoke_s + self.fpga.link.transfer_s(u.in_bytes(b));
                 }
                 t += self.fpga.unit_effective_s(u, b) * self.cfg.slowdown(s.congestion);
             }
+            Placement::Gpu => {
+                if s.prev != Placement::Gpu {
+                    if s.prev == Placement::Fpga {
+                        t += self.fpga.link.transfer_s(u.in_bytes(b));
+                    }
+                    t += self.gpu.base_s
+                        + self.gpu.host_feed_s
+                        + self.gpu.pcie_transfer_s(u.in_bytes(b));
+                }
+                t += self.gpu.unit_latency_s(u, b) * self.cfg.gpu_slowdown(s.congestion);
+            }
         }
         // terminal drain: last unit's results return to the host
-        if s.unit == self.net.len() - 1 && p == Placement::Fpga {
-            t += self.fpga.link.transfer_s(u.out_bytes(b));
+        if s.unit == self.net.len() - 1 {
+            if p == Placement::Fpga {
+                t += self.fpga.link.transfer_s(u.out_bytes(b));
+            } else if p == Placement::Gpu {
+                t += self.gpu.pcie_transfer_s(u.out_bytes(b));
+            }
         }
         t
     }
@@ -222,6 +334,7 @@ impl SchedulingEnv {
         match p {
             Placement::Cpu => t * self.cpu.power.load_w,
             Placement::Fpga => t * self.fpga.power.load_w,
+            Placement::Gpu => t * self.gpu.power.load_w,
         }
     }
 
@@ -235,27 +348,28 @@ impl SchedulingEnv {
     /// Total latency of a full placement vector (for reporting / oracle).
     pub fn placement_latency_s(&self, placement: &[Placement]) -> f64 {
         self.fpga
-            .network_timeline(&self.net, placement, self.cfg.batch, &self.cpu)
+            .network_timeline_with(&self.net, placement, self.cfg.batch, &self.cpu, &self.gpu)
             .total_s
     }
 
     /// Exact optimal placement by dynamic programming over the chain
     /// (state = residency), minimizing pure latency.  This is the oracle
-    /// the Fig 1 bench compares the learned policy against.
+    /// the Fig 1 bench compares the learned policy against.  Residency
+    /// ranges over every device; actions come from the configured
+    /// [`DeviceSet`], so the two-device default reproduces the classic
+    /// CPU/FPGA oracle exactly.
     pub fn oracle_placement(&self) -> (Vec<Placement>, f64) {
         let n = self.net.len();
         // dp[i][r] = (cost from unit i to end given residency r)
-        let mut dp = vec![[f64::INFINITY; 2]; n + 1];
-        let mut choice = vec![[Placement::Cpu; 2]; n];
-        dp[n] = [0.0, 0.0];
+        let mut dp = vec![[f64::INFINITY; 3]; n + 1];
+        let mut choice = vec![[Placement::Cpu; 3]; n];
+        dp[n] = [0.0; 3];
         for i in (0..n).rev() {
-            for r in 0..2 {
-                let prev = if r == 0 { Placement::Cpu } else { Placement::Fpga };
-                for &a in &ACTIONS {
+            for (r, &prev) in Placement::ALL.iter().enumerate() {
+                for &a in self.actions() {
                     let s = State { unit: i, prev, congestion: CongestionLevel::Free };
                     let c = self.step_cost_s(&s, a);
-                    let nr = matches!(a, Placement::Fpga) as usize;
-                    let total = c + dp[i + 1][nr];
+                    let total = c + dp[i + 1][a.index()];
                     if total < dp[i][r] {
                         dp[i][r] = total;
                         choice[i][r] = a;
@@ -268,7 +382,7 @@ impl SchedulingEnv {
         for i in 0..n {
             let a = choice[i][r];
             placement.push(a);
-            r = matches!(a, Placement::Fpga) as usize;
+            r = a.index();
         }
         (placement, dp[0][0])
     }
@@ -375,5 +489,93 @@ mod tests {
         assert!(r < 0.0);
         assert_eq!(next.unit, 1);
         assert_eq!(next.prev, Placement::Fpga);
+    }
+
+    fn env3() -> SchedulingEnv {
+        SchedulingEnv::new(
+            Network::paper_scale(),
+            FpgaPlatform::table1_card(),
+            CpuModel::default(),
+            EnvConfig { devices: DeviceSet::CpuGpuFpga, batch: 8, ..EnvConfig::default() },
+        )
+    }
+
+    #[test]
+    fn three_device_step_costs_sum_to_timeline() {
+        let e = env3();
+        let n = e.n_units();
+        let mixed: Vec<Placement> = (0..n)
+            .map(|i| match i % 3 {
+                0 => Placement::Cpu,
+                1 => Placement::Gpu,
+                _ => Placement::Fpga,
+            })
+            .collect();
+        for placement in [vec![Placement::Gpu; n], mixed] {
+            let mut s = e.initial_state(CongestionLevel::Free);
+            let mut sum = 0.0;
+            for &p in &placement {
+                sum += e.step_cost_s(&s, p);
+                s = State { unit: s.unit + 1, prev: p, congestion: CongestionLevel::Free };
+            }
+            let tl = e.placement_latency_s(&placement);
+            assert!(
+                (sum - tl).abs() < 1e-12,
+                "decomposition broken: steps {sum} vs timeline {tl} for {placement:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn gpu_congestion_is_flatter_than_fabric() {
+        let e = env3();
+        let s_free = e.initial_state(CongestionLevel::Free);
+        let s_sat = e.initial_state(CongestionLevel::Saturated);
+        let gpu_penalty =
+            e.step_cost_s(&s_sat, Placement::Gpu) / e.step_cost_s(&s_free, Placement::Gpu);
+        let fpga_penalty =
+            e.step_cost_s(&s_sat, Placement::Fpga) / e.step_cost_s(&s_free, Placement::Fpga);
+        assert!(gpu_penalty > 1.0);
+        assert!(gpu_penalty < fpga_penalty, "gpu {gpu_penalty} vs fpga {fpga_penalty}");
+    }
+
+    #[test]
+    fn oracle_respects_device_set() {
+        let e2 = env();
+        let (p2, c2) = e2.oracle_placement();
+        assert!(p2.iter().all(|p| *p != Placement::Gpu));
+        // widening the action set can only help the optimum
+        let e3 = SchedulingEnv::new(
+            Network::paper_scale(),
+            FpgaPlatform::table1_card(),
+            CpuModel::default(),
+            EnvConfig { devices: DeviceSet::CpuGpuFpga, ..EnvConfig::default() },
+        );
+        let (_, c3) = e3.oracle_placement();
+        assert!(c3 <= c2 + 1e-12, "3-device oracle {c3} vs 2-device {c2}");
+        // a CPU/GPU set must never place on the fabric
+        let eg = SchedulingEnv::new(
+            Network::paper_scale(),
+            FpgaPlatform::table1_card(),
+            CpuModel::default(),
+            EnvConfig { devices: DeviceSet::CpuGpu, ..EnvConfig::default() },
+        );
+        let (pg, _) = eg.oracle_placement();
+        assert!(pg.iter().all(|p| *p != Placement::Fpga));
+    }
+
+    #[test]
+    fn device_set_round_trips() {
+        for d in DeviceSet::ALL {
+            assert_eq!(DeviceSet::parse(d.as_str()), Some(d));
+            assert_eq!(d.actions()[0], Placement::Cpu, "CPU must stay index 0");
+            assert_eq!(d.gpu(), d.actions().contains(&Placement::Gpu));
+            assert_eq!(d.fpga(), d.actions().contains(&Placement::Fpga));
+        }
+        assert_eq!(DeviceSet::parse("tpu"), None);
+        assert_eq!(DeviceSet::default().actions(), &ACTIONS);
+        for (i, p) in Placement::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i);
+        }
     }
 }

@@ -1,6 +1,7 @@
 //! The paper's scheduling agent (Fig 1): a Q-learning policy over
-//! CPU/FPGA offload decisions, plus the baseline policies it is
-//! evaluated against.
+//! per-unit device decisions (CPU/FPGA, optionally GPU via
+//! [`env::DeviceSet`]), plus the baseline policies it is evaluated
+//! against.
 //!
 //! * [`env`] — the scheduling MDP (states, rewards from the timing models)
 //! * [`qlearn`] — double-Q tabular agent with target-table sync
@@ -11,7 +12,7 @@ pub mod env;
 pub mod policy;
 pub mod qlearn;
 
-pub use env::{CongestionLevel, EnvConfig, FabricState, SchedulingEnv, State};
+pub use env::{CongestionLevel, DeviceSet, EnvConfig, FabricState, SchedulingEnv, State};
 pub use policy::{
     AllCpu, DecisionTrace, FixedPlacement, GreedyStep, IntensityHeuristic, LevelPlacements, Policy,
     StaticAllFpga,

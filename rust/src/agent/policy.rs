@@ -188,11 +188,18 @@ impl Policy for GreedyStep {
     }
 
     fn decide(&self, env: &SchedulingEnv, s: &State) -> Placement {
-        if env.step_cost_s(s, Placement::Fpga) <= env.step_cost_s(s, Placement::Cpu) {
-            Placement::Fpga
-        } else {
-            Placement::Cpu
+        // later actions win ties, reproducing the historical
+        // "FPGA if no more expensive than CPU" preference
+        let mut best = Placement::Cpu;
+        let mut best_cost = f64::INFINITY;
+        for &p in env.actions() {
+            let c = env.step_cost_s(s, p);
+            if c <= best_cost {
+                best = p;
+                best_cost = c;
+            }
         }
+        best
     }
 }
 

@@ -2,10 +2,12 @@
 //!
 //! For each inference request the coordinator walks the network's units,
 //! asks the scheduling policy (Q-agent by default) where each unit runs,
-//! executes the unit's *behavioural* model through PJRT (fp32 artifact on
-//! the CPU path, int8 artifact on the FPGA path — Fig 2's SystemC role),
-//! and advances the *timing* model (platform simulators) for the same
-//! decision.  Results carry both real logits and the simulated timeline.
+//! executes the unit's *behavioural* model through PJRT (artifact kind
+//! follows the device via [`Placement::artifact_kind`]: fp32 on the CPU
+//! path, int8 on the FPGA path, fp16 on the GPU path — Fig 2's SystemC
+//! role), and advances the *timing* model (platform simulators) for the
+//! same decision.  Results carry both real logits and the simulated
+//! timeline.
 //!
 //! Serving hot path: policies are deterministic, so the full per-unit
 //! decision trace for a `(policy, batch, congestion level)` key never
@@ -87,13 +89,7 @@ impl PlacementPlan {
             .units
             .iter()
             .zip(&tr.placement)
-            .map(|(u, p)| {
-                let precision = match p {
-                    Placement::Cpu => "fp32",
-                    Placement::Fpga => "int8",
-                };
-                unit_artifact_name(&u.name, precision, batch)
-            })
+            .map(|(u, p)| unit_artifact_name(&u.name, p.artifact_kind(), batch))
             .collect();
         PlacementPlan {
             batch,
@@ -108,10 +104,29 @@ impl PlacementPlan {
     }
 
     /// Whether any unit of this plan runs on the fabric.  An all-CPU
-    /// plan needs no fabric lease — the serving pool peeks this before
-    /// reserving a slot.
+    /// (or CPU+GPU) plan needs no fabric lease — the serving pool peeks
+    /// this before reserving a slot.
     pub fn offloads(&self) -> bool {
         self.placement.contains(&Placement::Fpga)
+    }
+
+    /// Whether any unit of this plan runs on the GPU.  GPU-placed work
+    /// never touches the fabric arbiter; it charges the pool's GPU
+    /// in-flight budget instead.
+    pub fn uses_gpu(&self) -> bool {
+        self.placement.contains(&Placement::Gpu)
+    }
+
+    /// The device executing the bulk of the plan, for telemetry: GPU if
+    /// any unit runs there, else FPGA if any unit offloads, else CPU.
+    pub fn device(&self) -> Placement {
+        if self.uses_gpu() {
+            Placement::Gpu
+        } else if self.offloads() {
+            Placement::Fpga
+        } else {
+            Placement::Cpu
+        }
     }
 }
 
@@ -313,9 +328,24 @@ impl<S: Borrow<ArtifactStore>> Coordinator<S> {
         batch: usize,
         fabric: FabricState,
     ) -> Option<bool> {
+        self.plan_route(policy, batch, fabric).map(|(offloads, _)| offloads)
+    }
+
+    /// Device-routing peek: `(offloads, uses_gpu)` of the *cached* plan
+    /// for `(batch, fabric.level)`, or `None` when no plan is cached yet
+    /// (the caller then leases conservatively and assumes no GPU).
+    /// Never counts a hit or miss, like [`Coordinator::plan_offloads`].
+    pub fn plan_route(
+        &self,
+        policy: &dyn Policy,
+        batch: usize,
+        fabric: FabricState,
+    ) -> Option<(bool, bool)> {
         let mut plans = self.plans.borrow_mut();
         plans.sync_fabric(fabric);
-        plans.peek_on(policy, batch, fabric.level, fabric.fabric_id).map(|p| p.offloads())
+        plans
+            .peek_on(policy, batch, fabric.level, fabric.fabric_id)
+            .map(|p| (p.offloads(), p.uses_gpu()))
     }
 
     /// Largest supported per-unit batch <= requested (requests are split).
@@ -620,11 +650,7 @@ mod tests {
         assert_eq!(plan.placement, GreedyStep.placement(&e, CongestionLevel::Free));
         assert_eq!(plan.artifacts.len(), e.n_units());
         for (name, p) in plan.artifacts.iter().zip(&plan.placement) {
-            let precision = match p {
-                Placement::Cpu => "fp32",
-                Placement::Fpga => "int8",
-            };
-            assert!(name.starts_with(&format!("cnn_{precision}_")), "{name}");
+            assert!(name.starts_with(&format!("cnn_{}_", p.artifact_kind())), "{name}");
             assert!(name.ends_with("_b8"), "{name}");
         }
         // precomputed sim totals equal the timing-model decomposition
@@ -632,6 +658,34 @@ mod tests {
         assert!((plan.sim_latency_s - tl).abs() < 1e-12);
         assert!(plan.sim_energy_j > 0.0);
         assert_eq!(plan.unit_times_s.len(), e.n_units());
+    }
+
+    #[test]
+    fn gpu_plans_carry_fp16_artifacts_and_route_off_fabric() {
+        use crate::agent::DeviceSet;
+        let e = SchedulingEnv::new(
+            Network::paper_scale(),
+            FpgaPlatform::table1_card(),
+            CpuModel::default(),
+            EnvConfig { devices: DeviceSet::CpuGpu, batch: 8, ..EnvConfig::default() },
+        );
+        // a CPU/GPU device set can never offload to the fabric
+        let plan = PlacementPlan::build(&e, &GreedyStep, 8, CongestionLevel::Free);
+        assert!(!plan.offloads(), "CPU/GPU plan must not take a fabric lease");
+        for (name, p) in plan.artifacts.iter().zip(&plan.placement) {
+            assert!(name.starts_with(&format!("cnn_{}_", p.artifact_kind())), "{name}");
+            if *p == Placement::Gpu {
+                assert!(name.starts_with("cnn_fp16_"), "{name}");
+            }
+        }
+        assert_eq!(plan.uses_gpu(), plan.placement.contains(&Placement::Gpu));
+        if plan.uses_gpu() {
+            assert_eq!(plan.device(), Placement::Gpu);
+        }
+        // the mapping has exactly one home
+        assert_eq!(Placement::Cpu.artifact_kind(), "fp32");
+        assert_eq!(Placement::Fpga.artifact_kind(), "int8");
+        assert_eq!(Placement::Gpu.artifact_kind(), "fp16");
     }
 
     #[test]

@@ -8,8 +8,10 @@
 //!   llm           greedy generation through the Fig 3 decoder
 //!   eda           run the Fig 4 agentic design-flow simulation
 //!   serve         N-worker serving pool over the real artifacts
-//!                 (fabric arbiter knobs: --fabrics / --shared-at /
-//!                  --saturated-at / --dma-budget-mb; admission knobs:
+//!                 (fabric arbiter knobs: --fabrics / --fabric-profile /
+//!                  --shared-at / --saturated-at / --dma-budget-mb;
+//!                  device knobs: --gpu arms the GPU budget and trains
+//!                  the agent over the CPU/GPU/FPGA axis; admission knobs:
 //!                  --shed / --queue-cap [high,low] / --high-share /
 //!                  --deadline-ms / --mix; tenant knobs: --tenants /
 //!                  --tenant-quota / --tenant-window-ms; dedup knobs:
@@ -33,11 +35,16 @@
 //!                  open_loop_cached rows + cache_knee_rate next to the
 //!                  uncached knee_rate, and --fabrics M1,M2 repeats the
 //!                  uncached sweep per shard count -> fabric_knees shows
-//!                  what scale-out buys)
+//!                  what scale-out buys, and --gpu repeats it per
+//!                  --devices mix (cf,cg,cgf) with the GPU budget armed
+//!                  -> open_loop_devices rows carry per-device batch
+//!                  counters and device_knees shows what the third
+//!                  device buys)
 
 use aifa::accel::AccelConfig;
 use aifa::agent::{
-    CongestionLevel, EnvConfig, GreedyStep, LevelPlacements, QAgent, QConfig, SchedulingEnv,
+    CongestionLevel, DeviceSet, EnvConfig, GreedyStep, LevelPlacements, QAgent, QConfig,
+    SchedulingEnv,
 };
 use aifa::data::TestSet;
 use aifa::eda;
@@ -48,8 +55,9 @@ use aifa::runtime::ArtifactStore;
 use aifa::fpga::{Bitstream, Resources};
 use aifa::server::{
     AdmissionConfig, ArbiterConfig, BatchConfig, BatchEngine, CacheConfig, ControlPlane,
-    EngineFactory, FabricArbiter, Priority, QuotaConfig, RejectReason, Reply, RequestMeta,
-    RetrainConfig, Served, Server, ServingPool, SharedPolicy, SimEngine, SwappablePolicy,
+    EngineFactory, FabricArbiter, FabricProfile, GpuConfig, Priority, QuotaConfig, RejectReason,
+    Reply, RequestMeta, RetrainConfig, Served, Server, ServingPool, SharedPolicy, SimEngine,
+    SwappablePolicy,
 };
 use aifa::util::cli::Cli;
 use aifa::util::json::Json;
@@ -81,6 +89,8 @@ fn main() {
         .opt("work", Some("32"), "bench serve: synthetic host passes per batch")
         .opt("out", Some("BENCH_serve.json"), "bench serve: output JSON path")
         .opt("fabrics", Some("1"), "arbiter: fabric shards to route offloads across; comma list for `bench serve`")
+        .opt("fabric-profile", None, "arbiter: per-shard device profiles, comma list of alveo-u50|kv260 cycled across the shards")
+        .opt("devices", Some("auto"), "bench serve --gpu: device mixes to sweep, comma list of cf|cg|cgf (auto = cf,cg,cgf)")
         .opt("shared-at", Some("2"), "arbiter: in-flight leases at/above which the fabric is Shared")
         .opt("saturated-at", Some("auto"), "arbiter: leases at/above which it is Saturated (auto = max(workers, 2))")
         .opt("dma-budget-mb", Some("32"), "arbiter: in-flight DMA MiB before the level escalates")
@@ -97,6 +107,7 @@ fn main() {
         .opt("tenant-quota", Some("auto"), "per-tenant sliding-window budget (requests per window; auto = ceil(n/tenants) when tenants > 1, 0 = quotas off)")
         .opt("tenant-window-ms", Some("1000"), "tenant quota sliding-window length in ms")
         .opt("ctl", None, "serve: control-plane command to fire mid-replay (swap|retrain|reconfigure)")
+        .flag("gpu", "arm the GPU in-flight budget and widen placement to the CPU/GPU/FPGA axis (serve trains over it; bench serve adds per-device-mix sweeps)")
         .flag("ctl-reconfigure", "bench serve: fire a single-shard reconfigure mid-sweep on every uncached open-loop run")
         .flag("shed", "admission: reject (typed Rejected reply) instead of deferring under sustained saturation, lowest-weight class first");
     let args = match cli.parse(&rest) {
@@ -250,16 +261,28 @@ fn fabrics_from_args(args: &aifa::util::cli::Args) -> Result<usize> {
     }
 }
 
-/// Build the fabric arbiter from the `--fabrics` / `--shared-at` /
-/// `--saturated-at` / `--dma-budget-mb` knobs (defaults scale with the
-/// pool size; the lease thresholds apply per shard).  Bad values error
-/// instead of silently keeping defaults.
+/// Build the fabric arbiter from the `--fabrics` / `--fabric-profile` /
+/// `--shared-at` / `--saturated-at` / `--dma-budget-mb` knobs (defaults
+/// scale with the pool size; the lease thresholds apply per shard).  Bad
+/// values error instead of silently keeping defaults.
 fn arbiter_from_args(
     args: &aifa::util::cli::Args,
     workers: usize,
     fabrics: usize,
 ) -> Result<Arc<FabricArbiter>> {
     let mut cfg = ArbiterConfig::for_pool(workers, fabrics);
+    if let Some(v) = args.get("fabric-profile") {
+        // Comma list cycled across the shards (`alveo-u50,kv260` with 4
+        // shards alternates the two cards), so a heterogeneous fleet
+        // needs no per-shard flag syntax.
+        let mut profiles = Vec::new();
+        for p in v.split(',') {
+            profiles.push(FabricProfile::parse(p.trim()).ok_or_else(|| {
+                anyhow::anyhow!("--fabric-profile wants a comma list of alveo-u50|kv260, got '{p}'")
+            })?);
+        }
+        cfg.profiles = profiles;
+    }
     if let Some(v) = args.get("shared-at") {
         let s: usize = v.parse().map_err(|_| anyhow::anyhow!("--shared-at wants a lease count"))?;
         cfg.shared_at = s.max(1);
@@ -478,6 +501,11 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
     let episodes = args.get_usize("episodes").unwrap_or(400);
     let seed = args.get_u64("seed").unwrap_or(42);
     let wait = Duration::from_millis(args.get_u64("wait-ms").unwrap_or(2));
+    // `--gpu` widens the action space to the full three-device axis and
+    // arms the pool's GPU in-flight budget; without it the two-device
+    // pipeline is reproduced byte for byte.
+    let gpu_on = args.has("gpu");
+    let devices = if gpu_on { DeviceSet::CpuGpuFpga } else { DeviceSet::CpuFpga };
 
     let probe = ArtifactStore::open(&dir)?;
     let ts = TestSet::load(probe.root.join("testset.bin"))?;
@@ -486,7 +514,7 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
         FpgaPlatform::table1_card(),
         CpuModel::default(),
         // train with contention in the mix so every level has a policy
-        EnvConfig { batch: 8, congestion_p: 0.5, ..EnvConfig::default() },
+        EnvConfig { batch: 8, congestion_p: 0.5, devices, ..EnvConfig::default() },
     );
     let mut agent = QAgent::new(QConfig::default(), seed);
     agent.train(&env, episodes);
@@ -514,6 +542,21 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
         acfg.saturation_window.as_millis(),
         arbiter.generation()
     );
+    if !acfg.profiles.is_empty() {
+        let shard_profiles: Vec<&str> =
+            (0..arbiter.fabrics()).map(|i| acfg.profile(i).as_str()).collect();
+        println!("fabric profiles: {shard_profiles:?}");
+    }
+    if gpu_on {
+        let gcfg = GpuConfig::for_workers(workers);
+        println!(
+            "gpu: budget armed devices={} shared_at={} saturated_at={} window={} ms",
+            devices,
+            gcfg.shared_at,
+            gcfg.saturated_at,
+            gcfg.saturation_window.as_millis()
+        );
+    }
     let deadline = deadline_from_args(args)?;
     println!(
         "admission: queue_cap={}/{} (high/low) high_share={:.2} mix={:.2} deadline={} mode={}",
@@ -546,14 +589,14 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
     // Hot-swappable policy: engines decide through it, the control plane
     // replaces it mid-traffic (`--ctl`, or programmatically).
     let policy = SwappablePolicy::new(policy);
-    let server = Server::builder(
+    let mut builder = Server::builder(
         dir,
-        |store| {
+        move |store| {
             SchedulingEnv::new(
                 store.network.clone(),
                 FpgaPlatform::table1_card(),
                 CpuModel::default(),
-                EnvConfig { batch: 8, ..EnvConfig::default() },
+                EnvConfig { batch: 8, devices, ..EnvConfig::default() },
             )
         },
         policy.clone(),
@@ -562,8 +605,11 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
     .batch(BatchConfig { max_wait: wait, max_batch: 8 })
     .admission(admission)
     .cache(cache)
-    .arbiter(arbiter.clone())
-    .build()?;
+    .arbiter(arbiter.clone());
+    if gpu_on {
+        builder = builder.gpu(GpuConfig::for_workers(workers));
+    }
+    let server = builder.build()?;
     let plane = ControlPlane::new(arbiter.clone(), server.metrics.clone())
         .with_policy(policy.clone())
         .with_retrain(RetrainConfig { env, qcfg: QConfig::default(), seed, episodes });
@@ -615,6 +661,7 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
     let mut class_ok = [0u64; 2];
     let mut level_seen = [0u64; 3];
     let mut served_seen = [0u64; 3]; // engine / coalesced / cache
+    let mut device_seen = [0u64; 3]; // cpu / fpga / gpu
     for (idx, class, rx) in pending {
         match rx.recv()? {
             Reply::Ok(resp) => {
@@ -622,6 +669,7 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
                 class_ok[class.index()] += 1;
                 hits += (resp.class == ts.labels[idx] as usize) as usize;
                 level_seen[resp.congestion.index()] += 1;
+                device_seen[resp.device.index()] += 1;
                 served_seen[match resp.served {
                     Served::Engine => 0,
                     Served::Coalesced => 1,
@@ -649,6 +697,17 @@ fn cmd_serve(args: &aifa::util::cli::Args) -> Result<()> {
         "served by: engine={} coalesced={} cache={}",
         served_seen[0], served_seen[1], served_seen[2]
     );
+    if gpu_on {
+        let g = server.metrics.gpu();
+        println!(
+            "devices: cpu={} fpga={} gpu={}  gpu slots granted={} peak={}",
+            device_seen[0],
+            device_seen[1],
+            device_seen[2],
+            g.map_or(0, |g| g.granted()),
+            g.map_or(0, |g| g.peak())
+        );
+    }
     if arbiter.fabrics() > 1 {
         println!(
             "fabrics: leases={:?} occupancy={:?} peak={:?}",
@@ -886,6 +945,22 @@ struct OpenLoopRow {
     /// Jain fairness index over per-tenant goodput: (Σx)²/(T·Σx²), 1.0
     /// = perfectly equal shares, 1/T = one tenant took everything.
     jain_fairness: f64,
+    /// Device mix this run placed over (`--gpu` sweeps): `None` for the
+    /// classic two-device runs — those rows serialize without any device
+    /// fields, byte-identical to the pre-GPU schema.
+    devices: Option<DeviceSet>,
+    /// Executed batches per device (cpu/fpga/gpu), summing to
+    /// `batches_total` — GPU batches ran off the fabric entirely.
+    device_batches: [u64; 3],
+    /// Engine-served requests per device (cpu/fpga/gpu).
+    device_served: [u64; 3],
+    /// Every batch the pool executed this run (the device counters'
+    /// denominator).
+    batches_total: u64,
+    /// GPU in-flight slots granted over the run (0 unless armed).
+    gpu_granted: u64,
+    /// Peak concurrent GPU slots (0 unless armed).
+    gpu_peak: usize,
     /// Whether a control-plane reconfigure of shard 0 fired mid-run
     /// (`--ctl-reconfigure`): the reply identity and knee on this row
     /// were measured *across* a live generation bump.
@@ -912,12 +987,19 @@ fn jain_index(xs: &[f64]) -> f64 {
 }
 
 fn sim_factory(work: usize) -> Arc<EngineFactory> {
+    sim_factory_on(work, DeviceSet::CpuFpga)
+}
+
+/// [`sim_factory`] generalized over the device axis: the engines place
+/// over `devices` (greedy per-unit decisions across every member), so a
+/// GPU-bearing mix routes its GPU-placed batches off the fabric.
+fn sim_factory_on(work: usize, devices: DeviceSet) -> Arc<EngineFactory> {
     Arc::new(move |_w: usize| -> Result<Box<dyn BatchEngine>> {
         let env = SchedulingEnv::new(
             Network::paper_scale(),
             FpgaPlatform::table1_card(),
             CpuModel::default(),
-            EnvConfig { batch: 8, ..EnvConfig::default() },
+            EnvConfig { batch: 8, devices, ..EnvConfig::default() },
         );
         Ok(Box::new(SimEngine::new(env, Box::new(GreedyStep), vec![1, 8], work)))
     })
@@ -991,16 +1073,27 @@ fn run_open_loop(
     fabrics: usize,
     mix: f64,
     tenants: usize,
+    devices: Option<DeviceSet>,
     ctl_reconfigure: bool,
 ) -> Result<OpenLoopRow> {
     let cfg = BatchConfig { max_wait: wait, max_batch: 8 };
-    let pool = ServingPool::builder(sim_factory(work))
+    // `devices: None` is the classic two-device run — same factory, no
+    // GPU budget, byte-identical pipeline; `Some(mix)` widens the
+    // engines' action space and arms the budget when the mix has a GPU.
+    let factory = match devices {
+        Some(ds) => sim_factory_on(work, ds),
+        None => sim_factory(work),
+    };
+    let mut builder = ServingPool::builder(factory)
         .workers(workers)
         .batch(cfg)
         .admission(admission)
         .cache(cache)
-        .arbiter(FabricArbiter::new(ArbiterConfig::for_pool(workers.max(1), fabrics)))
-        .build()?;
+        .arbiter(FabricArbiter::new(ArbiterConfig::for_pool(workers.max(1), fabrics)));
+    if devices.is_some_and(|d| d.gpu()) {
+        builder = builder.gpu(GpuConfig::for_workers(workers.max(1)));
+    }
+    let pool = builder.build()?;
     let handle = pool.handle();
     let arbiter = pool.arbiter().clone();
     let gen_start = arbiter.generation();
@@ -1154,6 +1247,12 @@ fn run_open_loop(
         tenant_quota_shed,
         tenant_goodput_rps,
         jain_fairness,
+        devices,
+        device_batches: pool.metrics.device_batches(),
+        device_served: pool.metrics.device_served(),
+        batches_total: pool.metrics.batches(),
+        gpu_granted: pool.metrics.gpu().map_or(0, |g| g.granted()),
+        gpu_peak: pool.metrics.gpu().map_or(0, |g| g.peak()),
         ctl_reconfigured: ctl_region.is_some(),
         generation: arbiter.generation() - gen_start,
     };
@@ -1168,7 +1267,7 @@ fn run_open_loop(
 fn open_loop_json(rows: &[OpenLoopRow]) -> Vec<Json> {
     rows.iter()
         .map(|r| {
-            Json::obj(vec![
+            let mut fields = vec![
                 ("rate", Json::num(r.rate)),
                 ("offered_rps", Json::num(r.offered_rps)),
                 ("workers", Json::num(r.workers as f64)),
@@ -1236,7 +1335,25 @@ fn open_loop_json(rows: &[OpenLoopRow]) -> Vec<Json> {
                 ("jain_fairness", Json::num(r.jain_fairness)),
                 ("ctl_reconfigured", Json::Bool(r.ctl_reconfigured)),
                 ("generation", Json::num(r.generation as f64)),
-            ])
+            ];
+            // Device fields only exist on `--gpu` device-mix rows so the
+            // classic schema stays byte-identical without the flag.
+            if let Some(ds) = r.devices {
+                fields.push(("devices", Json::str(ds.as_str())));
+                fields.push(("gpu", Json::Bool(ds.gpu())));
+                fields.push((
+                    "device_batches",
+                    Json::Arr(r.device_batches.iter().map(|&x| Json::num(x as f64)).collect()),
+                ));
+                fields.push((
+                    "device_served",
+                    Json::Arr(r.device_served.iter().map(|&x| Json::num(x as f64)).collect()),
+                ));
+                fields.push(("batches_total", Json::num(r.batches_total as f64)));
+                fields.push(("gpu_granted", Json::num(r.gpu_granted as f64)));
+                fields.push(("gpu_peak", Json::num(r.gpu_peak as f64)));
+            }
+            Json::obj(fields)
         })
         .collect()
 }
@@ -1327,6 +1444,7 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
     let sweep = |tag: &str,
                  fabrics: usize,
                  ccfg: CacheConfig,
+                 devices: Option<DeviceSet>,
                  ctl: bool|
      -> Result<(Vec<OpenLoopRow>, f64)> {
         let mut ol_rows = Vec::new();
@@ -1345,6 +1463,7 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
                 fabrics,
                 mix,
                 tenants,
+                devices,
                 ctl,
             )?;
             println!(
@@ -1409,6 +1528,19 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
                     r.fabric_leases, r.leases_total, r.fabric_occupancy, r.fabric_peak
                 );
             }
+            if let Some(ds) = r.devices {
+                println!(
+                    "  devices={}: batches cpu/fpga/gpu={}/{}/{} of {} gpu slots={}gr/{}pk fabric leases={}",
+                    ds,
+                    r.device_batches[0],
+                    r.device_batches[1],
+                    r.device_batches[2],
+                    r.batches_total,
+                    r.gpu_granted,
+                    r.gpu_peak,
+                    r.leases_total
+                );
+            }
             ol_rows.push(r);
         }
         // auto-found knee: the largest swept λ the pool actually
@@ -1441,7 +1573,7 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
         } else {
             format!("uncached fabrics={m}")
         };
-        let (rows_m, knee_m) = sweep(&tag, m, CacheConfig::default(), ctl_reconfigure)?;
+        let (rows_m, knee_m) = sweep(&tag, m, CacheConfig::default(), None, ctl_reconfigure)?;
         if fi == 0 {
             knee_rate = knee_m;
         }
@@ -1453,7 +1585,43 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
     // isolate deduplication alone (a generation bump would wipe the
     // cache mid-run and pollute the dedup signal).
     let cached_sweep =
-        if cache.enabled() { Some(sweep("cached", base_fabrics, cache, false)?) } else { None };
+        if cache.enabled() { Some(sweep("cached", base_fabrics, cache, None, false)?) } else { None };
+
+    // `--gpu`: repeat the uncached sweep per `--devices` mix with the
+    // engines placing over that device set (and the GPU budget armed for
+    // GPU-bearing mixes).  The base sweeps above stay device-free, so
+    // `knee_rate` keeps its historical two-device meaning and is the
+    // GPU-off baseline the per-mix `device_knees` are gated against.
+    let gpu_on = args.has("gpu");
+    if args.get("devices").is_some_and(|v| v != "auto") && !gpu_on {
+        anyhow::bail!("--devices only applies with --gpu (the base sweep is always two-device)");
+    }
+    let device_mixes: Vec<DeviceSet> = if gpu_on {
+        match args.get("devices") {
+            Some("auto") | None => {
+                vec![DeviceSet::CpuFpga, DeviceSet::CpuGpu, DeviceSet::CpuGpuFpga]
+            }
+            Some(v) => {
+                let mut mixes = Vec::new();
+                for s in v.split(',') {
+                    mixes.push(DeviceSet::parse(s.trim()).ok_or_else(|| {
+                        anyhow::anyhow!("--devices wants a comma list of cf|cg|cgf, got '{s}'")
+                    })?);
+                }
+                mixes
+            }
+        }
+    } else {
+        Vec::new()
+    };
+    let mut dev_rows = Vec::new();
+    let mut device_knees: Vec<(DeviceSet, f64)> = Vec::new();
+    for &ds in &device_mixes {
+        let (rows_d, knee_d) =
+            sweep(&format!("devices={}", ds.as_str()), base_fabrics, CacheConfig::default(), Some(ds), false)?;
+        device_knees.push((ds, knee_d));
+        dev_rows.extend(rows_d);
+    }
 
     let row_objs: Vec<Json> = rows
         .iter()
@@ -1547,6 +1715,28 @@ fn bench_serve(args: &aifa::util::cli::Args) -> Result<()> {
             if cache_knee.is_nan() { Json::Null } else { Json::num(*cache_knee) },
         );
         put("open_loop_cached", Json::Arr(open_loop_json(cached_rows)));
+    }
+    // `--gpu` schema additions mirror the fabric scale-out ones:
+    // per-mix rows in their own array, per-mix knees next to
+    // `fabric_knees`.  Absent entirely without the flag.
+    if gpu_on {
+        put("gpu", Json::Bool(true));
+        put(
+            "device_knees",
+            Json::Arr(
+                device_knees
+                    .iter()
+                    .map(|&(ds, k)| {
+                        Json::obj(vec![
+                            ("devices", Json::str(ds.as_str())),
+                            ("gpu", Json::Bool(ds.gpu())),
+                            ("knee_rate", if k.is_nan() { Json::Null } else { Json::num(k) }),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        put("open_loop_devices", Json::Arr(open_loop_json(&dev_rows)));
     }
     let base = rows.iter().find(|r| r.workers == 1);
     let peak = rows.iter().max_by(|a, b| a.workers.cmp(&b.workers));

@@ -16,6 +16,7 @@ use crate::dma::Link;
 use crate::graph::{Network, Unit};
 use crate::memory::DdrConfig;
 use crate::platform::cpu::CpuModel;
+use crate::platform::gpu::GpuModel;
 use crate::power::PowerModel;
 
 /// Where one unit runs.
@@ -23,6 +24,46 @@ use crate::power::PowerModel;
 pub enum Placement {
     Cpu,
     Fpga,
+    /// GPU baseline device (Table I middle column).  Only reachable when
+    /// the scheduling environment's device set includes it — the default
+    /// two-device CPU/FPGA axis never emits it.
+    Gpu,
+}
+
+impl Placement {
+    /// All devices, in [`Placement::index`] order.
+    pub const ALL: [Placement; 3] = [Placement::Cpu, Placement::Fpga, Placement::Gpu];
+
+    /// Dense index for per-device tables and counters.
+    pub fn index(self) -> usize {
+        match self {
+            Placement::Cpu => 0,
+            Placement::Fpga => 1,
+            Placement::Gpu => 2,
+        }
+    }
+
+    /// The artifact precision kind compiled for this device: the CPU
+    /// fallback runs fp32, the FPGA path runs the int8 bitstream
+    /// (paper §III.B), and the GPU baseline runs fp16 tensor kernels
+    /// (Table I).  Single home for the mapping — coordinator, runtime
+    /// naming, and tests all go through here.
+    pub fn artifact_kind(self) -> &'static str {
+        match self {
+            Placement::Cpu => "fp32",
+            Placement::Fpga => "int8",
+            Placement::Gpu => "fp16",
+        }
+    }
+
+    /// Short lowercase tag for logs and bench rows.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Placement::Cpu => "cpu",
+            Placement::Fpga => "fpga",
+            Placement::Gpu => "gpu",
+        }
+    }
 }
 
 /// Per-unit timing detail within a timeline.
@@ -42,6 +83,7 @@ pub struct Timeline {
     pub total_s: f64,
     pub fpga_busy_s: f64,
     pub cpu_busy_s: f64,
+    pub gpu_busy_s: f64,
     pub host_link_s: f64,
     pub segments: usize,
     pub slots: Vec<UnitSlot>,
@@ -120,12 +162,32 @@ impl FpgaPlatform {
     ///
     /// CPU units run on `cpu`.  Boundary activation transfers are charged
     /// where they occur; each contiguous FPGA segment pays `invoke_s`.
+    /// Two-device form — GPU units (if any) are costed with the default
+    /// [`GpuModel`]; see [`FpgaPlatform::network_timeline_with`].
     pub fn network_timeline(
         &self,
         net: &Network,
         placement: &[Placement],
         batch: usize,
         cpu: &CpuModel,
+    ) -> Timeline {
+        self.network_timeline_with(net, placement, batch, cpu, &GpuModel::default())
+    }
+
+    /// Three-device timeline: like [`FpgaPlatform::network_timeline`] but
+    /// GPU-placed units are costed on `gpu`.  Each contiguous GPU segment
+    /// pays the driver sync (`base_s`), the single-threaded host frame
+    /// prep (`host_feed_s`), and a PCIe push of its input activations; an
+    /// FPGA->GPU hop additionally drains through host memory (there is no
+    /// card-to-card path).  For placements that never touch the GPU the
+    /// arithmetic is identical to the two-device form.
+    pub fn network_timeline_with(
+        &self,
+        net: &Network,
+        placement: &[Placement],
+        batch: usize,
+        cpu: &CpuModel,
+        gpu: &GpuModel,
     ) -> Timeline {
         assert_eq!(placement.len(), net.len(), "placement arity");
         let mut tl = Timeline::default();
@@ -141,6 +203,8 @@ impl FpgaPlatform {
                         let x = self.link.transfer_s(u.in_bytes(batch));
                         t += x;
                         tl.host_link_s += x;
+                    } else if prev == Placement::Gpu {
+                        t += gpu.pcie_transfer_s(u.in_bytes(batch));
                     }
                     compute = cpu.unit_latency_s(u, batch);
                     t += compute;
@@ -148,6 +212,10 @@ impl FpgaPlatform {
                 }
                 Placement::Fpga => {
                     if prev != Placement::Fpga {
+                        if prev == Placement::Gpu {
+                            // GPU tensors drain through host memory first
+                            t += gpu.pcie_transfer_s(u.in_bytes(batch));
+                        }
                         // new segment: enqueue + push activations to card
                         let x = self.link.transfer_s(u.in_bytes(batch));
                         t += self.invoke_s + x;
@@ -160,6 +228,22 @@ impl FpgaPlatform {
                     t += eff;
                     tl.fpga_busy_s += eff;
                 }
+                Placement::Gpu => {
+                    if prev != Placement::Gpu {
+                        if prev == Placement::Fpga {
+                            // card -> host before the PCIe push
+                            let x = self.link.transfer_s(u.in_bytes(batch));
+                            t += x;
+                            tl.host_link_s += x;
+                        }
+                        t += gpu.base_s
+                            + gpu.host_feed_s
+                            + gpu.pcie_transfer_s(u.in_bytes(batch));
+                    }
+                    compute = gpu.unit_latency_s(u, batch);
+                    t += compute;
+                    tl.gpu_busy_s += compute;
+                }
             }
             tl.total_s += t;
             tl.slots.push(UnitSlot { placement: p, time_s: t, compute_s: compute, weight_dma_s: wdma });
@@ -171,6 +255,9 @@ impl FpgaPlatform {
             let x = self.link.transfer_s(last.out_bytes(batch));
             tl.total_s += x;
             tl.host_link_s += x;
+        } else if prev == Placement::Gpu {
+            let last = net.units.last().unwrap();
+            tl.total_s += gpu.pcie_transfer_s(last.out_bytes(batch));
         }
         tl
     }

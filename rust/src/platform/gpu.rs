@@ -14,7 +14,7 @@
 //!   the FPGA path avoids it because the agent DMA-streams raw frames
 //!   (paper §III.C) — see DESIGN.md substitution table.
 
-use crate::graph::{Network, UnitKind};
+use crate::graph::{Network, Unit, UnitKind};
 use crate::power::PowerModel;
 
 #[derive(Debug, Clone, Copy)]
@@ -41,7 +41,12 @@ impl Default for GpuModel {
         GpuModel {
             peak_flops: 20e12,
             util_max: 0.45,
-            batch_half: 16.0,
+            // half-saturation at batch 24: a mid-range part needs a few
+            // tens of images in flight before the SMs fill, so serving-size
+            // batches (~8) run well under the roofline — which is what lets
+            // a free fabric beat the GPU while congestion (whose slowdown
+            // hits the fabric far harder) tips the triage the other way.
+            batch_half: 24.0,
             launch_s: 60e-6,
             base_s: 400e-6,
             pcie_bytes_per_s: 11e9,
@@ -55,6 +60,28 @@ impl GpuModel {
     pub fn utilization(&self, batch: usize) -> f64 {
         let b = batch as f64;
         self.util_max * b / (b + self.batch_half)
+    }
+
+    /// Seconds to move `bytes` across PCIe.
+    pub fn pcie_transfer_s(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.pcie_bytes_per_s
+    }
+
+    /// Kernel launches one unit dispatches (a GEMM block fuses to two).
+    pub fn unit_kernels(u: &Unit) -> f64 {
+        match u.kind {
+            UnitKind::Block => 2.0,
+            _ => 1.0,
+        }
+    }
+
+    /// On-device time of a single unit at `batch`: its kernel launches
+    /// plus roofline compute at the batch's achievable utilization.
+    /// Boundary PCIe/host costs are charged by the timeline, not here.
+    pub fn unit_latency_s(&self, u: &Unit, batch: usize) -> f64 {
+        let flops = u.macs(batch) as f64 * 2.0;
+        Self::unit_kernels(u) * self.launch_s
+            + flops / (self.peak_flops * self.utilization(batch))
     }
 
     /// End-to-end latency of one batch.

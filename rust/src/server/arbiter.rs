@@ -42,10 +42,47 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+/// Which modelled card class a fabric shard is built from — the
+/// `--fabric-profile` vocabulary.  A multi-fabric pool can mix profiles,
+/// so shards stop being clones of one resource table: a small embedded
+/// shard trips its occupancy thresholds long before a data-center card.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FabricProfile {
+    /// Mid-range data-center card (Alveo U50 class) — the default.
+    AlveoU50,
+    /// Embedded KV260 — a far smaller resource table.
+    Kv260,
+}
+
+impl FabricProfile {
+    pub fn parse(s: &str) -> Option<FabricProfile> {
+        match s {
+            "alveo" | "alveo-u50" | "u50" => Some(FabricProfile::AlveoU50),
+            "kv260" => Some(FabricProfile::Kv260),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FabricProfile::AlveoU50 => "alveo-u50",
+            FabricProfile::Kv260 => "kv260",
+        }
+    }
+
+    /// The resource table a shard of this profile is built with.
+    pub fn resources(self) -> Resources {
+        match self {
+            FabricProfile::AlveoU50 => Resources::alveo_u50_like(),
+            FabricProfile::Kv260 => Resources::kv260(),
+        }
+    }
+}
+
 /// Arbitration thresholds, applied **per shard**.  Lease counts *include*
 /// the lease being granted, so `shared_at: 2` means "Shared once a second
 /// batch is in flight on that shard".
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ArbiterConfig {
     /// In-flight leases at/above which a shard counts as time-shared.
     pub shared_at: usize,
@@ -65,6 +102,10 @@ pub struct ArbiterConfig {
     pub saturation_window: Duration,
     /// Number of independent fabric shards the arbiter federates.
     pub fabrics: usize,
+    /// Per-shard card profiles: shard `i` is built from
+    /// `profiles[i % profiles.len()]`.  Empty (the default) means every
+    /// shard is an [`FabricProfile::AlveoU50`] — the historical layout.
+    pub profiles: Vec<FabricProfile>,
 }
 
 impl Default for ArbiterConfig {
@@ -77,6 +118,7 @@ impl Default for ArbiterConfig {
             dma_budget_bytes: 32 << 20,
             saturation_window: Duration::from_millis(25),
             fabrics: 1,
+            profiles: Vec::new(),
         }
     }
 }
@@ -101,6 +143,15 @@ impl ArbiterConfig {
     /// the horizontal-scale effect the `--fabrics` sweep measures.
     pub fn for_pool(workers: usize, fabrics: usize) -> ArbiterConfig {
         ArbiterConfig { fabrics: fabrics.max(1), ..ArbiterConfig::for_workers(workers) }
+    }
+
+    /// Profile of shard `i`: the configured list cycles across shards.
+    pub fn profile(&self, i: usize) -> FabricProfile {
+        if self.profiles.is_empty() {
+            FabricProfile::AlveoU50
+        } else {
+            self.profiles[i % self.profiles.len()]
+        }
     }
 }
 
@@ -159,18 +210,20 @@ pub struct FabricArbiter {
 }
 
 impl FabricArbiter {
-    /// Arbiter over `cfg.fabrics` default (Table I card class) fabrics.
+    /// Arbiter over `cfg.fabrics` fabrics, each built from its
+    /// configured [`FabricProfile`] (all Table I card class by default).
     pub fn new(cfg: ArbiterConfig) -> Arc<FabricArbiter> {
-        FabricArbiter::with_fabric(cfg, Fabric::new(Resources::alveo_u50_like()))
+        let shard0 = Fabric::new(cfg.profile(0).resources());
+        FabricArbiter::with_fabric(cfg, shard0)
     }
 
     /// Arbiter whose shard 0 is an explicitly modelled fabric (regions
     /// already carved or about to be, via [`FabricArbiter::add_region`]);
-    /// shards 1.. are default cards.
+    /// shards 1.. are built from their configured profiles.
     pub fn with_fabric(cfg: ArbiterConfig, fabric: Fabric) -> Arc<FabricArbiter> {
         let mut shards = vec![Shard::new(fabric)];
-        for _ in 1..cfg.fabrics.max(1) {
-            shards.push(Shard::new(Fabric::new(Resources::alveo_u50_like())));
+        for i in 1..cfg.fabrics.max(1) {
+            shards.push(Shard::new(Fabric::new(cfg.profile(i).resources())));
         }
         Arc::new(FabricArbiter {
             cfg,
@@ -184,7 +237,7 @@ impl FabricArbiter {
     }
 
     pub fn config(&self) -> ArbiterConfig {
-        self.cfg
+        self.cfg.clone()
     }
 
     /// Number of fabric shards under arbitration.
@@ -710,6 +763,37 @@ mod tests {
         // snapshots carry the shard-resolved epochs
         let s1 = a.state_of(1);
         assert_eq!((s1.fabric_id, s1.generation, s1.fabric_generation), (1, g2, f1 + 1));
+    }
+
+    #[test]
+    fn mixed_fabric_profiles_give_shards_distinct_resource_tables() {
+        let a = arb(ArbiterConfig {
+            fabrics: 2,
+            profiles: vec![FabricProfile::AlveoU50, FabricProfile::Kv260],
+            ..ArbiterConfig::default()
+        });
+        let alveo = a.with_fabric_ref(0, |f| f.total);
+        let kv = a.with_fabric_ref(1, |f| f.total);
+        assert_eq!(alveo, Resources::alveo_u50_like());
+        assert_eq!(kv, Resources::kv260());
+        assert!(alveo.luts > kv.luts, "profiles must actually differ");
+
+        // a short list cycles across the shards
+        let cfg = ArbiterConfig {
+            fabrics: 3,
+            profiles: vec![FabricProfile::Kv260],
+            ..ArbiterConfig::default()
+        };
+        assert_eq!(cfg.profile(0), FabricProfile::Kv260);
+        assert_eq!(cfg.profile(2), FabricProfile::Kv260);
+        let b = arb(cfg);
+        assert_eq!(b.with_fabric_ref(2, |f| f.total), Resources::kv260());
+
+        // parse round-trips the CLI vocabulary
+        for p in [FabricProfile::AlveoU50, FabricProfile::Kv260] {
+            assert_eq!(FabricProfile::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(FabricProfile::parse("versal"), None);
     }
 
     #[test]

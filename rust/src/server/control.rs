@@ -261,6 +261,10 @@ impl ControlPlane {
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("control plane has no retrain config attached"))?
             .env;
+        // The whole config is copied — including `devices`, so a pool
+        // serving a GPU-bearing device set retrains over the widened
+        // action space, and a FPGA->GPU flip in the result invalidates
+        // plans through the same generation bump as any other swap.
         let mut cfg = t.cfg;
         // train with contention in the mix so every level gets a policy
         cfg.congestion_p = cfg.congestion_p.max(0.5);
@@ -415,6 +419,33 @@ mod tests {
         assert!((sa - 4.0).abs() < 1e-9, "saturated {sa}");
         assert_eq!(e.cfg.shared_slowdown, sh);
         assert_eq!(e.cfg.saturated_slowdown, sa);
+    }
+
+    #[test]
+    fn telemetry_env_preserves_the_device_set() {
+        use crate::agent::DeviceSet;
+        let (plane, _policy, _metrics) = plane_with_policy();
+        let template = SchedulingEnv::new(
+            Network::paper_scale(),
+            FpgaPlatform::table1_card(),
+            CpuModel::default(),
+            EnvConfig {
+                devices: DeviceSet::CpuGpuFpga,
+                batch: 8,
+                congestion_p: 0.5,
+                ..EnvConfig::default()
+            },
+        );
+        let plane = plane.with_retrain(RetrainConfig {
+            env: template,
+            qcfg: QConfig::default(),
+            seed: 7,
+            episodes: 50,
+        });
+        // a GPU-enabled pool must retrain over the widened action space
+        let (e, _) = plane.telemetry_env().unwrap();
+        assert_eq!(e.cfg.devices, DeviceSet::CpuGpuFpga);
+        assert_eq!(e.actions().len(), 3);
     }
 
     #[test]

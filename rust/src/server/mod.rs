@@ -18,27 +18,35 @@
 //!                                                 staged/executing ->            |
 //!                                                 attach slot + own             | per batch
 //!                                                 timestamp, fan-out            v
-//!                                                 reply later               [fabric routing:
-//!                                              3. quota: tenant's sliding-  plan peek -> CPU-only
-//!                                                 window budget full ->      skips leasing; else
-//!                                                 Rejected { Quota,          route() picks the
-//!                                                 retry_hint = window free } least-congested of
-//!                                                 (cache hits + attaches     M fabric shards
-//!                                                 charge the window too)     (level, occupancy,
-//!                                              4. deadline: expired or       in-flight tie-break)
-//!                                                 predicted-miss -> Rejected and leases on it]
-//!                                              5. overload: per-class caps       |
-//!                                                 + sustained Saturated      shard 0..M-1
-//!                                                 -> shed lowest weight      [own Fabric, lease
-//!                                                 first | defer]              ledger, DMA budget,
-//!                                              [staging: EDF within class 0,  epoch; federated
-//!                                               FIFO elsewhere]               view: Saturated only
-//!                                              [batch: deficit-round-robin    when ALL shards are]
-//!                                               fill — weight-proportional        ^
-//!                                               quanta, largest deficit          |
-//!                                               wins the slot, unused            |
-//!                                               quantum spills]                  |
-//!                                                                                |
+//!                                                 reply later               [device routing:
+//!                                              3. quota: tenant's sliding-  plan route peek ->
+//!                                                 window budget full ->      CPU-only takes no
+//!                                                 Rejected { Quota,          shared resource;
+//!                                                 retry_hint = window free } GPU-placed bypasses
+//!                                                 (cache hits + attaches     the fabric, holds one
+//!                                                 charge the window too)     GpuMeter in-flight
+//!                                              4. deadline: expired or       slot; FPGA-placed
+//!                                                 predicted-miss -> Rejected route() picks the
+//!                                              5. overload: per-class caps   least-congested of M
+//!                                                 + sustained Saturated      fabric shards (level,
+//!                                                 on the fabric AND (when    occupancy, in-flight
+//!                                                 armed) on the GPU budget   tie-break) and leases
+//!                                                 -> shed lowest weight      on it]
+//!                                                 first | defer]                 |
+//!                                              [staging: EDF within class 0,    +--> gpu budget
+//!                                               FIFO elsewhere]                 |    [GpuMeter:
+//!                                              [batch: deficit-round-robin      |     in-flight
+//!                                               fill — weight-proportional      |     slots ->
+//!                                               quanta, largest deficit         |     Free/Shared/
+//!                                               wins the slot, unused           |     Saturated]
+//!                                               quantum spills]                 v
+//!                                                                           shard 0..M-1
+//!                                                                           [own Fabric, lease
+//!                                                                            ledger, DMA budget,
+//!                                                                            epoch; federated
+//!                                                                            view: Saturated only
+//!                                                                            when ALL shards are]
+//!                                                                                ^
 //!   admin ---(aifa ctl / programmatic)----> [control plane: swap placement / ----+
 //!            [ControlPlane::swap|retrain|     retrain from live telemetry /
 //!             reconfigure -> ControlEvent     reconfigure one fabric shard —
@@ -118,7 +126,20 @@
 //!   (keeps queueing but throttles dispatch so the fabric drains).
 //!   CPU-only batches take no fabric lease (plan peek), so they neither
 //!   exert slot pressure nor trigger the saturation they would then be
-//!   shed for.
+//!   shed for.  With a GPU budget armed, fabric saturation alone never
+//!   sheds: GPU-routed plans still have somewhere to run, so overload
+//!   requires *both* devices sustained-saturated.
+//! * **Device routing** ([`pool::PlanRoute`], `--gpu`) — placement is a
+//!   three-device axis (CPU/GPU/FPGA, [`crate::agent::DeviceSet`]): the
+//!   worker peeks each batch's plan route before touching any shared
+//!   resource.  GPU-placed batches bypass fabric routing and leasing
+//!   entirely — like CPU-only batches — but hold one in-flight slot on
+//!   the per-pool [`pool::GpuMeter`], whose occupancy quantizes to its
+//!   own [`CongestionLevel`] and feeds admission alongside the fabric's.
+//!   Per-device batch/served counters land in [`pool::MetricShard`] and
+//!   the [`Response`] carries the executing device.  With the meter
+//!   unarmed (the default) the pipeline is byte-identical to the
+//!   two-device build.
 //! * **Dispatcher** — one thread coalesces requests up to the largest
 //!   compiled batch within the latency window ([`BatchConfig`]), then
 //!   hands whole batches to a shared work queue; idle workers pick up the
@@ -176,16 +197,17 @@ pub mod control;
 pub mod pool;
 pub mod sched;
 
-pub use arbiter::{ArbiterConfig, FabricArbiter, FabricLease};
+pub use arbiter::{ArbiterConfig, FabricArbiter, FabricLease, FabricProfile};
 pub use control::{ControlEvent, ControlPlane, CtlAction, RetrainConfig, SwappablePolicy};
 pub use pool::{
-    AdmissionStats, BatchEngine, BatchOutput, CachedOutcome, CoordEngine, EngineFactory,
-    MetricShard, PoolBuilder, PoolMetrics, ResponseCache, ServingPool, SharedPolicy, ShardSamples,
-    SimEngine, TenantCounters, TenantTotals,
+    AdmissionStats, BatchEngine, BatchOutput, CachedOutcome, CoordEngine, EngineFactory, GpuConfig,
+    GpuMeter, GpuSlot, MetricShard, PlanRoute, PoolBuilder, PoolMetrics, ResponseCache,
+    ServingPool, SharedPolicy, ShardSamples, SimEngine, TenantCounters, TenantTotals,
 };
 pub use sched::{AdmissionConfig, ClassConfig, QuotaConfig, Scheduler, TenantId, TenantLedger};
 
 use crate::agent::{CongestionLevel, Policy, SchedulingEnv};
+use crate::platform::Placement;
 use crate::runtime::ArtifactStore;
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -454,6 +476,10 @@ pub struct Response {
     pub fabric: usize,
     /// Fabric contention the batch ran under (from the shared arbiter).
     pub congestion: CongestionLevel,
+    /// Device the executing plan ran on (GPU if any unit ran there,
+    /// else FPGA if any offloaded, else CPU) — always [`Placement::Cpu`]
+    /// or [`Placement::Fpga`] unless the pool's GPU budget is armed.
+    pub device: Placement,
     /// Global fabric epoch the batch executed under.
     pub plan_generation: u64,
     /// Provenance: engine execution, coalesced fan-out, or cache hit.
@@ -768,6 +794,7 @@ impl Server {
             admission: AdmissionConfig::default(),
             cache: CacheConfig::default(),
             arbiter: None,
+            gpu: None,
         }
     }
 
@@ -801,6 +828,7 @@ pub struct ServerBuilder {
     admission: AdmissionConfig,
     cache: CacheConfig,
     arbiter: Option<Arc<FabricArbiter>>,
+    gpu: Option<GpuConfig>,
 }
 
 impl ServerBuilder {
@@ -835,9 +863,26 @@ impl ServerBuilder {
         self
     }
 
+    /// Enable GPU placement (`aifa serve --gpu`): arm the pool's
+    /// [`pool::GpuMeter`] so GPU-routed plans bypass the fabric and
+    /// charge this budget instead.
+    pub fn gpu(mut self, gpu: GpuConfig) -> ServerBuilder {
+        self.gpu = Some(gpu);
+        self
+    }
+
     pub fn build(self) -> Result<Server> {
-        let ServerBuilder { artifact_dir, make_env, policy, workers, cfg, admission, cache, arbiter } =
-            self;
+        let ServerBuilder {
+            artifact_dir,
+            make_env,
+            policy,
+            workers,
+            cfg,
+            admission,
+            cache,
+            arbiter,
+            gpu,
+        } = self;
         let factory = move |_worker: usize| -> Result<Box<dyn BatchEngine>> {
             let store = ArtifactStore::open(&artifact_dir)?;
             let env = make_env(&store);
@@ -851,6 +896,9 @@ impl ServerBuilder {
             .cache(cache);
         if let Some(arbiter) = arbiter {
             pool = pool.arbiter(arbiter);
+        }
+        if let Some(gpu) = gpu {
+            pool = pool.gpu(gpu);
         }
         Server::from_pool(pool.build()?)
     }

@@ -47,6 +47,22 @@ pub struct BatchOutput {
     /// observed at lease time) — the response cache refuses entries whose
     /// epoch has already passed.
     pub plan_generation: u64,
+    /// The device the executed plan ran on ([`crate::coordinator::PlacementPlan::device`]:
+    /// GPU if any unit ran there, else FPGA if any offloaded, else CPU) —
+    /// feeds the per-device counters and rides out on the [`Response`].
+    pub device: Placement,
+}
+
+/// The worker's pre-lease routing peek: which shared resources the plan
+/// for `(batch, fabric)` would actually touch.  Split from
+/// [`BatchEngine::plan_offloads`] so GPU-placed batches can bypass the
+/// fabric **and** charge the pool's GPU in-flight budget in one answer.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanRoute {
+    /// Any unit on the fabric — take a fabric lease before running.
+    pub offloads: bool,
+    /// Any unit on the GPU — take a [`GpuMeter`] slot before running.
+    pub gpu: bool,
 }
 
 /// One worker's execution backend: turns a padded flat image batch into
@@ -84,6 +100,14 @@ pub trait BatchEngine {
     /// `true` — unknown plans lease conservatively.
     fn plan_offloads(&mut self, _batch: usize, _fabric: FabricState) -> bool {
         true
+    }
+    /// Full device route of the plan this engine would execute for
+    /// `(batch, fabric)` — same peek-only contract as
+    /// [`BatchEngine::plan_offloads`].  The default derives the fabric
+    /// bit from `plan_offloads` and never claims the GPU, so engines
+    /// written before the device axis keep their exact lease behaviour.
+    fn plan_route(&mut self, batch: usize, fabric: FabricState) -> PlanRoute {
+        PlanRoute { offloads: self.plan_offloads(batch, fabric), gpu: false }
     }
 }
 
@@ -156,6 +180,7 @@ impl BatchEngine for CoordEngine {
             sim_latency_s: plan.sim_latency_s,
             sim_energy_j: plan.sim_energy_j,
             plan_generation: fabric.generation,
+            device: plan.device(),
         })
     }
     fn plan_cache_stats(&self) -> (u64, u64) {
@@ -163,6 +188,14 @@ impl BatchEngine for CoordEngine {
     }
     fn plan_offloads(&mut self, batch: usize, fabric: FabricState) -> bool {
         self.coord.plan_offloads(self.policy.as_ref(), batch, fabric).unwrap_or(true)
+    }
+    fn plan_route(&mut self, batch: usize, fabric: FabricState) -> PlanRoute {
+        // Uncached plans route conservatively: lease the fabric, skip the
+        // GPU budget — the one counted lookup in `run` settles the key.
+        match self.coord.plan_route(self.policy.as_ref(), batch, fabric) {
+            Some((offloads, gpu)) => PlanRoute { offloads, gpu },
+            None => PlanRoute { offloads: true, gpu: false },
+        }
     }
 }
 
@@ -248,6 +281,7 @@ impl BatchEngine for SimEngine {
             sim_latency_s: plan.sim_latency_s,
             sim_energy_j: plan.sim_energy_j,
             plan_generation: fabric.generation,
+            device: plan.device(),
         })
     }
     fn plan_cache_stats(&self) -> (u64, u64) {
@@ -258,6 +292,168 @@ impl BatchEngine for SimEngine {
         self.plans
             .peek_on(self.policy.as_ref(), batch, fabric.level, fabric.fabric_id)
             .is_none_or(|p| p.offloads())
+    }
+    fn plan_route(&mut self, batch: usize, fabric: FabricState) -> PlanRoute {
+        if !self.env.cfg.devices.gpu() {
+            // Two-device sets keep the historical route exactly: fabric
+            // bit from the cached-plan peek, conservative on first touch.
+            return PlanRoute { offloads: self.plan_offloads(batch, fabric), gpu: false };
+        }
+        self.plans.sync_fabric(fabric);
+        if let Some(p) =
+            self.plans.peek_on(self.policy.as_ref(), batch, fabric.level, fabric.fabric_id)
+        {
+            return PlanRoute { offloads: p.offloads(), gpu: p.uses_gpu() };
+        }
+        // GPU-bearing device sets derive an uncached route exactly (one
+        // policy walk, no plan-cache traffic): a conservative fabric
+        // lease here would charge GPU-placed batches a slot they never
+        // use — and feed saturation they are supposed to bypass.  The
+        // walk matches `PlacementPlan::build` (which traces the policy
+        // at the env's batch regardless of the exec chunk size).
+        let placement = self.policy.placement(&self.env, fabric.level);
+        PlanRoute {
+            offloads: placement.contains(&Placement::Fpga),
+            gpu: placement.contains(&Placement::Gpu),
+        }
+    }
+}
+
+/// Sizing of the per-pool GPU in-flight budget ([`GpuMeter`]): one
+/// shared accelerator, metered in concurrently executing batches the
+/// way the fabric arbiter meters DMA slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GpuConfig {
+    /// In-flight batches at or above which the GPU reports `Shared`.
+    pub shared_at: usize,
+    /// In-flight batches at or above which the GPU reports `Saturated`.
+    pub saturated_at: usize,
+    /// How long saturation must persist before
+    /// [`GpuMeter::sustained_saturated`] reports it — same debounce idea
+    /// as the arbiter's lease-pressure window.
+    pub saturation_window: Duration,
+}
+
+impl GpuConfig {
+    /// Budget sized to the pool: the GPU starts time-slicing at two
+    /// concurrent batches and saturates once every worker would be
+    /// queued behind it.
+    pub fn for_workers(workers: usize) -> GpuConfig {
+        GpuConfig {
+            shared_at: 2,
+            saturated_at: workers.max(2),
+            saturation_window: Duration::from_millis(25),
+        }
+    }
+}
+
+impl Default for GpuConfig {
+    fn default() -> GpuConfig {
+        GpuConfig::for_workers(2)
+    }
+}
+
+/// The pool's GPU in-flight budget.  GPU-placed batches bypass the
+/// fabric arbiter entirely (no lease, no DMA pressure) but are not free:
+/// each holds one [`GpuSlot`] for the duration of execution, and the
+/// resulting occupancy is folded into admission exactly like fabric
+/// saturation — overload sheds only when *both* shared devices are
+/// sustained-saturated, because work still has somewhere to go while
+/// either has headroom.
+#[derive(Debug)]
+pub struct GpuMeter {
+    cfg: GpuConfig,
+    inflight: AtomicUsize,
+    peak: AtomicUsize,
+    granted: AtomicU64,
+    /// When the meter last *entered* saturation (`None` while below the
+    /// threshold) — updated at every admit/release edge.
+    sat_since: Mutex<Option<Instant>>,
+}
+
+impl GpuMeter {
+    pub fn new(cfg: GpuConfig) -> GpuMeter {
+        GpuMeter {
+            cfg,
+            inflight: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+            granted: AtomicU64::new(0),
+            sat_since: Mutex::new(None),
+        }
+    }
+
+    /// Take one in-flight slot (never blocks — congestion is priced by
+    /// the level, not by queueing at the meter).  The slot frees on drop.
+    pub fn admit(self: &Arc<Self>) -> GpuSlot {
+        let now = self.inflight.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+        self.granted.fetch_add(1, Ordering::Relaxed);
+        self.note_level();
+        GpuSlot { meter: self.clone() }
+    }
+
+    /// Congestion reported at `inflight` concurrent batches.
+    fn level_for(&self, inflight: usize) -> CongestionLevel {
+        if inflight >= self.cfg.saturated_at {
+            CongestionLevel::Saturated
+        } else if inflight >= self.cfg.shared_at {
+            CongestionLevel::Shared
+        } else {
+            CongestionLevel::Free
+        }
+    }
+
+    /// The GPU's current congestion level.
+    pub fn level(&self) -> CongestionLevel {
+        self.level_for(self.inflight.load(Ordering::Relaxed))
+    }
+
+    /// Re-derive the saturation edge after an in-flight change.
+    fn note_level(&self) {
+        let mut since = self.sat_since.lock().unwrap();
+        if self.level() == CongestionLevel::Saturated {
+            since.get_or_insert_with(Instant::now);
+        } else {
+            *since = None;
+        }
+    }
+
+    /// Saturated continuously for at least the configured window — the
+    /// admission-facing signal, debounced like the arbiter's.
+    pub fn sustained_saturated(&self) -> bool {
+        self.level() == CongestionLevel::Saturated
+            && self
+                .sat_since
+                .lock()
+                .unwrap()
+                .is_some_and(|t| t.elapsed() >= self.cfg.saturation_window)
+    }
+
+    /// Slots granted over the meter's lifetime.
+    pub fn granted(&self) -> u64 {
+        self.granted.load(Ordering::Relaxed)
+    }
+
+    /// Deepest concurrent in-flight occupancy observed.
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Batches currently holding a slot.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+}
+
+/// RAII in-flight slot on the pool GPU (see [`GpuMeter::admit`]).
+pub struct GpuSlot {
+    meter: Arc<GpuMeter>,
+}
+
+impl Drop for GpuSlot {
+    fn drop(&mut self) {
+        self.meter.inflight.fetch_sub(1, Ordering::Relaxed);
+        self.meter.note_level();
     }
 }
 
@@ -478,6 +674,12 @@ pub struct MetricShard {
     /// Executed batches per observed [`crate::agent::CongestionLevel`]
     /// (indexed by its `index()`) — makes arbitration visible in summaries.
     pub level_batches: [AtomicU64; 3],
+    /// Executed batches per plan device (indexed by
+    /// [`Placement::index`]) — the device axis of `batches`.
+    pub device_batches: [AtomicU64; 3],
+    /// Requests served per plan device (engine + coalesced fan-out) —
+    /// the device axis of `served`.
+    pub device_served: [AtomicU64; 3],
     /// Highest plan generation this worker has executed under.
     pub plan_generation: AtomicU64,
     pub samples: Mutex<ShardSamples>,
@@ -632,6 +834,10 @@ pub struct PoolMetrics {
     /// [`super::control::ControlPlane`]; summaries print them only when
     /// any fired, so command-free pools keep their historical lines.
     ctl: [AtomicU64; 3],
+    /// The pool's GPU budget, set once at build when GPU placement is
+    /// enabled.  `None` keeps every summary line and admission decision
+    /// byte-identical to the two-device pipeline.
+    gpu: std::sync::OnceLock<Arc<GpuMeter>>,
 }
 
 impl PoolMetrics {
@@ -658,7 +864,18 @@ impl PoolMetrics {
             fabric_leases: (0..fabrics.max(1)).map(|_| AtomicU64::new(0)).collect(),
             tenants: TenantStats::default(),
             ctl: Default::default(),
+            gpu: std::sync::OnceLock::new(),
         }
+    }
+
+    /// The pool's GPU budget meter, when GPU placement is enabled.
+    pub fn gpu(&self) -> Option<&Arc<GpuMeter>> {
+        self.gpu.get()
+    }
+
+    /// Arm the GPU budget (builder-time; the first call wins).
+    fn set_gpu(&self, meter: Arc<GpuMeter>) {
+        let _ = self.gpu.set(meter);
     }
 
     /// Count one applied control-plane command.
@@ -801,6 +1018,30 @@ impl PoolMetrics {
         out
     }
 
+    /// Executed batches per plan device, summed across shards and
+    /// indexed by [`Placement::index`] (`[cpu, fpga, gpu]`).
+    pub fn device_batches(&self) -> [u64; 3] {
+        let mut out = [0u64; 3];
+        for sh in &self.shards {
+            for (o, c) in out.iter_mut().zip(&sh.device_batches) {
+                *o += c.load(Ordering::Relaxed);
+            }
+        }
+        out
+    }
+
+    /// Requests served per plan device, summed across shards and
+    /// indexed by [`Placement::index`] (`[cpu, fpga, gpu]`).
+    pub fn device_served(&self) -> [u64; 3] {
+        let mut out = [0u64; 3];
+        for sh in &self.shards {
+            for (o, c) in out.iter_mut().zip(&sh.device_served) {
+                *o += c.load(Ordering::Relaxed);
+            }
+        }
+        out
+    }
+
     /// Requests answered `Rejected` for overload across all levels.
     pub fn shed_total(&self) -> u64 {
         self.admission.shed.iter().map(|c| c.load(Ordering::Relaxed)).sum()
@@ -900,6 +1141,23 @@ impl PoolMetrics {
         } else {
             String::new()
         };
+        // The device axis prints only on GPU-enabled pools: with the
+        // meter unarmed every batch is CPU/FPGA and the historical line
+        // already tells that story through the fabric counters.
+        let gpu = match self.gpu() {
+            Some(g) => {
+                let dv = self.device_batches();
+                format!(
+                    " dev={}c/{}f/{}g gpu={}gr/{}pk",
+                    dv[0],
+                    dv[1],
+                    dv[2],
+                    g.granted(),
+                    g.peak()
+                )
+            }
+            None => String::new(),
+        };
         // Control-plane commands print only when any fired, so pools
         // that never saw one keep their historical summary lines.
         let ctl = {
@@ -923,7 +1181,7 @@ impl PoolMetrics {
             })
             .collect();
         format!(
-            "served={} batches={} errors={} shed={} expired={} quota_shed={} deferred={} cache={}h/{}m coalesced={} dead={} workers={}{fab}{ctl} class {} plan={}h/{}m gen={} levels={}f/{}s/{}x qpeak={} wall p50={:.2}ms p99={:.2}ms queue p50={:.2}ms sim/batch p50={:.2}ms",
+            "served={} batches={} errors={} shed={} expired={} quota_shed={} deferred={} cache={}h/{}m coalesced={} dead={} workers={}{fab}{gpu}{ctl} class {} plan={}h/{}m gen={} levels={}f/{}s/{}x qpeak={} wall p50={:.2}ms p99={:.2}ms queue p50={:.2}ms sim/batch p50={:.2}ms",
             self.served(),
             self.batches(),
             self.errors(),
@@ -987,6 +1245,7 @@ pub struct PoolBuilder {
     admission: AdmissionConfig,
     cache: CacheConfig,
     arbiter: Option<Arc<FabricArbiter>>,
+    gpu: Option<GpuConfig>,
 }
 
 impl PoolBuilder {
@@ -1001,6 +1260,7 @@ impl PoolBuilder {
             admission: AdmissionConfig::default(),
             cache: CacheConfig::default(),
             arbiter: None,
+            gpu: None,
         }
     }
 
@@ -1037,12 +1297,23 @@ impl PoolBuilder {
         self
     }
 
+    /// Enable GPU placement: arm the pool's [`GpuMeter`] so GPU-routed
+    /// batches bypass the fabric and charge this budget instead.  Off by
+    /// default — an unarmed pool is byte-identical to the two-device
+    /// pipeline.  Only plans from a GPU-bearing device set
+    /// ([`crate::agent::DeviceSet`]) ever route here.
+    pub fn gpu(mut self, gpu: GpuConfig) -> PoolBuilder {
+        self.gpu = Some(gpu);
+        self
+    }
+
     /// Spawn the dispatcher + worker threads.  Fails fast (after tearing
     /// the threads down again) when worker 0 cannot build its engine — a
     /// pool that would serve nothing must not start.
     pub fn build(self) -> Result<ServingPool> {
-        let PoolBuilder { factory, workers, cfg, admission, cache, arbiter } = self;
+        let PoolBuilder { factory, workers, cfg, admission, cache, arbiter, gpu } = self;
         let n = workers.max(1);
+        let gpu = gpu.map(|c| Arc::new(GpuMeter::new(c)));
         let arbiter = arbiter.unwrap_or_else(|| {
             FabricArbiter::new(super::arbiter::ArbiterConfig::for_workers(n))
         });
@@ -1057,6 +1328,9 @@ impl PoolBuilder {
         let shared_rx = Arc::new(Mutex::new(brx));
         let metrics =
             Arc::new(PoolMetrics::sized(n, arbiter.fabrics(), admission.class_count()));
+        if let Some(g) = &gpu {
+            metrics.set_gpu(g.clone());
+        }
         let depth = Arc::new(AtomicUsize::new(0));
         let stop = Arc::new(AtomicBool::new(false));
         // The response cache exists only when configured: a zero cap
@@ -1074,8 +1348,9 @@ impl PoolBuilder {
         let metrics_d = metrics.clone();
         let arb_d = arbiter.clone();
         let cache_d = rcache.clone();
+        let gpu_d = gpu.clone();
         let dispatcher = std::thread::spawn(move || {
-            dispatch_loop(rx, btx, cfg, admission, stop_d, depth_d, metrics_d, arb_d, cache_d)
+            dispatch_loop(rx, btx, cfg, admission, stop_d, depth_d, metrics_d, arb_d, cache_d, gpu_d)
         });
 
         let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
@@ -1086,9 +1361,11 @@ impl PoolBuilder {
             let m = metrics.clone();
             let arb = arbiter.clone();
             let wcache = rcache.clone();
+            let wgpu = gpu.clone();
             let ready = if w == 0 { Some(ready_tx.clone()) } else { None };
-            handles
-                .push(std::thread::spawn(move || worker_loop(w, rx, factory, m, arb, wcache, ready)));
+            handles.push(std::thread::spawn(move || {
+                worker_loop(w, rx, factory, m, arb, wcache, wgpu, ready)
+            }));
         }
         drop(ready_tx);
 
@@ -1190,6 +1467,9 @@ struct DispatchCtx {
     /// Response cache shared with the workers (probe here, insert
     /// there); `None` = dedup layer off, nothing keyed ever arrives.
     cache: Option<Arc<Mutex<ResponseCache>>>,
+    /// GPU budget meter; `None` = GPU placement off, admission sees only
+    /// the fabric.
+    gpu: Option<Arc<GpuMeter>>,
     /// Batches this dispatcher has handed to the worker queue — against
     /// the workers' completed-chunk count this measures the *invisible
     /// pipeline* (bounded hand-off + in-execution batches) the deadline
@@ -1425,6 +1705,7 @@ fn dispatch_loop(
     metrics: Arc<PoolMetrics>,
     arbiter: Arc<FabricArbiter>,
     cache: Option<Arc<Mutex<ResponseCache>>>,
+    gpu: Option<Arc<GpuMeter>>,
 ) {
     let workers = metrics.workers();
     // Staged ingress, one queue per scheduling class.  Requests wait
@@ -1440,6 +1721,7 @@ fn dispatch_loop(
         metrics,
         arbiter,
         cache,
+        gpu,
         batches_sent: std::cell::Cell::new(0),
         ledger: std::cell::RefCell::new(ledger),
     };
@@ -1492,8 +1774,16 @@ fn dispatch_loop(
             let snap = ctx.arbiter.state();
             let runaway =
                 sched.total_len() >= ctx.admission.total_cap().saturating_mul(8);
-            let saturated =
-                snap.level == CongestionLevel::Saturated && ctx.arbiter.sustained_saturated();
+            // With a GPU budget armed, fabric saturation alone is not
+            // overload: GPU-routed plans still have somewhere to run, so
+            // shedding waits until *both* shared devices are sustained-
+            // saturated.  Unarmed (`None`) the check is byte-identical
+            // to the two-device pipeline.
+            let gpu_headroom =
+                ctx.gpu.as_ref().is_some_and(|g| !g.sustained_saturated());
+            let saturated = snap.level == CongestionLevel::Saturated
+                && ctx.arbiter.sustained_saturated()
+                && !gpu_headroom;
             if saturated || (runaway && ctx.admission.shed) {
                 if ctx.admission.shed {
                     // Shed lowest weight first (oldest first within a
@@ -1605,6 +1895,7 @@ fn dispatch_loop(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     worker: usize,
     rx: Arc<Mutex<Receiver<Vec<Request>>>>,
@@ -1612,6 +1903,7 @@ fn worker_loop(
     metrics: Arc<PoolMetrics>,
     arbiter: Arc<FabricArbiter>,
     cache: Option<Arc<Mutex<ResponseCache>>>,
+    gpu: Option<Arc<GpuMeter>>,
     ready: Option<Sender<std::result::Result<(), String>>>,
 ) {
     let shard = metrics.shard_arc(worker);
@@ -1689,12 +1981,18 @@ fn worker_loop(
             let dma_bytes = (real * ie * std::mem::size_of::<f32>()) as u64;
             let fabric_id = arbiter.route(dma_bytes);
             let predicted = arbiter.peek_lease_state_on(fabric_id, dma_bytes);
-            let lease = if engine.plan_offloads(exec_b, predicted) {
+            let route = engine.plan_route(exec_b, predicted);
+            let lease = if route.offloads {
                 metrics.observe_fabric_lease(fabric_id);
                 Some(arbiter.lease_on(fabric_id, dma_bytes))
             } else {
                 None
             };
+            // A GPU-placed chunk holds one in-flight slot on the pool
+            // GPU for the duration of execution — the device-side twin
+            // of the fabric lease, against a budget instead of a shard.
+            let gpu_slot =
+                if route.gpu { gpu.as_ref().map(|g| g.admit()) } else { None };
             let fabric = lease.as_ref().map_or(predicted, |l| l.state);
             // A panicking engine (foreign PJRT/XLA code, or a bug) must
             // not kill the worker thread: with the bounded hand-off a
@@ -1714,6 +2012,7 @@ fn worker_loop(
                 Err(anyhow::anyhow!("engine panicked: {msg}"))
             });
             drop(lease);
+            drop(gpu_slot);
             // publish plan-cache stats before responding, so a summary
             // read right after the last response is already consistent
             let (h, m) = engine.plan_cache_stats();
@@ -1726,6 +2025,9 @@ fn worker_loop(
                     shard.batches.fetch_add(1, Ordering::Relaxed);
                     shard.served.fetch_add(real as u64, Ordering::Relaxed);
                     shard.level_batches[fabric.level.index()].fetch_add(1, Ordering::Relaxed);
+                    shard.device_batches[out.device.index()].fetch_add(1, Ordering::Relaxed);
+                    shard.device_served[out.device.index()]
+                        .fetch_add(real as u64, Ordering::Relaxed);
                     shard.plan_generation.fetch_max(out.plan_generation, Ordering::Relaxed);
                     // Accumulate toward the dispatcher's deadline
                     // predictor, which compares against wall-clock
@@ -1757,6 +2059,7 @@ fn worker_loop(
                             worker,
                             fabric: fabric.fabric_id,
                             congestion: fabric.level,
+                            device: out.device,
                             plan_generation: out.plan_generation,
                             served: Served::Engine,
                         };
@@ -1770,6 +2073,8 @@ fn worker_loop(
                         if let Some(slot) = &req.coalesce {
                             let waiters = slot.take_waiters();
                             shard.served.fetch_add(waiters.len() as u64, Ordering::Relaxed);
+                            shard.device_served[out.device.index()]
+                                .fetch_add(waiters.len() as u64, Ordering::Relaxed);
                             for (tx, enq, tenant) in waiters {
                                 let mut r = resp.clone();
                                 r.served = Served::Coalesced;
@@ -1925,6 +2230,71 @@ mod tests {
         assert!((again.sim_latency_s - free.sim_latency_s).abs() < 1e-15);
     }
 
+    #[test]
+    fn gpu_meter_levels_and_raii_slots() {
+        let m = Arc::new(GpuMeter::new(GpuConfig {
+            shared_at: 2,
+            saturated_at: 3,
+            saturation_window: Duration::from_millis(1),
+        }));
+        assert_eq!(m.level(), CongestionLevel::Free);
+        let a = m.admit();
+        assert_eq!(m.level(), CongestionLevel::Free);
+        let b = m.admit();
+        assert_eq!(m.level(), CongestionLevel::Shared);
+        let c = m.admit();
+        assert_eq!(m.level(), CongestionLevel::Saturated);
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(m.sustained_saturated(), "held past the window");
+        // dropping one slot leaves saturation — and resets the window
+        drop(c);
+        assert_eq!(m.level(), CongestionLevel::Shared);
+        assert!(!m.sustained_saturated());
+        drop(b);
+        drop(a);
+        assert_eq!(m.inflight(), 0);
+        assert_eq!(m.granted(), 3);
+        assert_eq!(m.peak(), 3);
+    }
+
+    #[test]
+    fn sim_engine_routes_gpu_plans_off_the_fabric() {
+        use crate::agent::{DeviceSet, FixedPlacement};
+        let env = SchedulingEnv::new(
+            Network::paper_scale(),
+            FpgaPlatform::table1_card(),
+            CpuModel::default(),
+            EnvConfig { devices: DeviceSet::CpuGpuFpga, ..EnvConfig::default() },
+        );
+        let n = env.n_units();
+        let ie = env.net.units[0].in_elems(1);
+        let mut e = SimEngine::new(
+            env,
+            Box::new(FixedPlacement { placement: vec![Placement::Gpu; n] }),
+            vec![1, 8],
+            0,
+        );
+        let free = FabricState::new(CongestionLevel::Free, 1);
+        // uncached: a GPU-bearing device set derives the route from a
+        // policy walk instead of the conservative lease default
+        let r = e.plan_route(8, free);
+        assert!(!r.offloads, "all-GPU plan must not claim a fabric lease");
+        assert!(r.gpu, "all-GPU plan must claim the GPU budget");
+        assert_eq!(e.plan_cache_stats(), (0, 0), "route peek counts no plan-cache traffic");
+        // the executed batch reports the plan's device
+        let flat = vec![0.5f32; 8 * ie];
+        let mut logits = Vec::new();
+        let out = e.run(&flat, 8, free, &mut logits).unwrap();
+        assert_eq!(out.device, Placement::Gpu);
+        // cached now: the peek path gives the same answer
+        let r2 = e.plan_route(8, free);
+        assert!(!r2.offloads && r2.gpu);
+        // a two-device engine keeps the conservative uncached default
+        let mut d = SimEngine::new(sim_env(), Box::new(GreedyStep), vec![1, 8], 0);
+        let rd = d.plan_route(8, free);
+        assert!(rd.offloads && !rd.gpu, "uncached two-device route leases conservatively");
+    }
+
     fn resp(class: usize, generation: u64) -> Response {
         Response {
             class,
@@ -1934,6 +2304,7 @@ mod tests {
             worker: 0,
             fabric: 0,
             congestion: CongestionLevel::Free,
+            device: Placement::Cpu,
             plan_generation: generation,
             served: Served::Engine,
         }

@@ -21,20 +21,25 @@
 //! generation, a single-shard reconfigure under load leaves the sibling
 //! shard's epoch untouched, and a telemetry-driven retrain changes the
 //! served placement when the observed level-latency ordering inverts.
+//! The three-device axis closes the file: GPU-placed batches take zero
+//! fabric leases and never move the fabric's congestion signal, a swap
+//! that flips a placement FPGA->GPU invalidates plans through the same
+//! generation bump as any other swap, and the exactly-one-reply identity
+//! survives with GPU routing on.
 //! (The real-artifact pool path is covered in server_e2e.rs.)
 
 use aifa::agent::{
-    AllCpu, CongestionLevel, EnvConfig, FabricState, GreedyStep, LevelPlacements, Policy, QConfig,
-    SchedulingEnv, StaticAllFpga,
+    AllCpu, CongestionLevel, DeviceSet, EnvConfig, FabricState, FixedPlacement, GreedyStep,
+    LevelPlacements, Policy, QConfig, SchedulingEnv, StaticAllFpga,
 };
 use aifa::fpga::{Bitstream, Resources};
 use aifa::graph::Network;
 use aifa::platform::{CpuModel, FpgaPlatform, Placement};
 use aifa::server::{
     AdmissionConfig, ArbiterConfig, BatchConfig, BatchEngine, BatchOutput, CacheConfig,
-    ClassConfig, ControlPlane, CtlAction, EngineFactory, FabricArbiter, Priority, QuotaConfig,
-    RejectReason, Reply, RequestMeta, Response, RetrainConfig, Served, ServingPool, SharedPolicy,
-    SimEngine, SwappablePolicy,
+    ClassConfig, ControlPlane, CtlAction, EngineFactory, FabricArbiter, GpuConfig, Priority,
+    QuotaConfig, RejectReason, Reply, RequestMeta, Response, RetrainConfig, Served, ServingPool,
+    SharedPolicy, SimEngine, SwappablePolicy,
 };
 use anyhow::Result;
 use std::sync::atomic::Ordering;
@@ -1076,6 +1081,7 @@ impl BatchEngine for SlowEngine {
             sim_latency_s: self.delay.as_secs_f64(),
             sim_energy_j: 0.0,
             plan_generation: fabric.generation,
+            device: Placement::Cpu,
         })
     }
     fn plan_offloads(&mut self, _batch: usize, _fabric: FabricState) -> bool {
@@ -1880,4 +1886,190 @@ fn builder_composes_cache_and_admission_in_any_setter_order() {
     };
     run(true);
     run(false);
+}
+
+/// A sim env over the full three-device axis (the two-device [`sim_env`]
+/// plus the GPU).
+fn gpu_env() -> SchedulingEnv {
+    SchedulingEnv::new(
+        Network::paper_scale(),
+        FpgaPlatform::table1_card(),
+        CpuModel::default(),
+        EnvConfig { batch: 8, devices: DeviceSet::CpuGpuFpga, ..EnvConfig::default() },
+    )
+}
+
+/// GPU-placed batches bypass the fabric entirely: an all-GPU policy on a
+/// GPU-armed pool serves everything without taking a single fabric
+/// lease, the fabric's congestion signal never leaves `Free`, and every
+/// executed batch held (and released) one GPU in-flight slot instead.
+#[test]
+fn gpu_batches_take_zero_fabric_leases_and_never_feed_saturation() {
+    let env = gpu_env();
+    let ie = env.net.units[0].in_elems(1);
+    let units = env.n_units();
+
+    let factory: Arc<EngineFactory> = Arc::new(move |_w: usize| -> Result<Box<dyn BatchEngine>> {
+        let policy = FixedPlacement { placement: vec![Placement::Gpu; units] };
+        Ok(Box::new(SimEngine::new(gpu_env(), Box::new(policy), vec![1, 8], 0)))
+    });
+    let pool = ServingPool::builder(factory)
+        .workers(2)
+        .batch(BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 })
+        .gpu(GpuConfig::for_workers(2))
+        .build()
+        .unwrap();
+    let handle = pool.handle();
+
+    let n = 40usize;
+    let mut rxs = Vec::with_capacity(n);
+    for i in 0..n {
+        rxs.push(handle.submit(image(ie, i)).unwrap());
+    }
+    for rx in rxs {
+        let resp = ok(rx.recv_timeout(Duration::from_secs(60)).unwrap());
+        assert_eq!(resp.device, Placement::Gpu, "the response reports the executing device");
+    }
+    assert_eq!(pool.metrics.served(), n as u64);
+    assert_eq!(
+        pool.arbiter().leases_granted(),
+        0,
+        "GPU-placed batches must never hold fabric slots"
+    );
+    // zero leases ⇒ the fabric level never moved: pure-GPU traffic
+    // cannot feed the fabric's saturation signal
+    let lv = pool.metrics.level_batches();
+    assert_eq!(lv[0], pool.metrics.batches(), "every batch saw a Free fabric");
+    assert_eq!(lv[1] + lv[2], 0);
+    // every batch ran on the GPU under one metered in-flight slot
+    assert_eq!(pool.metrics.device_batches()[Placement::Gpu.index()], pool.metrics.batches());
+    let gpu = pool.metrics.gpu().expect("the GPU budget is armed");
+    assert_eq!(gpu.granted(), pool.metrics.batches());
+    assert_eq!(gpu.inflight(), 0, "every GPU slot was released");
+    drop(handle);
+    pool.shutdown();
+}
+
+/// A control-plane swap that flips the placement FPGA -> GPU invalidates
+/// cached plans through the same generation bump as any other swap: the
+/// drained post-swap traffic serves under the new epoch on the GPU, the
+/// arbiter grants zero further leases after the flip, and zero replies
+/// are lost across it.
+#[test]
+fn swap_to_gpu_invalidates_plans_and_moves_execution_off_the_fabric() {
+    let env = gpu_env();
+    let ie = env.net.units[0].in_elems(1);
+    let units = env.n_units();
+
+    let all = |p: Placement| LevelPlacements {
+        by_level: [vec![p; units], vec![p; units], vec![p; units]],
+    };
+    let policy = SwappablePolicy::new(all(Placement::Fpga));
+    let engine_policy = policy.clone();
+    let factory: Arc<EngineFactory> = Arc::new(move |_w: usize| -> Result<Box<dyn BatchEngine>> {
+        let shared: Arc<dyn Policy + Send + Sync> = engine_policy.clone();
+        Ok(Box::new(SimEngine::new(gpu_env(), Box::new(SharedPolicy(shared)), vec![1, 8], 2)))
+    });
+    let pool = ServingPool::builder(factory)
+        .workers(2)
+        .batch(BatchConfig { max_wait: Duration::from_millis(1), max_batch: 8 })
+        .gpu(GpuConfig::for_workers(2))
+        .build()
+        .unwrap();
+    let arbiter = pool.arbiter().clone();
+    let plane =
+        ControlPlane::new(arbiter.clone(), pool.metrics.clone()).with_policy(policy.clone());
+    let handle = pool.handle();
+
+    // phase 1: all-FPGA traffic, drained before the swap so the fabric
+    // is quiet when the flip lands
+    let half = 40usize;
+    let mut rxs = Vec::with_capacity(half);
+    for i in 0..half {
+        rxs.push(handle.submit(image(ie, i)).unwrap());
+    }
+    for rx in rxs {
+        let resp = ok(rx.recv_timeout(Duration::from_secs(60)).unwrap());
+        assert_eq!(resp.device, Placement::Fpga, "pre-swap traffic executes on the fabric");
+    }
+    let leases_before = arbiter.leases_granted();
+    assert!(leases_before > 0, "all-FPGA batches lease the fabric");
+
+    // the flip: every level moves FPGA -> GPU mid-lifetime
+    let ev = plane.swap(all(Placement::Gpu)).unwrap();
+    assert_eq!(ev.action, CtlAction::Swap);
+
+    // phase 2: the same pool, same engines — plans must rebuild under
+    // the bumped generation and route off the fabric
+    let mut rxs = Vec::with_capacity(half);
+    for i in half..2 * half {
+        rxs.push(handle.submit(image(ie, i)).unwrap());
+    }
+    for rx in rxs {
+        let resp = ok(rx.recv_timeout(Duration::from_secs(60)).unwrap());
+        assert_eq!(
+            resp.plan_generation, ev.generation,
+            "post-swap submits must serve under the new epoch"
+        );
+        assert_eq!(resp.device, Placement::Gpu, "the FPGA->GPU flip reached execution");
+    }
+    assert_eq!(
+        arbiter.leases_granted(),
+        leases_before,
+        "zero incremental fabric leases after the FPGA->GPU flip"
+    );
+    assert_eq!(pool.metrics.served(), 2 * half as u64, "zero replies lost across the flip");
+    assert_eq!(pool.metrics.errors(), 0);
+    assert!(pool.metrics.device_batches()[Placement::Fpga.index()] > 0);
+    assert!(pool.metrics.device_batches()[Placement::Gpu.index()] > 0);
+    drop(handle);
+    pool.shutdown();
+}
+
+/// The exactly-one-reply identity holds with GPU routing on: M producers
+/// x N workers over a three-device greedy pool with the GPU budget armed
+/// — every submit resolves exactly once, and the per-device counters
+/// partition the executed batches and served requests with nothing
+/// double-counted or dropped.
+#[test]
+fn gpu_routing_preserves_the_exactly_one_reply_identity() {
+    const PRODUCERS: usize = 4;
+    const PER_PRODUCER: usize = 40;
+    const WORKERS: usize = 3;
+    let env = gpu_env();
+    let ie = env.net.units[0].in_elems(1);
+
+    let factory: Arc<EngineFactory> = Arc::new(move |_w: usize| -> Result<Box<dyn BatchEngine>> {
+        Ok(Box::new(SimEngine::new(gpu_env(), Box::new(GreedyStep), vec![1, 8], 1)))
+    });
+    let pool = ServingPool::builder(factory)
+        .workers(WORKERS)
+        .batch(BatchConfig { max_wait: Duration::from_millis(2), max_batch: 8 })
+        .gpu(GpuConfig::for_workers(WORKERS))
+        .build()
+        .unwrap();
+
+    let mut producers = Vec::new();
+    for p in 0..PRODUCERS {
+        let handle = pool.handle();
+        producers.push(std::thread::spawn(move || {
+            let mut rxs = Vec::new();
+            for i in 0..PER_PRODUCER {
+                rxs.push(handle.submit(image(ie, p * PER_PRODUCER + i)).unwrap());
+            }
+            let mut got = 0usize;
+            for rx in rxs {
+                let _ = ok(rx.recv_timeout(Duration::from_secs(60)).unwrap());
+                got += 1;
+            }
+            got
+        }));
+    }
+    let total: usize = producers.into_iter().map(|j| j.join().unwrap()).sum();
+    assert_eq!(total, PRODUCERS * PER_PRODUCER, "every submit resolved exactly once");
+    assert_eq!(pool.metrics.served(), (PRODUCERS * PER_PRODUCER) as u64);
+    assert_eq!(pool.metrics.errors(), 0);
+    assert_eq!(pool.metrics.device_batches().iter().sum::<u64>(), pool.metrics.batches());
+    assert_eq!(pool.metrics.device_served().iter().sum::<u64>(), pool.metrics.served());
+    pool.shutdown();
 }
